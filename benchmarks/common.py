@@ -1,0 +1,79 @@
+"""Shared benchmark scaffolding: smoke-scale training runs for the paper's
+tables/figures, with one function per experimental condition."""
+from __future__ import annotations
+
+import shutil
+import time
+from dataclasses import replace
+from typing import Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.configs import SparseRLConfig, TrainConfig, get_config
+from repro.runtime import Trainer, TrainerOptions
+
+ARCH = "qwen2.5-14b"          # qwen-family backbone (paper: Qwen2.5 series)
+ARCH_SMALL = "qwen1.5-32b"    # second family for cross-arch rows
+
+
+def make_trainer(condition: str, *, steps: int, seed: int = 0,
+                 arch: str = ARCH, budget: int = 8, ckpt: Optional[str] = None,
+                 lr: float = 2e-3, level: str = "trivial",
+                 max_new: int = 6) -> Trainer:
+    """condition: dense | naive_<policy> | sparse_rl_<policy>
+
+    Defaults are the smoke-scale curriculum where the reduced model shows
+    real reward growth within ~100 steps (reward 0.07 -> 0.22 measured),
+    with a budget that compresses the prompt+response context ~45%."""
+    cfg = get_config(arch).smoke()
+    scfg = SparseRLConfig(kv_budget=budget, kv_buffer=2, obs_window=2,
+                          num_sinks=1, group_size=8, max_new_tokens=max_new,
+                          learning_rate=lr, kl_coef=0.0)
+    if condition == "dense":
+        scfg = scfg.dense()
+    elif condition.startswith("naive_"):
+        scfg = replace(scfg.naive(), compression=condition.split("_", 1)[1])
+    elif condition.startswith("sparse_rl_"):
+        scfg = replace(scfg, compression=condition.split("_", 2)[2])
+    else:
+        raise ValueError(condition)
+    tcfg = TrainConfig(update_batch=64, total_steps=steps, warmup_steps=5,
+                       checkpoint_every=0,
+                       checkpoint_dir=ckpt or f"/tmp/srl_bench_{condition}_{seed}",
+                       seed=seed)
+    if ckpt is None:
+        shutil.rmtree(tcfg.checkpoint_dir, ignore_errors=True)
+    opts = TrainerOptions(num_prompts=16, prompt_len=12, max_new_tokens=max_new,
+                          level=level)
+    return Trainer(cfg, scfg, tcfg, opts)
+
+
+def run_condition(condition: str, steps: int, seed: int = 0, **kw
+                  ) -> List[Dict[str, float]]:
+    tr = make_trainer(condition, steps=steps, seed=seed, **kw)
+    return tr.train(steps, log_every=0)
+
+
+def window_mean(history: List[Dict], key: str, frac: float = 0.25) -> float:
+    vals = [h[key] for h in history if key in h]
+    n = max(1, int(len(vals) * frac))
+    return float(np.mean(vals[-n:]))
+
+
+def toks_saving(history: List[Dict], budget_slots: int) -> float:
+    """Paper's "Toks. saving": stored-KV reduction vs dense rollout.
+    Dense stores prompt+response tokens; sparse stores min(len, slots)."""
+    lens = np.array([h["resp_len"] for h in history]) + 12  # + prompt
+    dense = lens.mean()
+    sparse = np.minimum(lens, budget_slots).mean()
+    return float(1.0 - sparse / dense)
+
+
+def timeit(fn, *args, warmup: int = 1, iters: int = 3) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.time()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.time() - t0) / iters * 1e6  # us

@@ -1,0 +1,128 @@
+"""Performance benchmarks: memory-wall accounting, rollout throughput,
+kernel microbench (CPU numbers are for the jnp execution paths; Pallas
+kernels run in interpret mode here and compile to Mosaic on the TPU target —
+their roofline story lives in reports/roofline_*.md)."""
+from __future__ import annotations
+
+import json
+import os
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import timeit
+
+OUT = "reports/benchmarks"
+
+
+def memory_wall(fast: bool = False) -> List[str]:
+    """The paper's motivation, exactly: per-sequence KV bytes vs context
+    length, dense vs fixed-budget cache (Qwen2.5-7B geometry, bf16)."""
+    from repro.configs import SparseRLConfig, get_config
+
+    cfg = get_config("paper-qwen2.5-7b")
+    scfg = SparseRLConfig()  # budget 512 + buffer 128
+    per_tok = cfg.num_layers * cfg.num_kv_heads * cfg.head_dim * 2 * 2  # k+v bf16
+    out, rows = [], []
+    for ctx in (1024, 4096, 16384, 131072, 524288):
+        dense = ctx * per_tok
+        sparse = min(ctx, scfg.cache_slots) * per_tok
+        rows.append(dict(ctx=ctx, dense_gb=dense / 1e9, sparse_gb=sparse / 1e9,
+                         saving=1 - sparse / dense))
+        out.append(f"memory_wall/ctx{ctx},0,"
+                   f"dense_gb={dense/1e9:.3f};sparse_gb={sparse/1e9:.4f};"
+                   f"saving={1-sparse/dense:.1%}")
+    os.makedirs(OUT, exist_ok=True)
+    with open(os.path.join(OUT, "memory_wall.json"), "w") as f:
+        json.dump(rows, f, indent=1)
+    return out
+
+
+def rollout_throughput(fast: bool = False) -> List[str]:
+    """Decode tokens/s, sparse budget cache vs dense cache (smoke model,
+    CPU).  The ratio demonstrates the bounded-cache win even at toy scale;
+    absolute numbers are CPU-bound."""
+    from repro.configs import SparseRLConfig, get_config
+    from repro.data import TOKENIZER, encode_prompts, make_problems
+    from repro.models import get_model
+    from repro.rollout import generate
+
+    cfg = get_config("qwen2.5-14b").smoke()
+    m = get_model(cfg)
+    params = m.init_params(cfg, jax.random.PRNGKey(0))
+    B = 4 if fast else 16
+    T = 16 if fast else 48
+    ids, mask, _ = encode_prompts(make_problems(B, 0), 24)
+    batch = {"tokens": jnp.asarray(ids), "valid_mask": jnp.asarray(mask)}
+    out = []
+    for name, scfg in (
+        ("sparse_rkv", SparseRLConfig(kv_budget=16, kv_buffer=4, obs_window=2,
+                                      num_sinks=1)),
+        ("dense", SparseRLConfig(compression="none")),
+    ):
+        fn = jax.jit(lambda p, b, r, s=scfg: generate(
+            p, cfg, m, b, s, r, max_new_tokens=T, eos_id=TOKENIZER.eos_id))
+        us = timeit(fn, params, batch, jax.random.PRNGKey(1),
+                    warmup=1, iters=2)
+        tps = B * T / (us / 1e6)
+        slots = scfg.cache_slots if scfg.compression != "none" else 24 + T
+        out.append(f"rollout/{name},{us:.0f},tok_s={tps:.1f};slots={slots}")
+    return out
+
+
+def kernel_bench(fast: bool = False) -> List[str]:
+    """Per-kernel call latency: jnp oracle (the CPU production path) and the
+    Pallas kernel in interpret mode (semantics check; Mosaic on TPU)."""
+    from repro.kernels import ref
+    from repro.kernels.budget_attention import budget_attention
+
+    rng = np.random.default_rng(0)
+    B, Hq, Hkv, S, Dh = 4, 8, 2, 640, 64
+    if fast:
+        B, S = 2, 128
+    q = jnp.asarray(rng.normal(size=(B, Hq, Dh)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, Hkv, S, Dh)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, Hkv, S, Dh)), jnp.float32)
+    pos = jnp.asarray(rng.integers(0, 500, (B, Hkv, S)), jnp.int32)
+    out = []
+    oracle = jax.jit(ref.budget_attention_ref)
+    us = timeit(oracle, q, k, v, pos, iters=5)
+    out.append(f"kernel/budget_attention_jnp,{us:.0f},B{B}xH{Hq}xS{S}xD{Dh}")
+    us_k = timeit(lambda *a: budget_attention(*a, interpret=True),
+                  q, k, v, pos, iters=1, warmup=1)
+    out.append(f"kernel/budget_attention_pallas_interp,{us_k:.0f},"
+               f"interpret_mode=CPU_semantics_only")
+
+    from repro.kernels import ref as R
+    from repro.kernels.flash_attention import flash_attention_fwd
+    Sq = 128 if fast else 256
+    qf = jnp.asarray(rng.normal(size=(1, Sq, 4, 32)), jnp.float32)
+    kf = jnp.asarray(rng.normal(size=(1, Sq, 2, 32)), jnp.float32)
+    vf = jnp.asarray(rng.normal(size=(1, Sq, 2, 32)), jnp.float32)
+    pp = jnp.broadcast_to(jnp.arange(Sq)[None], (1, Sq)).astype(jnp.int32)
+    us = timeit(jax.jit(lambda *a: R.flash_attention_ref(*a)), qf, kf, vf,
+                pp, pp, iters=3)
+    out.append(f"kernel/flash_attention_jnp,{us:.0f},Sq{Sq}")
+    return out
+
+
+def sharding_fallback_bench(fast: bool = False) -> List[str]:
+    """Rule-engine micro-bench: resolving 1e3 shapes (launcher-path cost)."""
+    from repro.distributed.sharding import DEFAULT_RULES, _resolve
+
+    class FakeMesh:
+        axis_names = ("pod", "data", "model")
+        class devices:
+            shape = (2, 16, 16)
+
+    import time
+    t0 = time.time()
+    n = 200 if fast else 2000
+    for i in range(n):
+        _resolve(FakeMesh, DEFAULT_RULES, (256, 4096, 5120),
+                 ("batch", "seq", "embed"))
+        _resolve(FakeMesh, DEFAULT_RULES, (5120, 27392), ("embed", "ffn"))
+    us = (time.time() - t0) / n * 1e6
+    return [f"sharding/resolve,{us:.1f},per_2_shapes"]

@@ -1,0 +1,59 @@
+"""Benchmark harness entry point — one function per paper table/figure plus
+the perf benches.  Prints ``name,us_per_call,derived`` CSV.
+
+  PYTHONPATH=src python -m benchmarks.run [--fast] [--only fig4,table1]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="few-step smoke variants (CI)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated benchmark name filter")
+    args = ap.parse_args()
+
+    from benchmarks import paper_tables as P
+    from benchmarks import perf as F
+
+    benches = [
+        ("table1", P.table1_main),
+        ("fig1", P.fig1_collapse),
+        ("fig2", P.fig2_dynamics),
+        ("fig3", P.fig3_mismatch_kl),
+        ("fig4", P.fig4_budget_ablation),
+        ("table2", P.table2_sparse_inference),
+        ("appc", P.appc_ratios),
+        ("memory_wall", F.memory_wall),
+        ("rollout", F.rollout_throughput),
+        ("kernels", F.kernel_bench),
+        ("sharding", F.sharding_fallback_bench),
+    ]
+    if args.only:
+        keep = set(args.only.split(","))
+        benches = [(n, f) for n, f in benches if n in keep]
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in benches:
+        t0 = time.time()
+        try:
+            rows = fn(fast=args.fast)
+            for r in rows:
+                print(r, flush=True)
+            print(f"_timing/{name},{(time.time()-t0)*1e6:.0f},wall", flush=True)
+        except Exception:  # noqa: BLE001
+            failures += 1
+            print(f"{name},0,ERROR", flush=True)
+            traceback.print_exc()
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Paper Fig. 4 at laptop scale: sweep the KV budget and watch reward /
+mismatch-KL / rejection respond.
+
+  PYTHONPATH=src python examples/budget_ablation.py --steps 30
+"""
+import argparse
+import json
+import shutil
+
+import numpy as np
+
+from repro.configs import SparseRLConfig, TrainConfig, get_config
+from repro.runtime import Trainer, TrainerOptions
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--budgets", default="4,8,16,32")
+    args = ap.parse_args()
+
+    cfg = get_config("qwen2.5-14b").smoke()
+    rows = {}
+    for budget in [int(b) for b in args.budgets.split(",")] + ["dense"]:
+        if budget == "dense":
+            scfg = SparseRLConfig(compression="none", group_size=8,
+                                  max_new_tokens=16, learning_rate=5e-4)
+        else:
+            scfg = SparseRLConfig(kv_budget=budget, kv_buffer=4, obs_window=2,
+                                  num_sinks=1, group_size=8, max_new_tokens=16,
+                                  learning_rate=5e-4)
+        d = f"/tmp/srl_ablate_{budget}"
+        shutil.rmtree(d, ignore_errors=True)
+        tcfg = TrainConfig(update_batch=32, total_steps=args.steps,
+                           warmup_steps=2, checkpoint_every=0, checkpoint_dir=d)
+        tr = Trainer(cfg, scfg, tcfg,
+                     TrainerOptions(num_prompts=8, prompt_len=16,
+                                    max_new_tokens=16))
+        hist = tr.train(args.steps, log_every=0)
+        tail = hist[-max(1, len(hist) // 4):]
+        rows[str(budget)] = dict(
+            reward=float(np.mean([h["reward"] for h in tail])),
+            mismatch_kl=float(np.mean([abs(h["mismatch_kl"]) for h in tail])),
+            rejection=float(np.mean([h["rejection_rate"] for h in tail])))
+        print(f"budget={budget}: {rows[str(budget)]}")
+    print(json.dumps(rows, indent=1))
+
+
+if __name__ == "__main__":
+    main()

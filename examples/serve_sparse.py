@@ -1,0 +1,73 @@
+"""Serve a model with batched requests under a sparse KV cache — the
+deployment half of the paper (§5.4 sparsity-aware training).
+
+Points at a checkpoint from train_sparse_rl.py if available; otherwise
+serves a fresh init.  Reports tokens/s and per-sequence cache memory vs the
+dense equivalent.
+
+  PYTHONPATH=src python examples/serve_sparse.py --batch 16 --max-new 32
+"""
+import argparse
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import latest_step, restore
+from repro.configs import SparseRLConfig, get_config
+from repro.data import TOKENIZER, encode_prompts, make_problems
+from repro.models import get_model
+from repro.rewards import binary_rewards, decode_responses
+from repro.rollout import generate
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=32)
+    ap.add_argument("--budget", type=int, default=16)
+    ap.add_argument("--ckpt", default="/tmp/srl_example_sparse_rl_0")
+    args = ap.parse_args()
+
+    cfg = get_config("qwen2.5-14b").smoke()
+    m = get_model(cfg)
+    params = m.init_params(cfg, jax.random.PRNGKey(0))
+    if latest_step(args.ckpt) is not None:
+        got, step, _ = restore(args.ckpt, {"params": params})
+        params = got["params"]
+        print(f"serving checkpoint step {step} from {args.ckpt}")
+    else:
+        print("no checkpoint found — serving fresh init")
+
+    scfg = SparseRLConfig(kv_budget=args.budget, kv_buffer=4, obs_window=2,
+                          num_sinks=1, compression="rkv")
+    problems = make_problems(args.batch, 123, "easy")
+    ids, mask, answers = encode_prompts(problems, 24)
+    batch = {"tokens": jnp.asarray(ids), "valid_mask": jnp.asarray(mask)}
+
+    gen = jax.jit(lambda p, b, r: generate(p, cfg, m, b, scfg, r,
+                                           max_new_tokens=args.max_new,
+                                           eos_id=TOKENIZER.eos_id))
+    ro = gen(params, batch, jax.random.PRNGKey(1))          # compile
+    jax.block_until_ready(ro.resp_tokens)
+    t0 = time.time()
+    ro = gen(params, batch, jax.random.PRNGKey(2))
+    jax.block_until_ready(ro.resp_tokens)
+    dt = time.time() - t0
+
+    toks = int(np.asarray(ro.lengths).sum())
+    acc = binary_rewards(np.asarray(ro.resp_tokens), answers).mean()
+    dense_slots = ids.shape[1] + args.max_new
+    per_tok = cfg.num_layers * cfg.num_kv_heads * cfg.head_dim * 2 * 4
+    print(f"batch={args.batch} tokens={toks} {toks/dt:.0f} tok/s  acc={acc:.2f}")
+    print(f"cache/seq: sparse {scfg.cache_slots * per_tok / 1e3:.1f} KB "
+          f"vs dense {dense_slots * per_tok / 1e3:.1f} KB "
+          f"({1 - scfg.cache_slots / dense_slots:.0%} saved; grows with ctx)")
+    for i, r in enumerate(decode_responses(np.asarray(ro.resp_tokens))[:4]):
+        print(f"  [{i}] {problems[i].prompt!r} -> {r!r} (gold {problems[i].answer})")
+
+
+if __name__ == "__main__":
+    main()

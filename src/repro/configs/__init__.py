@@ -1,0 +1,34 @@
+from repro.configs.base import (
+    AUDIO,
+    DENSE,
+    HYBRID,
+    LM_SHAPES,
+    MOE,
+    SSM,
+    VLM,
+    ModelConfig,
+    ShapeSpec,
+    SparseRLConfig,
+    TrainConfig,
+    dtype_of,
+)
+from repro.configs.registry import ARCH_IDS, all_cells, get_config, get_shapes
+
+__all__ = [
+    "ModelConfig",
+    "ShapeSpec",
+    "SparseRLConfig",
+    "TrainConfig",
+    "LM_SHAPES",
+    "ARCH_IDS",
+    "get_config",
+    "get_shapes",
+    "all_cells",
+    "dtype_of",
+    "DENSE",
+    "MOE",
+    "SSM",
+    "HYBRID",
+    "VLM",
+    "AUDIO",
+]

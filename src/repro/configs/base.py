@@ -1,0 +1,311 @@
+"""Configuration system for the Sparse-RL framework.
+
+One frozen dataclass (:class:`ModelConfig`) describes every supported model
+family (dense / moe / ssm / hybrid / vlm / audio).  Architecture files under
+``repro/configs/`` instantiate the exact published configs; every config also
+knows how to produce a *reduced* variant for CPU smoke tests via
+:meth:`ModelConfig.smoke`.
+
+Shapes (the assigned input-shape set) are described by :class:`ShapeSpec` and
+bound per-architecture by the registry.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field, replace
+from typing import Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# Model families
+# ---------------------------------------------------------------------------
+DENSE = "dense"
+MOE = "moe"
+SSM = "ssm"
+HYBRID = "hybrid"
+VLM = "vlm"
+AUDIO = "audio"  # encoder-decoder with conv/frame frontend stub
+
+FAMILIES = (DENSE, MOE, SSM, HYBRID, VLM, AUDIO)
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Architecture hyper-parameters.
+
+    Only the fields relevant to ``family`` are consumed by the model builder;
+    the rest keep their defaults.
+    """
+
+    name: str
+    family: str
+
+    # Transformer core ------------------------------------------------------
+    num_layers: int = 12
+    d_model: int = 768
+    num_heads: int = 12
+    num_kv_heads: int = 12            # GQA: kv heads <= q heads
+    d_ff: int = 3072
+    vocab_size: int = 32000
+    head_dim: Optional[int] = None    # default: d_model // num_heads
+    qkv_bias: bool = False            # qwen1.5/2.5 style
+    mlp_style: str = "swiglu"         # swiglu (3 mats) | gelu (2 mats, whisper)
+    rope_theta: float = 1e6
+    rms_eps: float = 1e-6
+    tie_embeddings: bool = False
+
+    # MoE --------------------------------------------------------------------
+    num_experts: int = 0              # 0 => dense FFN
+    experts_per_token: int = 0        # top-k
+    moe_d_ff: Optional[int] = None    # per-expert hidden (defaults to d_ff)
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 0.01     # load-balance auxiliary loss
+
+    # SSM (Mamba2 / SSD) ------------------------------------------------------
+    ssm_state: int = 0                # state dim N (0 => no ssm blocks)
+    ssm_head_dim: int = 64            # P (headdim)
+    ssm_expand: int = 2               # d_inner = expand * d_model
+    ssm_chunk: int = 64               # SSD chunk length
+    ssm_conv_width: int = 4
+
+    # Hybrid (zamba2-style): every `hybrid_attn_every` blocks insert a shared
+    # attention block (weights shared across occurrences).
+    hybrid_attn_every: int = 6
+
+    # Enc-dec (whisper-style) -------------------------------------------------
+    encoder_layers: int = 0           # 0 => decoder-only
+    encoder_frames: int = 1500        # max encoder positions (frame embeddings)
+
+    # VLM ---------------------------------------------------------------------
+    num_patches: int = 0              # prefix patch embeddings (stub frontend)
+
+    # Numerics ----------------------------------------------------------------
+    param_dtype: str = "float32"      # storage dtype of parameters
+    compute_dtype: str = "bfloat16"   # activations / matmuls
+    accum_dtype: str = "float32"      # optimizer accumulators
+    weight_quant: str = "none"        # none | int8 — dense-matmul weights
+                                      # stored int8 + per-channel f32 scale
+                                      # (serving path; halves the HBM read)
+    logits_softcap: float = 0.0
+
+    # Distribution defaults ----------------------------------------------------
+    remat: str = "block"              # none | block (remat each layer)
+    remat_chunk: int = 0              # >1: 2-level remat — save only every
+                                      # k-th layer boundary (memory ~ L/k + k
+                                      # slabs instead of L, one extra fwd)
+    scan_layers: bool = True          # lax.scan over stacked layer params
+
+    def __post_init__(self):
+        if self.family not in FAMILIES:
+            raise ValueError(f"unknown family {self.family!r}")
+        if self.head_dim is None:
+            object.__setattr__(self, "head_dim", self.d_model // max(self.num_heads, 1))
+        if self.family == MOE and self.moe_d_ff is None:
+            object.__setattr__(self, "moe_d_ff", self.d_ff)
+
+    # -- derived -------------------------------------------------------------
+    @property
+    def q_per_kv(self) -> int:
+        return self.num_heads // max(self.num_kv_heads, 1)
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    def n_params(self) -> int:
+        """Analytic parameter count (embedding + blocks + head), used for
+        MODEL_FLOPS = 6*N*D roofline checks."""
+        c = self
+        emb = c.vocab_size * c.d_model
+        head = 0 if c.tie_embeddings else c.vocab_size * c.d_model
+        per_attn = (
+            c.d_model * c.num_heads * c.head_dim          # Wq
+            + 2 * c.d_model * c.num_kv_heads * c.head_dim  # Wk, Wv
+            + c.num_heads * c.head_dim * c.d_model         # Wo
+        )
+        if c.qkv_bias:
+            per_attn += (c.num_heads + 2 * c.num_kv_heads) * c.head_dim
+        ffn_mats = 3 if c.mlp_style == "swiglu" else 2
+        per_dense_ffn = ffn_mats * c.d_model * c.d_ff     # gate/up/down (SwiGLU) or up/down (GELU)
+        per_moe_ffn = c.num_experts * 3 * c.d_model * (c.moe_d_ff or c.d_ff) + c.d_model * c.num_experts
+        norms = 2 * c.d_model
+
+        if c.family in (DENSE, VLM):
+            blocks = c.num_layers * (per_attn + per_dense_ffn + norms)
+        elif c.family == MOE:
+            blocks = c.num_layers * (per_attn + per_moe_ffn + norms)
+        elif c.family == SSM:
+            per_ssm = (
+                c.d_model * 2 * c.d_inner                  # in_proj (x, z)
+                + c.d_inner * c.d_model                    # out_proj
+                + c.d_inner * 2 * c.ssm_state              # B, C proj
+                + c.d_inner                                # dt
+                + c.ssm_heads                              # A_log
+                + c.ssm_conv_width * (c.d_inner + 2 * c.ssm_state)
+            )
+            blocks = c.num_layers * (per_ssm + c.d_model)
+        elif c.family == HYBRID:
+            per_ssm = (
+                c.d_model * 2 * c.d_inner + c.d_inner * c.d_model
+                + c.d_inner * 2 * c.ssm_state + c.d_inner + c.ssm_heads
+                + c.ssm_conv_width * (c.d_inner + 2 * c.ssm_state)
+            )
+            n_attn = max(1, c.num_layers // c.hybrid_attn_every)
+            # shared attention block counted ONCE (weights shared)
+            blocks = c.num_layers * (per_ssm + c.d_model) + (per_attn + per_dense_ffn + norms)
+            del n_attn
+        elif c.family == AUDIO:
+            dec = c.num_layers * (2 * per_attn + per_dense_ffn + 3 * c.d_model)
+            enc = c.encoder_layers * (per_attn + per_dense_ffn + norms)
+            blocks = dec + enc
+        else:  # pragma: no cover
+            raise AssertionError(c.family)
+        return int(emb + head + blocks)
+
+    def n_active_params(self) -> int:
+        """Active params per token (differs from n_params for MoE)."""
+        c = self
+        if c.family != MOE:
+            return self.n_params()
+        emb = c.vocab_size * c.d_model
+        head = 0 if c.tie_embeddings else c.vocab_size * c.d_model
+        per_attn = (
+            c.d_model * c.num_heads * c.head_dim
+            + 2 * c.d_model * c.num_kv_heads * c.head_dim
+            + c.num_heads * c.head_dim * c.d_model
+        )
+        active_ffn = c.experts_per_token * 3 * c.d_model * (c.moe_d_ff or c.d_ff)
+        return int(emb + head + c.num_layers * (per_attn + active_ffn + 2 * c.d_model))
+
+    # -- reduced variant for CPU smoke tests ---------------------------------
+    def smoke(self) -> "ModelConfig":
+        """A tiny same-family config: small layers/width, few experts, tiny
+        vocab.  Used by per-arch smoke tests and examples."""
+        kw = dict(
+            name=self.name + "-smoke",
+            num_layers=2,
+            d_model=64,
+            num_heads=4,
+            num_kv_heads=min(self.num_kv_heads, 4) if self.num_kv_heads < self.num_heads else 4,
+            d_ff=128,
+            vocab_size=512,
+            head_dim=16,
+            param_dtype="float32",
+            compute_dtype="float32",
+            rope_theta=1e4,
+        )
+        if self.family == MOE:
+            # capacity_factor = num_experts makes the smoke config dropless
+            # (capacity >= T*k even under total routing imbalance), so decode
+            # matches teacher-forcing exactly in tests.  Full configs keep the
+            # realistic 1.25 — capacity drops there are a *real* source of
+            # sampler/learner mismatch that Sparse-RL's xi correction absorbs
+            # (DESIGN.md §Arch-applicability).
+            kw.update(num_experts=4, experts_per_token=2, moe_d_ff=64,
+                      capacity_factor=4.0)
+        if self.family in (SSM, HYBRID):
+            kw.update(ssm_state=16, ssm_head_dim=16, ssm_chunk=16, hybrid_attn_every=2)
+        if self.family == AUDIO:
+            kw.update(encoder_layers=2, encoder_frames=32)
+        if self.family == VLM:
+            kw.update(num_patches=8)
+        return replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned set)
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+    # decode cells carry the *context length* in seq_len (KV cache of seq_len,
+    # one new token generated).
+    sparse_cache_only: bool = False  # long_500k on attention archs: dense cache infeasible
+
+
+TRAIN_4K = ShapeSpec("train_4k", 4096, 256, "train")
+PREFILL_32K = ShapeSpec("prefill_32k", 32768, 32, "prefill")
+DECODE_32K = ShapeSpec("decode_32k", 32768, 128, "decode")
+LONG_500K = ShapeSpec("long_500k", 524288, 1, "decode", sparse_cache_only=True)
+
+LM_SHAPES: Tuple[ShapeSpec, ...] = (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)
+
+
+# ---------------------------------------------------------------------------
+# Sparse-RL / rollout configuration (paper §5.1 + Appendix A)
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class SparseRLConfig:
+    """Hyper-parameters of the paper's method."""
+
+    # KV compression (Appendix A)
+    kv_budget: int = 512          # B_budget
+    kv_buffer: int = 128          # B_buffer (extra slots before eviction kicks in)
+    obs_window: int = 8           # alpha: most recent tokens always retained
+    rkv_lambda: float = 0.1       # R-KV importance/redundancy trade-off
+    num_sinks: int = 4            # StreamingLLM attention sinks
+    compression: str = "rkv"      # rkv | snapkv | h2o | streaming | none(dense)
+
+    # GRPO (§5.1)
+    group_size: int = 8           # G rollouts per prompt
+    temperature: float = 1.0
+    top_p: float = 1.0
+    max_new_tokens: int = 4096
+    clip_eps: float = 0.2         # PPO clip epsilon
+    kl_coef: float = 1e-4         # KL loss coefficient
+    learning_rate: float = 1e-6
+
+    # Sparse-RL corrections (§4)
+    rejection_eps: float = 1e-4   # epsilon threshold on xi_t
+    reweight: bool = True         # Importance-based Reweighting (xi factor)
+    reject: bool = True           # Sparsity-Aware Rejection Sampling
+    xi_clip_max: float = 10.0     # numerical safety cap on xi (beyond-paper)
+    sequence_level: bool = False  # GSPO-style variant (beyond-paper)
+
+    @property
+    def cache_slots(self) -> int:
+        return self.kv_budget + self.kv_buffer
+
+    def naive(self) -> "SparseRLConfig":
+        """Naive sparse rollout baseline: compression, no corrections."""
+        return replace(self, reweight=False, reject=False)
+
+    def dense(self) -> "SparseRLConfig":
+        return replace(self, compression="none", reweight=False, reject=False)
+
+
+# ---------------------------------------------------------------------------
+# Training-run configuration
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class TrainConfig:
+    rollout_batch: int = 1024       # prompts*G per rollout phase (paper: 1024)
+    update_batch: int = 256         # sequences per gradient step (paper: 256)
+    microbatch: int = 0             # 0 => no grad accumulation
+    total_steps: int = 400
+    warmup_steps: int = 10
+    grad_clip: float = 1.0
+    weight_decay: float = 0.0
+    adam_b1: float = 0.9
+    adam_b2: float = 0.95
+    adam_eps: float = 1e-8
+    seed: int = 0
+    checkpoint_every: int = 50
+    checkpoint_dir: str = "/tmp/srl_ckpt"
+    keep_checkpoints: int = 3
+
+
+def dtype_of(name: str):
+    import jax.numpy as jnp
+
+    return {
+        "float32": jnp.float32,
+        "bfloat16": jnp.bfloat16,
+        "float16": jnp.float16,
+    }[name]

@@ -1,0 +1,10 @@
+"""DBRX-132B — fine-grained MoE 16 experts top-4, GQA kv=8. [hf:databricks/dbrx-base; unverified]"""
+from repro.configs.base import ModelConfig, MOE
+
+CONFIG = ModelConfig(
+    name="dbrx-132b", family=MOE,
+    num_layers=40, d_model=6144, num_heads=48, num_kv_heads=8,
+    d_ff=10752, moe_d_ff=10752, vocab_size=100352,
+    num_experts=16, experts_per_token=4,
+    rope_theta=5e5, param_dtype="bfloat16",
+)

@@ -1,0 +1,13 @@
+"""InternVL2-2B — InternViT frontend (stub) + InternLM2 backbone. [arXiv:2404.16821; hf]
+
+The ViT is a STUB: input_specs() provides precomputed patch embeddings that
+are prepended to the token embeddings (256 patches for train_4k).
+"""
+from repro.configs.base import ModelConfig, VLM
+
+CONFIG = ModelConfig(
+    name="internvl2-2b", family=VLM,
+    num_layers=24, d_model=2048, num_heads=16, num_kv_heads=8,
+    d_ff=8192, vocab_size=92553, num_patches=256,
+    rope_theta=1e6,
+)

@@ -1,0 +1,9 @@
+"""Llama-3 405B — dense, GQA kv=8, 128k vocab. [arXiv:2407.21783; unverified]"""
+from repro.configs.base import ModelConfig, DENSE
+
+CONFIG = ModelConfig(
+    name="llama3-405b", family=DENSE,
+    num_layers=126, d_model=16384, num_heads=128, num_kv_heads=8,
+    d_ff=53248, vocab_size=128256,
+    rope_theta=5e5, param_dtype="bfloat16", accum_dtype="bfloat16",
+)

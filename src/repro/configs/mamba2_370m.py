@@ -1,0 +1,15 @@
+"""Mamba2-370M — attention-free SSD. [arXiv:2405.21060; unverified]
+
+Sparse-RL's KV compression is inapplicable (no KV cache; recurrent state is
+already O(1)) — see DESIGN.md §Arch-applicability.  The arch runs the dense
+GRPO path.
+"""
+from repro.configs.base import ModelConfig, SSM
+
+CONFIG = ModelConfig(
+    name="mamba2-370m", family=SSM,
+    num_layers=48, d_model=1024, num_heads=0, num_kv_heads=0,
+    d_ff=0, vocab_size=50280,
+    ssm_state=128, ssm_head_dim=64, ssm_expand=2, ssm_chunk=64,
+    tie_embeddings=True,
+)

@@ -1,0 +1,12 @@
+"""The paper's own backbone scale (Qwen2.5-7B-like) for faithful-repro runs.
+
+[hf:Qwen/Qwen2.5-7B; hf] 28L d_model=3584 28H kv=4 d_ff=18944 vocab=152064.
+"""
+from repro.configs.base import ModelConfig, DENSE
+
+CONFIG = ModelConfig(
+    name="paper-qwen2.5-7b", family=DENSE,
+    num_layers=28, d_model=3584, num_heads=28, num_kv_heads=4,
+    d_ff=18944, vocab_size=152064, qkv_bias=True,
+    rope_theta=1e6, param_dtype="bfloat16",
+)

@@ -1,0 +1,9 @@
+"""Qwen1.5-32B — dense, MHA (kv=40), QKV bias. [hf:Qwen/Qwen1.5-0.5B; hf]"""
+from repro.configs.base import ModelConfig, DENSE
+
+CONFIG = ModelConfig(
+    name="qwen1.5-32b", family=DENSE,
+    num_layers=64, d_model=5120, num_heads=40, num_kv_heads=40,
+    d_ff=27392, vocab_size=152064, qkv_bias=True,
+    rope_theta=1e6, param_dtype="bfloat16",
+)

@@ -1,0 +1,9 @@
+"""Qwen2.5-14B — dense, GQA kv=8, QKV bias. [hf:Qwen/Qwen2.5-0.5B; hf]"""
+from repro.configs.base import ModelConfig, DENSE
+
+CONFIG = ModelConfig(
+    name="qwen2.5-14b", family=DENSE,
+    num_layers=48, d_model=5120, num_heads=40, num_kv_heads=8,
+    d_ff=13824, vocab_size=152064, qkv_bias=True,
+    rope_theta=1e6, param_dtype="bfloat16",
+)

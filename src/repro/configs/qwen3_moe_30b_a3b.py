@@ -1,0 +1,14 @@
+"""Qwen3-30B-A3B — MoE 128 experts top-8, GQA kv=4. [hf:Qwen/Qwen3-30B-A3B; hf]
+
+d_ff=768 is the per-expert (moe) intermediate size; head_dim is 128
+(explicit in the HF config, not d_model/num_heads).
+"""
+from repro.configs.base import ModelConfig, MOE
+
+CONFIG = ModelConfig(
+    name="qwen3-moe-30b-a3b", family=MOE,
+    num_layers=48, d_model=2048, num_heads=32, num_kv_heads=4, head_dim=128,
+    d_ff=768, moe_d_ff=768, vocab_size=151936,
+    num_experts=128, experts_per_token=8,
+    rope_theta=1e6, param_dtype="bfloat16",
+)

@@ -1,0 +1,63 @@
+"""Architecture registry: ``--arch <id>`` resolution.
+
+Maps each assigned architecture id to its exact published :class:`ModelConfig`
+and its input-shape set (all LM archs share the 4 assigned shapes; per-family
+adaptations are documented in DESIGN.md and encoded in ``input_specs``).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+from repro.configs.base import LM_SHAPES, ModelConfig, ShapeSpec
+
+_ARCH_MODULES = {
+    "qwen1.5-32b": "repro.configs.qwen1_5_32b",
+    "llama3-405b": "repro.configs.llama3_405b",
+    "qwen2.5-14b": "repro.configs.qwen2_5_14b",
+    "yi-34b": "repro.configs.yi_34b",
+    "qwen3-moe-30b-a3b": "repro.configs.qwen3_moe_30b_a3b",
+    "dbrx-132b": "repro.configs.dbrx_132b",
+    "mamba2-370m": "repro.configs.mamba2_370m",
+    "zamba2-1.2b": "repro.configs.zamba2_1_2b",
+    "internvl2-2b": "repro.configs.internvl2_2b",
+    "whisper-small": "repro.configs.whisper_small",
+    # the paper's own backbone (not part of the 40-cell grid)
+    "paper-qwen2.5-7b": "repro.configs.paper_qwen",
+}
+
+ARCH_IDS = tuple(k for k in _ARCH_MODULES if k != "paper-qwen2.5-7b")
+
+
+def get_config(arch: str) -> ModelConfig:
+    import importlib
+
+    if arch not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch!r}; choose from {sorted(_ARCH_MODULES)}")
+    return importlib.import_module(_ARCH_MODULES[arch]).CONFIG
+
+
+def get_shapes(arch: str) -> Tuple[ShapeSpec, ...]:
+    """All 10 assigned archs use the 4 LM shapes (40 cells)."""
+    get_config(arch)  # validate id
+    return LM_SHAPES
+
+
+def all_cells():
+    """Yield every (arch_id, ShapeSpec) baseline cell — 40 total."""
+    for arch in ARCH_IDS:
+        for shape in get_shapes(arch):
+            yield arch, shape
+
+
+def describe() -> Dict[str, dict]:
+    out = {}
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        out[arch] = dict(
+            family=cfg.family,
+            params_B=round(cfg.n_params() / 1e9, 2),
+            active_params_B=round(cfg.n_active_params() / 1e9, 2),
+            layers=cfg.num_layers,
+            d_model=cfg.d_model,
+        )
+    return out

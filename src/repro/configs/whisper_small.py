@@ -1,0 +1,14 @@
+"""Whisper-small — enc-dec, conv frontend STUB. [arXiv:2212.04356; unverified]
+
+input_specs() provides precomputed frame embeddings (post-conv).  Decoder is
+the LM backbone: self-attention with KV cache (Sparse-RL applies) + fixed
+cross-attention to encoder states.  GELU MLP (2 matrices).
+"""
+from repro.configs.base import ModelConfig, AUDIO
+
+CONFIG = ModelConfig(
+    name="whisper-small", family=AUDIO,
+    num_layers=12, d_model=768, num_heads=12, num_kv_heads=12,
+    d_ff=3072, vocab_size=51865, mlp_style="gelu",
+    encoder_layers=12, encoder_frames=1500,
+)

@@ -1,0 +1,9 @@
+"""Yi-34B — llama-arch dense, GQA kv=8. [arXiv:2403.04652; hf]"""
+from repro.configs.base import ModelConfig, DENSE
+
+CONFIG = ModelConfig(
+    name="yi-34b", family=DENSE,
+    num_layers=60, d_model=7168, num_heads=56, num_kv_heads=8,
+    d_ff=20480, vocab_size=64000,
+    rope_theta=5e6, param_dtype="bfloat16",
+)

@@ -1,0 +1,10 @@
+"""Zamba2-1.2B — Mamba2 backbone + shared attention blocks. [arXiv:2411.15242; hf]"""
+from repro.configs.base import ModelConfig, HYBRID
+
+CONFIG = ModelConfig(
+    name="zamba2-1.2b", family=HYBRID,
+    num_layers=38, d_model=2048, num_heads=32, num_kv_heads=32,
+    d_ff=8192, vocab_size=32000,
+    ssm_state=64, ssm_head_dim=64, ssm_expand=2, ssm_chunk=64,
+    hybrid_attn_every=6,
+)

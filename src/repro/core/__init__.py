@@ -1,0 +1,25 @@
+from repro.core.grpo import (
+    group_advantages,
+    grpo_loss,
+    k3_kl,
+    masked_mean,
+    ppo_clip_term,
+)
+from repro.core.sparse_rl import (
+    SparseRLOut,
+    rejection_mask,
+    sparse_rl_loss,
+    sparsity_consistency_ratio,
+)
+
+__all__ = [
+    "group_advantages",
+    "grpo_loss",
+    "k3_kl",
+    "masked_mean",
+    "ppo_clip_term",
+    "sparse_rl_loss",
+    "sparsity_consistency_ratio",
+    "rejection_mask",
+    "SparseRLOut",
+]

@@ -1,0 +1,73 @@
+"""GRPO (Shao et al., 2024) — group-relative advantages + clipped surrogate.
+
+Paper Appendix D.  The critic-free advantage (Eq. 10) normalizes each
+response's reward within its G-sample group; the surrogate (Eq. 11) is the
+PPO clipped objective with importance weight w = pi_theta / pi_old.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def group_advantages(rewards: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    """rewards: (num_prompts, G) -> advantages (num_prompts, G), Eq. 10.
+
+    Groups with zero reward variance (all-correct / all-wrong) get zero
+    advantage — no learning signal, standard GRPO behaviour.
+    """
+    mean = jnp.mean(rewards, axis=-1, keepdims=True)
+    std = jnp.std(rewards, axis=-1, keepdims=True)
+    return (rewards - mean) / (std + eps)
+
+
+def ppo_clip_term(w: jnp.ndarray, adv: jnp.ndarray, clip_eps: float
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """min(w*A, clip(w)*A) and an is-clipped indicator (for the clip-ratio
+    telemetry, paper App. C)."""
+    clipped_w = jnp.clip(w, 1.0 - clip_eps, 1.0 + clip_eps)
+    obj = jnp.minimum(w * adv, clipped_w * adv)
+    is_clipped = (w * adv) > (clipped_w * adv)
+    return obj, is_clipped
+
+
+def k3_kl(logp_ref: jnp.ndarray, logp_theta: jnp.ndarray) -> jnp.ndarray:
+    """Schulman's k3 estimator of KL(pi_theta || pi_ref), per token.
+    Non-negative, low-variance; the GRPO KL regularizer."""
+    log_ratio = logp_ref - logp_theta
+    return jnp.exp(log_ratio) - log_ratio - 1.0
+
+
+def masked_mean(x: jnp.ndarray, mask: jnp.ndarray,
+                axis=None, eps: float = 1e-9) -> jnp.ndarray:
+    m = mask.astype(x.dtype)
+    return jnp.sum(x * m, axis=axis) / (jnp.sum(m, axis=axis) + eps)
+
+
+def grpo_loss(logp_theta: jnp.ndarray, logp_old: jnp.ndarray,
+              advantages: jnp.ndarray, token_mask: jnp.ndarray,
+              *, clip_eps: float = 0.2,
+              logp_ref: Optional[jnp.ndarray] = None,
+              kl_coef: float = 0.0) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Plain GRPO objective (dense rollouts), Eq. 11.
+
+    logp_*: (B, T) per-response-token log-probs; advantages: (B,);
+    token_mask: (B, T) True for real response tokens.
+    """
+    w = jnp.exp(jnp.clip(logp_theta - jax.lax.stop_gradient(logp_old),
+                         -20.0, 20.0))
+    obj, clipped = ppo_clip_term(w, advantages[:, None], clip_eps)
+    per_seq = masked_mean(obj, token_mask, axis=-1)             # 1/|o_i| sum_t
+    loss = -jnp.mean(per_seq)
+    metrics = {
+        "clip_ratio": masked_mean(clipped.astype(jnp.float32), token_mask),
+        "mean_ratio": masked_mean(w, token_mask),
+    }
+    if logp_ref is not None and kl_coef > 0:
+        kl = masked_mean(k3_kl(jax.lax.stop_gradient(logp_ref), logp_theta),
+                         token_mask)
+        loss = loss + kl_coef * kl
+        metrics["ref_kl"] = kl
+    return loss, metrics

@@ -1,0 +1,123 @@
+"""Sparse-RL (the paper's contribution): stable RL training under sparse
+(KV-compressed) rollouts.
+
+Three policies coexist (paper §3):
+  pi_old    — dense old policy: full-context log-probs of the sampler weights
+  pi_sparse — sparse sampler: what the budget-cache rollout actually sampled
+  pi_theta  — the learner being optimized
+
+Corrections (paper §4):
+  * sparsity consistency ratio   xi_t = pi_old / pi_sparse           (Eq. 5)
+  * Sparsity-Aware Rejection     M_RS(o) = 0 iff any xi_t < eps      (Eq. 6)
+  * Importance-based Reweighting xi_t OUTSIDE the PPO clip           (Eq. 7)
+
+All ratio math is done in log space; xi is capped (``xi_clip_max``) for
+variance control — a numerical-safety deviation from the paper documented in
+DESIGN.md (the paper's Eq. 7 uses raw xi; with eps-rejection active the cap
+binds only in the far tail).
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SparseRLConfig
+from repro.core.grpo import k3_kl, masked_mean, ppo_clip_term
+
+
+def sparsity_consistency_ratio(logp_old: jnp.ndarray, logp_sparse: jnp.ndarray,
+                               xi_clip_max: float = 10.0) -> jnp.ndarray:
+    """xi_t = pi_old / pi_sparse, Eq. 5.  (B, T) float32."""
+    log_xi = logp_old.astype(jnp.float32) - logp_sparse.astype(jnp.float32)
+    return jnp.exp(jnp.minimum(log_xi, jnp.log(xi_clip_max)))
+
+
+def rejection_mask(logp_old: jnp.ndarray, logp_sparse: jnp.ndarray,
+                   token_mask: jnp.ndarray, eps: float) -> jnp.ndarray:
+    """M_RS per sequence, Eq. 6: veto iff ANY valid token has xi < eps.
+
+    Computed in log space: xi < eps  <=>  logp_old - logp_sparse < log(eps).
+    Returns (B,) float32 in {0, 1}.
+    """
+    log_xi = logp_old.astype(jnp.float32) - logp_sparse.astype(jnp.float32)
+    anomalous = (log_xi < jnp.log(eps)) & token_mask
+    return 1.0 - jnp.any(anomalous, axis=-1).astype(jnp.float32)
+
+
+class SparseRLOut(NamedTuple):
+    loss: jnp.ndarray
+    metrics: Dict[str, jnp.ndarray]
+
+
+def sparse_rl_loss(logp_theta: jnp.ndarray,
+                   logp_old: jnp.ndarray,
+                   logp_sparse: jnp.ndarray,
+                   advantages: jnp.ndarray,
+                   token_mask: jnp.ndarray,
+                   scfg: SparseRLConfig,
+                   *,
+                   logp_ref: Optional[jnp.ndarray] = None) -> SparseRLOut:
+    """The Sparse-RL objective, Eq. 7 (negated for minimization).
+
+      J = E[ 1/G sum_i M_RS(o_i) 1/|o_i| sum_t xi_{i,t}
+             * min(w_{i,t} A_i, clip(w_{i,t}, 1±eps) A_i) ]  - kl_coef * KL
+
+    logp_theta   (B, T): learner log-probs (differentiated)
+    logp_old     (B, T): dense old-policy log-probs (stop-grad)
+    logp_sparse  (B, T): sparse sampler log-probs recorded at rollout time
+    advantages   (B,)  : group-normalized rewards
+    token_mask   (B, T): True for response tokens up to (incl.) EOS
+
+    Ablations: scfg.reject / scfg.reweight toggle the two corrections
+    (both False == the paper's "naive sparse" baseline);
+    scfg.sequence_level enables the GSPO-style beyond-paper variant.
+    """
+    logp_old = jax.lax.stop_gradient(logp_old)
+    logp_sparse = jax.lax.stop_gradient(logp_sparse)
+
+    xi = sparsity_consistency_ratio(logp_old, logp_sparse, scfg.xi_clip_max)
+    m_rs = rejection_mask(logp_old, logp_sparse, token_mask, scfg.rejection_eps)
+
+    if not scfg.reject:
+        m_rs = jnp.ones_like(m_rs)
+    xi_w = xi if scfg.reweight else jnp.ones_like(xi)
+
+    if scfg.sequence_level:
+        # GSPO-style: length-normalized sequence ratio inside the clip.
+        log_w_seq = masked_mean(logp_theta - logp_old, token_mask, axis=-1)
+        w = jnp.exp(jnp.clip(log_w_seq, -20.0, 20.0))[:, None]
+        xi_seq = jnp.exp(jnp.minimum(
+            masked_mean(jnp.log(xi + 1e-30), token_mask, axis=-1),
+            jnp.log(scfg.xi_clip_max)))[:, None]
+        xi_w = jnp.broadcast_to(xi_seq, xi.shape) if scfg.reweight else jnp.ones_like(xi)
+    else:
+        # clamp the log-ratio: an unbounded w=exp(500) meeting a xi=0 token
+        # yields 0 * inf = NaN; +/-20 is far outside the clip range anyway
+        w = jnp.exp(jnp.clip(logp_theta - logp_old, -20.0, 20.0))
+
+    obj, clipped = ppo_clip_term(w, advantages[:, None], scfg.clip_eps)
+    per_tok = xi_w * obj
+    per_seq = masked_mean(per_tok, token_mask, axis=-1)          # 1/|o_i|
+    loss = -jnp.mean(m_rs * per_seq)
+
+    # mismatch KL (paper Fig. 3): KL(pi_sparse || pi_old) estimated on the
+    # sampled tokens: E_sparse[log pi_sparse - log pi_old]
+    mismatch_kl = masked_mean(logp_sparse - logp_old, token_mask)
+    metrics = {
+        "rejection_rate": 1.0 - jnp.mean(m_rs),
+        "clip_ratio": masked_mean(clipped.astype(jnp.float32), token_mask),
+        "mean_xi": masked_mean(xi, token_mask),
+        "min_log_xi": jnp.min(jnp.where(token_mask, logp_old - logp_sparse, 0.0)),
+        "mismatch_kl": mismatch_kl,
+        "mean_ratio": masked_mean(w * jnp.ones_like(xi), token_mask),
+        "accepted_frac_tokens": masked_mean(
+            jnp.broadcast_to(m_rs[:, None], token_mask.shape), token_mask),
+    }
+    if logp_ref is not None and scfg.kl_coef > 0:
+        kl = masked_mean(k3_kl(jax.lax.stop_gradient(logp_ref), logp_theta),
+                         token_mask)
+        loss = loss + scfg.kl_coef * kl
+        metrics["ref_kl"] = kl
+    return SparseRLOut(loss=loss, metrics=metrics)

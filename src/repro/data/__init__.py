@@ -1,0 +1,5 @@
+from repro.data.synthetic_math import PromptLoader, encode_prompts, make_problems
+from repro.data.tokenizer import TOKENIZER, CharTokenizer
+
+__all__ = ["TOKENIZER", "CharTokenizer", "PromptLoader", "encode_prompts",
+           "make_problems"]

@@ -1,0 +1,94 @@
+"""Synthetic verifiable math-reasoning task ("GSM-lite").
+
+Stands in for SimpleRL-Zoo (GSM8K + MATH): multi-step integer arithmetic with
+an exactly-verifiable answer and the paper's strict binary reward.  Three
+difficulty tiers mirror the paper's Easy/Medium/Hard splits:
+
+  easy   : a ⊕ b, single-digit operands, answer in [0, 18]
+  medium : a ⊕ b ⊕ c with +/-
+  hard   : (a ⊕ b) ⊕ c including *, multi-digit intermediates
+
+Prompts look like ``Q:(3+5)*2=?A:`` and a correct completion is the decimal
+answer followed by EOS.  Deterministic per (seed, index) — reproducible
+epochs across restarts and elastic re-sharding.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Tuple
+
+import numpy as np
+
+from repro.data.tokenizer import TOKENIZER, CharTokenizer
+
+
+@dataclass(frozen=True)
+class Problem:
+    prompt: str
+    answer: str
+
+
+def _gen_one(rng: np.random.Generator, level: str) -> Problem:
+    if level == "trivial":
+        # single-digit sum <= 9: one-token answer (smoke-model curriculum)
+        a = int(rng.integers(0, 10))
+        b = int(rng.integers(0, 10 - a))
+        return Problem(prompt=f"Q:{a}+{b}=?A:", answer=str(a + b))
+    if level == "easy":
+        a, b = rng.integers(0, 10, 2)
+        op = rng.choice(["+", "-"])
+        expr = f"{a}{op}{b}"
+    elif level == "medium":
+        a, b, c = rng.integers(0, 10, 3)
+        o1, o2 = rng.choice(["+", "-"], 2)
+        expr = f"{a}{o1}{b}{o2}{c}"
+    else:  # hard
+        a, b, c = rng.integers(1, 10, 3)
+        o1 = rng.choice(["+", "-", "*"])
+        o2 = rng.choice(["+", "-", "*"])
+        expr = f"({a}{o1}{b}){o2}{c}"
+    ans = eval(expr)  # noqa: S307 — generator-controlled arithmetic only
+    return Problem(prompt=f"Q:{expr}=?A:", answer=str(ans))
+
+
+def make_problems(n: int, seed: int, level: str = "easy") -> List[Problem]:
+    rng = np.random.default_rng(seed)
+    return [_gen_one(rng, level) for _ in range(n)]
+
+
+def encode_prompts(problems: List[Problem], prompt_len: int,
+                   tok: CharTokenizer = TOKENIZER
+                   ) -> Tuple[np.ndarray, np.ndarray, List[str]]:
+    """Left-padded prompt ids + mask + the gold answers (host strings)."""
+    seqs = [tok.encode(p.prompt, bos=True) for p in problems]
+    ids = tok.pad_batch(seqs, prompt_len, left=True)
+    mask = ids != tok.pad_id
+    # BOS occupies a real slot; count it valid
+    return ids, mask, [p.answer for p in problems]
+
+
+class PromptLoader:
+    """Deterministic, host-shardable prompt stream.
+
+    Every (epoch, step) batch is a pure function of (seed, level, sizes) so a
+    restarted or re-sharded job regenerates identical data — checkpoint
+    carries only the step counter.
+    """
+
+    def __init__(self, *, batch_prompts: int, prompt_len: int, seed: int = 0,
+                 level: str = "easy", num_problems: int = 8000,
+                 host_index: int = 0, host_count: int = 1):
+        self.batch = batch_prompts
+        self.prompt_len = prompt_len
+        self.seed = seed
+        self.level = level
+        self.problems = make_problems(num_problems, seed, level)
+        self.host_index, self.host_count = host_index, host_count
+
+    def get(self, step: int):
+        rng = np.random.default_rng((self.seed, step))
+        idx = rng.integers(0, len(self.problems), self.batch * self.host_count)
+        idx = idx[self.host_index::self.host_count][:self.batch]
+        probs = [self.problems[i] for i in idx]
+        ids, mask, answers = encode_prompts(probs, self.prompt_len)
+        return ids, mask, answers

@@ -1,0 +1,63 @@
+"""Character-level tokenizer for the synthetic math task.
+
+The real paper trains on GSM8K/MATH text with the backbone's BPE tokenizer;
+offline we embed a small char vocabulary into the first ``len(VOCAB)`` ids of
+whatever vocab_size the architecture declares (the remaining ids are simply
+never produced — harmless for RL mechanics, and keeps every assigned arch
+config's true vocab_size intact for the dry-run/roofline).
+"""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import numpy as np
+
+PAD, BOS, EOS = 0, 1, 2
+_SPECIALS = ["<pad>", "<bos>", "<eos>"]
+_CHARS = list("0123456789+-*/=?().,: QA#")
+VOCAB = _SPECIALS + _CHARS
+
+
+class CharTokenizer:
+    pad_id, bos_id, eos_id = PAD, BOS, EOS
+
+    def __init__(self):
+        self._c2i = {c: i + len(_SPECIALS) for i, c in enumerate(_CHARS)}
+        self._i2c = {i + len(_SPECIALS): c for i, c in enumerate(_CHARS)}
+
+    @property
+    def vocab_size(self) -> int:
+        return len(VOCAB)
+
+    def encode(self, s: str, *, bos: bool = False, eos: bool = False) -> List[int]:
+        ids = [self._c2i[c] for c in s if c in self._c2i]
+        if bos:
+            ids = [BOS] + ids
+        if eos:
+            ids = ids + [EOS]
+        return ids
+
+    def decode(self, ids: Sequence[int]) -> str:
+        out = []
+        for i in ids:
+            i = int(i)
+            if i == EOS:
+                break
+            if i in self._i2c:
+                out.append(self._i2c[i])
+        return "".join(out)
+
+    def pad_batch(self, seqs: List[List[int]], length: int,
+                  left: bool = True) -> np.ndarray:
+        """Left-pad (default) to fixed length; returns (B, length) int32."""
+        out = np.full((len(seqs), length), PAD, np.int32)
+        for r, s in enumerate(seqs):
+            s = s[-length:] if left else s[:length]
+            if left:
+                out[r, length - len(s):] = s
+            else:
+                out[r, :len(s)] = s
+        return out
+
+
+TOKENIZER = CharTokenizer()

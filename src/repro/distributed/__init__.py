@@ -1,0 +1,11 @@
+from repro.distributed.sharding import (
+    DEFAULT_RULES,
+    logical_spec,
+    lsc,
+    named_sharding,
+    tree_shardings,
+    use_mesh_rules,
+)
+
+__all__ = ["lsc", "use_mesh_rules", "named_sharding", "tree_shardings",
+           "logical_spec", "DEFAULT_RULES"]

@@ -1,0 +1,228 @@
+"""Logical-axis sharding rules (MaxText-style) with divisibility fallback.
+
+Models annotate activations with *logical* axis names via :func:`lsc`
+(logical sharding constraint) and parameters carry logical axis tuples
+produced next to ``init_params``.  At launch time a :class:`ShardingRules`
+context binds logical names to physical mesh axes; outside any context (unit
+tests, CPU smoke runs) every annotation is a no-op.
+
+The binding is divisibility-aware: if a tensor dim is not divisible by the
+product of its mapped mesh axes, the mapping for that dim silently falls back
+to replication (e.g. 40 attention heads on a 16-way ``model`` axis).  This is
+what lets one rule set serve all ten architectures.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AxisVal = Union[None, str, Tuple[str, ...]]
+
+# Default logical->physical rules for the production (data, model) /
+# (pod, data, model) meshes.  ``batch`` spans every data-parallel axis.
+DEFAULT_RULES: Dict[str, AxisVal] = {
+    # activations
+    "batch": ("pod", "data"),
+    "seq": None,              # replicated by default
+    "seq_shard": ("data",),   # context parallelism for long prefill
+    "embed": None,            # residual stream replicated across model axis
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "ffn": ("model",),
+    "moe_ffn": ("model",),
+    "vocab": ("model",),
+    "experts": ("model",),
+    "ssm_inner": ("model",),
+    "ssm_heads": ("model",),
+    "cache_slots": None,
+    # parameters: 2-D sharded — TP dim via the axes above, FSDP dim below
+    "fsdp": ("data",),        # parameter dim sharded over the data axis (ZeRO-3)
+    "fsdp_pod": ("pod", "data"),  # optional: FSDP across pods too
+}
+
+
+class ShardingRules(threading.local):
+    def __init__(self):
+        self.mesh: Optional[Mesh] = None
+        self.rules: Dict[str, AxisVal] = dict(DEFAULT_RULES)
+        self.prules: Optional[Dict[str, AxisVal]] = None  # param placement
+        self.enabled = False
+
+
+_CTX = ShardingRules()
+
+
+class use_mesh_rules:
+    """Context manager binding a mesh + logical rules for model tracing.
+
+    ``prules`` (parameter-placement rules) let model bodies constrain their
+    per-iteration layer-param slices (see `layer_param_lsc`) — without this,
+    GSPMD hoists FSDP all-gathers outside scan-over-layers and gathers the
+    whole stacked parameter bank at once.
+    """
+
+    def __init__(self, mesh: Mesh, rules: Optional[Dict[str, AxisVal]] = None,
+                 prules: Optional[Dict[str, AxisVal]] = None):
+        self.mesh = mesh
+        self.rules = dict(DEFAULT_RULES)
+        if rules:
+            self.rules.update(rules)
+        self.prules = prules
+        self._saved = None
+
+    def __enter__(self):
+        self._saved = (_CTX.mesh, _CTX.rules, _CTX.prules, _CTX.enabled)
+        _CTX.mesh, _CTX.rules, _CTX.prules, _CTX.enabled = (
+            self.mesh, self.rules, self.prules, True)
+        return self
+
+    def __exit__(self, *exc):
+        _CTX.mesh, _CTX.rules, _CTX.prules, _CTX.enabled = self._saved
+        return False
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _CTX.mesh if _CTX.enabled else None
+
+
+def _axis_size(mesh: Mesh, axes: AxisVal) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= dict(zip(mesh.axis_names, mesh.devices.shape)).get(a, 1)
+    return n
+
+
+def _resolve(mesh: Mesh, rules: Dict[str, AxisVal], shape: Sequence[int],
+             logical: Sequence[Optional[str]], *, hint: bool = False) -> P:
+    """Map logical dim names to a PartitionSpec, dropping non-divisible or
+    unknown axes and axes absent from the mesh.
+
+    hint=False (input/parameter placements): unresolved dims are REPLICATED.
+    hint=True  (with_sharding_constraint on activations): unresolved dims are
+    UNCONSTRAINED — a None there would mean "force-replicate", which makes
+    GSPMD all-gather e.g. the batch dim of every annotated activation (a
+    ~100x collective-volume bug caught by the HLO inventory, see
+    EXPERIMENTS.md §Perf iteration A2)."""
+    unre = P.UNCONSTRAINED if hint else None
+    spec = []
+    used: set = set()
+    for dim, name in zip(shape, logical):
+        axes = rules.get(name) if name else None
+        if axes is None:
+            spec.append(unre)
+            continue
+        if isinstance(axes, str):
+            axes = (axes,)
+        axes = tuple(a for a in axes if a in mesh.axis_names and a not in used)
+        if not axes:
+            spec.append(unre)
+            continue
+        size = _axis_size(mesh, axes)
+        if size <= 1 or dim % size != 0:
+            # divisibility fallback: try a prefix of the axis tuple
+            ok = None
+            for k in range(len(axes) - 1, 0, -1):
+                sub = axes[:k]
+                if dim % _axis_size(mesh, sub) == 0 and _axis_size(mesh, sub) > 1:
+                    ok = sub
+                    break
+            if ok is None:
+                spec.append(unre)
+                continue
+            axes = ok
+        used.update(axes)
+        spec.append(axes if len(axes) > 1 else axes[0])
+    if not hint:
+        while spec and spec[-1] is None:
+            spec.pop()
+    return P(*spec)
+
+
+def logical_spec(shape: Sequence[int], logical: Sequence[Optional[str]],
+                 mesh: Optional[Mesh] = None,
+                 rules: Optional[Dict[str, AxisVal]] = None) -> P:
+    mesh = mesh or _CTX.mesh
+    rules = rules or _CTX.rules
+    assert mesh is not None
+    return _resolve(mesh, rules, shape, logical)
+
+
+def lsc(x, *logical: Optional[str]):
+    """Logical sharding constraint.  No-op outside a `use_mesh_rules` context.
+    Unnamed / unresolved dims are left UNCONSTRAINED (propagation decides)."""
+    if not _CTX.enabled or _CTX.mesh is None:
+        return x
+    if len(logical) != x.ndim:
+        raise ValueError(f"lsc: {len(logical)} names for rank-{x.ndim} tensor")
+    spec = _resolve(_CTX.mesh, _CTX.rules, x.shape, logical, hint=True)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(_CTX.mesh, spec))
+
+
+# Parameter-placement rules: identical to activation rules EXCEPT the
+# residual/feature dim ("embed") is FSDP-sharded across every data-parallel
+# axis (ZeRO-3).  Activations keep "embed" replicated across `model`, so one
+# logical vocabulary serves both trees; `used`-axis tracking stops a dim from
+# double-sharding when the same names appear in one shape.
+PARAM_EXTRA_RULES: Dict[str, AxisVal] = {"embed": ("pod", "data")}
+
+
+def param_rules(rules: Optional[Dict[str, AxisVal]] = None) -> Dict[str, AxisVal]:
+    merged = dict(DEFAULT_RULES)
+    if rules:
+        merged.update(rules)
+    merged.update(PARAM_EXTRA_RULES)
+    return merged
+
+
+def tree_lsc(tree, axes_tree, rules: Optional[Dict[str, AxisVal]] = None):
+    """Apply sharding constraints across a pytree using a parallel tree of
+    logical-axis tuples (e.g. constrain gradient accumulators to the
+    parameter layout).  ``rules`` overrides the context rules (pass
+    ``param_rules()`` for parameter-like trees)."""
+    if not _CTX.enabled or _CTX.mesh is None:
+        return tree
+    mesh = _CTX.mesh
+    use = rules or _CTX.rules
+
+    def one(x, a):
+        spec = _resolve(mesh, use, x.shape, a, hint=True)
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+    return jax.tree.map(one, tree, axes_tree)
+
+
+def layer_param_lsc(lp, layer_axes):
+    """Constrain a scanned layer's param slice to its sharded placement
+    (parameter rules if bound, else context rules).  Keeps the FSDP
+    all-gather INSIDE the scan body — per-layer, not whole-stack."""
+    if not _CTX.enabled or _CTX.mesh is None:
+        return lp
+    rules = _CTX.prules or _CTX.rules
+    return tree_lsc(lp, layer_axes, rules)
+
+
+def named_sharding(mesh: Mesh, shape: Sequence[int],
+                   logical: Sequence[Optional[str]],
+                   rules: Optional[Dict[str, AxisVal]] = None) -> NamedSharding:
+    return NamedSharding(mesh, _resolve(mesh, rules or dict(DEFAULT_RULES), shape, logical))
+
+
+def tree_shardings(mesh: Mesh, shapes_tree, axes_tree,
+                   rules: Optional[Dict[str, AxisVal]] = None):
+    """Build a NamedSharding pytree from a ShapeDtypeStruct tree + a logical
+    axes tree (same structure, leaves = tuple of names)."""
+
+    def one(sds, names):
+        return named_sharding(mesh, sds.shape, names, rules)
+
+    return jax.tree.map(one, shapes_tree, axes_tree,
+                        is_leaf=lambda x: isinstance(x, tuple) and all(
+                            isinstance(e, (str, type(None))) for e in x))

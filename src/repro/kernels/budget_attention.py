@@ -1,0 +1,84 @@
+"""Pallas TPU kernel: decode attention over the fixed-budget KV cache.
+
+THE hot spot of sparse rollouts (paper's technique): every decode step
+attends a 1-token query against ``S = B_budget + B_buffer`` cached slots and
+must also produce the per-slot attention mass that feeds the eviction policy
+(H2O/R-KV/SnapKV score update).  The GPU reference does attention and score
+accumulation as separate passes; on TPU we fuse them — one HBM read of K/V
+per step, everything else stays in VMEM.
+
+TPU mapping:
+  * grid = (B * Hkv,): one program per (batch row, kv head) — embarrassingly
+    parallel, no cross-program reduction.
+  * blocks: the GQA query group (G, Dh) stays resident in VMEM; K/V slots
+    (S, Dh) are a single VMEM tile (budget caches are <= ~2k slots; a 640 x
+    128 bf16 tile is 160 KiB — trivially VMEM-resident).  Dh = 128 aligns
+    the MXU contraction; G is zero-padded to the sublane count by Mosaic.
+  * logits/softmax in f32 (MXU accumulates bf16 x bf16 -> f32), output cast
+    back to the cache dtype.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, pos_ref, o_ref, p_ref, *, scale: float):
+    q = q_ref[0].astype(jnp.float32)                    # (G, Dh)
+    k = k_ref[0].astype(jnp.float32)                    # (S, Dh)
+    v = v_ref[0].astype(jnp.float32)
+    valid = pos_ref[0] >= 0                             # (S,)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    s = jnp.where(valid[None, :], s, NEG)
+    m = jnp.max(s, axis=1, keepdims=True)
+    p = jnp.exp(s - m)
+    p = jnp.where(valid[None, :], p, 0.0)
+    l = jnp.sum(p, axis=1, keepdims=True)
+    pn = p / jnp.maximum(l, 1e-30)                      # (G, S)
+    o = jax.lax.dot_general(pn, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    o_ref[0] = o.astype(o_ref.dtype)
+    p_ref[0] = jnp.sum(pn, axis=0)                      # pooled over the group
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def budget_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                     pos: jnp.ndarray, *, interpret: bool = False):
+    """q: (B, Hq, Dh); k/v: (B, Hkv, S, Dh); pos: (B, Hkv, S) (-1 = empty).
+
+    Returns (out (B, Hq, Dh) in q.dtype, probs_pooled (B, Hkv, S) f32).
+    """
+    B, Hq, Dh = q.shape
+    _, Hkv, S, _ = k.shape
+    G = Hq // Hkv
+    BH = B * Hkv
+    qf = q.reshape(BH, G, Dh)
+    kf = k.reshape(BH, S, Dh)
+    vf = v.reshape(BH, S, Dh)
+    posf = pos.reshape(BH, S)
+    out, pooled = pl.pallas_call(
+        functools.partial(_kernel, scale=1.0 / (Dh ** 0.5)),
+        grid=(BH,),
+        in_specs=[
+            pl.BlockSpec((1, G, Dh), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, S, Dh), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, S, Dh), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, S), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, G, Dh), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, S), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, G, Dh), q.dtype),
+            jax.ShapeDtypeStruct((BH, S), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf, posf)
+    return out.reshape(B, Hq, Dh), pooled.reshape(B, Hkv, S)

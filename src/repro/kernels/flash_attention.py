@@ -1,0 +1,116 @@
+"""Pallas TPU kernel: forward flash attention (prefill / dense re-scoring).
+
+The dense re-scoring pass (pi_old for every rollout token, paper §4) is a
+forward-only teacher-forced attention — no backward needed on this path, so
+a fwd kernel is the complete TPU story for it.  Online softmax over KV tiles
+with VMEM scratch carried across the innermost (sequential) kv-tile grid dim.
+
+TPU mapping:
+  grid = (B * Hq, nQ, nK); q tile (block_q, Dh) resident; K/V stream in
+  (block_k, Dh) tiles; GQA folds the q-head index to its kv head in the
+  BlockSpec index map (no K/V duplication in HBM).  Causal masking compares
+  absolute position tiles, so left-padded prompts mask correctly; tiles
+  enter VMEM at (block, 128)-aligned shapes for the MXU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _kernel(qpos_ref, kpos_ref, q_ref, k_ref, v_ref, o_ref,
+            acc, m_s, l_s, *, scale: float, nk: int, causal: bool):
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+        m_s[...] = jnp.full_like(m_s, NEG)
+        l_s[...] = jnp.zeros_like(l_s)
+
+    q = q_ref[0].astype(jnp.float32)                       # (bq, Dh)
+    k = k_ref[0].astype(jnp.float32)                       # (bk, Dh)
+    v = v_ref[0].astype(jnp.float32)
+    qp = qpos_ref[0]                                       # (bq,) int32
+    kp = kpos_ref[0]                                       # (bk,)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    msk = kp[None, :] >= 0
+    if causal:
+        msk = msk & (qp[:, None] >= kp[None, :])
+    s = jnp.where(msk, s, NEG)
+    m_prev = m_s[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    p = jnp.where(msk, p, 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    l_s[...] = l_s[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+    acc[...] = acc[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_s[...] = m_new
+
+    @pl.when(kj == nk - 1)
+    def _finish():
+        o_ref[0] = (acc[...] / jnp.maximum(l_s[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_k", "causal",
+                                              "interpret"))
+def flash_attention_fwd(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                        q_positions: jnp.ndarray, kv_positions: jnp.ndarray,
+                        *, block_q: int = 512, block_k: int = 512,
+                        causal: bool = True,
+                        interpret: bool = False) -> jnp.ndarray:
+    """q: (B, Sq, Hq, Dh); k/v: (B, Sk, Hkv, Dh);
+    q_positions: (B, Sq) int32 (-1 = padding); kv_positions: (B, Sk).
+    Returns (B, Sq, Hq, Dh) in q.dtype."""
+    B, Sq, Hq, Dh = q.shape
+    _, Sk, Hkv, _ = k.shape
+    G = Hq // Hkv
+    bq, bk = min(block_q, Sq), min(block_k, Sk)
+    pq, pk = (-Sq) % bq, (-Sk) % bk
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+        q_positions = jnp.pad(q_positions, ((0, 0), (0, pq)), constant_values=-1)
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        kv_positions = jnp.pad(kv_positions, ((0, 0), (0, pk)), constant_values=-1)
+    Sqp, Skp = Sq + pq, Sk + pk
+    nq, nk = Sqp // bq, Skp // bk
+    # layouts: fold heads into the leading grid dim
+    qf = jnp.swapaxes(q, 1, 2).reshape(B * Hq, Sqp, Dh)
+    kf = jnp.swapaxes(k, 1, 2).reshape(B * Hkv, Skp, Dh)
+    vf = jnp.swapaxes(v, 1, 2).reshape(B * Hkv, Skp, Dh)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=1.0 / (Dh ** 0.5), nk=nk,
+                          causal=causal),
+        grid=(B * Hq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq), lambda i, qi, ki: (i // Hq, qi)),
+            pl.BlockSpec((1, bk), lambda i, qi, ki: (i // Hq, ki)),
+            pl.BlockSpec((1, bq, Dh), lambda i, qi, ki: (i, qi, 0)),
+            # GQA: q-head i maps to kv row (batch * Hkv + head // G)
+            pl.BlockSpec((1, bk, Dh),
+                         lambda i, qi, ki: ((i // Hq) * Hkv + (i % Hq) // G, ki, 0)),
+            pl.BlockSpec((1, bk, Dh),
+                         lambda i, qi, ki: ((i // Hq) * Hkv + (i % Hq) // G, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, Dh), lambda i, qi, ki: (i, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * Hq, Sqp, Dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, Dh), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q_positions, kv_positions, qf, kf, vf)
+    out = out.reshape(B, Hq, Sqp, Dh)[:, :, :Sq]
+    return jnp.swapaxes(out, 1, 2)

@@ -1,0 +1,98 @@
+"""Pallas TPU kernel: flash-decode — 1-token attention over a LONG dense KV
+cache, tiled over slots with an online softmax.
+
+This is the memory-wall *baseline* path (dense decode_32k / long_500k cells):
+the cache no longer fits a single VMEM tile, so slots stream through VMEM in
+``block_s`` tiles; running max / normalizer / weighted accumulator live in
+VMEM scratch across the (sequential) slot-tile grid dimension.  No eviction
+scores are produced — dense caches never evict.
+
+TPU mapping: grid = (B*Hkv, S // block_s); the slot dim is the innermost
+(sequential) grid axis, so Mosaic revisits the same (G, Dh) scratch while
+double-buffering the K/V tile loads (compute/DMA overlap for free).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, pos_ref, o_ref, acc, m_s, l_s, *,
+            scale: float, ns: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+        m_s[...] = jnp.full_like(m_s, NEG)
+        l_s[...] = jnp.zeros_like(l_s)
+
+    q = q_ref[0].astype(jnp.float32)                    # (G, Dh)
+    k = k_ref[0].astype(jnp.float32)                    # (bs, Dh)
+    v = v_ref[0].astype(jnp.float32)
+    valid = pos_ref[0] >= 0                             # (bs,)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    s = jnp.where(valid[None, :], s, NEG)               # (G, bs)
+    m_prev = m_s[...]                                   # (G, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    p = jnp.where(valid[None, :], p, 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    l_s[...] = l_s[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+    acc[...] = acc[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_s[...] = m_new
+
+    @pl.when(j == ns - 1)
+    def _finish():
+        o_ref[0] = (acc[...] / jnp.maximum(l_s[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
+def flash_decode(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                 pos: jnp.ndarray, *, block_s: int = 512,
+                 interpret: bool = False) -> jnp.ndarray:
+    """q: (B, Hq, Dh); k/v: (B, Hkv, S, Dh); pos: (B, Hkv, S).
+    Returns out (B, Hq, Dh)."""
+    B, Hq, Dh = q.shape
+    _, Hkv, S, _ = k.shape
+    G = Hq // Hkv
+    BH = B * Hkv
+    bs = min(block_s, S)
+    pad = (-S) % bs
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        pos = jnp.pad(pos, ((0, 0), (0, 0), (0, pad)), constant_values=-1)
+    Sp = S + pad
+    ns = Sp // bs
+    qf = q.reshape(BH, G, Dh)
+    kf = k.reshape(BH, Sp, Dh)
+    vf = v.reshape(BH, Sp, Dh)
+    posf = pos.reshape(BH, Sp)
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=1.0 / (Dh ** 0.5), ns=ns),
+        grid=(BH, ns),
+        in_specs=[
+            pl.BlockSpec((1, G, Dh), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, bs, Dh), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, bs, Dh), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, bs), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((1, G, Dh), lambda i, j: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, G, Dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, Dh), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf, posf)
+    return out.reshape(B, Hq, Dh)

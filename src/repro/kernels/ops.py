@@ -1,0 +1,60 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+``interpret`` auto-detects the backend: on CPU (this container) the kernel
+body executes in interpret mode — bit-accurate semantics, Python speed; on
+TPU it compiles to Mosaic.  ``use_kernels(False)`` flips every wrapper to its
+pure-jnp oracle (the production fallback / A-B testing switch).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.budget_attention import budget_attention as _budget_attention
+from repro.kernels.flash_attention import flash_attention_fwd as _flash_attention_fwd
+from repro.kernels.flash_decode import flash_decode as _flash_decode
+from repro.kernels.rkv_scores import rkv_scores as _rkv_scores
+
+_STATE = {"enabled": True}
+
+
+def use_kernels(enabled: bool):
+    _STATE["enabled"] = enabled
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def budget_attention(q, k, v, pos):
+    if not _STATE["enabled"]:
+        return ref.budget_attention_ref(q, k, v, pos)
+    return _budget_attention(q, k, v, pos, interpret=_interpret())
+
+
+def flash_decode(q, k, v, pos, *, block_s: int = 512):
+    if not _STATE["enabled"]:
+        return ref.flash_decode_ref(q, k, v, pos)
+    return _flash_decode(q, k, v, pos, block_s=block_s, interpret=_interpret())
+
+
+def flash_attention(q, k, v, q_positions, kv_positions, *, causal=True,
+                    block_q: int = 512, block_k: int = 512):
+    if not _STATE["enabled"]:
+        return ref.flash_attention_ref(q, k, v, q_positions, kv_positions,
+                                       causal=causal)
+    return _flash_attention_fwd(q, k, v, q_positions, kv_positions,
+                                block_q=block_q, block_k=block_k,
+                                causal=causal, interpret=_interpret())
+
+
+def rkv_scores(k_cache, k_new, importance, pos, cur_pos, *, lam=0.1,
+               num_sinks=4, obs_window=8):
+    if not _STATE["enabled"]:
+        return ref.rkv_scores_ref(k_cache, k_new, importance, pos, cur_pos,
+                                  lam=lam, num_sinks=num_sinks,
+                                  obs_window=obs_window)
+    return _rkv_scores(k_cache, k_new, importance, pos, cur_pos, lam=lam,
+                       num_sinks=num_sinks, obs_window=obs_window,
+                       interpret=_interpret())

@@ -1,0 +1,67 @@
+"""Pure-jnp oracles for every Pallas kernel (tested with assert_allclose)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG = -1e30
+BIG = 1e30
+
+
+def budget_attention_ref(q, k, v, pos):
+    """Oracle for kernels.budget_attention."""
+    B, Hq, Dh = q.shape
+    _, Hkv, S, _ = k.shape
+    G = Hq // Hkv
+    qg = q.reshape(B, Hkv, G, Dh).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bhgd,bhsd->bhgs", qg, kf) / jnp.sqrt(jnp.float32(Dh))
+    valid = (pos >= 0)[:, :, None, :]
+    s = jnp.where(valid, s, NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(valid, p, 0.0)
+    o = jnp.einsum("bhgs,bhsd->bhgd", p, vf)
+    return o.reshape(B, Hq, Dh).astype(q.dtype), p.sum(axis=2)
+
+
+def flash_decode_ref(q, k, v, pos):
+    out, _ = budget_attention_ref(q, k, v, pos)
+    return out
+
+
+def flash_attention_ref(q, k, v, q_positions, kv_positions, causal=True):
+    """Oracle for kernels.flash_attention_fwd.  (B,S,H,D) layouts."""
+    B, Sq, Hq, Dh = q.shape
+    _, Sk, Hkv, _ = k.shape
+    G = Hq // Hkv
+    qg = q.reshape(B, Sq, Hkv, G, Dh).astype(jnp.float32)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k.astype(jnp.float32))
+    s = s / jnp.sqrt(jnp.float32(Dh))
+    msk = (kv_positions >= 0)[:, None, None, None, :]
+    if causal:
+        cm = q_positions[:, :, None] >= kv_positions[:, None, :]
+        msk = msk & cm[:, None, None, :, :]
+    s = jnp.where(msk, s, NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(msk, p, 0.0)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, Hq, Dh).astype(q.dtype)
+
+
+def rkv_scores_ref(k_cache, k_new, importance, pos, cur_pos, *,
+                   lam=0.1, num_sinks=4, obs_window=8):
+    """Oracle for kernels.rkv_scores."""
+    valid = pos >= 0
+    denom = jnp.max(jnp.where(valid, importance, 0.0), axis=-1, keepdims=True) + 1e-6
+    imp_n = importance / denom
+    kc = k_cache.astype(jnp.float32)
+    kn = k_new.astype(jnp.float32)
+    dot = jnp.einsum("bhsd,bhd->bhs", kc, kn)
+    cos = dot / (jnp.linalg.norm(kc, axis=-1)
+                 * jnp.linalg.norm(kn, axis=-1)[..., None] + 1e-6)
+    score = lam * imp_n + (1.0 - lam) * (1.0 - cos)
+    score = jnp.where(valid, score, NEG)
+    protected = valid & ((pos < num_sinks)
+                         | (pos > cur_pos[:, None, None] - obs_window))
+    return jnp.where(protected, BIG, score)

@@ -1,0 +1,84 @@
+"""Pallas TPU kernel: fused R-KV eviction scoring.
+
+R-KV (Cai et al., 2025) scores each cached token by
+``lambda * importance + (1 - lambda) * diversity`` where importance is the
+normalized cumulative attention mass and diversity = 1 - cos(key, incoming
+key).  The GPU reference computes similarity and importance normalization in
+separate launches; here a single VMEM pass over the (S, Dh) key tile emits
+the final per-slot score (with sink / observation-window pins applied), ready
+for the argmin eviction.
+
+grid = (B * Hkv,); one (S, Dh) key tile + (S,) vectors per program.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG = -1e30
+BIG = 1e30
+
+
+def _kernel(k_ref, knew_ref, imp_ref, pos_ref, cur_ref, o_ref, *,
+            lam: float, num_sinks: int, obs_window: int):
+    k = k_ref[0].astype(jnp.float32)                      # (S, Dh)
+    kn = knew_ref[0].astype(jnp.float32)                  # (1, Dh)
+    imp = imp_ref[0]                                      # (S,)
+    pos = pos_ref[0]                                      # (S,)
+    cur = cur_ref[0, 0]                                   # scalar int32
+    valid = pos >= 0
+
+    # importance: normalize cumulative attention to [0, 1] within the row
+    denom = jnp.max(jnp.where(valid, imp, 0.0)) + 1e-6
+    imp_n = imp / denom
+
+    # redundancy: cosine similarity with the incoming key
+    dot = jax.lax.dot_general(k, kn, (((1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.float32)[:, 0]
+    kk = jnp.sqrt(jnp.sum(k * k, axis=1))
+    nn = jnp.sqrt(jnp.sum(kn * kn))
+    cos = dot / (kk * nn + 1e-6)
+    diversity = 1.0 - cos
+
+    score = lam * imp_n + (1.0 - lam) * diversity
+    score = jnp.where(valid, score, NEG)                  # empty slots first
+    protected = valid & ((pos < num_sinks) | (pos > cur - obs_window))
+    score = jnp.where(protected, BIG, score)
+    o_ref[0] = score
+
+
+@functools.partial(jax.jit, static_argnames=("lam", "num_sinks", "obs_window",
+                                              "interpret"))
+def rkv_scores(k_cache: jnp.ndarray, k_new: jnp.ndarray, importance: jnp.ndarray,
+               pos: jnp.ndarray, cur_pos: jnp.ndarray, *,
+               lam: float = 0.1, num_sinks: int = 4, obs_window: int = 8,
+               interpret: bool = False) -> jnp.ndarray:
+    """k_cache: (B, Hkv, S, Dh); k_new: (B, Hkv, Dh); importance/pos:
+    (B, Hkv, S); cur_pos: (B,).  Returns eviction scores (B, Hkv, S) f32
+    (lower = evict first; empty slots lowest, protected slots highest)."""
+    B, Hkv, S, Dh = k_cache.shape
+    BH = B * Hkv
+    kf = k_cache.reshape(BH, S, Dh)
+    knf = k_new.reshape(BH, 1, Dh)
+    impf = importance.reshape(BH, S)
+    posf = pos.reshape(BH, S)
+    curf = jnp.repeat(cur_pos.astype(jnp.int32), Hkv).reshape(BH, 1)
+    out = pl.pallas_call(
+        functools.partial(_kernel, lam=lam, num_sinks=num_sinks,
+                          obs_window=obs_window),
+        grid=(BH,),
+        in_specs=[
+            pl.BlockSpec((1, S, Dh), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, 1, Dh), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, S), lambda i: (i, 0)),
+            pl.BlockSpec((1, S), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, S), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S), jnp.float32),
+        interpret=interpret,
+    )(kf, knf, impf, posf, curf)
+    return out.reshape(B, Hkv, S)

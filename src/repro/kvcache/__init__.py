@@ -1,0 +1,21 @@
+from repro.kvcache.attend import attend
+from repro.kvcache.cache import (
+    KVCache,
+    append,
+    compress_prefill,
+    dense_prefill,
+    eviction_scores,
+    init_cache,
+    update_scores,
+)
+
+__all__ = [
+    "KVCache",
+    "init_cache",
+    "append",
+    "attend",
+    "update_scores",
+    "eviction_scores",
+    "compress_prefill",
+    "dense_prefill",
+]

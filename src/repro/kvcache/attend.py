@@ -1,0 +1,37 @@
+"""Decode-step attention over the slotted cache (pure-jnp reference path).
+
+The Pallas TPU kernel (`repro.kernels.budget_attention`) implements the same
+contract; `use_kernel=True` on the ops wrapper switches paths.  This function
+is also the oracle the kernel is tested against.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kvcache.cache import KVCache
+
+
+def attend(q: jnp.ndarray, cache: KVCache) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """q: (B, Hq, Dh) roped single-token queries.
+
+    Returns (out (B, Hq, Dh), probs_pooled (B, Hkv, S)) where probs_pooled is
+    the attention mass each slot received, summed over the q-heads of its GQA
+    group — the eviction-policy update signal.
+    """
+    B, Hq, Dh = q.shape
+    _, Hkv, S, _ = cache.k.shape
+    G = Hq // Hkv
+    qg = q.reshape(B, Hkv, G, Dh).astype(jnp.float32)
+    k = cache.k.astype(jnp.float32)
+    v = cache.v.astype(jnp.float32)
+    scale = 1.0 / jnp.sqrt(jnp.float32(Dh))
+    logits = jnp.einsum("bhgd,bhsd->bhgs", qg, k) * scale
+    valid = cache.valid_mask()[:, :, None, :]                  # (B,Hkv,1,S)
+    logits = jnp.where(valid, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    probs = jnp.where(valid, probs, 0.0)
+    out = jnp.einsum("bhgs,bhsd->bhgd", probs, v)
+    return out.reshape(B, Hq, Dh).astype(q.dtype), probs.sum(axis=2)

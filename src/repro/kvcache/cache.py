@@ -1,0 +1,197 @@
+"""Fixed-budget slotted KV cache (TPU-native adaptation of R-KV/SnapKV/H2O/
+StreamingLLM eviction).
+
+GPU reference implementations physically compact a variable-length cache every
+``B_buffer`` tokens.  XLA needs static shapes, so we keep a fixed array of
+``slots = B_budget + B_buffer`` per layer and *overwrite* the lowest-scoring
+unprotected slot once full (streaming eviction).  Memory is exactly the
+paper's bound; all ops are masked vector ops + one scatter, and the whole
+decode loop stays inside a single compiled ``lax.scan``.
+
+Cache layout (one layer; callers stack a leading layer dim for scan):
+  k, v   : (B, Hkv, S, Dh)   post-RoPE keys / values
+  pos    : (B, Hkv, S) int32 original position of the token in a slot, -1=empty
+  score  : (B, Hkv, S) f32   policy accumulator (e.g. cumulative attention)
+  fill   : ()          int32 number of filled slots (lockstep across batch)
+
+Eviction is PER KV-HEAD (different heads retain different tokens), matching
+H2O/SnapKV/R-KV semantics.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SparseRLConfig
+
+NEG = -1e30
+POS_EMPTY = -1
+
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray
+    v: jnp.ndarray
+    pos: jnp.ndarray
+    score: jnp.ndarray
+    fill: jnp.ndarray  # scalar int32
+
+    @property
+    def slots(self) -> int:
+        return self.k.shape[-2]
+
+    def valid_mask(self) -> jnp.ndarray:
+        return self.pos >= 0  # (B, Hkv, S)
+
+
+def init_cache(batch: int, kv_heads: int, slots: int, head_dim: int,
+               dtype=jnp.bfloat16) -> KVCache:
+    return KVCache(
+        k=jnp.zeros((batch, kv_heads, slots, head_dim), dtype),
+        v=jnp.zeros((batch, kv_heads, slots, head_dim), dtype),
+        pos=jnp.full((batch, kv_heads, slots), POS_EMPTY, jnp.int32),
+        score=jnp.zeros((batch, kv_heads, slots), jnp.float32),
+        fill=jnp.zeros((), jnp.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Eviction
+# ---------------------------------------------------------------------------
+def eviction_scores(cache: KVCache, scfg: SparseRLConfig,
+                    cur_pos: jnp.ndarray,
+                    k_new: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Lower = evicted first.  (B, Hkv, S) float32.
+
+    Policies:
+      streaming : recency (evict oldest), attention sinks pinned.
+      h2o       : cumulative attention mass received (``score`` field).
+      snapkv    : pooled observation-window attention at prefill, then
+                  cumulative attention during decode (same field).
+      rkv       : lambda * importance  +  (1-lambda) * diversity, where
+                  importance = normalized cumulative attention and
+                  diversity = 1 - cos-sim(key, incoming key) (redundant
+                  tokens — similar to what is being written — go first).
+    """
+    valid = cache.valid_mask()
+    if scfg.compression == "streaming":
+        s = cache.pos.astype(jnp.float32)
+    elif scfg.compression in ("h2o", "snapkv"):
+        s = cache.score
+    elif scfg.compression == "rkv":
+        imp = cache.score
+        denom = jnp.max(jnp.where(valid, imp, 0.0), axis=-1, keepdims=True) + 1e-6
+        imp = imp / denom
+        if k_new is not None:
+            kc = cache.k.astype(jnp.float32)
+            kn = k_new.astype(jnp.float32)                     # (B, Hkv, Dh)
+            num = jnp.einsum("bhsd,bhd->bhs", kc, kn)
+            den = (jnp.linalg.norm(kc, axis=-1) *
+                   jnp.linalg.norm(kn, axis=-1)[..., None] + 1e-6)
+            redundancy = num / den                              # cos-sim [-1,1]
+            diversity = 1.0 - redundancy
+        else:
+            diversity = jnp.ones_like(imp)
+        s = scfg.rkv_lambda * imp + (1.0 - scfg.rkv_lambda) * diversity
+    else:
+        # "none": a correctly-sized dense cache never fills; if misused past
+        # capacity, degrade to recency eviction rather than clobbering slot 0
+        s = cache.pos.astype(jnp.float32)
+    # protections: empty slots are *preferred* targets; sinks and the
+    # observation window (alpha most recent tokens) are never evicted.
+    s = jnp.where(valid, s, NEG)
+    sink = cache.pos < scfg.num_sinks
+    recent = cache.pos > (cur_pos - scfg.obs_window)
+    s = jnp.where(valid & (sink | recent), jnp.inf, s)
+    return s
+
+
+def append(cache: KVCache, k_new: jnp.ndarray, v_new: jnp.ndarray,
+           new_pos: jnp.ndarray, scfg: SparseRLConfig,
+           new_score: float = 0.0) -> KVCache:
+    """Insert one token per (batch, kv_head).  k_new/v_new: (B, Hkv, Dh);
+    new_pos: (B,) current absolute position.  Evicts per-head argmin of
+    `eviction_scores` when full."""
+    B, H, S, _ = cache.k.shape
+    full = cache.fill >= S
+    ev = eviction_scores(cache, scfg, cur_pos=new_pos[:, None, None], k_new=k_new)
+    evict_idx = jnp.argmin(ev, axis=-1)                        # (B, H)
+    idx = jnp.where(full, evict_idx, jnp.minimum(cache.fill, S - 1))
+    bi = jnp.arange(B)[:, None]
+    hi = jnp.arange(H)[None, :]
+    k = cache.k.at[bi, hi, idx].set(k_new.astype(cache.k.dtype))
+    v = cache.v.at[bi, hi, idx].set(v_new.astype(cache.v.dtype))
+    pos = cache.pos.at[bi, hi, idx].set(new_pos[:, None].astype(jnp.int32))
+    score = cache.score.at[bi, hi, idx].set(jnp.float32(new_score))
+    fill = jnp.minimum(cache.fill + 1, S)
+    return KVCache(k, v, pos, score, fill)
+
+
+def update_scores(cache: KVCache, probs_pooled: jnp.ndarray,
+                  scfg: SparseRLConfig) -> KVCache:
+    """Accumulate attention mass (B, Hkv, S) into the policy score."""
+    if scfg.compression in ("h2o", "snapkv", "rkv"):
+        score = cache.score + jnp.where(cache.valid_mask(), probs_pooled, 0.0)
+        return cache._replace(score=score)
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# Prefill compression: select `slots` tokens out of a full prompt
+# ---------------------------------------------------------------------------
+def compress_prefill(k_full: jnp.ndarray, v_full: jnp.ndarray,
+                     prompt_mask: jnp.ndarray, obs_scores: jnp.ndarray,
+                     slots: int, scfg: SparseRLConfig,
+                     positions: jnp.ndarray) -> KVCache:
+    """Build the initial budget cache from a prefilled prompt.
+
+    k_full/v_full: (B, Hkv, T, Dh); prompt_mask: (B, T) bool valid;
+    obs_scores:   (B, Hkv, T) pooled attention of the last obs-window queries
+                  over all keys (SnapKV selection signal; reused as the
+                  importance init for h2o/rkv);
+    positions:    (B, T) absolute positions.
+    """
+    B, H, T, D = k_full.shape
+    if T <= slots:
+        # prompt fits: copy verbatim (pad empty slots)
+        pad = slots - T
+        k = jnp.pad(k_full, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v_full, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        posbh = jnp.broadcast_to(positions[:, None, :], (B, H, T))
+        posbh = jnp.where(prompt_mask[:, None, :], posbh, POS_EMPTY)
+        pos = jnp.pad(posbh, ((0, 0), (0, 0), (0, pad)), constant_values=POS_EMPTY)
+        score = jnp.pad(jnp.where(prompt_mask[:, None, :], obs_scores, 0.0),
+                        ((0, 0), (0, 0), (0, pad)))
+        fill = jnp.asarray(T, jnp.int32)
+        return KVCache(k.astype(k_full.dtype), v.astype(v_full.dtype), pos,
+                       score.astype(jnp.float32), fill)
+
+    posb = jnp.broadcast_to(positions[:, None, :], (B, H, T))
+    maskb = jnp.broadcast_to(prompt_mask[:, None, :], (B, H, T))
+    sel = jnp.where(maskb, obs_scores, NEG)
+    # sinks + observation window always kept
+    cur = jnp.max(jnp.where(prompt_mask, positions, 0), axis=-1)  # (B,)
+    keep = (posb < scfg.num_sinks) | (posb > cur[:, None, None] - scfg.obs_window)
+    sel = jnp.where(maskb & keep, jnp.inf, sel)
+    _, top_idx = jax.lax.top_k(sel, slots)                     # (B, H, slots)
+    top_idx = jnp.sort(top_idx, axis=-1)                       # keep temporal order
+    gather = lambda x: jnp.take_along_axis(x, top_idx[..., None], axis=2)
+    k = gather(k_full)
+    v = gather(v_full)
+    pos = jnp.take_along_axis(posb, top_idx, axis=2)
+    pos = jnp.where(jnp.take_along_axis(maskb, top_idx, axis=2), pos, POS_EMPTY)
+    score = jnp.take_along_axis(jnp.where(maskb, obs_scores, 0.0), top_idx, axis=2)
+    fill = jnp.asarray(slots, jnp.int32)
+    return KVCache(k, v, pos, score.astype(jnp.float32), fill)
+
+
+def dense_prefill(k_full, v_full, prompt_mask, positions, max_slots: int) -> KVCache:
+    """Dense (uncompressed) cache: prompt KVs + head-room for generation."""
+    B, H, T, D = k_full.shape
+    assert max_slots >= T, (max_slots, T)
+    zero_scores = jnp.zeros((B, H, T), jnp.float32)
+    cache = compress_prefill(k_full, v_full, prompt_mask, zero_scores,
+                             max_slots, SparseRLConfig(compression="none"),
+                             positions)
+    return cache._replace(fill=jnp.asarray(T, jnp.int32))

@@ -1,0 +1,307 @@
+"""Analytic roofline cost model per (architecture x shape x mesh) cell.
+
+WHY ANALYTIC: XLA's ``compiled.cost_analysis()`` counts while-loop bodies
+ONCE (verified in EXPERIMENTS.md §Methodology: a 10-trip scan of a 16.8
+MFLOP matmul reports 16.8 MFLOPs, the unrolled equivalent 168 MFLOPs).  With
+scan-over-layers + grad-accumulation scans + flash-attention block scans,
+raw cost_analysis would undercount by 2-4 orders of magnitude.  The roofline
+below is therefore computed from first principles of the model math —
+validated against cost_analysis on unrolled micro-configs (where HLO
+counting is exact) in tests/test_costs.py — while the compiled artifact
+supplies the memory analysis and the collective-op schedule.
+
+Hardware constants (TPU v5e-class, per chip): 197 TFLOP/s bf16, 819 GB/s
+HBM, ~50 GB/s/link ICI.
+
+Conventions:
+  * FLOPs / bytes are GLOBAL per step; roofline terms divide by chip count
+    (matching "HLO_FLOPs / (chips x peak)" in the spec, since per-device HLO
+    numbers x chips == global).
+  * collective bytes use the ring convention: per-chip payload for an
+    all-gather / reduce-scatter of a tensor of size X over a group of g is
+    X * (g-1) / g; all-reduce is 2x that.  DCI (pod axis) and ICI (data /
+    model axes) are reported separately; the collective term uses the SLOWER
+    path when both are exercised.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+from repro.configs.base import (
+    AUDIO,
+    HYBRID,
+    MOE,
+    SSM,
+    VLM,
+    ModelConfig,
+    ShapeSpec,
+    SparseRLConfig,
+)
+
+PEAK_FLOPS = 197e12       # bf16 per chip
+HBM_BW = 819e9            # bytes/s per chip
+ICI_BW = 50e9             # bytes/s per link (one axis direction)
+DCI_BW = 25e9             # inter-pod (conservative: half ICI)
+
+BF16 = 2
+F32 = 4
+
+
+@dataclass
+class MeshShape:
+    pod: int = 1
+    data: int = 16
+    model: int = 16
+
+    @property
+    def chips(self) -> int:
+        return self.pod * self.data * self.model
+
+    @property
+    def dp(self) -> int:
+        return self.pod * self.data
+
+
+@dataclass
+class Strategy:
+    """A sharding/numerics strategy on the FIXED production mesh, expressed
+    as rule/numerics choices (the hillclimb search space).
+
+    tp_eff=1 ("zero3") folds the model axis into data parallelism via rule
+    overrides — same physical mesh, different logical mapping.
+    """
+    name: str = "baseline"
+    tp_eff: Optional[int] = None      # None -> mesh.model
+    weight_bits: int = 16             # 16 | 8 | 4 (quantized weight reads)
+    grad_accum_bits: int = 32         # 32 | 16
+    chunked_loss: bool = False        # vocab-chunked logsumexp (no SxV logits)
+    remat_chunk: int = 0              # 0 = per-layer remat; k = 2-level, save
+                                      # every k-th boundary only
+
+    def eff(self, mesh: MeshShape) -> "MeshShape":
+        if self.tp_eff is None or self.tp_eff == mesh.model:
+            return mesh
+        assert mesh.model % self.tp_eff == 0
+        return MeshShape(pod=mesh.pod,
+                         data=mesh.data * (mesh.model // self.tp_eff),
+                         model=self.tp_eff)
+
+
+BASELINE = Strategy()
+
+
+def _ring(full_bytes: float, g: int) -> float:
+    return full_bytes * (g - 1) / g if g > 1 else 0.0
+
+
+def _attn_layers(cfg: ModelConfig) -> int:
+    if cfg.family == HYBRID:
+        return cfg.num_layers // cfg.hybrid_attn_every
+    if cfg.family == SSM:
+        return 0
+    return cfg.num_layers
+
+
+def _param_bytes(cfg: ModelConfig) -> float:
+    return cfg.n_params() * (BF16 if cfg.param_dtype == "bfloat16" else F32)
+
+
+@dataclass
+class CellCost:
+    flops: float              # global per step
+    hbm_bytes: float          # global per step
+    coll_ici_bytes: float     # per-chip payload over ICI
+    coll_dci_bytes: float     # per-chip payload over DCI (pod axis)
+    model_flops: float        # 6*N_active*D (train) / 2*N_active*D (inference)
+    detail: Dict[str, float]
+
+    def terms(self, mesh: MeshShape) -> Dict[str, float]:
+        t_comp = self.flops / (mesh.chips * PEAK_FLOPS)
+        t_mem = self.hbm_bytes / (mesh.chips * HBM_BW)
+        t_ici = self.coll_ici_bytes / ICI_BW
+        t_dci = self.coll_dci_bytes / DCI_BW
+        t_coll = max(t_ici, t_dci)
+        dom = max((t_comp, "compute"), (t_mem, "memory"), (t_coll, "collective"))
+        return dict(
+            compute_s=t_comp, memory_s=t_mem, collective_s=t_coll,
+            collective_ici_s=t_ici, collective_dci_s=t_dci,
+            bottleneck=dom[1],
+            step_s=max(t_comp, t_mem, t_coll),
+            roofline_frac=(self.model_flops / (mesh.chips * PEAK_FLOPS))
+            / max(t_comp, t_mem, t_coll, 1e-30),
+            useful_ratio=self.model_flops / max(self.flops, 1e-30),
+        )
+
+
+def _attention_flops(cfg: ModelConfig, B: float, S: float, causal=True) -> float:
+    """QK^T + PV for one forward pass over S tokens (per attn layer set)."""
+    L = _attn_layers(cfg)
+    eff = 0.5 if causal else 1.0
+    return 4.0 * L * B * S * S * cfg.num_heads * cfg.head_dim * eff
+
+
+def _ssm_flops(cfg: ModelConfig, B: float, S: float) -> float:
+    """SSD: within-chunk quadratic + state terms (per ssm layer set)."""
+    if cfg.family not in (SSM, HYBRID):
+        return 0.0
+    L = cfg.num_layers if cfg.family == SSM else cfg.num_layers
+    Q = cfg.ssm_chunk
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    per_tok = 2 * Q * H * P * 0.5 + 4 * H * P * N   # intra-chunk + state in/out
+    return 2.0 * L * B * S * per_tok
+
+
+def train_cost(cfg: ModelConfig, shape: ShapeSpec, mesh: MeshShape,
+               scfg: SparseRLConfig, num_micro: int,
+               strat: Strategy = BASELINE) -> CellCost:
+    mesh = strat.eff(mesh)
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.family == AUDIO:
+        S = 2596 + 1500  # decoder tokens + encoder frames (both computed)
+    num_micro = max(num_micro, 1)
+    D_tokens = B * S
+    N = cfg.n_params()
+    N_act = cfg.n_active_params()
+
+    # fwd 2ND + bwd 4ND + remat refwd 2ND  (matmul part, active params)
+    lin = 8.0 * N_act * D_tokens
+    attn = _attention_flops(cfg, B, S) * 4.0       # fwd+bwd+remat
+    ssm = _ssm_flops(cfg, B, S) * 4.0
+    opt = 10.0 * N                                 # adamw elementwise
+    flops = lin + attn + ssm + opt
+    if strat.remat_chunk > 1:
+        # 2-level remat: one extra fwd recompute within each chunk
+        flops += 2.0 * N_act * D_tokens + _attention_flops(cfg, B, S)
+
+    P_b = _param_bytes(cfg) * strat.weight_bits / 16.0
+    acc = BF16 if cfg.accum_dtype == "bfloat16" else F32
+    gacc = strat.grad_accum_bits / 8.0
+    act_bytes = cfg.num_layers * B * S * cfg.d_model * BF16
+    logit_bytes = (2 * B * S * cfg.vocab_size * F32 if not strat.chunked_loss
+                   else 2 * B * S * 4096 * F32)
+    hbm = (
+        num_micro * 3 * P_b             # params read fwd + bwd + remat refwd
+        + 2 * N * gacc                  # grad accumulator read+write
+        + P_b * 2 + 4 * N * acc         # optimizer: rw params, rw m and v
+        + 6 * act_bytes                 # layer-boundary saves + reread + bwd
+        + logit_bytes                   # logits + grad (or chunked)
+    )
+
+    # collectives ---------------------------------------------------------
+    # FSDP param all-gather per microbatch (fwd + bwd remat gather), sharded
+    # over dp; reduce-scatter of grads once per step; TP activation
+    # all-reduces 2/layer/micro (fwd) + 2 (bwd) + 2 (remat).
+    dp, tp, pod = mesh.dp, mesh.model, mesh.pod
+    ag_params = num_micro * 2 * _ring(P_b / tp, dp)       # per chip over ICI
+    rs_grads = _ring(N * gacc / tp, dp)
+    # per-chip activation slab PER MICROBATCH: (B / num_micro / dp) sequences
+    act_full = (B / num_micro / dp) * S * cfg.d_model * BF16
+    ar_tp = (6 * cfg.num_layers * num_micro) * 2 * _ring(act_full, tp) \
+        if tp > 1 else 0.0
+    ici = ag_params + rs_grads + ar_tp
+    # pod axis: the dp group spans pods; attribute the pod hop of the grad
+    # reduce-scatter + param gathers to DCI
+    dci = (_ring(N * F32 / (tp * mesh.data), pod)
+           + num_micro * 2 * _ring(P_b / (tp * mesh.data), pod)) if pod > 1 else 0.0
+
+    moe_a2a = 0.0
+    if cfg.family == MOE:
+        # dispatch + return (fwd, bwd, remat) per layer per micro:
+        # k-way routed per-chip token slab crossing the EP axis
+        tok_b = (B / num_micro / dp) * S * cfg.d_model * BF16
+        moe_a2a = cfg.num_layers * num_micro * 4 * _ring(
+            tok_b * cfg.experts_per_token, tp)
+        ici += moe_a2a
+
+    return CellCost(
+        flops=flops, hbm_bytes=hbm, coll_ici_bytes=ici, coll_dci_bytes=dci,
+        model_flops=6.0 * N_act * D_tokens,
+        detail=dict(linear=lin, attention=attn, ssm=ssm, optimizer=opt,
+                    ag_params=ag_params, rs_grads=rs_grads, ar_tp=ar_tp,
+                    moe_a2a=moe_a2a, act_bytes=act_bytes))
+
+
+def prefill_cost(cfg: ModelConfig, shape: ShapeSpec, mesh: MeshShape,
+                 scfg: SparseRLConfig) -> CellCost:
+    B, S = shape.global_batch, shape.seq_len
+    N_act = cfg.n_active_params()
+    lin = 2.0 * N_act * B * S
+    attn = _attention_flops(cfg, B, S)
+    ssm = _ssm_flops(cfg, B, S)
+    flops = lin + attn + ssm
+
+    P_b = _param_bytes(cfg)
+    act_bytes = cfg.num_layers * B * S * cfg.d_model * BF16
+    kv_bytes = (_attn_layers(cfg) * B * cfg.num_kv_heads * S * cfg.head_dim
+                * 2 * BF16)
+    hbm = P_b + 4 * act_bytes + kv_bytes
+
+    dp, tp, pod = mesh.dp, mesh.model, mesh.pod
+    ag_params = _ring(P_b / tp, dp)
+    act_full = (B / dp if B >= dp else B) * S * cfg.d_model * BF16
+    ar_tp = 2 * cfg.num_layers * 2 * _ring(act_full, tp) if tp > 1 else 0.0
+    ici = ag_params + ar_tp
+    dci = _ring(P_b / (tp * mesh.data), pod) if pod > 1 else 0.0
+    if cfg.family == MOE:
+        tok_b = (B / dp if B >= dp else B) * S * cfg.d_model * BF16
+        ici += cfg.num_layers * 2 * _ring(tok_b * cfg.experts_per_token, tp)
+
+    return CellCost(flops=flops, hbm_bytes=hbm, coll_ici_bytes=ici,
+                    coll_dci_bytes=dci, model_flops=2.0 * N_act * B * S,
+                    detail=dict(linear=lin, attention=attn, ssm=ssm,
+                                kv_bytes=kv_bytes))
+
+
+def decode_cost(cfg: ModelConfig, shape: ShapeSpec, mesh: MeshShape,
+                scfg: SparseRLConfig, sparse_cache: bool,
+                strat: Strategy = BASELINE) -> CellCost:
+    mesh = strat.eff(mesh)
+    B = shape.global_batch
+    ctx = scfg.cache_slots if sparse_cache else shape.seq_len
+    N_act = cfg.n_active_params()
+    lin = 2.0 * N_act * B
+    attn = 4.0 * _attn_layers(cfg) * B * ctx * cfg.num_heads * cfg.head_dim
+    ssm = 0.0
+    if cfg.family in (SSM, HYBRID):
+        H, P, Nst = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+        ssm = 2.0 * cfg.num_layers * B * (4 * H * P * Nst)
+    flops = lin + attn + ssm
+
+    P_b = _param_bytes(cfg) * strat.weight_bits / 16.0
+    cache_bytes = (_attn_layers(cfg) * B * cfg.num_kv_heads * ctx
+                   * cfg.head_dim * 2 * BF16)
+    hbm = P_b + 2 * cache_bytes + 2 * B * cfg.vocab_size * F32
+
+    dp, tp, pod = mesh.dp, mesh.model, mesh.pod
+    # decode: params resident (no FSDP gather on the serving path — weights
+    # stay sharded TP and activations all-reduce per layer)
+    act_full = (B / dp if B >= dp else B) * cfg.d_model * BF16
+    ar_tp = 2 * cfg.num_layers * 2 * _ring(act_full, tp) if tp > 1 else 0.0
+    # dense long caches shard slots over model -> attention partial softmax
+    # all-reduce of (B, Hq, out) per layer
+    ici = ar_tp
+    dci = 0.0
+    if cfg.family == MOE:
+        ici += cfg.num_layers * 2 * _ring(
+            (B / dp if B >= dp else B) * cfg.d_model * BF16
+            * cfg.experts_per_token, tp)
+
+    return CellCost(flops=flops, hbm_bytes=hbm, coll_ici_bytes=ici,
+                    coll_dci_bytes=dci, model_flops=2.0 * N_act * B,
+                    detail=dict(linear=lin, attention=attn, ssm=ssm,
+                                cache_bytes=cache_bytes))
+
+
+def cell_cost(cfg: ModelConfig, shape: ShapeSpec, mesh: MeshShape,
+              scfg: Optional[SparseRLConfig] = None,
+              num_micro: Optional[int] = None, sparse_cache: bool = False,
+              strat: Strategy = BASELINE) -> CellCost:
+    scfg = scfg or SparseRLConfig()
+    if shape.kind == "train":
+        if num_micro is None:
+            num_micro = max(1, shape.global_batch // strat.eff(mesh).dp)
+        return train_cost(cfg, shape, mesh, scfg, num_micro, strat)
+    if shape.kind == "prefill":
+        return prefill_cost(cfg, shape, mesh, scfg)
+    return decode_cost(cfg, shape, mesh, scfg, sparse_cache, strat)

@@ -1,0 +1,246 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape) cell
+on the production meshes, with ShapeDtypeStruct stand-ins (no allocation).
+
+Per cell this produces (written to ``reports/dryrun/<cell>.json``):
+  * proof of compilation (the deliverable: sharding is coherent),
+  * compiled.memory_analysis()  — per-device bytes (fits-in-HBM evidence),
+  * compiled.cost_analysis()    — per-device HLO flops/bytes (NOTE: XLA
+    counts while-loop bodies ONCE; see launch/costs.py for the trip-adjusted
+    analytic model this feeds),
+  * the collective-op inventory parsed from the compiled HLO (types, shapes,
+    bytes, loop trip-adjusted).
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2.5-14b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--also-single-pod]
+"""
+import argparse
+import json
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, SparseRLConfig, TrainConfig, get_config, get_shapes
+from repro.configs.base import AUDIO, HYBRID, SSM, ModelConfig, ShapeSpec
+from repro.distributed.sharding import named_sharding, param_rules, use_mesh_rules
+from repro.launch import specs as S
+from repro.launch import steps as ST
+from repro.launch.hlo_stats import collective_stats
+from repro.launch.mesh import make_production_mesh
+
+SDS = jax.ShapeDtypeStruct
+
+def train_micro(shape: ShapeSpec, mesh) -> int:
+    """Grad-accumulation depth: per-microbatch global batch = total DP size
+    (one sequence per data shard per microbatch)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp = sizes.get("pod", 1) * sizes.get("data", 1)
+    return max(1, shape.global_batch // dp)
+
+
+def _attach(sds_tree, axes_tree, mesh, rules=None):
+    """Attach NamedShardings to an SDS tree via logical axes."""
+    is_ax = lambda x: isinstance(x, tuple) and all(
+        isinstance(e, (str, type(None))) for e in x)
+
+    def one(sds, ax):
+        sh = named_sharding(mesh, sds.shape, ax, rules)
+        return SDS(sds.shape, sds.dtype, sharding=sh)
+
+    return jax.tree.map(one, sds_tree, axes_tree, is_leaf=is_ax)
+
+
+def _is_attention_family(cfg: ModelConfig) -> bool:
+    return cfg.family not in (SSM, HYBRID)
+
+
+def cell_plan(cfg: ModelConfig, shape: ShapeSpec, scfg: SparseRLConfig,
+              mesh=None) -> Dict:
+    """What gets lowered for this cell (documented in EXPERIMENTS.md)."""
+    if shape.kind == "train":
+        nm = train_micro(shape, mesh) if mesh is not None else 16
+        return dict(kind="train", num_micro=nm)
+    if shape.kind == "prefill":
+        return dict(kind="prefill", sparse_cache=_is_attention_family(cfg))
+    # decode
+    sparse_cache = False
+    note = "dense cache (memory-wall baseline)"
+    if shape.sparse_cache_only and _is_attention_family(cfg):
+        sparse_cache = True
+        note = ("sparse budget cache — a dense 500k cache is the memory wall "
+                "the paper removes; SSM/hybrid run natively")
+    return dict(kind="decode", sparse_cache=sparse_cache, note=note)
+
+
+def build_cell(arch: str, shape: ShapeSpec, mesh, *,
+               scfg: Optional[SparseRLConfig] = None,
+               rules: Optional[dict] = None,
+               num_micro: Optional[int] = None,
+               strategy: str = "baseline",
+               grad_dtype=None,
+               cfg_override=None):
+    """Lower + compile one cell.  Returns (compiled, lowered, info dict).
+
+    ``strategy`` selects a named logical-rule mapping (launch/strategies.py)
+    for §Perf hillclimbs — the mesh itself never changes; ``cfg_override``
+    swaps in a numerics variant of the arch config (e.g. int8 weights).
+    """
+    cfg = cfg_override or get_config(arch)
+    scfg = scfg or SparseRLConfig()
+    if strategy != "baseline":
+        from repro.launch import strategies as STR
+
+        rules = dict(STR.rules_for(strategy) or {}, **(rules or {}))
+        p_rules = STR.param_rules_for(strategy)
+        strat = STR.STRATEGIES.get(strategy)
+        if num_micro is None and shape.kind == "train" and strat is not None \
+                and strat.tp_eff == 1:
+            # every mesh axis is data-parallel: per-micro batch = chip count
+            chips = int(__import__("numpy").prod(mesh.devices.shape))
+            num_micro = max(1, shape.global_batch // chips)
+    else:
+        p_rules = param_rules(rules)
+    plan = cell_plan(cfg, shape, scfg, mesh)
+    if num_micro is not None and plan["kind"] == "train":
+        plan["num_micro"] = num_micro
+    plan["strategy"] = strategy
+    m_axes_mod = __import__("repro.models", fromlist=["get_model"])
+    mfns = m_axes_mod.get_model(cfg)
+
+    p_sds = S.param_specs(cfg)
+    p_axes = mfns.param_axes(cfg)
+    with use_mesh_rules(mesh, rules, prules=p_rules):
+        p_sds_sh = _attach(p_sds, p_axes, mesh, p_rules)
+        if plan["kind"] == "train":
+            nm = plan["num_micro"]
+            batch = S.train_batch_specs(cfg, shape, nm)
+            baxes = S.train_batch_axes(cfg, nm)
+            batch_sh = _attach(batch, baxes, mesh, rules)
+            opt_sds = ST.init_opt_specs(p_sds, cfg)
+            opt_sh = _attach(opt_sds, ST.opt_axes(p_axes), mesh, p_rules)
+            tcfg = TrainConfig()
+            import jax.numpy as _jnp
+            fn = ST.make_train_step(
+                cfg, scfg, tcfg, num_micro=nm, use_flash=False,
+                grad_dtype=grad_dtype or _jnp.float32, grad_rules=p_rules)
+            lowered = jax.jit(fn, donate_argnums=(0, 1)).lower(
+                p_sds_sh, opt_sh, batch_sh)
+        elif plan["kind"] == "prefill":
+            batch = S.prefill_batch_specs(cfg, shape)
+            batch_sh = _attach(batch, S.prefill_batch_axes(cfg), mesh, rules)
+            fn = ST.make_prefill_step(cfg, scfg,
+                                      sparse_cache=plan["sparse_cache"],
+                                      ctx_len=shape.seq_len, use_flash=True)
+            lowered = jax.jit(fn).lower(p_sds_sh, batch_sh)
+        else:  # decode
+            st_sds, st_axes, tok_sds = S.decode_state_specs(
+                cfg, shape, scfg, sparse_cache=plan["sparse_cache"])
+            st_sh = _attach(st_sds, st_axes, mesh, rules)
+            tok_sh = SDS(tok_sds.shape, tok_sds.dtype,
+                         sharding=named_sharding(mesh, tok_sds.shape,
+                                                 ("batch",), rules))
+            rng_sds = SDS((2,), jnp.uint32)
+            fn = ST.make_decode_step(cfg, scfg)
+            lowered = jax.jit(fn, donate_argnums=(1,)).lower(
+                p_sds_sh, st_sh, tok_sh, rng_sds)
+        compiled = lowered.compile()
+    return compiled, lowered, dict(plan=plan, arch=arch, shape=shape.name)
+
+
+def summarize(compiled, lowered, info) -> Dict:
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    txt = compiled.as_text()
+    colls = collective_stats(txt)
+    out = dict(
+        arch=info["arch"], shape=info["shape"], plan=info["plan"],
+        memory=dict(
+            argument_bytes=getattr(ma, "argument_size_in_bytes", None),
+            output_bytes=getattr(ma, "output_size_in_bytes", None),
+            temp_bytes=getattr(ma, "temp_size_in_bytes", None),
+            alias_bytes=getattr(ma, "alias_size_in_bytes", None),
+        ),
+        cost=dict(
+            flops=ca.get("flops"),
+            bytes_accessed=ca.get("bytes accessed"),
+            note="XLA counts while bodies once; see analytic model",
+        ),
+        collectives=colls,
+    )
+    return out
+
+
+def run_cells(cells, mesh, tag: str, out_dir: str = "reports/dryrun",
+              strategy: str = "baseline"):
+    os.makedirs(out_dir, exist_ok=True)
+    results = []
+    for arch, shape in cells:
+        t0 = time.time()
+        name = f"{arch}__{shape.name}__{tag}"
+        if strategy != "baseline":
+            name += f"__{strategy}"
+        try:
+            compiled, lowered, info = build_cell(arch, shape, mesh,
+                                                 strategy=strategy)
+            row = summarize(compiled, lowered, info)
+            row.update(status="ok", compile_s=round(time.time() - t0, 1))
+            del compiled, lowered
+        except Exception as e:  # noqa: BLE001 — report, continue
+            row = dict(arch=arch, shape=shape.name, status="FAIL",
+                       error=f"{type(e).__name__}: {e}",
+                       traceback=traceback.format_exc()[-2000:],
+                       compile_s=round(time.time() - t0, 1))
+        results.append(row)
+        with open(os.path.join(out_dir, name + ".json"), "w") as f:
+            json.dump(row, f, indent=1, default=str)
+        mem = row.get("memory", {}).get("temp_bytes")
+        print(f"[{tag}] {arch:20s} {shape.name:12s} {row['status']:4s} "
+              f"compile={row['compile_s']}s temp={mem}", flush=True)
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--also-single-pod", action="store_true")
+    ap.add_argument("--strategy", default="baseline",
+                    help="sharding strategy (launch/strategies.py): "
+                         "baseline | zero3 | zero3_ep")
+    ap.add_argument("--out", default="reports/dryrun")
+    args = ap.parse_args()
+
+    meshes = []
+    if args.multi_pod:
+        meshes.append(("pod2x16x16", make_production_mesh(multi_pod=True)))
+    if args.also_single_pod or not args.multi_pod:
+        meshes.append(("pod16x16", make_production_mesh(multi_pod=False)))
+
+    if args.all:
+        cells = [(a, s) for a in ARCH_IDS for s in get_shapes(a)]
+    else:
+        assert args.arch, "--arch or --all"
+        shapes = get_shapes(args.arch)
+        if args.shape:
+            shapes = [s for s in shapes if s.name == args.shape]
+        cells = [(args.arch, s) for s in shapes]
+
+    all_ok = True
+    for tag, mesh in meshes:
+        res = run_cells(cells, mesh, tag, args.out, strategy=args.strategy)
+        bad = [r for r in res if r["status"] != "ok"]
+        all_ok &= not bad
+        print(f"== {tag}: {len(res) - len(bad)}/{len(res)} cells compiled ==")
+    raise SystemExit(0 if all_ok else 1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,162 @@
+"""Compiled-HLO introspection: collective-op inventory with while-loop
+trip-count adjustment.
+
+``compiled.cost_analysis()`` counts while bodies once (verified — see
+EXPERIMENTS.md §Methodology), so collective bytes inside a scanned layer
+stack would be undercounted by ~num_layers.  This parser:
+
+  1. splits the HLO text into named computations,
+  2. finds collective ops (all-reduce / all-gather / reduce-scatter /
+     all-to-all / collective-permute) and their output shapes,
+  3. extracts each while loop's trip count from its condition computation
+     (scan lowers to a counter compared against a constant),
+  4. multiplies nested collective bytes by the enclosing trip counts.
+
+Byte accounting uses the op's OUTPUT shape — the per-device payload that
+crosses links once per ring step; we report raw payload bytes and leave the
+(|axis|-1)/|axis| ring factor to the roofline layer.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s+(?:\(([^)]*)\)|(\w+\[[\d,]*\]\S*))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_CALL_RE = re.compile(
+    r"(?:while\(|condition=|body=|calls=|to_apply=|branch_computations=)"
+    r"[^,)\n]*%?([\w\.\-]+)")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+_HEADER_RE = re.compile(r"^\s*(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->\s*.*\{\s*$")
+
+
+def split_computations(hlo: str) -> Dict[str, List[str]]:
+    """computation name -> its instruction lines."""
+    comps: Dict[str, List[str]] = {}
+    cur = None
+    for line in hlo.splitlines():
+        m = _HEADER_RE.match(line)
+        if m:
+            cur = m.group(1)
+            comps[cur] = []
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(line)
+    return comps
+
+
+_TRIP_RE = re.compile(r'known_trip_count"?\s*:\s*\{"?n"?\s*:\s*"?(\d+)')
+
+
+def _trip_count_of_condition(lines: List[str]) -> Optional[int]:
+    """Fallback when backend_config lacks known_trip_count: scan conditions
+    compare an s32 counter to a constant."""
+    consts = {}
+    for ln in lines:
+        m = re.match(r"\s*%?([\w\.\-]+)\s*=\s*s32\[\]\s*constant\((\d+)\)", ln)
+        if m:
+            consts[m.group(1)] = int(m.group(2))
+    for ln in lines:
+        if "compare(" in ln and "direction=LT" in ln:
+            for name, val in consts.items():
+                if name in ln:
+                    return val
+    if consts:
+        return max(consts.values())
+    return None
+
+
+def _find_whiles(lines: List[str]):
+    """yield (body_name, condition_name, trip_or_None) per while op."""
+    for ln in lines:
+        if " while(" in ln:
+            body = re.search(r"body=%?([\w\.\-]+)", ln)
+            cond = re.search(r"condition=%?([\w\.\-]+)", ln)
+            trip = _TRIP_RE.search(ln)
+            if body and cond:
+                yield (body.group(1), cond.group(1),
+                       int(trip.group(1)) if trip else None)
+
+
+def _find_calls(lines: List[str]):
+    for ln in lines:
+        for m in re.finditer(r"(?:calls|to_apply)=%?([\w\.\-]+)", ln):
+            yield m.group(1)
+
+
+def collective_stats(hlo: str) -> Dict:
+    comps = split_computations(hlo)
+    entry = None
+    for line in hlo.splitlines():
+        m = re.match(r"^ENTRY\s+%?([\w\.\-]+)", line)
+        if m:
+            entry = m.group(1)
+            break
+    if entry is None or entry not in comps:
+        # fall back: treat the whole text as one computation
+        comps = {"__all__": hlo.splitlines()}
+        entry = "__all__"
+
+    totals = defaultdict(float)
+    counts = defaultdict(int)
+    seen_trip = {}
+
+    def comp_collectives(name: str, multiplier: float, depth: int = 0):
+        if depth > 12 or name not in comps:
+            return
+        lines = comps[name]
+        for ln in lines:
+            m = _COLL_RE.search(ln)
+            if m:
+                kind = m.group(3)
+                # skip -done halves (bytes counted at -start)
+                if "-done(" in ln:
+                    continue
+                b = _shape_bytes(m.group(1) or m.group(2))
+                totals[kind] += b * multiplier
+                counts[kind] += 1
+        for body, cond, trip in _find_whiles(lines):
+            if trip is None:
+                trip = seen_trip.get(cond)
+                if trip is None:
+                    trip = _trip_count_of_condition(comps.get(cond, [])) or 1
+                    seen_trip[cond] = trip
+            comp_collectives(body, multiplier * trip, depth + 1)
+        for callee in _find_calls(lines):
+            if callee != name:
+                comp_collectives(callee, multiplier, depth + 1)
+
+    comp_collectives(entry, 1.0)
+    return dict(
+        bytes_by_kind={k: int(v) for k, v in totals.items()},
+        op_counts=dict(counts),
+        total_bytes=int(sum(totals.values())),
+    )

@@ -1,0 +1,31 @@
+"""Production meshes.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state; the dry-run sets XLA_FLAGS for 512 host devices before calling.
+
+Topology (TPU v5e-class): one pod = 16 x 16 = 256 chips; multi-pod = 2 pods
+= 512 chips with the ``pod`` axis crossing the DCI.  Axis roles:
+  pod   — outer data parallelism (gradient all-reduce over DCI) or pipeline
+          stages (config option)
+  data  — FSDP / batch sharding (ICI)
+  model — tensor / expert parallelism (ICI)
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape, axes):
+    """Generic helper for tests / elastic re-mesh (e.g. a pod-loss restart
+    onto (15, 16) is a different data-axis size with identical rules)."""
+    return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+def single_device_mesh():
+    return jax.make_mesh((1, 1), ("data", "model"))

@@ -1,0 +1,220 @@
+"""ShapeDtypeStruct input specs for every (architecture x shape) cell.
+
+Nothing here allocates: params come from ``jax.eval_shape(init_params)``,
+batches/states are hand-constructed SDS trees (weak-type-correct, shardable).
+The same specs serve the dry-run lowering and the roofline accounting.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import (
+    AUDIO,
+    HYBRID,
+    SSM,
+    VLM,
+    ModelConfig,
+    ShapeSpec,
+    SparseRLConfig,
+    dtype_of,
+)
+from repro.models import get_model
+
+SDS = jax.ShapeDtypeStruct
+
+# prompt length carved out of each train sequence (rest is response)
+TRAIN_PROMPT_LEN = 512
+# whisper train split of the 4k budget: the arch's real encoder length
+# (1500 frames) + the remaining budget as decoder tokens
+AUDIO_TRAIN_FRAMES = 1500
+AUDIO_TRAIN_DECODER = 4096 - AUDIO_TRAIN_FRAMES
+# vlm patch prefix
+VLM_PATCHES = 256
+
+
+def param_specs(cfg: ModelConfig):
+    m = get_model(cfg)
+    return jax.eval_shape(lambda: m.init_params(cfg, jax.random.PRNGKey(0)))
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeSpec,
+                      num_micro: int = 1) -> Dict:
+    """RL update-phase batch: rollout tensors ready for the Eq. 7 loss.
+
+    Leaves get a leading microbatch dim when num_micro > 1 (grad-accum scan).
+    """
+    B = shape.global_batch // num_micro
+    assert B * num_micro == shape.global_batch, (shape.global_batch, num_micro)
+    if cfg.family == AUDIO:
+        S = AUDIO_TRAIN_DECODER
+        P = 128
+    elif cfg.family == VLM:
+        S = shape.seq_len - VLM_PATCHES
+        P = TRAIN_PROMPT_LEN
+    else:
+        S = shape.seq_len
+        P = TRAIN_PROMPT_LEN
+    T = S - P
+    lead = (num_micro, B) if num_micro > 1 else (B,)
+    cdt = dtype_of(cfg.compute_dtype)
+    batch = {
+        "prompt_tokens": SDS(lead + (P,), jnp.int32),
+        "prompt_mask": SDS(lead + (P,), jnp.bool_),
+        "resp_tokens": SDS(lead + (T,), jnp.int32),
+        "resp_mask": SDS(lead + (T,), jnp.bool_),
+        "logp_sparse": SDS(lead + (T,), jnp.float32),
+        "logp_old": SDS(lead + (T,), jnp.float32),
+        "advantages": SDS(lead, jnp.float32),
+    }
+    if cfg.family == VLM:
+        batch["prefix_embeds"] = SDS(lead + (VLM_PATCHES, cfg.d_model), cdt)
+    if cfg.family == AUDIO:
+        batch["frames"] = SDS(lead + (AUDIO_TRAIN_FRAMES, cfg.d_model), cdt)
+    return batch
+
+
+def train_batch_axes(cfg: ModelConfig, num_micro: int = 1) -> Dict:
+    lead = (None, "batch") if num_micro > 1 else ("batch",)
+    ax = {
+        "prompt_tokens": lead + (None,),
+        "prompt_mask": lead + (None,),
+        "resp_tokens": lead + (None,),
+        "resp_mask": lead + (None,),
+        "logp_sparse": lead + (None,),
+        "logp_old": lead + (None,),
+        "advantages": lead,
+    }
+    if cfg.family == VLM:
+        ax["prefix_embeds"] = lead + (None, "embed")
+    if cfg.family == AUDIO:
+        ax["frames"] = lead + (None, "embed")
+    return ax
+
+
+def prefill_batch_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict:
+    B, S = shape.global_batch, shape.seq_len
+    cdt = dtype_of(cfg.compute_dtype)
+    if cfg.family == AUDIO:
+        # seq_len lands on the decoder self-attention context; the encoder
+        # is the arch's fixed 1500 frames (stub embeddings)
+        batch = {"tokens": SDS((B, S), jnp.int32),
+                 "valid_mask": SDS((B, S), jnp.bool_),
+                 "frames": SDS((B, cfg.encoder_frames, cfg.d_model), cdt)}
+        return batch
+    batch = {"tokens": SDS((B, S), jnp.int32),
+             "valid_mask": SDS((B, S), jnp.bool_)}
+    if cfg.family == VLM:
+        batch["prefix_embeds"] = SDS((B, VLM_PATCHES, cfg.d_model), cdt)
+    return batch
+
+
+def prefill_batch_axes(cfg: ModelConfig) -> Dict:
+    ax = {"tokens": ("batch", None), "valid_mask": ("batch", None)}
+    if cfg.family == VLM:
+        ax["prefix_embeds"] = ("batch", None, "embed")
+    if cfg.family == AUDIO:
+        ax["frames"] = ("batch", None, "embed")
+    return ax
+
+
+# ---------------------------------------------------------------------------
+# Decode state specs (per family) — built analytically, no tracing
+# ---------------------------------------------------------------------------
+def decode_state_specs(cfg: ModelConfig, shape: ShapeSpec,
+                       scfg: SparseRLConfig, *, sparse_cache: bool):
+    """(state_sds, state_axes, token_sds) for a decode cell with a context of
+    ``shape.seq_len`` tokens already in cache."""
+    from repro.kvcache.cache import KVCache
+    from repro.models.encdec import EncDecState
+    from repro.models.hybrid import HybridState
+    from repro.models.mamba2 import SSMState
+    from repro.models.transformer import DecodeState
+
+    B = shape.global_batch
+    ctx = shape.seq_len
+    cdt = dtype_of(cfg.compute_dtype)
+    slots = scfg.cache_slots if sparse_cache else ctx + 8
+    is_ax = lambda x: isinstance(x, tuple) and all(
+        isinstance(e, (str, type(None))) for e in x)
+
+    def cache_sds(n_layers):
+        # every leaf (incl. the scalar fill counter) carries the stacked
+        # layer dim — prefill builds caches as scan ys
+        return KVCache(
+            k=SDS((n_layers, B, cfg.num_kv_heads, slots, cfg.head_dim), cdt),
+            v=SDS((n_layers, B, cfg.num_kv_heads, slots, cfg.head_dim), cdt),
+            pos=SDS((n_layers, B, cfg.num_kv_heads, slots), jnp.int32),
+            score=SDS((n_layers, B, cfg.num_kv_heads, slots), jnp.float32),
+            fill=SDS((n_layers,), jnp.int32),
+        )
+
+    def cache_axes(stacked: bool = True):
+        lead = ("layers",) if stacked else ()
+        return KVCache(
+            k=lead + ("batch", "kv_heads", "cache_slots", None),
+            v=lead + ("batch", "kv_heads", "cache_slots", None),
+            pos=lead + ("batch", "kv_heads", "cache_slots"),
+            score=lead + ("batch", "kv_heads", "cache_slots"),
+            fill=lead,
+        )
+
+    tok = SDS((B,), jnp.int32)
+    if cfg.family in ("dense", "moe", "vlm"):
+        st = DecodeState(caches=cache_sds(cfg.num_layers), pos=SDS((B,), jnp.int32))
+        ax = DecodeState(caches=cache_axes(), pos=("batch",))
+        return st, ax, tok
+    if cfg.family == SSM:
+        W, ch = cfg.ssm_conv_width, cfg.d_inner + 2 * cfg.ssm_state
+        st = SSMState(
+            conv=SDS((cfg.num_layers, B, W - 1, ch), cdt),
+            h=SDS((cfg.num_layers, B, cfg.ssm_heads, cfg.ssm_head_dim,
+                   cfg.ssm_state), jnp.float32),
+            pos=SDS((B,), jnp.int32))
+        ax = SSMState(conv=("layers", "batch", None, "ssm_inner"),
+                      h=("layers", "batch", "ssm_heads", None, None),
+                      pos=("batch",))
+        return st, ax, tok
+    if cfg.family == HYBRID:
+        n_super = cfg.num_layers // cfg.hybrid_attn_every
+        K = cfg.hybrid_attn_every
+        rest = cfg.num_layers - n_super * K
+        W, ch = cfg.ssm_conv_width, cfg.d_inner + 2 * cfg.ssm_state
+        st = HybridState(
+            conv_super=SDS((n_super, K, B, W - 1, ch), cdt),
+            h_super=SDS((n_super, K, B, cfg.ssm_heads, cfg.ssm_head_dim,
+                         cfg.ssm_state), jnp.float32),
+            conv_rest=SDS((rest, B, W - 1, ch), cdt),
+            h_rest=SDS((rest, B, cfg.ssm_heads, cfg.ssm_head_dim,
+                        cfg.ssm_state), jnp.float32),
+            caches=jax.tree.map(
+                lambda s: SDS((n_super,) + s.shape[1:], s.dtype),
+                cache_sds(n_super)),
+            pos=SDS((B,), jnp.int32))
+        ax = HybridState(
+            conv_super=("layers", None, "batch", None, "ssm_inner"),
+            h_super=("layers", None, "batch", "ssm_heads", None, None),
+            conv_rest=("layers", "batch", None, "ssm_inner"),
+            h_rest=("layers", "batch", "ssm_heads", None, None),
+            caches=cache_axes(),
+            pos=("batch",))
+        return st, ax, tok
+    if cfg.family == AUDIO:
+        F = cfg.encoder_frames
+        st = EncDecState(
+            caches=cache_sds(cfg.num_layers),
+            cross_k=SDS((cfg.num_layers, B, cfg.num_kv_heads, F, cfg.head_dim), cdt),
+            cross_v=SDS((cfg.num_layers, B, cfg.num_kv_heads, F, cfg.head_dim), cdt),
+            enc_mask=SDS((B, F), jnp.bool_),
+            pos=SDS((B,), jnp.int32))
+        ax = EncDecState(
+            caches=cache_axes(),
+            cross_k=("layers", "batch", "kv_heads", None, None),
+            cross_v=("layers", "batch", "kv_heads", None, None),
+            enc_mask=("batch", None),
+            pos=("batch",))
+        return st, ax, tok
+    raise ValueError(cfg.family)

@@ -1,0 +1,66 @@
+"""Named sharding strategies on the FIXED production mesh.
+
+A strategy is (logical-rule overrides, numerics flags).  The mesh shape never
+changes — the physical (16,16)/(2,16,16) topology is the contract — only the
+logical mapping does (e.g. ``zero3`` folds the model axis into data
+parallelism, which GSPMD realizes as pure ZeRO-3).
+
+Used by the §Perf hillclimb: the analytic cost model predicts, the dry-run
+recompile (rules=...) verifies collective bytes / memory.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+from repro.launch.costs import Strategy
+
+# rules overrides per strategy name (merged over DEFAULT_RULES; the param
+# attacher additionally applies PARAM_EXTRA_RULES on top)
+_NO_TP = {
+    "heads": None, "kv_heads": None, "ffn": None, "moe_ffn": None,
+    "vocab": None, "ssm_inner": None, "ssm_heads": None,
+    "batch": ("pod", "data", "model"),
+    "embed": None,  # activations stay replicated; params get fsdp below
+}
+
+RULES: Dict[str, Optional[dict]] = {
+    "baseline": None,
+    # pure ZeRO-3: every axis is data parallelism; params/grads/opt-state
+    # sharded over all 256 chips, gathered per layer
+    "zero3": dict(_NO_TP, experts=None),
+    # ZeRO-3 for the dense trunk + expert parallelism: expert weights stay
+    # RESIDENT sharded on the model axis (no per-layer gather of the 61 GB
+    # expert bank); tokens all-to-all across the EP groups
+    "zero3_ep": dict(_NO_TP, experts=("model",)),
+}
+
+# param-fsdp override per strategy ("embed" param dim placement)
+PARAM_FSDP: Dict[str, Tuple[str, ...]] = {
+    "baseline": ("pod", "data"),
+    "zero3": ("pod", "data", "model"),
+    "zero3_ep": ("pod", "data"),
+}
+
+STRATEGIES: Dict[str, Strategy] = {
+    "baseline": Strategy("baseline"),
+    "zero3": Strategy("zero3", tp_eff=1),
+    "zero3_bf16g": Strategy("zero3_bf16g", tp_eff=1, grad_accum_bits=16),
+    "zero3_ep": Strategy("zero3_ep", tp_eff=1),
+    "int8": Strategy("int8", weight_bits=8),
+    "int4": Strategy("int4", weight_bits=4),
+}
+
+
+def rules_for(name: str) -> Optional[dict]:
+    return RULES.get(name)
+
+
+def param_rules_for(name: str) -> dict:
+    from repro.distributed.sharding import DEFAULT_RULES
+
+    base = dict(DEFAULT_RULES)
+    over = RULES.get(name)
+    if over:
+        base.update(over)
+    base["embed"] = PARAM_FSDP.get(name, ("pod", "data"))
+    return base

@@ -1,0 +1,88 @@
+"""Training launcher.
+
+Two modes:
+  * real run (default): drives the RL Trainer (rollout -> verify -> rescore
+    -> Sparse-RL update) at a size the current host can execute.  On TPU
+    pods this is the production entry point; on this CPU container the
+    reduced (smoke) configs run end-to-end.
+  * --dry-run: delegates to repro.launch.dryrun (lower + compile only).
+
+Examples:
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2.5-14b --smoke \
+      --steps 100 --compression rkv
+  PYTHONPATH=src python -m repro.launch.train --arch llama3-405b --dry-run
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="paper-qwen2.5-7b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced same-family config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--compression", default="rkv",
+                    choices=["rkv", "snapkv", "h2o", "streaming", "none"])
+    ap.add_argument("--no-reject", action="store_true")
+    ap.add_argument("--no-reweight", action="store_true")
+    ap.add_argument("--kv-budget", type=int, default=None)
+    ap.add_argument("--group-size", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default="/tmp/srl_train")
+    ap.add_argument("--dry-run", action="store_true")
+    ap.add_argument("--metrics-out", default=None)
+    args = ap.parse_args(argv)
+
+    if args.dry_run:
+        from repro.launch import dryrun
+
+        sys.argv = ["dryrun", "--arch", args.arch, "--multi-pod",
+                    "--also-single-pod"]
+        return dryrun.main()
+
+    from dataclasses import replace
+
+    from repro.configs import SparseRLConfig, TrainConfig, get_config
+    from repro.runtime import Trainer, TrainerOptions
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = cfg.smoke()
+    smoke_scale = args.smoke or cfg.n_params() < 5e7
+    scfg = SparseRLConfig(
+        compression=args.compression,
+        reject=not args.no_reject,
+        reweight=not args.no_reweight,
+        group_size=args.group_size,
+    )
+    if smoke_scale:
+        scfg = replace(scfg, kv_budget=args.kv_budget or 24, kv_buffer=8,
+                       obs_window=4, num_sinks=2, max_new_tokens=20,
+                       learning_rate=args.lr or 3e-4)
+    elif args.kv_budget:
+        scfg = replace(scfg, kv_budget=args.kv_budget)
+    if args.lr:
+        scfg = replace(scfg, learning_rate=args.lr)
+    tcfg = TrainConfig(total_steps=args.steps, seed=args.seed,
+                       checkpoint_dir=args.ckpt_dir,
+                       update_batch=64 if smoke_scale else 256,
+                       warmup_steps=max(args.steps // 20, 2),
+                       checkpoint_every=max(args.steps // 4, 10))
+    opts = TrainerOptions(num_prompts=16 if smoke_scale else 128,
+                          prompt_len=24, max_new_tokens=scfg.max_new_tokens)
+    tr = Trainer(cfg, scfg, tcfg, opts)
+    hist = tr.train(args.steps - tr.step, log_every=10)
+    tr.save_checkpoint()
+    if args.metrics_out:
+        with open(args.metrics_out, "w") as f:
+            json.dump(hist, f, indent=1)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

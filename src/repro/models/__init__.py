@@ -1,0 +1,3 @@
+from repro.models.lm import ModelFns, get_model
+
+__all__ = ["get_model", "ModelFns"]

@@ -1,0 +1,176 @@
+"""GQA attention: full-sequence (train / prefill) and cached decode step."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, SparseRLConfig, dtype_of
+from repro.distributed.sharding import lsc
+from repro.kvcache import KVCache, append, attend, update_scores
+from repro.models.common import apply_dense, apply_rope, dense_init
+
+
+def attn_init(rng, cfg: ModelConfig):
+    dtype = dtype_of(cfg.param_dtype)
+    r = jax.random.split(rng, 4)
+    hd, Hq, Hkv = cfg.head_dim, cfg.num_heads, cfg.num_kv_heads
+    p, a = {}, {}
+    q = cfg.weight_quant
+    p["wq"], a["wq"] = dense_init(r[0], cfg.d_model, Hq * hd, ("embed", "heads"),
+                                  dtype, bias=cfg.qkv_bias, quant=q)
+    p["wk"], a["wk"] = dense_init(r[1], cfg.d_model, Hkv * hd, ("embed", "kv_heads"),
+                                  dtype, bias=cfg.qkv_bias, quant=q)
+    p["wv"], a["wv"] = dense_init(r[2], cfg.d_model, Hkv * hd, ("embed", "kv_heads"),
+                                  dtype, bias=cfg.qkv_bias, quant=q)
+    p["wo"], a["wo"] = dense_init(r[3], Hq * hd, cfg.d_model, ("heads", "embed"),
+                                  dtype, quant=q)
+    return p, a
+
+
+def _project_qkv(p, x, cfg: ModelConfig, positions):
+    """x: (B, S, D) -> q (B,S,Hq,hd), k/v (B,S,Hkv,hd); RoPE applied."""
+    cdt = x.dtype
+    B, S, _ = x.shape
+    q = apply_dense(p["wq"], x, cdt).reshape(B, S, cfg.num_heads, cfg.head_dim)
+    k = apply_dense(p["wk"], x, cdt).reshape(B, S, cfg.num_kv_heads, cfg.head_dim)
+    v = apply_dense(p["wv"], x, cdt).reshape(B, S, cfg.num_kv_heads, cfg.head_dim)
+    if positions is not None:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    q = lsc(q, "batch", "seq", "heads", None)
+    k = lsc(k, "batch", "seq", "kv_heads", None)
+    v = lsc(v, "batch", "seq", "kv_heads", None)
+    return q, k, v
+
+
+FLASH_SEQ_THRESHOLD = 2048  # use blocked attention at/above this length
+
+
+def full_attention(p, x, cfg: ModelConfig, *, positions=None,
+                   valid_mask: Optional[jnp.ndarray] = None,
+                   causal: bool = True,
+                   return_kv: bool = False,
+                   use_flash: Optional[bool] = None):
+    """Teacher-forced attention.  valid_mask: (B, S) True for real tokens.
+
+    Returns ``out`` or ``(out, (k, v))`` with k/v in (B, Hkv, S, hd) layout
+    (cache layout) when ``return_kv``.  ``use_flash`` selects the blocked
+    online-softmax path (O(block^2) memory — mandatory for long prefill /
+    re-scoring); defaults to S >= FLASH_SEQ_THRESHOLD.
+    """
+    B, S, D = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    if use_flash is None:
+        use_flash = S >= FLASH_SEQ_THRESHOLD
+    if use_flash:
+        from repro.models.flash import flash_attention
+
+        out = flash_attention(q, k, v, q_positions=positions,
+                              kv_positions=positions, kv_valid=valid_mask,
+                              causal=causal)
+    else:
+        G = cfg.num_heads // cfg.num_kv_heads
+        qg = q.reshape(B, S, cfg.num_kv_heads, G, cfg.head_dim)
+        scale = 1.0 / jnp.sqrt(jnp.float32(cfg.head_dim))
+        logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k,
+                            preferred_element_type=jnp.float32) * scale
+        mask = jnp.ones((B, 1, 1, S, S), bool)
+        if causal:
+            cm = positions[:, :, None] >= positions[:, None, :]   # q >= k
+            mask = mask & cm[:, None, None, :, :]
+        if valid_mask is not None:
+            mask = mask & valid_mask[:, None, None, None, :]
+        logits = jnp.where(mask, logits, -1e30)
+        probs = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+        out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v)
+        out = out.reshape(B, S, cfg.num_heads, cfg.head_dim)
+    out = out.reshape(B, S, cfg.num_heads * cfg.head_dim)
+    out = lsc(out, "batch", "seq", "heads")
+    y = apply_dense(p["wo"], out, x.dtype)
+    if return_kv:
+        kc = jnp.swapaxes(k, 1, 2)   # (B, Hkv, S, hd)
+        vc = jnp.swapaxes(v, 1, 2)
+        return y, (kc, vc)
+    return y
+
+
+def obs_window_scores(p, x, cfg: ModelConfig, positions, valid_mask,
+                      window: int) -> jnp.ndarray:
+    """SnapKV selection signal: attention of the last `window` (valid) query
+    positions over all keys, pooled over the window and the GQA group.
+    Returns (B, Hkv, S).  Cheap: only W x S logits, no S x S matrix."""
+    B, S, D = x.shape
+    q, k, _ = _project_qkv(p, x, cfg, positions)
+    # last `window` valid positions are ... the last `window` columns when the
+    # prompt is left-padded (our convention).
+    qw = q[:, -window:]                                        # (B, W, Hq, hd)
+    G = cfg.num_heads // cfg.num_kv_heads
+    qg = qw.reshape(B, window, cfg.num_kv_heads, G, cfg.head_dim)
+    scale = 1.0 / jnp.sqrt(jnp.float32(cfg.head_dim))
+    logits = jnp.einsum("bwhgd,bkhd->bhgwk", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    kmask = valid_mask[:, None, None, None, :]
+    wpos = positions[:, -window:]
+    cm = wpos[:, :, None] >= positions[:, None, :]             # (B, W, S)
+    logits = jnp.where(kmask & cm[:, None, None, :, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    probs = jnp.where(kmask & cm[:, None, None, :, :], probs, 0.0)
+    return probs.sum(axis=(2, 3))                              # (B, Hkv, S)
+
+
+def decode_attention(p, x_tok, cfg: ModelConfig, cache: KVCache,
+                     scfg: SparseRLConfig, cur_pos: jnp.ndarray,
+                     ) -> Tuple[jnp.ndarray, KVCache]:
+    """One-token decode.  x_tok: (B, D) hidden; cur_pos: (B,) absolute pos.
+
+    evict-if-full -> append -> attend (incl. new token) -> score update.
+    """
+    B, D = x_tok.shape
+    x = x_tok[:, None, :]
+    q, k, v = _project_qkv(p, x, cfg, cur_pos[:, None])
+    q1 = q[:, 0]                                                # (B, Hq, hd)
+    k1 = jnp.swapaxes(k, 1, 2)[:, :, 0]                          # (B, Hkv, hd)
+    v1 = jnp.swapaxes(v, 1, 2)[:, :, 0]
+    cache = append(cache, k1, v1, cur_pos, scfg)
+    out, probs_pooled = attend(q1, cache)
+    cache = update_scores(cache, probs_pooled, scfg)
+    out = out.reshape(B, cfg.num_heads * cfg.head_dim)
+    y = apply_dense(p["wo"], out, x_tok.dtype)
+    return y, cache
+
+
+def cross_attention_init(rng, cfg: ModelConfig):
+    """Enc-dec cross attention (whisper): separate qkv over encoder states."""
+    return attn_init(rng, cfg)
+
+
+def cross_attention(p, x, enc_kv, cfg: ModelConfig, enc_mask=None):
+    """x: (B, S, D) decoder hiddens; enc_kv: (k, v) each (B, Henc_kv, T, hd)
+    precomputed from encoder output (no RoPE across modalities)."""
+    B, S, D = x.shape
+    k, v = enc_kv
+    T = k.shape[2]
+    q = apply_dense(p["wq"], x, x.dtype).reshape(B, S, cfg.num_heads, cfg.head_dim)
+    G = cfg.num_heads // cfg.num_kv_heads
+    qg = q.reshape(B, S, cfg.num_kv_heads, G, cfg.head_dim)
+    scale = 1.0 / jnp.sqrt(jnp.float32(cfg.head_dim))
+    logits = jnp.einsum("bqhgd,bhkd->bhgqk", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    if enc_mask is not None:
+        logits = jnp.where(enc_mask[:, None, None, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bhgqk,bhkd->bqhgd", probs, v)
+    out = out.reshape(B, S, cfg.num_heads * cfg.head_dim)
+    return apply_dense(p["wo"], out, x.dtype)
+
+
+def project_enc_kv(p, enc_out, cfg: ModelConfig):
+    """Precompute cross-attention K/V from encoder output: (B, Hkv, T, hd)."""
+    B, T, D = enc_out.shape
+    k = apply_dense(p["wk"], enc_out, enc_out.dtype).reshape(B, T, cfg.num_kv_heads, cfg.head_dim)
+    v = apply_dense(p["wv"], enc_out, enc_out.dtype).reshape(B, T, cfg.num_kv_heads, cfg.head_dim)
+    return jnp.swapaxes(k, 1, 2), jnp.swapaxes(v, 1, 2)

@@ -1,0 +1,215 @@
+"""Whisper-style encoder-decoder (audio family).
+
+The conv/mel frontend is a STUB: callers (and ``input_specs``) provide
+precomputed frame embeddings (B, F, d_model).  The encoder is a non-causal
+transformer over frames; the decoder is a causal LM with cached self-attention
+(Sparse-RL budget cache applies) plus cross-attention to the fixed encoder
+states (cross K/V computed once at prefill).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, SparseRLConfig, dtype_of
+from repro.distributed.sharding import lsc
+from repro.kvcache import KVCache, compress_prefill
+from repro.models import attention as attn
+from repro.models.common import (
+    apply_mlp,
+    embed_init,
+    embed_tokens,
+    mlp_init,
+    norm_init,
+    rms_norm,
+    unembed,
+)
+
+
+class EncDecState(NamedTuple):
+    caches: KVCache        # decoder self-attn caches, stacked (L, ...)
+    cross_k: jnp.ndarray   # (L, B, Hkv, F, hd)
+    cross_v: jnp.ndarray
+    enc_mask: jnp.ndarray  # (B, F)
+    pos: jnp.ndarray       # (B,)
+
+
+def _enc_layer_init(rng, cfg: ModelConfig):
+    r = jax.random.split(rng, 2)
+    p = {}
+    p["ln1"], _ = norm_init(cfg.d_model, dtype_of(cfg.param_dtype))
+    p["attn"], _ = attn.attn_init(r[0], cfg)
+    p["ln2"], _ = norm_init(cfg.d_model, dtype_of(cfg.param_dtype))
+    p["mlp"], _ = mlp_init(r[1], cfg, cfg.d_ff)
+    return p
+
+
+def _dec_layer_init(rng, cfg: ModelConfig):
+    r = jax.random.split(rng, 3)
+    p = _enc_layer_init(r[0], cfg)
+    p["lnx"], _ = norm_init(cfg.d_model, dtype_of(cfg.param_dtype))
+    p["xattn"], _ = attn.attn_init(r[1], cfg)
+    return p
+
+
+def init_params(cfg: ModelConfig, rng):
+    r = jax.random.split(rng, 4)
+    emb, _ = embed_init(r[0], cfg)
+    enc = jax.vmap(lambda k: _enc_layer_init(k, cfg))(
+        jax.random.split(r[1], cfg.encoder_layers))
+    dec = jax.vmap(lambda k: _dec_layer_init(k, cfg))(
+        jax.random.split(r[2], cfg.num_layers))
+    fn, _ = norm_init(cfg.d_model, dtype_of(cfg.param_dtype))
+    efn, _ = norm_init(cfg.d_model, dtype_of(cfg.param_dtype))
+    return {"embed": emb, "enc_layers": enc, "dec_layers": dec,
+            "enc_norm": efn, "final_norm": fn}
+
+
+def param_axes(cfg: ModelConfig):
+    attn_a = {
+        "wq": {"w": ("embed", "heads")},
+        "wk": {"w": ("embed", "kv_heads")},
+        "wv": {"w": ("embed", "kv_heads")},
+        "wo": {"w": ("heads", "embed")},
+    }
+    if cfg.qkv_bias:
+        for n in ("wq", "wk", "wv"):
+            attn_a[n]["b"] = (attn_a[n]["w"][-1],)
+    mlp_a = {"up": {"w": ("embed", "ffn")}, "down": {"w": ("ffn", "embed")}}
+    if cfg.mlp_style == "swiglu":
+        mlp_a["gate"] = {"w": ("embed", "ffn")}
+    enc_a = {"ln1": {"scale": ("embed",)}, "attn": attn_a,
+             "ln2": {"scale": ("embed",)}, "mlp": mlp_a}
+    dec_a = dict(enc_a)
+    dec_a["lnx"] = {"scale": ("embed",)}
+    dec_a["xattn"] = attn_a
+    is_ax = lambda x: isinstance(x, tuple) and all(isinstance(e, (str, type(None))) for e in x)
+    stack = lambda t: jax.tree.map(lambda a: ("layers",) + a, t, is_leaf=is_ax)
+    emb_a = {"tok": ("vocab", "embed")}
+    if not cfg.tie_embeddings:
+        emb_a["head"] = ("embed", "vocab")
+    return {"embed": emb_a, "enc_layers": stack(enc_a),
+            "dec_layers": stack(dec_a),
+            "enc_norm": {"scale": ("embed",)},
+            "final_norm": {"scale": ("embed",)}}
+
+
+def encode(params, cfg: ModelConfig, frames, enc_mask=None, use_flash=None):
+    """frames: (B, F, d_model) stub embeddings -> encoder states."""
+    B, F, _ = frames.shape
+    x = frames.astype(dtype_of(cfg.compute_dtype))
+    x = lsc(x, "batch", "seq", "embed")
+    positions = jnp.broadcast_to(jnp.arange(F)[None], (B, F))
+    if enc_mask is None:
+        enc_mask = jnp.ones((B, F), bool)
+
+    def body(xc, lp):
+        h = rms_norm(lp["ln1"], xc, cfg.rms_eps)
+        h = attn.full_attention(lp["attn"], h, cfg, positions=positions,
+                                valid_mask=enc_mask, causal=False,
+                                use_flash=use_flash)
+        xc = xc + h
+        h = rms_norm(lp["ln2"], xc, cfg.rms_eps)
+        return lsc(xc + apply_mlp(lp["mlp"], h, cfg), "batch", "seq", "embed"), None
+
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return rms_norm(params["enc_norm"], x, cfg.rms_eps)
+
+
+def forward(params, cfg: ModelConfig, tokens, *, frames=None, enc_mask=None,
+            valid_mask=None, positions=None, prefix_embeds=None, use_flash=None):
+    """Teacher-forced decode logits.  frames (or prefix_embeds) required."""
+    if frames is None:
+        frames = prefix_embeds
+    assert frames is not None, "audio forward needs frame embeddings"
+    B, S = tokens.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    if enc_mask is None:
+        enc_mask = jnp.ones(frames.shape[:2], bool)
+    enc_out = encode(params, cfg, frames, enc_mask, use_flash)
+    x = embed_tokens(params["embed"], tokens, dtype_of(cfg.compute_dtype))
+
+    def body(xc, lp):
+        h = rms_norm(lp["ln1"], xc, cfg.rms_eps)
+        h = attn.full_attention(lp["attn"], h, cfg, positions=positions,
+                                valid_mask=valid_mask, use_flash=use_flash)
+        xc = xc + h
+        h = rms_norm(lp["lnx"], xc, cfg.rms_eps)
+        enc_kv = attn.project_enc_kv(lp["xattn"], enc_out, cfg)
+        xc = xc + attn.cross_attention(lp["xattn"], h, enc_kv, cfg, enc_mask)
+        h = rms_norm(lp["ln2"], xc, cfg.rms_eps)
+        return xc + apply_mlp(lp["mlp"], h, cfg), None
+
+    body_fn = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable) \
+        if cfg.remat == "block" else body
+    x, _ = jax.lax.scan(body_fn, x, params["dec_layers"])
+    x = rms_norm(params["final_norm"], x, cfg.rms_eps)
+    return unembed(params["embed"], x, cfg), jnp.float32(0)
+
+
+def prefill(params, cfg: ModelConfig, tokens, *, scfg: SparseRLConfig,
+            slots: int, frames=None, enc_mask=None, valid_mask=None,
+            positions=None, prefix_embeds=None, use_flash=None):
+    if frames is None:
+        frames = prefix_embeds
+    assert frames is not None
+    B, S = tokens.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    if valid_mask is None:
+        valid_mask = jnp.ones((B, S), bool)
+    if enc_mask is None:
+        enc_mask = jnp.ones(frames.shape[:2], bool)
+    enc_out = encode(params, cfg, frames, enc_mask, use_flash)
+    x = embed_tokens(params["embed"], tokens, dtype_of(cfg.compute_dtype))
+
+    def body(xc, lp):
+        h = rms_norm(lp["ln1"], xc, cfg.rms_eps)
+        hattn, (kc, vc) = attn.full_attention(
+            lp["attn"], h, cfg, positions=positions, valid_mask=valid_mask,
+            return_kv=True, use_flash=use_flash)
+        obs = attn.obs_window_scores(lp["attn"], h, cfg, positions, valid_mask,
+                                     window=max(scfg.obs_window, 1))
+        xc = xc + hattn
+        h = rms_norm(lp["lnx"], xc, cfg.rms_eps)
+        ck, cv = attn.project_enc_kv(lp["xattn"], enc_out, cfg)
+        xc = xc + attn.cross_attention(lp["xattn"], h, (ck, cv), cfg, enc_mask)
+        h = rms_norm(lp["ln2"], xc, cfg.rms_eps)
+        xc = xc + apply_mlp(lp["mlp"], h, cfg)
+        cache = compress_prefill(kc, vc, valid_mask, obs, slots, scfg, positions)
+        return xc, (cache, ck, cv)
+
+    x, (caches, cks, cvs) = jax.lax.scan(body, x, params["dec_layers"])
+    x = rms_norm(params["final_norm"], x, cfg.rms_eps)
+    logits_last = unembed(params["embed"], x[:, -1], cfg)
+    next_pos = jnp.max(jnp.where(valid_mask, positions, -1), axis=-1) + 1
+    return logits_last, EncDecState(caches=caches, cross_k=cks, cross_v=cvs,
+                                    enc_mask=enc_mask,
+                                    pos=next_pos.astype(jnp.int32))
+
+
+def decode_step(params, cfg: ModelConfig, state: EncDecState, tokens,
+                scfg: SparseRLConfig):
+    x = embed_tokens(params["embed"], tokens, dtype_of(cfg.compute_dtype))
+
+    def body(xc, layer):
+        lp, cache, ck, cv = layer
+        h = rms_norm(lp["ln1"], xc[:, None, :], cfg.rms_eps)[:, 0]
+        hattn, cache = attn.decode_attention(lp["attn"], h, cfg, cache, scfg,
+                                             state.pos)
+        xc = xc + hattn
+        h = rms_norm(lp["lnx"], xc[:, None, :], cfg.rms_eps)
+        xc = xc + attn.cross_attention(lp["xattn"], h, (ck, cv), cfg,
+                                       state.enc_mask)[:, 0]
+        h = rms_norm(lp["ln2"], xc[:, None, :], cfg.rms_eps)
+        xc = xc + apply_mlp(lp["mlp"], h, cfg)[:, 0]
+        return xc, cache
+
+    x, caches = jax.lax.scan(
+        body, x, (params["dec_layers"], state.caches, state.cross_k, state.cross_v))
+    x = rms_norm(params["final_norm"], x[:, None, :], cfg.rms_eps)[:, 0]
+    logits = unembed(params["embed"], x, cfg)
+    return logits, state._replace(caches=caches, pos=state.pos + 1)

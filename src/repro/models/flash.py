@@ -1,0 +1,129 @@
+"""Blocked (flash-style) causal attention in pure jnp — bounded memory.
+
+Used for long-sequence prefill and dense re-scoring where materializing the
+S x S score matrix is infeasible.  Online-softmax over KV blocks, scanned
+over Q blocks, so live memory is O(block_q * block_k) per head.  The Pallas
+TPU kernel (`repro.kernels.flash_attention`) implements the same contract for
+the hardware target; this is its oracle and the CPU execution path.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG = -1e30
+
+
+@partial(jax.jit, static_argnames=("block_q", "block_k", "causal"))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    *,
+                    q_positions: Optional[jnp.ndarray] = None,
+                    kv_positions: Optional[jnp.ndarray] = None,
+                    kv_valid: Optional[jnp.ndarray] = None,
+                    block_q: int = 512, block_k: int = 512,
+                    causal: bool = True) -> jnp.ndarray:
+    """q: (B, Sq, Hq, D); k, v: (B, Sk, Hkv, D); GQA via Hq % Hkv == 0.
+
+    q_positions/kv_positions: (B, Sq)/(B, Sk) absolute positions for the
+    causal mask (defaults to arange).  kv_valid: (B, Sk) padding mask.
+    Returns (B, Sq, Hq, D) in q.dtype.
+    """
+    B, Sq, Hq, D = q.shape
+    _, Sk, Hkv, _ = k.shape
+    G = Hq // Hkv
+    scale = 1.0 / jnp.sqrt(jnp.float32(D))
+    if q_positions is None:
+        q_positions = jnp.broadcast_to(jnp.arange(Sq)[None], (B, Sq))
+    if kv_positions is None:
+        kv_positions = jnp.broadcast_to(jnp.arange(Sk)[None], (B, Sk))
+    if kv_valid is None:
+        kv_valid = jnp.ones((B, Sk), bool)
+
+    # pad to block multiples
+    pq = (-Sq) % block_q
+    pk = (-Sk) % block_k
+    qp = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    qpos = jnp.pad(q_positions, ((0, 0), (0, pq)), constant_values=-1)
+    kpos = jnp.pad(kv_positions, ((0, 0), (0, pk)), constant_values=-1)
+    kval = jnp.pad(kv_valid, ((0, 0), (0, pk)), constant_values=False)
+    nq, nk = qp.shape[1] // block_q, kp.shape[1] // block_k
+
+    qb = qp.reshape(B, nq, block_q, Hkv, G, D)
+    kb = kp.reshape(B, nk, block_k, Hkv, D)
+    vb = vp.reshape(B, nk, block_k, Hkv, D)
+    qposb = qpos.reshape(B, nq, block_q)
+    kposb = kpos.reshape(B, nk, block_k)
+    kvalb = kval.reshape(B, nk, block_k)
+
+    def q_block(carry, qi):
+        qblk = qb[:, qi]                                        # (B,bq,Hkv,G,D)
+        qpb = qposb[:, qi]                                      # (B,bq)
+
+        def kv_block(acc, ki):
+            m, l, o = acc
+            kblk, vblk = kb[:, ki], vb[:, ki]
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qblk, kblk,
+                           preferred_element_type=jnp.float32) * scale
+            msk = kvalb[:, ki][:, None, None, None, :]
+            if causal:
+                cm = qpb[:, :, None] >= kposb[:, ki][:, None, :]
+                msk = msk & cm[:, None, None, :, :]
+            s = jnp.where(msk, s, NEG)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            p = jnp.where(msk, p, 0.0)
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(vblk.dtype), vblk,
+                            preferred_element_type=jnp.float32)
+            o_new = o * corr[..., None] + pv
+            return (m_new, l_new, o_new), None
+
+        m0 = jnp.full((B, Hkv, G, block_q), NEG, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, block_q), jnp.float32)
+        o0 = jnp.zeros((B, Hkv, G, block_q, D), jnp.float32)
+        if causal:
+            # skip kv blocks strictly after this q block (standard flash trick);
+            # positions are monotone so block-level bounds are exact.
+            hi = nk  # conservative when positions are custom; XLA hoists the
+            (m, l, o), _ = jax.lax.scan(kv_block, (m0, l0, o0), jnp.arange(hi))
+        else:
+            (m, l, o), _ = jax.lax.scan(kv_block, (m0, l0, o0), jnp.arange(nk))
+        out = o / jnp.maximum(l, 1e-30)[..., None]
+        out = jnp.moveaxis(out, 3, 1)                           # (B,bq,Hkv,G,D)
+        return carry, out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(q_block, 0, jnp.arange(nq))          # (nq,B,bq,Hkv,G,D)
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, nq * block_q, Hq, D)
+    return out[:, :Sq]
+
+
+def reference_attention(q, k, v, *, q_positions=None, kv_positions=None,
+                        kv_valid=None, causal=True):
+    """O(S^2)-memory oracle for tests."""
+    B, Sq, Hq, D = q.shape
+    _, Sk, Hkv, _ = k.shape
+    G = Hq // Hkv
+    if q_positions is None:
+        q_positions = jnp.broadcast_to(jnp.arange(Sq)[None], (B, Sq))
+    if kv_positions is None:
+        kv_positions = jnp.broadcast_to(jnp.arange(Sk)[None], (B, Sk))
+    if kv_valid is None:
+        kv_valid = jnp.ones((B, Sk), bool)
+    qg = q.reshape(B, Sq, Hkv, G, D).astype(jnp.float32)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k.astype(jnp.float32))
+    s = s / jnp.sqrt(jnp.float32(D))
+    msk = kv_valid[:, None, None, None, :]
+    if causal:
+        cm = q_positions[:, :, None] >= kv_positions[:, None, :]
+        msk = msk & cm[:, None, None, :, :]
+    s = jnp.where(msk, s, NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(msk, p, 0.0)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, Hq, D).astype(q.dtype)

@@ -1,0 +1,240 @@
+"""Zamba2-style hybrid: Mamba2 backbone + a SHARED attention block inserted
+every ``hybrid_attn_every`` layers (weights shared across occurrences, each
+occurrence with its own KV cache — Sparse-RL's budget cache applies to these
+attention caches; the Mamba2 state stays O(1)).
+
+Simplification vs the released Zamba2 (documented in DESIGN.md): the shared
+block consumes the hidden stream directly (no concat-with-embedding or
+per-occurrence LoRA).  Layout: n_super super-blocks of (K mamba layers + the
+shared attn block), plus L - n_super*K trailing mamba layers.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, SparseRLConfig, dtype_of
+from repro.distributed.sharding import lsc
+from repro.kvcache import KVCache, compress_prefill
+from repro.models import attention as attn
+from repro.models import mamba2 as mb
+from repro.models.common import (
+    apply_mlp,
+    embed_init,
+    embed_tokens,
+    mlp_init,
+    norm_init,
+    rms_norm,
+    unembed,
+)
+
+
+class HybridState(NamedTuple):
+    conv_super: jnp.ndarray   # (n_super, K, B, W-1, ch)
+    h_super: jnp.ndarray      # (n_super, K, B, H, P, N)
+    conv_rest: jnp.ndarray    # (r, B, W-1, ch)
+    h_rest: jnp.ndarray       # (r, B, H, P, N)
+    caches: KVCache           # stacked (n_super, ...)
+    pos: jnp.ndarray          # (B,)
+
+
+def _split(cfg: ModelConfig) -> Tuple[int, int, int]:
+    K = cfg.hybrid_attn_every
+    n_super = cfg.num_layers // K
+    rest = cfg.num_layers - n_super * K
+    return n_super, K, rest
+
+
+def init_params(cfg: ModelConfig, rng):
+    r = jax.random.split(rng, 5)
+    emb, _ = embed_init(r[0], cfg)
+    n_super, K, rest = _split(cfg)
+    rngs = jax.random.split(r[1], n_super * K)
+    m_super = jax.vmap(lambda k: mb._ssm_layer_init(k, cfg)[0])(rngs)
+    m_super = jax.tree.map(lambda t: t.reshape(n_super, K, *t.shape[1:]), m_super)
+    if rest:
+        rngs_r = jax.random.split(r[2], rest)
+        m_rest = jax.vmap(lambda k: mb._ssm_layer_init(k, cfg)[0])(rngs_r)
+    else:
+        m_rest = None
+    # shared attention block (single copy)
+    sa = {}
+    sa["ln1"], _ = norm_init(cfg.d_model, dtype_of(cfg.param_dtype))
+    sa["attn"], _ = attn.attn_init(r[3], cfg)
+    sa["ln2"], _ = norm_init(cfg.d_model, dtype_of(cfg.param_dtype))
+    sa["mlp"], _ = mlp_init(r[4], cfg, cfg.d_ff)
+    fn, _ = norm_init(cfg.d_model, dtype_of(cfg.param_dtype))
+    p = {"embed": emb, "mamba_super": m_super, "shared_attn": sa,
+         "final_norm": fn}
+    if m_rest is not None:
+        p["mamba_rest"] = m_rest
+    return p
+
+
+def param_axes(cfg: ModelConfig):
+    n_super, K, rest = _split(cfg)
+    m_axes = mb.ssm_layer_axes(cfg)
+    is_ax = lambda x: isinstance(x, tuple) and all(isinstance(e, (str, type(None))) for e in x)
+    sup = jax.tree.map(lambda t: ("layers", "layers") + t, m_axes, is_leaf=is_ax)
+    emb_a = {"tok": ("vocab", "embed")}
+    if not cfg.tie_embeddings:
+        emb_a["head"] = ("embed", "vocab")
+    attn_a = {
+        "wq": {"w": ("embed", "heads")},
+        "wk": {"w": ("embed", "kv_heads")},
+        "wv": {"w": ("embed", "kv_heads")},
+        "wo": {"w": ("heads", "embed")},
+    }
+    if cfg.qkv_bias:
+        for n in ("wq", "wk", "wv"):
+            attn_a[n]["b"] = (attn_a[n]["w"][-1],)
+    mlp_a = {"up": {"w": ("embed", "ffn")}, "down": {"w": ("ffn", "embed")}}
+    if cfg.mlp_style == "swiglu":
+        mlp_a["gate"] = {"w": ("embed", "ffn")}
+    sa = {"ln1": {"scale": ("embed",)}, "attn": attn_a,
+          "ln2": {"scale": ("embed",)}, "mlp": mlp_a}
+    axes = {"embed": emb_a, "mamba_super": sup, "shared_attn": sa,
+            "final_norm": {"scale": ("embed",)}}
+    if rest:
+        axes["mamba_rest"] = jax.tree.map(lambda t: ("layers",) + t, m_axes,
+                                          is_leaf=is_ax)
+    return axes
+
+
+def _attn_block(cfg, sa, x, positions, valid_mask, use_flash):
+    h = rms_norm(sa["ln1"], x, cfg.rms_eps)
+    h = attn.full_attention(sa["attn"], h, cfg, positions=positions,
+                            valid_mask=valid_mask, use_flash=use_flash)
+    x = x + h
+    h = rms_norm(sa["ln2"], x, cfg.rms_eps)
+    return lsc(x + apply_mlp(sa["mlp"], h, cfg), "batch", "seq", "embed")
+
+
+def forward(params, cfg: ModelConfig, tokens, *, valid_mask=None,
+            positions=None, prefix_embeds=None, use_flash=None):
+    del prefix_embeds
+    cdt = dtype_of(cfg.compute_dtype)
+    B, S = tokens.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    x = embed_tokens(params["embed"], tokens, cdt)
+    n_super, K, rest = _split(cfg)
+
+    def mamba_layer(xc, lp):
+        h = rms_norm(lp["norm"], xc, cfg.rms_eps)
+        y, _, _ = mb._ssm_block(lp, cfg, h, valid=valid_mask)
+        return xc + y, None
+
+    def super_body(xc, mp):
+        xc, _ = jax.lax.scan(mamba_layer, xc, mp)
+        xc = _attn_block(cfg, params["shared_attn"], xc, positions, valid_mask,
+                         use_flash)
+        return xc, None
+
+    body = jax.checkpoint(super_body, policy=jax.checkpoint_policies.nothing_saveable) \
+        if cfg.remat == "block" else super_body
+    x, _ = jax.lax.scan(body, x, params["mamba_super"])
+    if rest:
+        x, _ = jax.lax.scan(mamba_layer, x, params["mamba_rest"])
+    x = rms_norm(params["final_norm"], x, cfg.rms_eps)
+    return unembed(params["embed"], x, cfg), jnp.float32(0)
+
+
+def prefill(params, cfg: ModelConfig, tokens, *, scfg: SparseRLConfig,
+            slots: int, valid_mask=None, positions=None, prefix_embeds=None,
+            use_flash=None):
+    del prefix_embeds
+    cdt = dtype_of(cfg.compute_dtype)
+    B, S = tokens.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    if valid_mask is None:
+        valid_mask = jnp.ones((B, S), bool)
+    x = embed_tokens(params["embed"], tokens, cdt)
+    n_super, K, rest = _split(cfg)
+    sa = params["shared_attn"]
+
+    def mamba_layer(xc, lp):
+        h = rms_norm(lp["norm"], xc, cfg.rms_eps)
+        y, h_fin, tail = mb._ssm_block(lp, cfg, h, valid=valid_mask)
+        return xc + y, (h_fin, tail)
+
+    def super_body(xc, mp):
+        xc, (hs, tails) = jax.lax.scan(mamba_layer, xc, mp)
+        h = rms_norm(sa["ln1"], xc, cfg.rms_eps)
+        hattn, (kc, vc) = attn.full_attention(
+            sa["attn"], h, cfg, positions=positions, valid_mask=valid_mask,
+            return_kv=True, use_flash=use_flash)
+        obs = attn.obs_window_scores(sa["attn"], h, cfg, positions, valid_mask,
+                                     window=max(scfg.obs_window, 1))
+        xc = xc + hattn
+        h2 = rms_norm(sa["ln2"], xc, cfg.rms_eps)
+        xc = xc + apply_mlp(sa["mlp"], h2, cfg)
+        cache = compress_prefill(kc, vc, valid_mask, obs, slots, scfg, positions)
+        return xc, (hs, tails, cache)
+
+    x, (h_sup, tail_sup, caches) = jax.lax.scan(super_body, x, params["mamba_super"])
+    if rest:
+        x, (h_rest, tail_rest) = jax.lax.scan(mamba_layer, x, params["mamba_rest"])
+    else:
+        W, ch = cfg.ssm_conv_width, cfg.d_inner + 2 * cfg.ssm_state
+        h_rest = jnp.zeros((0, B, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32)
+        tail_rest = jnp.zeros((0, B, W - 1, ch), cdt)
+    x = rms_norm(params["final_norm"], x, cfg.rms_eps)
+    logits_last = unembed(params["embed"], x[:, -1], cfg)
+    next_pos = jnp.max(jnp.where(valid_mask, positions, -1), axis=-1) + 1
+    state = HybridState(conv_super=tail_sup, h_super=h_sup,
+                        conv_rest=tail_rest, h_rest=h_rest,
+                        caches=caches, pos=next_pos.astype(jnp.int32))
+    return logits_last, state
+
+
+def decode_step(params, cfg: ModelConfig, state: HybridState, tokens,
+                scfg: SparseRLConfig):
+    cdt = dtype_of(cfg.compute_dtype)
+    x = embed_tokens(params["embed"], tokens, cdt)
+    n_super, K, rest = _split(cfg)
+    sa = params["shared_attn"]
+
+    def mamba_step(xc, layer):
+        lp, tail, h0 = layer
+        hin = rms_norm(lp["norm"], xc[:, None, :], cfg.rms_eps)
+        z, xh, Bc, Cc, dtv, tail_new = mb._project(lp, cfg, hin, tail)
+        A = -jnp.exp(lp["A_log"])
+        dA = jnp.exp(dtv[:, 0] * A[None, :])
+        xt = xh[:, 0].astype(jnp.float32) * dtv[:, 0, :, None]
+        h_new = h0 * dA[..., None, None] + jnp.einsum(
+            "bhp,bn->bhpn", xt, Bc[:, 0].astype(jnp.float32))
+        y = jnp.einsum("bn,bhpn->bhp", Cc[:, 0].astype(jnp.float32), h_new)
+        y = y + lp["D"][None, :, None] * xh[:, 0].astype(jnp.float32)
+        y = y.reshape(xc.shape[0], cfg.d_inner).astype(xc.dtype)
+        y = rms_norm(lp["gnorm"], y * jax.nn.silu(z[:, 0]), cfg.rms_eps)
+        y = jnp.einsum("bk,kd->bd", y, lp["out_proj"]["w"].astype(xc.dtype))
+        return xc + y, (tail_new, h_new)
+
+    def super_step(xc, layer):
+        mp, tails, hs, cache = layer
+        xc, (tails_n, hs_n) = jax.lax.scan(mamba_step, xc, (mp, tails, hs))
+        h = rms_norm(sa["ln1"], xc[:, None, :], cfg.rms_eps)[:, 0]
+        hattn, cache = attn.decode_attention(sa["attn"], h, cfg, cache, scfg,
+                                             state.pos)
+        xc = xc + hattn
+        h2 = rms_norm(sa["ln2"], xc[:, None, :], cfg.rms_eps)
+        xc = xc + apply_mlp(sa["mlp"], h2, cfg)[:, 0]
+        return xc, (tails_n, hs_n, cache)
+
+    x, (tail_sup, h_sup, caches) = jax.lax.scan(
+        super_step, x,
+        (params["mamba_super"], state.conv_super, state.h_super, state.caches))
+    if rest:
+        x, (tail_rest, h_rest) = jax.lax.scan(
+            mamba_step, x, (params["mamba_rest"], state.conv_rest, state.h_rest))
+    else:
+        tail_rest, h_rest = state.conv_rest, state.h_rest
+    x = rms_norm(params["final_norm"], x[:, None, :], cfg.rms_eps)[:, 0]
+    logits = unembed(params["embed"], x, cfg)
+    return logits, HybridState(conv_super=tail_sup, h_super=h_sup,
+                               conv_rest=tail_rest, h_rest=h_rest,
+                               caches=caches, pos=state.pos + 1)

@@ -1,0 +1,110 @@
+"""Uniform model API across all families.
+
+``get_model(cfg)`` returns a :class:`ModelFns` namespace with a single batch
+convention consumed by the rollout engine, trainer and launcher:
+
+  batch = {
+    "tokens":        (B, S) int32            (always)
+    "prefix_embeds": (B, P, d_model)         (vlm: stub patch embeddings)
+    "frames":        (B, F, d_model)         (audio: stub frame embeddings)
+    "valid_mask":    (B, S) bool             (optional; False = padding)
+    "positions":     (B, S) int32            (optional)
+    "enc_mask":      (B, F) bool             (audio, optional)
+  }
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.configs.base import AUDIO, DENSE, HYBRID, MOE, SSM, VLM, ModelConfig, SparseRLConfig
+
+
+@dataclass(frozen=True)
+class ModelFns:
+    init_params: Callable
+    param_axes: Callable
+    forward: Callable      # (params, cfg, batch, use_flash=None) -> (logits, aux)
+    prefill: Callable      # (params, cfg, batch, scfg, slots) -> (last_logits, state)
+    decode_step: Callable  # (params, cfg, state, tokens, scfg) -> (logits, state)
+    has_kv_cache: bool     # False for pure SSM (Sparse-RL inapplicable)
+
+
+def _opt(batch, key):
+    return batch.get(key) if isinstance(batch, dict) else None
+
+
+def get_model(cfg: ModelConfig) -> ModelFns:
+    if cfg.family in (DENSE, MOE, VLM):
+        from repro.models import transformer as T
+
+        def fwd(params, cfg, batch, use_flash=None):
+            return T.forward(params, cfg, batch["tokens"],
+                             prefix_embeds=_opt(batch, "prefix_embeds"),
+                             valid_mask=_opt(batch, "valid_mask"),
+                             positions=_opt(batch, "positions"),
+                             use_flash=use_flash)
+
+        def pf(params, cfg, batch, scfg, slots, use_flash=None):
+            return T.prefill(params, cfg, batch["tokens"], scfg=scfg, slots=slots,
+                             prefix_embeds=_opt(batch, "prefix_embeds"),
+                             valid_mask=_opt(batch, "valid_mask"),
+                             positions=_opt(batch, "positions"),
+                             use_flash=use_flash)
+
+        return ModelFns(T.init_params, T.param_axes, fwd, pf, T.decode_step, True)
+
+    if cfg.family == SSM:
+        from repro.models import mamba2 as M
+
+        def fwd(params, cfg, batch, use_flash=None):
+            return M.forward(params, cfg, batch["tokens"],
+                             valid_mask=_opt(batch, "valid_mask"))
+
+        def pf(params, cfg, batch, scfg, slots, use_flash=None):
+            return M.prefill(params, cfg, batch["tokens"],
+                             valid_mask=_opt(batch, "valid_mask"))
+
+        return ModelFns(M.init_params, M.param_axes, fwd, pf, M.decode_step, False)
+
+    if cfg.family == HYBRID:
+        from repro.models import hybrid as H
+
+        def fwd(params, cfg, batch, use_flash=None):
+            return H.forward(params, cfg, batch["tokens"],
+                             valid_mask=_opt(batch, "valid_mask"),
+                             positions=_opt(batch, "positions"),
+                             use_flash=use_flash)
+
+        def pf(params, cfg, batch, scfg, slots, use_flash=None):
+            return H.prefill(params, cfg, batch["tokens"], scfg=scfg, slots=slots,
+                             valid_mask=_opt(batch, "valid_mask"),
+                             positions=_opt(batch, "positions"),
+                             use_flash=use_flash)
+
+        return ModelFns(H.init_params, H.param_axes, fwd, pf, H.decode_step, True)
+
+    if cfg.family == AUDIO:
+        from repro.models import encdec as E
+
+        def fwd(params, cfg, batch, use_flash=None):
+            return E.forward(params, cfg, batch["tokens"],
+                             frames=batch["frames"],
+                             enc_mask=_opt(batch, "enc_mask"),
+                             valid_mask=_opt(batch, "valid_mask"),
+                             positions=_opt(batch, "positions"),
+                             use_flash=use_flash)
+
+        def pf(params, cfg, batch, scfg, slots, use_flash=None):
+            return E.prefill(params, cfg, batch["tokens"], scfg=scfg, slots=slots,
+                             frames=batch["frames"],
+                             enc_mask=_opt(batch, "enc_mask"),
+                             valid_mask=_opt(batch, "valid_mask"),
+                             positions=_opt(batch, "positions"),
+                             use_flash=use_flash)
+
+        return ModelFns(E.init_params, E.param_axes, fwd, pf, E.decode_step, True)
+
+    raise ValueError(cfg.family)

@@ -1,0 +1,288 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060) in pure JAX.
+
+Chunked SSD forward: within-chunk quadratic attention-like term + cross-chunk
+recurrent state passing (scanned).  Decode is the O(1) recurrence
+``h <- h * exp(dt*A) + dt * B (x)``; no KV cache exists, which is exactly why
+Sparse-RL's KV compression is *inapplicable* to this family (DESIGN.md
+§Arch-applicability).
+
+Shapes: x heads H = d_inner / P (head dim P); B/C shared across heads
+(single group), state size N = cfg.ssm_state.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, dtype_of
+from repro.distributed.sharding import lsc
+from repro.models.common import (
+    dense_init,
+    embed_init,
+    embed_tokens,
+    norm_init,
+    rms_norm,
+    unembed,
+)
+
+
+class SSMState(NamedTuple):
+    conv: jnp.ndarray   # (L, B, W-1, d_conv_ch)   rolling pre-conv window
+    h: jnp.ndarray      # (L, B, H, P, N)          recurrent state
+    pos: jnp.ndarray    # (B,) next absolute position
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+def _ssm_layer_init(rng, cfg: ModelConfig):
+    dt = dtype_of(cfg.param_dtype)
+    di, N, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    conv_ch = di + 2 * N
+    r = jax.random.split(rng, 4)
+    p, a = {}, {}
+    p["norm"], a["norm"] = norm_init(cfg.d_model, dt)
+    proj_out = 2 * di + 2 * N + H      # z, x, B, C, dt
+    p["in_proj"], a["in_proj"] = dense_init(r[0], cfg.d_model, proj_out,
+                                            ("embed", "ssm_inner"), dt)
+    p["conv_w"] = (jax.random.normal(r[1], (cfg.ssm_conv_width, conv_ch), jnp.float32)
+                   * 0.1).astype(dt)
+    a["conv_w"] = (None, "ssm_inner")
+    p["conv_b"] = jnp.zeros((conv_ch,), dt)
+    a["conv_b"] = ("ssm_inner",)
+    p["A_log"] = jnp.log(jnp.linspace(1.0, 16.0, H).astype(jnp.float32))
+    a["A_log"] = ("ssm_heads",)
+    p["D"] = jnp.ones((H,), jnp.float32)
+    a["D"] = ("ssm_heads",)
+    p["dt_bias"] = jnp.zeros((H,), jnp.float32)
+    a["dt_bias"] = ("ssm_heads",)
+    p["gnorm"] = {"scale": jnp.ones((di,), dt)}
+    a["gnorm"] = {"scale": ("ssm_inner",)}
+    p["out_proj"], a["out_proj"] = dense_init(r[2], di, cfg.d_model,
+                                              ("ssm_inner", "embed"), dt)
+    return p, a
+
+
+def init_params(cfg: ModelConfig, rng):
+    r_emb, r_layers = jax.random.split(rng)
+    emb, _ = embed_init(r_emb, cfg)
+    rngs = jax.random.split(r_layers, cfg.num_layers)
+    layers = jax.vmap(lambda r: _ssm_layer_init(r, cfg)[0])(rngs)
+    fn, _ = norm_init(cfg.d_model, dtype_of(cfg.param_dtype))
+    return {"embed": emb, "layers": layers, "final_norm": fn}
+
+
+def ssm_layer_axes(cfg: ModelConfig):
+    return {
+        "norm": {"scale": ("embed",)},
+        "in_proj": {"w": ("embed", "ssm_inner")},
+        "conv_w": (None, "ssm_inner"),
+        "conv_b": ("ssm_inner",),
+        "A_log": ("ssm_heads",),
+        "D": ("ssm_heads",),
+        "dt_bias": ("ssm_heads",),
+        "gnorm": {"scale": ("ssm_inner",)},
+        "out_proj": {"w": ("ssm_inner", "embed")},
+    }
+
+
+def param_axes(cfg: ModelConfig):
+    layer_a = ssm_layer_axes(cfg)
+    emb_a = {"tok": ("vocab", "embed")}
+    if not cfg.tie_embeddings:
+        emb_a["head"] = ("embed", "vocab")
+    stacked = jax.tree.map(lambda t: ("layers",) + t, layer_a,
+                           is_leaf=lambda x: isinstance(x, tuple) and all(
+                               isinstance(e, (str, type(None))) for e in x))
+    return {"embed": emb_a, "layers": stacked,
+            "final_norm": {"scale": ("embed",)}}
+
+
+# ---------------------------------------------------------------------------
+# Projections
+# ---------------------------------------------------------------------------
+def _project(p, cfg: ModelConfig, x, conv_tail: Optional[jnp.ndarray] = None,
+             valid: Optional[jnp.ndarray] = None):
+    """x: (B, S, D) -> (z, xh, Bc, Cc, dt, conv_in).
+
+    conv_tail: (B, W-1, conv_ch) carried context for the causal depthwise conv
+    (decode / chunked prefill); zeros if None.  ``valid`` zeroes the conv
+    input at padded positions so left padding is exactly equivalent to the
+    zero-initialized conv tail (no leakage into the first real tokens).
+    """
+    di, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    W = cfg.ssm_conv_width
+    proj = jnp.einsum("bsd,dk->bsk", x, p["in_proj"]["w"].astype(x.dtype))
+    z, xr, Bc, Cc, dt = jnp.split(proj, [di, 2 * di, 2 * di + N, 2 * di + 2 * N],
+                                  axis=-1)
+    conv_in = jnp.concatenate([xr, Bc, Cc], axis=-1)            # (B,S,conv_ch)
+    if valid is not None:
+        conv_in = conv_in * valid[..., None].astype(conv_in.dtype)
+    B_, S, _ = conv_in.shape
+    if conv_tail is None:
+        conv_tail = jnp.zeros((B_, W - 1, conv_in.shape[-1]), conv_in.dtype)
+    padded = jnp.concatenate([conv_tail, conv_in], axis=1)      # (B, S+W-1, ch)
+    # causal depthwise conv as a sum of W shifted slices (cheap, fusible)
+    conv = sum(padded[:, i:i + S] * p["conv_w"][i].astype(x.dtype)
+               for i in range(W))
+    conv = jax.nn.silu(conv + p["conv_b"].astype(x.dtype))
+    xr, Bc, Cc = jnp.split(conv, [di, di + N], axis=-1)
+    xh = xr.reshape(B_, S, H, P)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    new_tail = padded[:, -(W - 1):] if W > 1 else jnp.zeros((B_, 0, conv_in.shape[-1]), conv_in.dtype)
+    return z, xh, Bc, Cc, dt, new_tail
+
+
+# ---------------------------------------------------------------------------
+# Chunked SSD forward (train / prefill)
+# ---------------------------------------------------------------------------
+def _ssd(cfg: ModelConfig, xh, Bc, Cc, dt, A, h0=None, valid=None):
+    """xh: (B,S,H,P); Bc/Cc: (B,S,N); dt: (B,S,H); A: (H,) negative.
+
+    Returns (y (B,S,H,P), h_final (B,H,P,N)).  ``valid`` (B,S) zeroes updates
+    at padded positions.
+    """
+    B_, S, H, P = xh.shape
+    N = Bc.shape[-1]
+    Q = min(cfg.ssm_chunk, S)
+    pad = (-S) % Q
+    if pad:
+        # padded tail positions get dt=0 => exact no-op updates
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Bc = jnp.pad(Bc, ((0, 0), (0, pad), (0, 0)))
+        Cc = jnp.pad(Cc, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    S_pad = S + pad
+    nC = S_pad // Q
+    if valid is not None:
+        valid = jnp.pad(valid, ((0, 0), (0, pad))) if pad else valid
+        dt = dt * valid[..., None].astype(dt.dtype)
+    dA = dt * A[None, None, :]                                   # (B,S,H) <= 0
+    xt = (xh.astype(jnp.float32) * dt[..., None])                # dt-weighted input
+
+    cs = lambda t: t.reshape(B_, nC, Q, *t.shape[2:])
+    xq, Bq, Cq, dAq = cs(xt), cs(Bc.astype(jnp.float32)), cs(Cc.astype(jnp.float32)), cs(dA)
+    cum = jnp.cumsum(dAq, axis=2)                                # (B,nC,Q,H)
+
+    # within-chunk (quadratic in Q): y_i += sum_{j<=i} exp(cum_i - cum_j) (C_i.B_j) x_j
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]          # (B,nC,Qi,Qj,H)
+    causal = jnp.tril(jnp.ones((Q, Q), bool))[None, None, :, :, None]
+    # mask BEFORE exp: non-causal entries have seg > 0 and can overflow to
+    # inf, which turns the where() backward into inf * 0 = NaN
+    decay = jnp.exp(jnp.where(causal, seg, -1e30))
+    cb = jnp.einsum("bcin,bcjn->bcij", Cq, Bq)                   # (B,nC,Qi,Qj)
+    att = cb[..., None] * decay                                  # (B,nC,Qi,Qj,H)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", att, xq)
+
+    # chunk-final states: h_c = sum_j exp(cum_last - cum_j) B_j x_j
+    last = cum[:, :, -1:, :]                                     # (B,nC,1,H)
+    w = jnp.exp(last - cum)                                      # (B,nC,Q,H)
+    hc = jnp.einsum("bcqh,bcqn,bcqhp->bchpn", w, Bq, xq)         # (B,nC,H,P,N)
+    chunk_decay = jnp.exp(last[:, :, 0, :])                      # (B,nC,H)
+
+    def scan_fn(h, inp):
+        hc_c, dec_c = inp
+        h_new = h * dec_c[..., None, None] + hc_c
+        return h_new, h
+
+    h_init = (jnp.zeros((B_, H, P, N), jnp.float32) if h0 is None
+              else h0.astype(jnp.float32))
+    h_fin, h_prev = jax.lax.scan(scan_fn, h_init,
+                                 (jnp.moveaxis(hc, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    h_prev = jnp.moveaxis(h_prev, 0, 1)                          # (B,nC,H,P,N) state entering chunk
+
+    # cross-chunk: y_i += exp(cum_i) C_i . h_prev
+    y_inter = jnp.einsum("bcqh,bcqn,bchpn->bcqhp", jnp.exp(cum), Cq, h_prev)
+    y = (y_intra + y_inter).reshape(B_, S_pad, H, P)[:, :S]
+    return y, h_fin
+
+
+def _ssm_block(p, cfg: ModelConfig, x, h0=None, conv_tail=None, valid=None):
+    """One mamba2 block on (B,S,D). Returns (y, h_final, conv_tail')."""
+    z, xh, Bc, Cc, dt, tail = _project(p, cfg, x, conv_tail, valid=valid)
+    if valid is not None:
+        xh = xh * valid[..., None, None].astype(xh.dtype)
+    A = -jnp.exp(p["A_log"])
+    y, h_fin = _ssd(cfg, xh, Bc, Cc, dt, A, h0=h0, valid=valid)
+    y = y + p["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(*x.shape[:2], cfg.d_inner).astype(x.dtype)
+    y = rms_norm(p["gnorm"], y * jax.nn.silu(z), cfg.rms_eps)
+    y = lsc(y, "batch", "seq", "ssm_inner")
+    return jnp.einsum("bsk,kd->bsd", y, p["out_proj"]["w"].astype(x.dtype)), h_fin, tail
+
+
+# ---------------------------------------------------------------------------
+# Public API (same contract as transformer.py)
+# ---------------------------------------------------------------------------
+def forward(params, cfg: ModelConfig, tokens, *, valid_mask=None,
+            positions=None, prefix_embeds=None, use_flash=None):
+    del positions, prefix_embeds, use_flash
+    cdt = dtype_of(cfg.compute_dtype)
+    x = embed_tokens(params["embed"], tokens, cdt)
+    x = lsc(x, "batch", "seq", "embed")
+
+    def body(carry, lp):
+        xc = carry
+        h = rms_norm(lp["norm"], xc, cfg.rms_eps)
+        y, _, _ = _ssm_block(lp, cfg, h, valid=valid_mask)
+        return xc + y, None
+
+    body_fn = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable) \
+        if cfg.remat == "block" else body
+    x, _ = jax.lax.scan(body_fn, x, params["layers"])
+    x = rms_norm(params["final_norm"], x, cfg.rms_eps)
+    return unembed(params["embed"], x, cfg), jnp.float32(0)
+
+
+def prefill(params, cfg: ModelConfig, tokens, *, scfg=None, slots=0,
+            valid_mask=None, positions=None, prefix_embeds=None, use_flash=None):
+    """SSM prefill: run the chunked forward, carry out (h, conv_tail)."""
+    del scfg, slots, positions, prefix_embeds, use_flash
+    cdt = dtype_of(cfg.compute_dtype)
+    B, S = tokens.shape
+    if valid_mask is None:
+        valid_mask = jnp.ones((B, S), bool)
+    x = embed_tokens(params["embed"], tokens, cdt)
+
+    def body(carry, lp):
+        xc = carry
+        h = rms_norm(lp["norm"], xc, cfg.rms_eps)
+        y, h_fin, tail = _ssm_block(lp, cfg, h, valid=valid_mask)
+        return xc + y, (h_fin, tail)
+
+    x, (hs, tails) = jax.lax.scan(body, x, params["layers"])
+    x = rms_norm(params["final_norm"], x, cfg.rms_eps)
+    logits_last = unembed(params["embed"], x[:, -1], cfg)
+    next_pos = jnp.sum(valid_mask, axis=-1).astype(jnp.int32)
+    state = SSMState(conv=tails, h=hs, pos=next_pos)
+    return logits_last, state
+
+
+def decode_step(params, cfg: ModelConfig, state: SSMState, tokens, scfg=None):
+    del scfg
+    cdt = dtype_of(cfg.compute_dtype)
+    x = embed_tokens(params["embed"], tokens, cdt)               # (B, D)
+
+    def body(xc, layer):
+        lp, conv_tail, h0 = layer
+        hin = rms_norm(lp["norm"], xc[:, None, :], cfg.rms_eps)
+        z, xh, Bc, Cc, dt, tail = _project(lp, cfg, hin, conv_tail)
+        A = -jnp.exp(lp["A_log"])
+        dA = jnp.exp(dt[:, 0] * A[None, :])                      # (B,H)
+        xt = xh[:, 0].astype(jnp.float32) * dt[:, 0, :, None]
+        h_new = h0 * dA[..., None, None] + jnp.einsum(
+            "bhp,bn->bhpn", xt, Bc[:, 0].astype(jnp.float32))
+        y = jnp.einsum("bn,bhpn->bhp", Cc[:, 0].astype(jnp.float32), h_new)
+        y = y + lp["D"][None, :, None] * xh[:, 0].astype(jnp.float32)
+        y = y.reshape(xc.shape[0], cfg.d_inner).astype(xc.dtype)
+        y = rms_norm(lp["gnorm"], y * jax.nn.silu(z[:, 0]), cfg.rms_eps)
+        y = jnp.einsum("bk,kd->bd", y, lp["out_proj"]["w"].astype(xc.dtype))
+        return xc + y, (tail, h_new)
+
+    x, (tails, hs) = jax.lax.scan(body, x,
+                                  (params["layers"], state.conv, state.h))
+    x = rms_norm(params["final_norm"], x[:, None, :], cfg.rms_eps)[:, 0]
+    logits = unembed(params["embed"], x, cfg)
+    return logits, SSMState(conv=tails, h=hs, pos=state.pos + 1)

@@ -1,0 +1,93 @@
+"""Top-k MoE FFN with static-capacity gather/scatter dispatch.
+
+Routing is sort-free: per-(token, k) expert assignments get a within-expert
+rank via a one-hot cumsum; tokens beyond the per-expert capacity are dropped
+(Switch-style).  The dispatch buffer is laid out (E, C, D) with the expert
+dim sharded over the ``model`` mesh axis — expert parallelism: GSPMD lowers
+the scatter/gather into all-to-all style collectives.
+
+FLOPs are proportional to *active* experts (capacity-bounded), so the
+roofline's MODEL_FLOPS = 6 * N_active * D comparison stays honest — unlike
+the dense "compute every expert" fallback.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, dtype_of
+from repro.distributed.sharding import lsc
+from repro.models.common import dense_init
+
+
+def moe_init(rng, cfg: ModelConfig):
+    dtype = dtype_of(cfg.param_dtype)
+    E, D, F = cfg.num_experts, cfg.d_model, cfg.moe_d_ff or cfg.d_ff
+    r = jax.random.split(rng, 4)
+    std = 1.0 / jnp.sqrt(D)
+    p = {
+        "router": (jax.random.normal(r[0], (D, E), jnp.float32) * 0.02).astype(jnp.float32),
+        "gate": (jax.random.normal(r[1], (E, D, F), jnp.float32) * std).astype(dtype),
+        "up": (jax.random.normal(r[2], (E, D, F), jnp.float32) * std).astype(dtype),
+        "down": (jax.random.normal(r[3], (E, F, D), jnp.float32) / jnp.sqrt(F)).astype(dtype),
+    }
+    a = {
+        "router": ("embed", None),
+        "gate": ("experts", "embed", "moe_ffn"),
+        "up": ("experts", "embed", "moe_ffn"),
+        "down": ("experts", "moe_ffn", "embed"),
+    }
+    return p, a
+
+
+def _capacity(cfg: ModelConfig, n_tokens: int) -> int:
+    cap = int(cfg.capacity_factor * n_tokens * cfg.experts_per_token
+              / max(cfg.num_experts, 1))
+    return max(cap, 4)
+
+
+def apply_moe(p, x: jnp.ndarray, cfg: ModelConfig) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, D) -> (y, aux_loss).  aux_loss is the Switch load-balance
+    term (scalar, fp32)."""
+    B, S, D = x.shape
+    E, K = cfg.num_experts, cfg.experts_per_token
+    T = B * S
+    C = _capacity(cfg, T)
+    xf = x.reshape(T, D)
+
+    logits = jnp.einsum("td,de->te", xf.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)                     # (T, E)
+    gate_vals, expert_ids = jax.lax.top_k(probs, K)             # (T, K)
+    gate_vals = gate_vals / (jnp.sum(gate_vals, axis=-1, keepdims=True) + 1e-9)
+
+    # load-balance auxiliary loss (Switch eq. 4 generalized to top-k)
+    me = jnp.mean(probs, axis=0)                                # (E,)
+    ce = jnp.mean(jax.nn.one_hot(expert_ids, E, dtype=jnp.float32).sum(1), axis=0)
+    aux = cfg.router_aux_coef * E * jnp.sum(me * ce)
+
+    flat_ids = expert_ids.reshape(T * K)
+    oh = jax.nn.one_hot(flat_ids, E, dtype=jnp.int32)           # (T*K, E)
+    rank = (jnp.cumsum(oh, axis=0) - oh)                        # pre-count
+    rank = jnp.take_along_axis(rank, flat_ids[:, None], axis=1)[:, 0]
+    keep = rank < C
+    dest = flat_ids * C + jnp.minimum(rank, C - 1)              # (T*K,)
+
+    cdt = x.dtype
+    src = jnp.repeat(xf, K, axis=0)                             # (T*K, D) token per slot
+    buf = jnp.zeros((E * C, D), cdt)
+    buf = buf.at[dest].add(jnp.where(keep[:, None], src, 0).astype(cdt))
+    buf = buf.reshape(E, C, D)
+    buf = lsc(buf, "experts", None, "embed")
+
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["gate"].astype(cdt)))
+    h = h * jnp.einsum("ecd,edf->ecf", buf, p["up"].astype(cdt))
+    h = lsc(h, "experts", None, "moe_ffn")
+    out = jnp.einsum("ecf,efd->ecd", h, p["down"].astype(cdt))
+    out = lsc(out, "experts", None, "embed")
+
+    y_slots = out.reshape(E * C, D)[dest]                       # (T*K, D)
+    w = (gate_vals.reshape(T * K) * keep).astype(cdt)
+    y = (y_slots * w[:, None]).reshape(T, K, D).sum(axis=1)
+    return y.reshape(B, S, D), aux

@@ -1,0 +1,308 @@
+"""Decoder-only transformer (dense / MoE / VLM) with scan-over-layers.
+
+Layer parameters are stacked with a leading ``L`` dim and consumed by
+``jax.lax.scan`` so HLO size (and compile time) is O(1) in depth; each layer
+body is optionally rematerialized (``cfg.remat == 'block'``).
+
+Public entry points (used by rollout / trainer / launch):
+  init_params / param_axes
+  forward         : teacher-forced logits over a full sequence
+  prefill         : forward + build per-layer (possibly compressed) KV caches
+  decode_step     : one-token step against the cache stack
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MOE, ModelConfig, SparseRLConfig, dtype_of
+from repro.distributed.sharding import lsc
+from repro.kvcache import KVCache, compress_prefill
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models.common import (
+    apply_mlp,
+    embed_init,
+    embed_tokens,
+    mlp_init,
+    norm_init,
+    rms_norm,
+    unembed,
+)
+
+
+class DecodeState(NamedTuple):
+    caches: KVCache          # stacked: every leaf has leading layer dim L
+    pos: jnp.ndarray         # (B,) next absolute position per row
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+def _layer_init(rng, cfg: ModelConfig):
+    r = jax.random.split(rng, 4)
+    p, a = {}, {}
+    p["ln1"], a["ln1"] = norm_init(cfg.d_model, dtype_of(cfg.param_dtype))
+    p["attn"], a["attn"] = attn.attn_init(r[0], cfg)
+    p["ln2"], a["ln2"] = norm_init(cfg.d_model, dtype_of(cfg.param_dtype))
+    if cfg.family == MOE:
+        p["moe"], a["moe"] = moe_mod.moe_init(r[1], cfg)
+    else:
+        p["mlp"], a["mlp"] = mlp_init(r[1], cfg, cfg.d_ff)
+    return p, a
+
+
+def init_params(cfg: ModelConfig, rng):
+    r_emb, r_layers, r_final = jax.random.split(rng, 3)
+    emb, emb_a = embed_init(r_emb, cfg)
+    layer_rngs = jax.random.split(r_layers, cfg.num_layers)
+    stacked = jax.vmap(lambda r: _layer_init(r, cfg)[0])(layer_rngs)
+    fn, fn_a = norm_init(cfg.d_model, dtype_of(cfg.param_dtype))
+    return {"embed": emb, "layers": stacked, "final_norm": fn}
+
+
+def param_axes(cfg: ModelConfig):
+    """Logical axis names mirroring init_params' tree (no allocation)."""
+    emb_a = {"tok": ("vocab", "embed")}
+    if not cfg.tie_embeddings:
+        emb_a["head"] = ("embed", "vocab")
+    layer_a = _layer_axes(cfg)
+    stacked_a = jax.tree.map(lambda t: ("layers",) + t, layer_a,
+                             is_leaf=lambda x: isinstance(x, tuple) and all(
+                                 isinstance(e, (str, type(None))) for e in x))
+    fn_a = {"scale": ("embed",)}
+    return {"embed": emb_a, "layers": stacked_a, "final_norm": fn_a}
+
+
+def _dense_axes(cfg: ModelConfig, axes):
+    if cfg.weight_quant == "int8":
+        return {"q": axes, "scale": (axes[-1],)}
+    return {"w": axes}
+
+
+def _layer_axes(cfg: ModelConfig):
+    a = {}
+    a["ln1"] = {"scale": ("embed",)}
+    a["ln2"] = {"scale": ("embed",)}
+    attn_a = {
+        "wq": _dense_axes(cfg, ("embed", "heads")),
+        "wk": _dense_axes(cfg, ("embed", "kv_heads")),
+        "wv": _dense_axes(cfg, ("embed", "kv_heads")),
+        "wo": _dense_axes(cfg, ("heads", "embed")),
+    }
+    if cfg.qkv_bias:
+        for n in ("wq", "wk", "wv"):
+            attn_a[n]["b"] = (("heads",) if n == "wq" else ("kv_heads",))
+    a["attn"] = attn_a
+    if cfg.family == MOE:
+        a["moe"] = {
+            "router": ("embed", None),
+            "gate": ("experts", "embed", "moe_ffn"),
+            "up": ("experts", "embed", "moe_ffn"),
+            "down": ("experts", "moe_ffn", "embed"),
+        }
+    else:
+        mlp_a = {"up": _dense_axes(cfg, ("embed", "ffn")),
+                 "down": _dense_axes(cfg, ("ffn", "embed"))}
+        if cfg.mlp_style == "swiglu":
+            mlp_a["gate"] = _dense_axes(cfg, ("embed", "ffn"))
+        a["mlp"] = mlp_a
+    return a
+
+
+# ---------------------------------------------------------------------------
+# Forward (teacher-forced)
+# ---------------------------------------------------------------------------
+def _embed_inputs(params, cfg: ModelConfig, tokens, prefix_embeds):
+    cdt = dtype_of(cfg.compute_dtype)
+    x = embed_tokens(params["embed"], tokens, cdt)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(cdt), x], axis=1)
+    return lsc(x, "batch", "seq", "embed")
+
+
+def _extend_for_prefix(x, valid_mask, positions, n_prefix: int):
+    """Prepend the (always-valid) patch prefix to caller-supplied masks and
+    positions that cover only the token part."""
+    B = x.shape[0]
+    if valid_mask is not None and valid_mask.shape[1] + n_prefix == x.shape[1]:
+        valid_mask = jnp.concatenate(
+            [jnp.ones((B, n_prefix), bool), valid_mask], axis=1)
+    if positions is not None and positions.shape[1] + n_prefix == x.shape[1]:
+        positions = jnp.concatenate(
+            [jnp.broadcast_to(jnp.arange(n_prefix)[None], (B, n_prefix)),
+             positions + n_prefix], axis=1)
+    return valid_mask, positions
+
+
+def _block(cfg: ModelConfig, p, x, positions, valid_mask, use_flash):
+    from repro.distributed.sharding import layer_param_lsc
+
+    p = layer_param_lsc(p, _layer_axes(cfg))
+    h = rms_norm(p["ln1"], x, cfg.rms_eps)
+    h = attn.full_attention(p["attn"], h, cfg, positions=positions,
+                            valid_mask=valid_mask, use_flash=use_flash)
+    x = x + h
+    h = rms_norm(p["ln2"], x, cfg.rms_eps)
+    if cfg.family == MOE:
+        h, aux = moe_mod.apply_moe(p["moe"], h, cfg)
+    else:
+        h, aux = apply_mlp(p["mlp"], h, cfg), jnp.float32(0)
+    x = lsc(x + h, "batch", "seq", "embed")
+    return x, aux
+
+
+def forward(params, cfg: ModelConfig, tokens, *,
+            prefix_embeds: Optional[jnp.ndarray] = None,
+            valid_mask: Optional[jnp.ndarray] = None,
+            positions: Optional[jnp.ndarray] = None,
+            use_flash: Optional[bool] = None,
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (logits (B, S, V) float32, aux_loss scalar).
+
+    For VLM, ``prefix_embeds`` (B, P, D) are prepended; logits cover the full
+    (P + S) sequence; labels should mask the prefix.
+    """
+    x = _embed_inputs(params, cfg, tokens, prefix_embeds)
+    B, S, _ = x.shape
+    if prefix_embeds is not None:
+        valid_mask, positions = _extend_for_prefix(
+            x, valid_mask, positions, prefix_embeds.shape[1])
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    if valid_mask is None:
+        valid_mask = jnp.ones((B, S), bool)
+
+    def body(carry, lp):
+        xc, aux = carry
+        xn, a = _block(cfg, lp, xc, positions, valid_mask, use_flash)
+        return (xn, aux + a), None
+
+    body_fn = body
+    if cfg.remat == "block":
+        body_fn = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    k = cfg.remat_chunk
+    if cfg.scan_layers and k > 1 and cfg.num_layers % k == 0:
+        # 2-level remat: outer scan over L/k chunks saves only chunk
+        # boundaries; the whole inner k-layer scan recomputes in backward.
+        chunked = jax.tree.map(
+            lambda t: t.reshape(cfg.num_layers // k, k, *t.shape[1:]),
+            params["layers"])
+
+        def chunk_body(carry, chunk_params):
+            return jax.lax.scan(body, carry, chunk_params)
+
+        chunk_fn = jax.checkpoint(
+            chunk_body, policy=jax.checkpoint_policies.nothing_saveable)
+        (x, aux), _ = jax.lax.scan(chunk_fn, (x, jnp.float32(0)), chunked)
+    elif cfg.scan_layers:
+        (x, aux), _ = jax.lax.scan(body_fn, (x, jnp.float32(0)), params["layers"])
+    else:
+        aux = jnp.float32(0)
+        for i in range(cfg.num_layers):
+            lp = jax.tree.map(lambda t: t[i], params["layers"])
+            (x, aux), _ = body_fn((x, aux), lp)
+    x = rms_norm(params["final_norm"], x, cfg.rms_eps)
+    logits = unembed(params["embed"], x, cfg)
+    return lsc(logits, "batch", "seq", "vocab"), aux
+
+
+# ---------------------------------------------------------------------------
+# Prefill: forward + build per-layer caches (dense or compressed)
+# ---------------------------------------------------------------------------
+def prefill(params, cfg: ModelConfig, tokens, *, scfg: SparseRLConfig,
+            slots: int,
+            prefix_embeds: Optional[jnp.ndarray] = None,
+            valid_mask: Optional[jnp.ndarray] = None,
+            positions: Optional[jnp.ndarray] = None,
+            use_flash: Optional[bool] = None,
+            ) -> Tuple[jnp.ndarray, DecodeState]:
+    """Returns (last-token logits (B, V), DecodeState with L-stacked caches).
+
+    With a compressing ``scfg``, each layer's prompt KVs are reduced to
+    ``slots`` via the SnapKV-style observation-window selection; the same
+    scores seed the h2o/rkv importance accumulators.
+    """
+    x = _embed_inputs(params, cfg, tokens, prefix_embeds)
+    B, S, _ = x.shape
+    if prefix_embeds is not None:
+        valid_mask, positions = _extend_for_prefix(
+            x, valid_mask, positions, prefix_embeds.shape[1])
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    if valid_mask is None:
+        valid_mask = jnp.ones((B, S), bool)
+
+    def body(carry, lp):
+        xc = carry
+        h = rms_norm(lp["ln1"], xc, cfg.rms_eps)
+        hattn, (kc, vc) = attn.full_attention(
+            lp["attn"], h, cfg, positions=positions, valid_mask=valid_mask,
+            return_kv=True, use_flash=use_flash)
+        obs = attn.obs_window_scores(lp["attn"], h, cfg, positions, valid_mask,
+                                     window=max(scfg.obs_window, 1))
+        xc = xc + hattn
+        h = rms_norm(lp["ln2"], xc, cfg.rms_eps)
+        if cfg.family == MOE:
+            h, _ = moe_mod.apply_moe(lp["moe"], h, cfg)
+        else:
+            h = apply_mlp(lp["mlp"], h, cfg)
+        xc = lsc(xc + h, "batch", "seq", "embed")
+        cache = compress_prefill(kc, vc, valid_mask, obs, slots, scfg, positions)
+        return xc, cache
+
+    if cfg.scan_layers:
+        x, caches = jax.lax.scan(body, x, params["layers"])
+    else:
+        caches = []
+        for i in range(cfg.num_layers):
+            lp = jax.tree.map(lambda t: t[i], params["layers"])
+            x, c = body(x, lp)
+            caches.append(c)
+        caches = jax.tree.map(lambda *xs: jnp.stack(xs), *caches)
+    x = rms_norm(params["final_norm"], x, cfg.rms_eps)
+    logits_last = unembed(params["embed"], x[:, -1], cfg)
+    next_pos = jnp.max(jnp.where(valid_mask, positions, -1), axis=-1) + 1
+    return logits_last, DecodeState(caches=caches, pos=next_pos.astype(jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+def decode_step(params, cfg: ModelConfig, state: DecodeState, tokens,
+                scfg: SparseRLConfig) -> Tuple[jnp.ndarray, DecodeState]:
+    """tokens: (B,) int32 — the tokens sampled at the previous step.
+    Returns (logits (B, V) float32, new state)."""
+    cdt = dtype_of(cfg.compute_dtype)
+    x = embed_tokens(params["embed"], tokens, cdt)              # (B, D)
+    x = lsc(x, "batch", "embed")
+
+    def body(xc, layer):
+        lp, cache = layer
+        h = rms_norm(lp["ln1"], xc[:, None, :], cfg.rms_eps)[:, 0]
+        hattn, cache = attn.decode_attention(lp["attn"], h, cfg, cache, scfg,
+                                             state.pos)
+        xc = xc + hattn
+        h = rms_norm(lp["ln2"], xc[:, None, :], cfg.rms_eps)
+        if cfg.family == MOE:
+            h, _ = moe_mod.apply_moe(lp["moe"], h, cfg)
+        else:
+            h = apply_mlp(lp["mlp"], h, cfg)
+        xc = xc + h[:, 0]
+        return xc, cache
+
+    if cfg.scan_layers:
+        x, caches = jax.lax.scan(body, x, (params["layers"], state.caches))
+    else:
+        caches = []
+        for i in range(cfg.num_layers):
+            lp = jax.tree.map(lambda t: t[i], params["layers"])
+            c = jax.tree.map(lambda t: t[i], state.caches)
+            x, cn = body(x, (lp, c))
+            caches.append(cn)
+        caches = jax.tree.map(lambda *xs: jnp.stack(xs), *caches)
+    x = rms_norm(params["final_norm"], x[:, None, :], cfg.rms_eps)[:, 0]
+    logits = unembed(params["embed"], x, cfg)
+    return logits, DecodeState(caches=caches, pos=state.pos + 1)

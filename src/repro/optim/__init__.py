@@ -1,0 +1,11 @@
+from repro.optim.adamw import (
+    AdamWState,
+    clip_by_global_norm,
+    global_norm,
+    init,
+    update,
+    warmup_cosine,
+)
+
+__all__ = ["AdamWState", "init", "update", "warmup_cosine", "global_norm",
+           "clip_by_global_norm"]

@@ -1,0 +1,3 @@
+from repro.rewards.verifier import binary_rewards, decode_responses, parse_answer
+
+__all__ = ["binary_rewards", "decode_responses", "parse_answer"]

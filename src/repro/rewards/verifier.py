@@ -1,0 +1,45 @@
+"""Rule-based binary verifier (paper §5.1: reward 1 iff correct, else 0).
+
+Host-side (numpy) — rewards are computed between the rollout and update
+phases, exactly where RL frameworks run their rule-based checkers.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import numpy as np
+
+from repro.data.tokenizer import TOKENIZER, CharTokenizer
+
+
+def parse_answer(text: str) -> str:
+    """First integer (optional minus) in the completion."""
+    s = text.strip()
+    out, started = [], False
+    for ch in s:
+        if ch == "-" and not started:
+            out.append(ch)
+            started = True
+        elif ch.isdigit():
+            out.append(ch)
+            started = True
+        elif started:
+            break
+    ans = "".join(out)
+    return ans if ans not in ("", "-") else ""
+
+
+def binary_rewards(resp_tokens: np.ndarray, answers: Sequence[str],
+                   tok: CharTokenizer = TOKENIZER) -> np.ndarray:
+    """resp_tokens: (B, T) sampled ids; answers: gold strings. -> (B,) f32."""
+    resp_tokens = np.asarray(resp_tokens)
+    out = np.zeros((resp_tokens.shape[0],), np.float32)
+    for i in range(resp_tokens.shape[0]):
+        text = tok.decode(resp_tokens[i])
+        out[i] = 1.0 if parse_answer(text) == str(answers[i]) else 0.0
+    return out
+
+
+def decode_responses(resp_tokens: np.ndarray,
+                     tok: CharTokenizer = TOKENIZER) -> List[str]:
+    return [tok.decode(row) for row in np.asarray(resp_tokens)]

@@ -1,0 +1,11 @@
+from repro.rollout.engine import (
+    RolloutBatch,
+    generate,
+    mismatch_kl_estimate,
+    rescore,
+    rescore_parts,
+    sample_token,
+)
+
+__all__ = ["RolloutBatch", "generate", "rescore", "rescore_parts",
+           "sample_token", "mismatch_kl_estimate"]

@@ -1,0 +1,154 @@
+"""Batched rollout engine: prefill + fixed-length lockstep decode.
+
+Decode runs a single compiled ``lax.scan`` for ``max_new_tokens`` steps —
+fixed shapes, no host sync, no per-sequence early exit (finished rows feed
+padding; this is the TPU-native straggler story: a batch is never blocked on
+its longest row beyond the static bound).
+
+Per sampled token we record the *model-distribution* log-prob under the
+sparse sampler (pi_sparse, Eq. 2).  At the paper's sampling settings
+(temperature=1, top_p=1) the sampling distribution and the policy coincide,
+making the importance corrections exact; for other settings the deviation is
+documented in DESIGN.md.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, SparseRLConfig
+from repro.models import ModelFns
+from repro.models.common import entropy_from_logits, log_softmax_gather
+
+
+class RolloutBatch(NamedTuple):
+    prompt_tokens: jnp.ndarray   # (B, P) left-padded
+    prompt_mask: jnp.ndarray     # (B, P) bool
+    resp_tokens: jnp.ndarray     # (B, T)
+    resp_mask: jnp.ndarray       # (B, T) bool — True up to & incl. EOS
+    logp_sparse: jnp.ndarray     # (B, T) f32 — sampler policy log-probs
+    lengths: jnp.ndarray         # (B,) int32 response lengths
+    entropy: jnp.ndarray         # (B,) f32 mean sampling entropy (telemetry)
+
+    def full_tokens(self) -> jnp.ndarray:
+        return jnp.concatenate([self.prompt_tokens, self.resp_tokens], axis=1)
+
+    def full_mask(self) -> jnp.ndarray:
+        return jnp.concatenate([self.prompt_mask, self.resp_mask], axis=1)
+
+
+def sample_token(rng, logits, temperature: float, top_p: float
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (token (B,), model_logp (B,)) — logp under the untempered
+    model distribution (see module docstring)."""
+    model_logp_all = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    if temperature <= 0:  # greedy
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    else:
+        sl = logits.astype(jnp.float32) / temperature
+        if top_p < 1.0:
+            sorted_logits = jnp.sort(sl, axis=-1)[:, ::-1]
+            probs = jax.nn.softmax(sorted_logits, axis=-1)
+            cum = jnp.cumsum(probs, axis=-1)
+            cutoff_idx = jnp.sum(cum < top_p, axis=-1)           # first idx past p
+            cutoff = jnp.take_along_axis(sorted_logits, cutoff_idx[:, None], axis=-1)
+            sl = jnp.where(sl >= cutoff, sl, -1e30)
+        tok = jax.random.categorical(rng, sl, axis=-1).astype(jnp.int32)
+    logp = jnp.take_along_axis(model_logp_all, tok[:, None], axis=-1)[:, 0]
+    return tok, logp
+
+
+def generate(params, cfg: ModelConfig, mfns: ModelFns, batch: dict,
+             scfg: SparseRLConfig, rng, *, max_new_tokens: int,
+             eos_id: int, pad_id: int = 0) -> RolloutBatch:
+    """Sparse (or dense, per scfg.compression) rollout for a prompt batch.
+
+    batch: the model batch dict; batch["tokens"] are left-padded prompts and
+    batch["valid_mask"] marks real prompt tokens.
+    """
+    prompt = batch["tokens"]
+    B, P = prompt.shape
+    pmask = batch.get("valid_mask")
+    if pmask is None:
+        pmask = jnp.ones((B, P), bool)
+    # dense cache must hold prompt + any multimodal prefix + all new tokens
+    prefix_len = (batch["prefix_embeds"].shape[1]
+                  if batch.get("prefix_embeds") is not None else 0)
+    slots = (scfg.cache_slots if scfg.compression != "none"
+             else P + prefix_len + max_new_tokens + 8)
+    last_logits, state = mfns.prefill(params, cfg, batch, scfg, slots)
+
+    def step(carry, rng_t):
+        state, logits, done, ent_sum = carry
+        tok, logp = sample_token(rng_t, logits, scfg.temperature, scfg.top_p)
+        tok = jnp.where(done, pad_id, tok)
+        logp = jnp.where(done, 0.0, logp)
+        ent = jnp.where(done, 0.0, entropy_from_logits(logits))
+        mask_t = ~done
+        new_done = done | (tok == eos_id)
+        logits_next, state = mfns.decode_step(params, cfg, state, tok, scfg)
+        return (state, logits_next, new_done, ent_sum + ent), (tok, logp, mask_t)
+
+    rngs = jax.random.split(rng, max_new_tokens)
+    done0 = jnp.zeros((B,), bool)
+    (state, _, done, ent_sum), (toks, logps, masks) = jax.lax.scan(
+        step, (state, last_logits, done0, jnp.zeros((B,), jnp.float32)), rngs)
+    resp_tokens = jnp.moveaxis(toks, 0, 1)                       # (B, T)
+    logp_sparse = jnp.moveaxis(logps, 0, 1)
+    resp_mask = jnp.moveaxis(masks, 0, 1)
+    lengths = jnp.sum(resp_mask, axis=-1).astype(jnp.int32)
+    entropy = ent_sum / jnp.maximum(lengths.astype(jnp.float32), 1.0)
+    return RolloutBatch(prompt_tokens=prompt, prompt_mask=pmask,
+                        resp_tokens=resp_tokens, resp_mask=resp_mask,
+                        logp_sparse=logp_sparse.astype(jnp.float32),
+                        lengths=lengths, entropy=entropy)
+
+
+def rescore_parts(params, cfg: ModelConfig, mfns: ModelFns,
+                  prompt_tokens, prompt_mask, resp_tokens, resp_mask,
+                  extra_batch: Optional[dict] = None,
+                  use_flash: Optional[bool] = None) -> jnp.ndarray:
+    """Teacher-forced log-probs of response tokens under a (dense,
+    full-context) policy with weights ``params``.
+
+    This single forward serves two roles (paper §3/§4): with the *sampler*
+    weights it yields pi_old (dense old policy — the xi numerator); with the
+    *learner* weights it yields pi_theta (differentiated in the update step).
+    Returns (B, T) float32.
+    """
+    del resp_mask  # padding is harmless for causal left-to-right scoring
+    full = jnp.concatenate([prompt_tokens, resp_tokens], axis=1)
+    mask = jnp.concatenate(
+        [prompt_mask, jnp.ones(resp_tokens.shape, bool)], axis=1)
+    batch = {"tokens": full, "valid_mask": mask}
+    if extra_batch:
+        for k in ("prefix_embeds", "frames", "enc_mask"):
+            if k in extra_batch:
+                batch[k] = extra_batch[k]
+    logits, _ = mfns.forward(params, cfg, batch, use_flash=use_flash)
+    # a prefix (VLM patches) shifts logits right by its length
+    offset = logits.shape[1] - full.shape[1]
+    P = prompt_tokens.shape[1]
+    T = resp_tokens.shape[1]
+    # logits at index (offset + P - 1 + t) predict response token t
+    pred = jax.lax.dynamic_slice_in_dim(logits, offset + P - 1, T, axis=1)
+    return log_softmax_gather(pred, resp_tokens)
+
+
+def rescore(params, cfg: ModelConfig, mfns: ModelFns, ro: RolloutBatch,
+            extra_batch: Optional[dict] = None,
+            use_flash: Optional[bool] = None) -> jnp.ndarray:
+    """`rescore_parts` over a RolloutBatch."""
+    return rescore_parts(params, cfg, mfns, ro.prompt_tokens, ro.prompt_mask,
+                         ro.resp_tokens, ro.resp_mask,
+                         extra_batch=extra_batch, use_flash=use_flash)
+
+
+def mismatch_kl_estimate(logp_old: jnp.ndarray, logp_sparse: jnp.ndarray,
+                         mask: jnp.ndarray) -> jnp.ndarray:
+    """Monte-Carlo KL(pi_sparse || pi_old) on sampled tokens (paper Fig. 3)."""
+    d = (logp_sparse - logp_old) * mask
+    return jnp.sum(d) / (jnp.sum(mask) + 1e-9)

@@ -1,0 +1,3 @@
+from repro.runtime.trainer import Trainer, TrainerOptions
+
+__all__ = ["Trainer", "TrainerOptions"]

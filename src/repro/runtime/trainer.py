@@ -1,0 +1,216 @@
+"""RL training runtime: rollout -> verify -> re-score -> Sparse-RL update.
+
+One Trainer drives the paper's full loop:
+
+  1. ROLLOUT  — sample G responses/prompt from the *sparse* sampler
+                (budget KV cache), recording pi_sparse per token.
+  2. VERIFY   — host-side rule verifier, binary reward (paper §5.1).
+  3. RESCORE  — one dense teacher-forced forward with the rollout weights
+                gives pi_old for every token (the xi numerator); with
+                kl_coef > 0 a second forward under the frozen reference
+                policy gives the KL anchor.
+  4. UPDATE   — Eq. 7 loss over minibatches of ``update_batch`` sequences
+                (rollout_batch / update_batch updates per phase; the w ratio
+                corrects intra-phase staleness), AdamW, global-norm clip.
+
+Fault tolerance: auto-resume from the newest checkpoint; atomic saves every
+``checkpoint_every`` steps (params, opt state, step).  Straggler mitigation:
+rollouts are fixed-length lockstep (no host sync on the long tail) and groups
+can be over-provisioned (``group_slack``: sample G+k, keep the G best-formed
+— finished preferred).  Composes with the paper's rejection sampling.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from functools import partial
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import latest_step, restore, save
+from repro.configs.base import ModelConfig, SparseRLConfig, TrainConfig
+from repro.core import group_advantages, sparse_rl_loss
+from repro.data import TOKENIZER, PromptLoader
+from repro.models import get_model
+from repro.optim import adamw
+from repro.rewards import binary_rewards
+from repro.rollout import generate, rescore
+
+
+@dataclass
+class TrainerOptions:
+    num_prompts: int = 16          # prompts per rollout phase
+    prompt_len: int = 24
+    max_new_tokens: int = 24
+    group_slack: int = 0           # over-provisioned rollouts per group
+    use_ref_kl: bool = False
+    level: str = "easy"
+    log_samples: bool = False
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, scfg: SparseRLConfig,
+                 tcfg: TrainConfig, opts: TrainerOptions,
+                 rng: Optional[jax.Array] = None):
+        self.cfg, self.scfg, self.tcfg, self.opts = cfg, scfg, tcfg, opts
+        self.m = get_model(cfg)
+        self.tok = TOKENIZER
+        rng = jax.random.PRNGKey(tcfg.seed) if rng is None else rng
+        self.rng, init_rng = jax.random.split(rng)
+        self.params = self.m.init_params(cfg, init_rng)
+        self.opt_state = adamw.init(self.params)
+        self.ref_params = jax.tree.map(jnp.copy, self.params) if opts.use_ref_kl else None
+        self.step = 0
+        self.loader = PromptLoader(batch_prompts=opts.num_prompts,
+                                   prompt_len=opts.prompt_len,
+                                   seed=tcfg.seed, level=opts.level)
+        self._maybe_resume()
+        self._build_jit()
+
+    # -- persistence ---------------------------------------------------------
+    def _maybe_resume(self):
+        last = latest_step(self.tcfg.checkpoint_dir)
+        if last is not None:
+            tree = {"params": self.params, "opt": self.opt_state}
+            restored, step, extra = restore(self.tcfg.checkpoint_dir, tree)
+            self.params = restored["params"]
+            self.opt_state = restored["opt"]
+            self.step = step
+            rng_key = extra.get("rng")
+            if rng_key is not None:
+                self.rng = jnp.asarray(np.array(rng_key, dtype=np.uint32))
+
+    def save_checkpoint(self):
+        save(self.tcfg.checkpoint_dir, self.step,
+             {"params": self.params, "opt": self.opt_state},
+             keep=self.tcfg.keep_checkpoints,
+             extra={"rng": np.asarray(jax.device_get(self.rng)).tolist()})
+
+    # -- jitted inner functions ----------------------------------------------
+    def _build_jit(self):
+        cfg, scfg, m = self.cfg, self.scfg, self.m
+
+        @partial(jax.jit, static_argnames=("max_new",))
+        def _rollout(params, tokens, mask, rng, max_new):
+            batch = {"tokens": tokens, "valid_mask": mask}
+            return generate(params, cfg, m, batch, scfg, rng,
+                            max_new_tokens=max_new, eos_id=self.tok.eos_id,
+                            pad_id=self.tok.pad_id)
+
+        @jax.jit
+        def _rescore(params, ro):
+            return rescore(params, cfg, m, ro)
+
+        def _loss(params, ro, logp_old, logp_ref, adv):
+            logp_theta = rescore(params, cfg, m, ro)
+            out = sparse_rl_loss(logp_theta, logp_old, ro.logp_sparse, adv,
+                                 ro.resp_mask, scfg, logp_ref=logp_ref)
+            return out.loss, out.metrics
+
+        @jax.jit
+        def _update(params, opt_state, ro, logp_old, logp_ref, adv, lr):
+            (loss, metrics), grads = jax.value_and_grad(_loss, has_aux=True)(
+                params, ro, logp_old, logp_ref, adv)
+            params, opt_state, om = adamw.update(
+                params, grads, opt_state, lr=lr,
+                b1=self.tcfg.adam_b1, b2=self.tcfg.adam_b2,
+                eps=self.tcfg.adam_eps, weight_decay=self.tcfg.weight_decay,
+                grad_clip=self.tcfg.grad_clip)
+            metrics = dict(metrics, loss=loss, **om)
+            return params, opt_state, metrics
+
+        self._rollout_fn = _rollout
+        self._rescore_fn = _rescore
+        self._update_fn = _update
+
+    # -- group helpers ---------------------------------------------------------
+    def _select_groups(self, ro, rewards: np.ndarray, G: int, slack: int):
+        """Straggler mitigation: from G+slack rollouts per prompt keep G,
+        preferring finished (EOS'd) then shorter responses."""
+        if slack == 0:
+            return ro, rewards
+        Gs = G + slack
+        lengths = np.asarray(jax.device_get(ro.lengths))
+        T = ro.resp_tokens.shape[1]
+        n_prompts = lengths.shape[0] // Gs
+        keep_idx = []
+        for p in range(n_prompts):
+            rows = np.arange(p * Gs, (p + 1) * Gs)
+            finished = lengths[rows] < T
+            order = np.lexsort((lengths[rows], ~finished))
+            keep_idx.extend(rows[order[:G]])
+        keep = np.asarray(keep_idx)
+        take = lambda x: x[keep]
+        ro2 = jax.tree.map(lambda x: jnp.asarray(np.asarray(jax.device_get(x))[keep]), ro)
+        return ro2, rewards[keep]
+
+    # -- one full RL step -------------------------------------------------------
+    def train_step(self) -> Dict[str, float]:
+        t0 = time.time()
+        opts, scfg, tcfg = self.opts, self.scfg, self.tcfg
+        prompts, pmask, answers = self.loader.get(self.step)
+        G = scfg.group_size
+        Gs = G + opts.group_slack
+        # tile prompts G+slack times (group-major)
+        tokens = jnp.asarray(np.repeat(prompts, Gs, axis=0))
+        mask = jnp.asarray(np.repeat(pmask, Gs, axis=0))
+        answers_rep = list(np.repeat(np.asarray(answers, dtype=object), Gs))
+
+        self.rng, r1 = jax.random.split(self.rng)
+        ro = self._rollout_fn(self.params, tokens, mask, r1,
+                              max_new=opts.max_new_tokens)
+        rewards = binary_rewards(np.asarray(jax.device_get(ro.resp_tokens)),
+                                 answers_rep)
+        ro, rewards = self._select_groups(ro, rewards, G, opts.group_slack)
+
+        adv = group_advantages(jnp.asarray(rewards.reshape(-1, G))).reshape(-1)
+        logp_old = self._rescore_fn(self.params, ro)
+        logp_ref = (self._rescore_fn(self.ref_params, ro)
+                    if self.ref_params is not None else None)
+
+        B = ro.resp_tokens.shape[0]
+        ub = min(tcfg.update_batch, B)
+        n_updates = max(B // ub, 1)
+        lr = adamw.warmup_cosine(jnp.asarray(self.step),
+                                 base_lr=scfg.learning_rate,
+                                 warmup=tcfg.warmup_steps,
+                                 total=tcfg.total_steps)
+        agg: Dict[str, float] = {}
+        for u in range(n_updates):
+            sl = slice(u * ub, (u + 1) * ub)
+            ro_u = jax.tree.map(lambda x: x[sl], ro)
+            lo = logp_old[sl]
+            lrf = logp_ref[sl] if logp_ref is not None else None
+            self.params, self.opt_state, metrics = self._update_fn(
+                self.params, self.opt_state, ro_u, lo, lrf, adv[sl], lr)
+            for k, v in metrics.items():
+                agg[k] = agg.get(k, 0.0) + float(jax.device_get(v)) / n_updates
+
+        self.step += 1
+        if tcfg.checkpoint_every and self.step % tcfg.checkpoint_every == 0:
+            self.save_checkpoint()
+
+        agg.update(
+            reward=float(rewards.mean()),
+            resp_len=float(jax.device_get(ro.lengths).mean()),
+            entropy=float(jax.device_get(ro.entropy).mean()),
+            lr=float(jax.device_get(lr)),
+            step_time_s=time.time() - t0,
+        )
+        return agg
+
+    def train(self, steps: int, log_every: int = 10, callback=None):
+        history = []
+        for _ in range(steps):
+            metrics = self.train_step()
+            history.append(metrics)
+            if callback:
+                callback(self.step, metrics)
+            if log_every and self.step % log_every == 0:
+                msg = " ".join(f"{k}={v:.4f}" for k, v in sorted(metrics.items())
+                               if isinstance(v, float))
+                print(f"[step {self.step}] {msg}", flush=True)
+        return history

@@ -1,0 +1,154 @@
+"""Per-kernel allclose vs the pure-jnp oracles, swept over shapes/dtypes.
+
+Kernels execute in Pallas interpret mode on CPU (same semantics as the
+Mosaic TPU lowering, bit-for-bit kernel body).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.budget_attention import budget_attention
+from repro.kernels.flash_attention import flash_attention_fwd
+from repro.kernels.flash_decode import flash_decode
+from repro.kernels.rkv_scores import rkv_scores
+
+TOL = dict(rtol=2e-2, atol=2e-2)   # bf16 paths
+TOL32 = dict(rtol=2e-5, atol=2e-5)
+
+
+def _mk(rng, shape, dtype):
+    return jnp.asarray(rng.normal(size=shape), jnp.float32).astype(dtype)
+
+
+@pytest.mark.parametrize("B,Hq,Hkv,S,Dh", [
+    (1, 4, 4, 16, 16),     # MHA
+    (2, 8, 2, 64, 32),     # GQA 4:1
+    (1, 16, 1, 40, 8),     # MQA, ragged S
+    (3, 6, 3, 128, 64),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_budget_attention_sweep(B, Hq, Hkv, S, Dh, dtype):
+    rng = np.random.default_rng(B * 7 + S)
+    q = _mk(rng, (B, Hq, Dh), dtype)
+    k = _mk(rng, (B, Hkv, S, Dh), dtype)
+    v = _mk(rng, (B, Hkv, S, Dh), dtype)
+    pos = jnp.asarray(rng.integers(-1, 50, (B, Hkv, S)), jnp.int32)
+    # ensure at least one valid slot per row
+    pos = pos.at[:, :, 0].set(0)
+    o, p = budget_attention(q, k, v, pos, interpret=True)
+    o_ref, p_ref = ref.budget_attention_ref(q, k, v, pos)
+    tol = TOL if dtype == jnp.bfloat16 else TOL32
+    np.testing.assert_allclose(np.asarray(o, jnp.float32),
+                               np.asarray(o_ref, jnp.float32), **tol)
+    np.testing.assert_allclose(p, p_ref, **tol)
+
+
+@pytest.mark.parametrize("S,block_s", [(16, 8), (64, 16), (100, 32), (128, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_decode_sweep(S, block_s, dtype):
+    B, Hq, Hkv, Dh = 2, 4, 2, 16
+    rng = np.random.default_rng(S)
+    q = _mk(rng, (B, Hq, Dh), dtype)
+    k = _mk(rng, (B, Hkv, S, Dh), dtype)
+    v = _mk(rng, (B, Hkv, S, Dh), dtype)
+    pos = jnp.asarray(rng.integers(-1, 99, (B, Hkv, S)), jnp.int32)
+    pos = pos.at[:, :, 0].set(0)
+    o = flash_decode(q, k, v, pos, block_s=block_s, interpret=True)
+    o_ref = ref.flash_decode_ref(q, k, v, pos)
+    tol = TOL if dtype == jnp.bfloat16 else TOL32
+    np.testing.assert_allclose(np.asarray(o, jnp.float32),
+                               np.asarray(o_ref, jnp.float32), **tol)
+
+
+@pytest.mark.parametrize("Sq,Sk,bq,bk,causal", [
+    (16, 16, 8, 8, True),
+    (24, 24, 8, 16, True),      # ragged vs blocks
+    (32, 32, 16, 16, False),    # non-causal (whisper encoder)
+    (17, 33, 8, 8, True),       # prime-ish padding
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(Sq, Sk, bq, bk, causal, dtype):
+    B, Hq, Hkv, Dh = 2, 4, 2, 16
+    rng = np.random.default_rng(Sq * Sk)
+    q = _mk(rng, (B, Sq, Hq, Dh), dtype)
+    k = _mk(rng, (B, Sk, Hkv, Dh), dtype)
+    v = _mk(rng, (B, Sk, Hkv, Dh), dtype)
+    qp = jnp.broadcast_to(jnp.arange(Sq)[None], (B, Sq)).astype(jnp.int32)
+    kp = jnp.broadcast_to(jnp.arange(Sk)[None], (B, Sk)).astype(jnp.int32)
+    o = flash_attention_fwd(q, k, v, qp, kp, block_q=bq, block_k=bk,
+                            causal=causal, interpret=True)
+    o_ref = ref.flash_attention_ref(q, k, v, qp, kp, causal=causal)
+    tol = TOL if dtype == jnp.bfloat16 else TOL32
+    np.testing.assert_allclose(np.asarray(o, jnp.float32),
+                               np.asarray(o_ref, jnp.float32), **tol)
+
+
+def test_flash_attention_left_padded_positions():
+    """left-padded prompts: padding has position -1 and must get no mass."""
+    B, S, Hq, Hkv, Dh = 1, 12, 2, 2, 8
+    rng = np.random.default_rng(0)
+    q = _mk(rng, (B, S, Hq, Dh), jnp.float32)
+    k = _mk(rng, (B, S, Hkv, Dh), jnp.float32)
+    v = _mk(rng, (B, S, Hkv, Dh), jnp.float32)
+    pad = 4
+    posr = np.full((B, S), -1, np.int32)
+    posr[0, pad:] = np.arange(S - pad)
+    pos = jnp.asarray(posr)
+    o = flash_attention_fwd(q, k, v, pos, pos, block_q=4, block_k=4,
+                            interpret=True)
+    o_ref = ref.flash_attention_ref(q, k, v, pos, pos)
+    np.testing.assert_allclose(o[0, pad:], o_ref[0, pad:], **TOL32)
+
+
+@pytest.mark.parametrize("S", [8, 24, 64])
+@pytest.mark.parametrize("lam", [0.0, 0.1, 1.0])
+def test_rkv_scores_sweep(S, lam):
+    B, Hkv, Dh = 2, 2, 16
+    rng = np.random.default_rng(S)
+    k = _mk(rng, (B, Hkv, S, Dh), jnp.float32)
+    kn = _mk(rng, (B, Hkv, Dh), jnp.float32)
+    imp = jnp.asarray(rng.uniform(0, 2, (B, Hkv, S)), jnp.float32)
+    pos = jnp.asarray(rng.integers(-1, 40, (B, Hkv, S)), jnp.int32)
+    cur = jnp.asarray(rng.integers(30, 45, (B,)), jnp.int32)
+    s = rkv_scores(k, kn, imp, pos, cur, lam=lam, interpret=True)
+    s_ref = ref.rkv_scores_ref(k, kn, imp, pos, cur, lam=lam)
+    np.testing.assert_allclose(s, s_ref, **TOL32)
+
+
+def test_ops_fallback_matches_kernel():
+    """use_kernels(False) routes to oracles; both paths agree."""
+    rng = np.random.default_rng(1)
+    B, Hq, Hkv, S, Dh = 1, 4, 2, 32, 16
+    q = _mk(rng, (B, Hq, Dh), jnp.float32)
+    k = _mk(rng, (B, Hkv, S, Dh), jnp.float32)
+    v = _mk(rng, (B, Hkv, S, Dh), jnp.float32)
+    pos = jnp.asarray(rng.integers(0, 30, (B, Hkv, S)), jnp.int32)
+    try:
+        ops.use_kernels(False)
+        o_ref, p_ref = ops.budget_attention(q, k, v, pos)
+    finally:
+        ops.use_kernels(True)
+    o_k, p_k = ops.budget_attention(q, k, v, pos)
+    np.testing.assert_allclose(o_k, o_ref, **TOL32)
+    np.testing.assert_allclose(p_k, p_ref, **TOL32)
+
+
+def test_budget_attention_matches_cache_attend():
+    """kernel contract == production jnp decode path (kvcache.attend)."""
+    from repro.kvcache import attend, init_cache, append
+    from repro.configs import SparseRLConfig
+    scfg = SparseRLConfig(kv_budget=12, kv_buffer=4, obs_window=2, num_sinks=1)
+    B, H, D = 2, 2, 16
+    rng = np.random.default_rng(3)
+    cache = init_cache(B, H, scfg.cache_slots, D, jnp.float32)
+    for t in range(10):
+        kx = jnp.asarray(rng.normal(size=(B, H, D)), jnp.float32)
+        cache = append(cache, kx, kx * 0.5, jnp.full((B,), t, jnp.int32), scfg)
+    q = jnp.asarray(rng.normal(size=(B, 4, D)), jnp.float32)
+    o_prod, p_prod = attend(q, cache)
+    o_kern, p_kern = budget_attention(q, cache.k, cache.v, cache.pos,
+                                      interpret=True)
+    np.testing.assert_allclose(o_prod, o_kern, **TOL32)
+    np.testing.assert_allclose(p_prod, p_kern, **TOL32)

@@ -1,0 +1,189 @@
+"""KV-cache invariants: unit + hypothesis property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import SparseRLConfig
+from repro.kvcache import (
+    append,
+    attend,
+    compress_prefill,
+    dense_prefill,
+    eviction_scores,
+    init_cache,
+    update_scores,
+)
+
+
+def _scfg(**kw):
+    base = dict(kv_budget=8, kv_buffer=4, obs_window=2, num_sinks=1,
+                compression="rkv")
+    base.update(kw)
+    return SparseRLConfig(**base)
+
+
+def _fill_cache(scfg, B=2, H=2, D=8, steps=20, seed=0):
+    rng = np.random.default_rng(seed)
+    cache = init_cache(B, H, scfg.cache_slots, D, jnp.float32)
+    for t in range(steps):
+        k = jnp.asarray(rng.normal(size=(B, H, D)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(B, H, D)), jnp.float32)
+        cache = append(cache, k, v, jnp.full((B,), t, jnp.int32), scfg)
+        q = jnp.asarray(rng.normal(size=(B, H * 2, D)), jnp.float32)
+        _, probs = attend(q, cache)
+        cache = update_scores(cache, probs, scfg)
+    return cache
+
+
+@pytest.mark.parametrize("policy", ["rkv", "h2o", "snapkv", "streaming"])
+def test_slots_never_exceeded(policy):
+    scfg = _scfg(compression=policy)
+    cache = _fill_cache(scfg, steps=30)
+    assert cache.k.shape[-2] == scfg.cache_slots
+    assert int(cache.fill) == scfg.cache_slots
+    # all slots hold real tokens once full
+    assert bool(cache.valid_mask().all())
+
+
+@pytest.mark.parametrize("policy", ["rkv", "h2o", "streaming"])
+def test_protected_tokens_survive(policy):
+    """Sinks + observation window are never evicted (cache.pos retains them)."""
+    scfg = _scfg(compression=policy)
+    steps = 30
+    cache = _fill_cache(scfg, steps=steps)
+    pos = np.asarray(cache.pos)
+    for b in range(pos.shape[0]):
+        for h in range(pos.shape[1]):
+            kept = set(pos[b, h].tolist())
+            for sink in range(scfg.num_sinks):
+                assert sink in kept, f"sink {sink} evicted ({policy})"
+            for recent in range(steps - scfg.obs_window + 1, steps):
+                assert recent in kept, f"recent {recent} evicted ({policy})"
+
+
+def test_streaming_evicts_oldest_unprotected():
+    scfg = _scfg(compression="streaming")
+    cache = _fill_cache(scfg, steps=13)  # slots=12 -> exactly one eviction
+    pos = np.asarray(cache.pos)
+    # oldest non-sink position (= num_sinks) must be gone
+    assert scfg.num_sinks not in pos[0, 0].tolist()
+
+
+def test_dense_cache_never_evicts():
+    scfg = _scfg(compression="none")
+    B, H, D = 1, 1, 4
+    cache = init_cache(B, H, 16, D, jnp.float32)
+    for t in range(10):
+        k = jnp.ones((B, H, D)) * t
+        cache = append(cache, k, k, jnp.full((B,), t, jnp.int32), scfg)
+    pos = np.asarray(cache.pos[0, 0])
+    assert sorted(p for p in pos.tolist() if p >= 0) == list(range(10))
+
+
+def test_attend_masks_empty_slots():
+    scfg = _scfg()
+    B, H, D = 1, 1, 4
+    cache = init_cache(B, H, 8, D, jnp.float32)
+    cache = append(cache, jnp.ones((B, H, D)), jnp.ones((B, H, D)) * 7.0,
+                   jnp.zeros((B,), jnp.int32), scfg)
+    q = jnp.ones((B, H, D))
+    out, probs = attend(q, cache)
+    # single valid slot -> output == its value, probs one-hot
+    np.testing.assert_allclose(out[0, 0], 7.0, rtol=1e-6)
+    np.testing.assert_allclose(float(probs.sum()), 1.0, rtol=1e-6)
+
+
+def test_compress_prefill_selects_topk_and_keeps_order():
+    scfg = _scfg(num_sinks=1, obs_window=2)
+    B, H, T, D = 1, 1, 10, 4
+    rng = np.random.default_rng(0)
+    k = jnp.asarray(rng.normal(size=(B, H, T, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, H, T, D)), jnp.float32)
+    mask = jnp.ones((B, T), bool)
+    positions = jnp.arange(T)[None, :]
+    obs = jnp.asarray(rng.uniform(size=(B, H, T)), jnp.float32)
+    slots = 6
+    cache = compress_prefill(k, v, mask, obs, slots, scfg, positions)
+    pos = np.asarray(cache.pos[0, 0])
+    assert len(pos) == slots and (pos >= 0).all()
+    # temporal order preserved
+    assert (np.diff(pos) > 0).all()
+    # sink 0 and the last obs_window-1 tokens kept
+    assert 0 in pos and 9 in pos
+    # selected = top scores among unprotected
+    protected = {0, 9}
+    sel = [p for p in pos.tolist() if p not in protected]
+    scores = np.asarray(obs[0, 0])
+    unprot = [i for i in range(T) if i not in protected]
+    expected = sorted(sorted(unprot, key=lambda i: -scores[i])[:slots - 2])
+    assert sel == expected
+
+
+def test_compress_prefill_short_prompt_verbatim():
+    scfg = _scfg()
+    B, H, T, D = 2, 1, 4, 4
+    k = jnp.ones((B, H, T, D))
+    v = jnp.ones((B, H, T, D))
+    mask = jnp.array([[True] * 4, [False, True, True, True]])
+    positions = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
+    obs = jnp.zeros((B, H, T))
+    cache = compress_prefill(k, v, mask, obs, 8, scfg, positions)
+    assert cache.k.shape[-2] == 8
+    assert int(cache.fill) == 4
+    # padding marked empty
+    assert np.asarray(cache.pos)[1, 0, 0] == -1
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    slots=st.integers(4, 16),
+    steps=st.integers(1, 40),
+    policy=st.sampled_from(["rkv", "h2o", "streaming", "snapkv"]),
+)
+def test_property_cache_bounded_and_valid(slots, steps, policy):
+    """Memory bound + validity: the paper's core claim, fuzzed."""
+    scfg = SparseRLConfig(kv_budget=slots, kv_buffer=0, obs_window=2,
+                          num_sinks=1, compression=policy)
+    B, H, D = 1, 2, 4
+    cache = init_cache(B, H, slots, D, jnp.float32)
+    rng = np.random.default_rng(slots * 101 + steps)
+    for t in range(steps):
+        k = jnp.asarray(rng.normal(size=(B, H, D)), jnp.float32)
+        cache = append(cache, k, k, jnp.full((B,), t, jnp.int32), scfg)
+    pos = np.asarray(cache.pos)
+    assert pos.shape[-1] == slots                      # static bound
+    assert int(cache.fill) == min(steps, slots)
+    for b in range(pos.shape[0]):
+        for h in range(pos.shape[1]):                  # caches are per-head
+            valid = pos[b, h][pos[b, h] >= 0]
+            assert len(set(valid.tolist())) == len(valid)  # no dup tokens
+            assert valid.max(initial=-1) <= steps - 1
+            # newest token always present in every head's cache
+            if steps > 0:
+                assert (pos[b, h] == steps - 1).any()
+
+
+@settings(max_examples=20, deadline=None)
+@given(data=st.data())
+def test_property_attend_is_convex_combination(data):
+    """attention output lies in the convex hull of values; pooled probs sum
+    to group size over valid slots."""
+    B, H, S, D = 1, 1, data.draw(st.integers(2, 12)), 4
+    rng = np.random.default_rng(data.draw(st.integers(0, 10**6)))
+    k = jnp.asarray(rng.normal(size=(B, H, S, D)), jnp.float32)
+    v = jnp.asarray(rng.uniform(-1, 1, (B, H, S, D)), jnp.float32)
+    n_valid = data.draw(st.integers(1, S))
+    pos = jnp.asarray([[np.concatenate([np.arange(n_valid),
+                                        -np.ones(S - n_valid)])]], jnp.int32)
+    from repro.kvcache.cache import KVCache
+    cache = KVCache(k=k, v=v, pos=pos,
+                    score=jnp.zeros((B, H, S)), fill=jnp.asarray(S))
+    q = jnp.asarray(rng.normal(size=(B, 2, D)), jnp.float32)
+    out, probs = attend(q, cache)
+    assert float(out.max()) <= float(v.max()) + 1e-5
+    assert float(out.min()) >= float(v.min()) - 1e-5
+    np.testing.assert_allclose(float(probs.sum()), 2.0, rtol=1e-5)
+    # no attention mass on empty slots
+    np.testing.assert_allclose(np.asarray(probs)[0, 0, n_valid:], 0.0, atol=1e-7)

@@ -1,0 +1,70 @@
+"""int8 serving-weight quantization (§Perf C1 feature)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from dataclasses import replace
+
+from repro.configs import SparseRLConfig, get_config
+from repro.models import get_model
+from repro.models.common import quantize_int8
+
+
+def test_quantize_int8_error_bound():
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.normal(0, 0.05, (64, 32)), jnp.float32)
+    q, scale = quantize_int8(w)
+    assert q.dtype == jnp.int8 and scale.shape == (32,)
+    deq = q.astype(jnp.float32) * scale[None, :]
+    # max error <= half an LSB per channel (+ float eps)
+    err = np.asarray(jnp.abs(deq - w))
+    bound = np.asarray(scale)[None, :] * 0.5 + 1e-6
+    assert (err <= bound).all(), float((err - bound).max())
+
+
+def test_int8_model_close_to_fp():
+    cfg = get_config("qwen2.5-14b").smoke()
+    cfg8 = replace(cfg, weight_quant="int8")
+    m, m8 = get_model(cfg), get_model(cfg8)
+    # same rng -> int8 params are the quantized version of the fp params
+    p = m.init_params(cfg, jax.random.PRNGKey(0))
+    p8 = m8.init_params(cfg8, jax.random.PRNGKey(0))
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 12), 3,
+                                          cfg.vocab_size)}
+    lg, _ = m.forward(p, cfg, batch)
+    lg8, _ = m8.forward(p8, cfg8, batch)
+    # logits stay within quantization noise of the fp model
+    assert float(jnp.abs(lg - lg8).max()) < 2.0
+    corr = np.corrcoef(np.asarray(lg).ravel(), np.asarray(lg8).ravel())[0, 1]
+    assert corr > 0.98
+
+
+def test_int8_param_bytes_halved():
+    cfg = get_config("qwen2.5-14b").smoke()
+    cfg8 = replace(cfg, weight_quant="int8")
+    m, m8 = get_model(cfg), get_model(cfg8)
+    nbytes = lambda tree: sum(x.size * x.dtype.itemsize
+                              for x in jax.tree.leaves(tree))
+    sds = jax.eval_shape(lambda: m.init_params(cfg, jax.random.PRNGKey(0)))
+    sds8 = jax.eval_shape(lambda: m8.init_params(cfg8, jax.random.PRNGKey(0)))
+    # dense matmul weights dominate the layer stack; embeddings unchanged
+    layers = nbytes(sds.children()[0]["layers"]) if hasattr(sds, "children") \
+        else nbytes(sds["layers"])
+    layers8 = nbytes(sds8["layers"])
+    assert layers8 < 0.45 * nbytes(sds["layers"])  # f32 -> int8 (+ scales)
+
+
+def test_int8_decode_and_rollout():
+    from repro.rollout import generate, rescore
+    from repro.data import TOKENIZER
+    cfg8 = replace(get_config("qwen2.5-14b").smoke(), weight_quant="int8")
+    m8 = get_model(cfg8)
+    p8 = m8.init_params(cfg8, jax.random.PRNGKey(0))
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 10), 3,
+                                          cfg8.vocab_size),
+             "valid_mask": jnp.ones((2, 10), bool)}
+    scfg = SparseRLConfig(kv_budget=8, kv_buffer=2, obs_window=2, num_sinks=1)
+    ro = generate(p8, cfg8, m8, batch, scfg, jax.random.PRNGKey(2),
+                  max_new_tokens=6, eos_id=TOKENIZER.eos_id)
+    lp = rescore(p8, cfg8, m8, ro)
+    assert bool(jnp.isfinite(lp).all())

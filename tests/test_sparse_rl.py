@@ -1,0 +1,153 @@
+"""Unit tests for the paper's core math (Eqs. 4-7)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import SparseRLConfig
+from repro.core import (
+    group_advantages,
+    grpo_loss,
+    k3_kl,
+    rejection_mask,
+    sparse_rl_loss,
+    sparsity_consistency_ratio,
+)
+
+
+def test_group_advantages_normalization():
+    r = jnp.array([[1.0, 0.0, 1.0, 0.0], [1.0, 1.0, 1.0, 1.0]])
+    adv = group_advantages(r)
+    # zero-mean within groups
+    np.testing.assert_allclose(adv.mean(axis=-1), 0.0, atol=1e-6)
+    # degenerate (all-equal) group -> zero advantage, no NaN
+    np.testing.assert_allclose(adv[1], 0.0, atol=1e-6)
+    assert not jnp.isnan(adv).any()
+
+
+def test_xi_ratio_eq5():
+    lo = jnp.log(jnp.array([[0.5, 0.2]]))
+    ls = jnp.log(jnp.array([[0.25, 0.2]]))
+    xi = sparsity_consistency_ratio(lo, ls)
+    np.testing.assert_allclose(xi, [[2.0, 1.0]], rtol=1e-6)
+
+
+def test_xi_cap():
+    lo = jnp.zeros((1, 1))
+    ls = jnp.full((1, 1), -50.0)
+    xi = sparsity_consistency_ratio(lo, ls, xi_clip_max=10.0)
+    np.testing.assert_allclose(xi, 10.0, rtol=1e-6)
+
+
+def test_rejection_mask_eq6():
+    # token 2 of seq 0 is anomalous: pi_old << pi_sparse
+    lo = jnp.log(jnp.array([[0.5, 1e-9, 0.5], [0.5, 0.5, 0.5]]))
+    ls = jnp.log(jnp.full((2, 3), 0.5))
+    mask = jnp.ones((2, 3), bool)
+    m = rejection_mask(lo, ls, mask, eps=1e-4)
+    np.testing.assert_allclose(m, [0.0, 1.0])
+    # the anomalous token is ignored if masked out (e.g. after EOS)
+    mask2 = mask.at[0, 1].set(False)
+    m2 = rejection_mask(lo, ls, mask2, eps=1e-4)
+    np.testing.assert_allclose(m2, [1.0, 1.0])
+
+
+def _setup(B=4, T=6, seed=0):
+    rng = np.random.default_rng(seed)
+    lt = jnp.asarray(rng.normal(-1.5, 0.3, (B, T)), jnp.float32)
+    lo = lt + jnp.asarray(rng.normal(0, 0.05, (B, T)), jnp.float32)
+    ls = lo + jnp.asarray(rng.normal(0, 0.1, (B, T)), jnp.float32)
+    adv = jnp.asarray(rng.normal(0, 1, (B,)), jnp.float32)
+    mask = jnp.asarray(rng.uniform(size=(B, T)) > 0.2)
+    return lt, lo, ls, adv, mask
+
+
+def test_sparse_rl_reduces_to_grpo_when_dense():
+    """With pi_sparse == pi_old (no compression), Eq. 7 == Eq. 11."""
+    lt, lo, _, adv, mask = _setup()
+    scfg = SparseRLConfig()
+    out = sparse_rl_loss(lt, lo, lo, adv, mask, scfg)
+    g_loss, _ = grpo_loss(lt, lo, adv, mask, clip_eps=scfg.clip_eps)
+    np.testing.assert_allclose(out.loss, g_loss, rtol=1e-5)
+    assert float(out.metrics["rejection_rate"]) == 0.0
+    np.testing.assert_allclose(out.metrics["mean_xi"], 1.0, rtol=1e-6)
+
+
+def test_naive_config_ignores_corrections():
+    lt, lo, ls, adv, mask = _setup()
+    naive = SparseRLConfig().naive()
+    out_naive = sparse_rl_loss(lt, lo, ls, adv, mask, naive)
+    g_loss, _ = grpo_loss(lt, lo, adv, mask, clip_eps=naive.clip_eps)
+    np.testing.assert_allclose(out_naive.loss, g_loss, rtol=1e-5)
+
+
+def test_rejected_sequence_contributes_no_gradient():
+    lt, lo, ls, adv, mask = _setup()
+    # poison sequence 0 with an anomalous token
+    ls = ls.at[0, 1].set(lo[0, 1] + 20.0)  # xi = e^-20 << eps
+    scfg = SparseRLConfig()
+
+    def loss(lt_):
+        return sparse_rl_loss(lt_, lo, ls, adv, mask, scfg).loss
+
+    g = jax.grad(loss)(lt)
+    np.testing.assert_allclose(g[0], 0.0, atol=1e-9)
+    assert float(jnp.abs(g[1:]).sum()) > 0
+
+
+def test_reweighting_scales_token_gradient():
+    """grad wrt logp_theta at theta=theta_old is -xi * A / |o| per token."""
+    B, T = 2, 4
+    lo = jnp.full((B, T), -1.0)
+    ls = lo - jnp.log(jnp.array([[2.0, 1.0, 0.5, 1.0],
+                                 [1.0, 1.0, 1.0, 1.0]]))  # xi = 2,1,.5,1 / 1s
+    adv = jnp.array([1.0, -1.0])
+    mask = jnp.ones((B, T), bool)
+    scfg = SparseRLConfig(kl_coef=0.0)
+
+    def loss(lt_):
+        return sparse_rl_loss(lt_, lo, ls, adv, mask, scfg).loss
+
+    g = jax.grad(loss)(lo)
+    xi = jnp.exp(lo - ls)
+    expected = -(xi * adv[:, None]) / T / B
+    np.testing.assert_allclose(g, expected, rtol=1e-5)
+
+
+def test_clip_restricted_to_staleness_ratio():
+    """xi outside the clip: large xi passes through even when w is clipped."""
+    B, T = 1, 1
+    lo = jnp.zeros((B, T))
+    ls = jnp.full((B, T), -jnp.log(5.0))   # xi = 5
+    lt = jnp.full((B, T), jnp.log(2.0))    # w = 2 -> clipped to 1.2
+    adv = jnp.array([1.0])
+    mask = jnp.ones((B, T), bool)
+    scfg = SparseRLConfig(clip_eps=0.2)
+    out = sparse_rl_loss(lt, lo, ls, adv, mask, scfg)
+    np.testing.assert_allclose(out.loss, -5.0 * 1.2, rtol=1e-5)
+    assert float(out.metrics["clip_ratio"]) == 1.0
+
+
+def test_k3_nonnegative():
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.normal(size=(100,)))
+    b = jnp.asarray(rng.normal(size=(100,)))
+    assert float(k3_kl(a, b).min()) >= 0.0
+
+
+def test_sequence_level_variant_runs():
+    lt, lo, ls, adv, mask = _setup()
+    scfg = SparseRLConfig(sequence_level=True)
+    out = sparse_rl_loss(lt, lo, ls, adv, mask, scfg)
+    assert jnp.isfinite(out.loss)
+    g = jax.grad(lambda x: sparse_rl_loss(x, lo, ls, adv, mask, scfg).loss)(lt)
+    assert jnp.isfinite(g).all()
+
+
+def test_ref_kl_term():
+    lt, lo, ls, adv, mask = _setup()
+    scfg = SparseRLConfig(kl_coef=0.1)
+    out_with = sparse_rl_loss(lt, lo, ls, adv, mask, scfg, logp_ref=lo)
+    out_wo = sparse_rl_loss(lt, lo, ls, adv, mask, scfg)
+    assert float(out_with.loss) > float(out_wo.loss) - 1e-6
+    assert "ref_kl" in out_with.metrics
