@@ -21,6 +21,7 @@ def main() -> None:
 
     from benchmarks import paper_tables as P
     from benchmarks import perf as F
+    from benchmarks import serving as S
 
     benches = [
         ("table1", P.table1_main),
@@ -34,6 +35,7 @@ def main() -> None:
         ("rollout", F.rollout_throughput),
         ("kernels", F.kernel_bench),
         ("sharding", F.sharding_fallback_bench),
+        ("serving", S.serving_bench),
     ]
     if args.only:
         keep = set(args.only.split(","))

@@ -1,31 +1,35 @@
-"""Serve a model with batched requests under a sparse KV cache — the
+"""Serve a model with continuous batching under a sparse KV cache — the
 deployment half of the paper (§5.4 sparsity-aware training).
 
-Points at a checkpoint from train_sparse_rl.py if available; otherwise
-serves a fresh init.  Reports tokens/s and per-sequence cache memory vs the
-dense equivalent.
+Requests stream through the continuous-batching engine: a fixed decode batch
+whose rows are recycled as requests finish (each row owns a constant
+``B_budget + B_buffer`` slot block — the fixed footprint that makes slot
+recycling a static-shape op).  Points at a checkpoint from
+train_sparse_rl.py if available; otherwise serves a fresh init.  Reports
+tokens/s for continuous vs lockstep scheduling and per-sequence cache memory
+vs the dense equivalent.
 
-  PYTHONPATH=src python examples/serve_sparse.py --batch 16 --max-new 32
+  PYTHONPATH=src python examples/serve_sparse.py --num-requests 16 --max-new 32
 """
 import argparse
-import os
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import latest_step, restore
 from repro.configs import SparseRLConfig, get_config
-from repro.data import TOKENIZER, encode_prompts, make_problems
+from repro.data import TOKENIZER
+from repro.launch.serve import make_workload
 from repro.models import get_model
 from repro.rewards import binary_rewards, decode_responses
-from repro.rollout import generate
+from repro.rollout import ContinuousEngine, LockstepServer
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--num-requests", type=int, default=16)
+    ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=32)
     ap.add_argument("--budget", type=int, default=16)
     ap.add_argument("--ckpt", default="/tmp/srl_example_sparse_rl_0")
@@ -43,30 +47,47 @@ def main():
 
     scfg = SparseRLConfig(kv_budget=args.budget, kv_buffer=4, obs_window=2,
                           num_sinks=1, compression="rkv")
-    problems = make_problems(args.batch, 123, "easy")
-    ids, mask, answers = encode_prompts(problems, 24)
-    batch = {"tokens": jnp.asarray(ids), "valid_mask": jnp.asarray(mask)}
+    prompt_len = 24
+    # mixed response caps: the workload shape where slot recycling pays
+    reqs, problems, answers = make_workload(
+        args.num_requests, prompt_len, args.max_new, rate=0.0,
+        resp_dist="mixed", seed=123)
 
-    gen = jax.jit(lambda p, b, r: generate(p, cfg, m, b, scfg, r,
-                                           max_new_tokens=args.max_new,
-                                           eos_id=TOKENIZER.eos_id))
-    ro = gen(params, batch, jax.random.PRNGKey(1))          # compile
-    jax.block_until_ready(ro.resp_tokens)
-    t0 = time.time()
-    ro = gen(params, batch, jax.random.PRNGKey(2))
-    jax.block_until_ready(ro.resp_tokens)
-    dt = time.time() - t0
+    eng = ContinuousEngine(params, cfg, m, scfg, batch_size=args.batch,
+                           prompt_len=prompt_len, max_new_tokens=args.max_new,
+                           eos_id=TOKENIZER.eos_id, seed=0)
+    eng.run(reqs)                       # compile
+    eng.reset_clock()
+    t0 = time.perf_counter()
+    completions = eng.run(reqs)
+    dt = time.perf_counter() - t0
 
-    toks = int(np.asarray(ro.lengths).sum())
-    acc = binary_rewards(np.asarray(ro.resp_tokens), answers).mean()
-    dense_slots = ids.shape[1] + args.max_new
+    srv = LockstepServer(params, cfg, m, scfg, batch_size=args.batch,
+                         prompt_len=prompt_len, max_new_tokens=args.max_new,
+                         eos_id=TOKENIZER.eos_id, seed=0)
+    srv.run(reqs)                       # compile
+    t0 = time.perf_counter()
+    lock = srv.run(reqs)
+    dt_lock = time.perf_counter() - t0
+
+    toks = sum(len(c.tokens) for c in completions)
+    resp = np.zeros((len(completions), args.max_new), np.int32)
+    for i, c in enumerate(completions):
+        resp[i, :len(c.tokens)] = c.tokens
+    acc = binary_rewards(resp, answers).mean()
+    dense_slots = prompt_len + args.max_new
     per_tok = cfg.num_layers * cfg.num_kv_heads * cfg.head_dim * 2 * 4
-    print(f"batch={args.batch} tokens={toks} {toks/dt:.0f} tok/s  acc={acc:.2f}")
+    same = all(np.array_equal(a.tokens, b.tokens)
+               for a, b in zip(completions, lock))
+    print(f"{args.num_requests} requests, {toks} tokens  "
+          f"continuous {toks/dt:.0f} tok/s vs lockstep {toks/dt_lock:.0f} "
+          f"tok/s ({dt_lock/dt:.2f}x)  acc={acc:.2f}  "
+          f"token-identical={same}")
     print(f"cache/seq: sparse {scfg.cache_slots * per_tok / 1e3:.1f} KB "
           f"vs dense {dense_slots * per_tok / 1e3:.1f} KB "
           f"({1 - scfg.cache_slots / dense_slots:.0%} saved; grows with ctx)")
-    for i, r in enumerate(decode_responses(np.asarray(ro.resp_tokens))[:4]):
-        print(f"  [{i}] {problems[i].prompt!r} -> {r!r} (gold {problems[i].answer})")
+    for i, r in enumerate(decode_responses(resp[:4])):
+        print(f"  [{i}] {problems[i].prompt!r} -> {r!r} (gold {answers[i]})")
 
 
 if __name__ == "__main__":

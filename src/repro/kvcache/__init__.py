@@ -6,7 +6,9 @@ from repro.kvcache.cache import (
     dense_prefill,
     eviction_scores,
     init_cache,
+    reset_rows,
     update_scores,
+    write_rows,
 )
 
 __all__ = [
@@ -18,4 +20,6 @@ __all__ = [
     "eviction_scores",
     "compress_prefill",
     "dense_prefill",
+    "reset_rows",
+    "write_rows",
 ]

@@ -12,7 +12,13 @@ Cache layout (one layer; callers stack a leading layer dim for scan):
   k, v   : (B, Hkv, S, Dh)   post-RoPE keys / values
   pos    : (B, Hkv, S) int32 original position of the token in a slot, -1=empty
   score  : (B, Hkv, S) f32   policy accumulator (e.g. cumulative attention)
-  fill   : ()          int32 number of filled slots (lockstep across batch)
+  fill   : (B,)        int32 per-row count of append-order slots consumed
+
+``fill`` is PER ROW so rows of one batch may be at different logical depths —
+the property the continuous-batching scheduler (DESIGN.md §Continuous-batching)
+relies on to recycle a finished row's slot block while its neighbours keep
+decoding.  In the lockstep rollout every row advances together and the column
+is constant.
 
 Eviction is PER KV-HEAD (different heads retain different tokens), matching
 H2O/SnapKV/R-KV semantics.
@@ -35,7 +41,7 @@ class KVCache(NamedTuple):
     v: jnp.ndarray
     pos: jnp.ndarray
     score: jnp.ndarray
-    fill: jnp.ndarray  # scalar int32
+    fill: jnp.ndarray  # (B,) int32
 
     @property
     def slots(self) -> int:
@@ -52,7 +58,7 @@ def init_cache(batch: int, kv_heads: int, slots: int, head_dim: int,
         v=jnp.zeros((batch, kv_heads, slots, head_dim), dtype),
         pos=jnp.full((batch, kv_heads, slots), POS_EMPTY, jnp.int32),
         score=jnp.zeros((batch, kv_heads, slots), jnp.float32),
-        fill=jnp.zeros((), jnp.int32),
+        fill=jnp.zeros((batch,), jnp.int32),
     )
 
 
@@ -114,10 +120,11 @@ def append(cache: KVCache, k_new: jnp.ndarray, v_new: jnp.ndarray,
     new_pos: (B,) current absolute position.  Evicts per-head argmin of
     `eviction_scores` when full."""
     B, H, S, _ = cache.k.shape
-    full = cache.fill >= S
+    full = cache.fill >= S                                     # (B,)
     ev = eviction_scores(cache, scfg, cur_pos=new_pos[:, None, None], k_new=k_new)
     evict_idx = jnp.argmin(ev, axis=-1)                        # (B, H)
-    idx = jnp.where(full, evict_idx, jnp.minimum(cache.fill, S - 1))
+    idx = jnp.where(full[:, None], evict_idx,
+                    jnp.minimum(cache.fill, S - 1)[:, None])
     bi = jnp.arange(B)[:, None]
     hi = jnp.arange(H)[None, :]
     k = cache.k.at[bi, hi, idx].set(k_new.astype(cache.k.dtype))
@@ -163,7 +170,7 @@ def compress_prefill(k_full: jnp.ndarray, v_full: jnp.ndarray,
         pos = jnp.pad(posbh, ((0, 0), (0, 0), (0, pad)), constant_values=POS_EMPTY)
         score = jnp.pad(jnp.where(prompt_mask[:, None, :], obs_scores, 0.0),
                         ((0, 0), (0, 0), (0, pad)))
-        fill = jnp.asarray(T, jnp.int32)
+        fill = jnp.full((B,), T, jnp.int32)
         return KVCache(k.astype(k_full.dtype), v.astype(v_full.dtype), pos,
                        score.astype(jnp.float32), fill)
 
@@ -182,7 +189,7 @@ def compress_prefill(k_full: jnp.ndarray, v_full: jnp.ndarray,
     pos = jnp.take_along_axis(posb, top_idx, axis=2)
     pos = jnp.where(jnp.take_along_axis(maskb, top_idx, axis=2), pos, POS_EMPTY)
     score = jnp.take_along_axis(jnp.where(maskb, obs_scores, 0.0), top_idx, axis=2)
-    fill = jnp.asarray(slots, jnp.int32)
+    fill = jnp.full((B,), slots, jnp.int32)
     return KVCache(k, v, pos, score.astype(jnp.float32), fill)
 
 
@@ -194,4 +201,47 @@ def dense_prefill(k_full, v_full, prompt_mask, positions, max_slots: int) -> KVC
     cache = compress_prefill(k_full, v_full, prompt_mask, zero_scores,
                              max_slots, SparseRLConfig(compression="none"),
                              positions)
-    return cache._replace(fill=jnp.asarray(T, jnp.int32))
+    return cache._replace(fill=jnp.full((B,), T, jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# Per-row slot recycling (continuous batching)
+# ---------------------------------------------------------------------------
+def reset_rows(cache: KVCache, rows, *, batch_axis: int = 0) -> KVCache:
+    """Return `cache` with the given batch rows wiped to the empty state.
+
+    ``rows`` is an int scalar or (n,) int array of batch indices.  With
+    ``batch_axis=1`` the same call works on an L-stacked cache (leaves carry a
+    leading layer dim, as produced by prefill's scan over layers).  Nothing of
+    a retired request survives: pos goes back to POS_EMPTY (so attention masks
+    the slots), score to 0 (so no stale importance biases the next tenant's
+    eviction), fill to 0 (so appends restart at slot 0).
+    """
+    idx = (slice(None),) * batch_axis + (rows,)
+    return KVCache(
+        k=cache.k.at[idx].set(0),
+        v=cache.v.at[idx].set(0),
+        pos=cache.pos.at[idx].set(POS_EMPTY),
+        score=cache.score.at[idx].set(0.0),
+        fill=cache.fill.at[idx].set(0),
+    )
+
+
+def write_rows(dst: KVCache, src: KVCache, rows, *, batch_axis: int = 0
+               ) -> KVCache:
+    """Copy ``src``'s whole batch into ``dst`` at batch indices ``rows``.
+
+    ``rows`` is an (n,) int array and ``src`` must have batch size n, matching
+    ``dst`` on every other dim.  Cache-level counterpart of the admission
+    splice for callers holding bare KVCaches; the continuous engine itself
+    splices whole decode states shape-generically
+    (`rollout.continuous.insert_request_state`).
+    """
+    idx = (slice(None),) * batch_axis + (rows,)
+    return KVCache(
+        k=dst.k.at[idx].set(src.k.astype(dst.k.dtype)),
+        v=dst.v.at[idx].set(src.v.astype(dst.v.dtype)),
+        pos=dst.pos.at[idx].set(src.pos),
+        score=dst.score.at[idx].set(src.score),
+        fill=dst.fill.at[idx].set(src.fill),
+    )

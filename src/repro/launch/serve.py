@@ -1,12 +1,20 @@
-"""Batched serving driver: prefill + sparse-cache decode.
+"""Serving driver with request-arrival simulation over the continuous-
+batching engine (deployment half of the paper, §5.4: a Sparse-RL-trained
+model served WITH the KV compression it was trained under).
 
-Demonstrates the deployment-side claim (paper §5.4): a Sparse-RL-trained
-model served WITH the same KV compression it was trained under.  Loads a
-checkpoint if given, otherwise serves a fresh init (useful for throughput
-measurement).
+Simulates an open-loop arrival process (Poisson at ``--rate`` req/s, or a
+burst of everything at t=0), drives either the continuous-batching scheduler
+(`repro.rollout.continuous`) or the lockstep baseline over the same
+workload, and reports throughput, per-request latency percentiles
+(p50/p90/p99), queue wait, and goodput — tokens/s from requests that met
+``--slo-ms``.  Response-length mix comes from per-request new-token caps
+(``--resp-dist mixed`` draws a long-tailed spread; real EOS also finishes a
+request early).  Loads a checkpoint if given, otherwise serves a fresh init
+(useful for pure scheduler measurement).
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-14b --smoke \
-      --batch 16 --max-new 32 --compression rkv
+      --engine both --num-requests 24 --batch 4 --max-new 64 \
+      --compression rkv --rate 50 --slo-ms 2000
 """
 from __future__ import annotations
 
@@ -18,14 +26,80 @@ import jax.numpy as jnp
 import numpy as np
 
 
+def _pct(xs, q):
+    return float(np.percentile(np.asarray(xs), q)) if len(xs) else float("nan")
+
+
+def _report(name, completions, wall_s, slo_ms=None):
+    toks = sum(len(c.tokens) for c in completions)
+    lat = [c.latency for c in completions]
+    wait = [c.queue_wait for c in completions]
+    print(f"[{name}] {len(completions)} requests, {toks} tokens "
+          f"in {wall_s:.2f}s -> {toks / wall_s:.1f} tok/s, "
+          f"{len(completions) / wall_s:.1f} req/s")
+    print(f"[{name}] latency p50/p90/p99: {_pct(lat, 50)*1e3:.0f}/"
+          f"{_pct(lat, 90)*1e3:.0f}/{_pct(lat, 99)*1e3:.0f} ms | "
+          f"queue wait p50: {_pct(wait, 50)*1e3:.0f} ms")
+    if slo_ms is not None:
+        ok = [c for c in completions if c.latency * 1e3 <= slo_ms]
+        good = sum(len(c.tokens) for c in ok)
+        print(f"[{name}] goodput (<= {slo_ms:.0f} ms): {good / wall_s:.1f} "
+              f"tok/s ({len(ok)}/{len(completions)} requests in SLO)")
+    reasons = {}
+    for c in completions:
+        reasons[c.finish_reason] = reasons.get(c.finish_reason, 0) + 1
+    print(f"[{name}] finish reasons: {reasons}")
+
+
+def make_workload(n, prompt_len, max_new, rate, resp_dist, seed, level="easy"):
+    """n Requests over the synthetic math task: Poisson arrivals at ``rate``
+    req/s (rate 0 = burst at t=0) and fixed or long-tailed-mixed response
+    caps."""
+    from repro.data import encode_prompts, make_problems
+    from repro.rollout import Request
+
+    problems = make_problems(n, seed, level)
+    ids, mask, answers = encode_prompts(problems, prompt_len)
+    rng = np.random.default_rng(seed + 1)
+    if rate > 0:
+        arrivals = np.cumsum(rng.exponential(1.0 / rate, size=n))
+    else:
+        arrivals = np.zeros(n)
+    if resp_dist == "mixed":
+        lo = max(2, max_new // 16)
+        spread = [lo, max(lo, max_new // 4), max(lo, max_new // 2), max_new]
+        caps = rng.choice(spread, size=n, p=[0.4, 0.3, 0.2, 0.1])
+    else:
+        caps = np.full(n, max_new)
+    reqs = [Request(uid=i, prompt=ids[i][mask[i]],
+                    max_new_tokens=int(caps[i]),
+                    arrival_time=float(arrivals[i])) for i in range(n)]
+    return reqs, problems, answers
+
+
 def main(argv=None):
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", default="qwen2.5-14b")
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=16)
-    ap.add_argument("--max-new", type=int, default=32)
+    ap.add_argument("--engine", default="both",
+                    choices=["continuous", "lockstep", "both"])
+    ap.add_argument("--num-requests", type=int, default=24)
+    ap.add_argument("--batch", type=int, default=4,
+                    help="decode batch size (row slots)")
+    ap.add_argument("--prompt-len", type=int, default=24)
+    ap.add_argument("--max-new", type=int, default=64)
     ap.add_argument("--compression", default="rkv")
     ap.add_argument("--kv-budget", type=int, default=None)
+    ap.add_argument("--rate", type=float, default=0.0,
+                    help="Poisson arrival rate, req/s (0 = burst at t=0)")
+    ap.add_argument("--resp-dist", default="mixed",
+                    choices=["mixed", "fixed"],
+                    help="per-request response-cap distribution")
+    ap.add_argument("--decode-chunk", type=int, default=8)
+    ap.add_argument("--slo-ms", type=float, default=None)
+    ap.add_argument("--warmup", action="store_true",
+                    help="run the workload once first so reported numbers "
+                         "exclude XLA compilation")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
@@ -34,10 +108,10 @@ def main(argv=None):
 
     from repro.checkpoint import restore
     from repro.configs import SparseRLConfig, get_config
-    from repro.data import TOKENIZER, make_problems, encode_prompts
+    from repro.data import TOKENIZER
     from repro.models import get_model
     from repro.rewards import binary_rewards, decode_responses
-    from repro.rollout import generate
+    from repro.rollout import ContinuousEngine, LockstepServer, rollout_slots
 
     cfg = get_config(args.arch)
     if args.smoke:
@@ -52,35 +126,69 @@ def main(argv=None):
     m = get_model(cfg)
     params = m.init_params(cfg, jax.random.PRNGKey(args.seed))
     if args.ckpt_dir:
-        tree = {"params": params}
-        restored, step, _ = restore(args.ckpt_dir, tree)
+        restored, step, _ = restore(args.ckpt_dir, {"params": params})
         params = restored["params"]
         print(f"restored checkpoint step {step}")
 
-    problems = make_problems(args.batch, args.seed, "easy")
-    ids, mask, answers = encode_prompts(problems, 24)
-    batch = {"tokens": jnp.asarray(ids), "valid_mask": jnp.asarray(mask)}
+    reqs, problems, answers = make_workload(
+        args.num_requests, args.prompt_len, args.max_new, args.rate,
+        args.resp_dist, args.seed)
+    slots = rollout_slots(scfg, args.prompt_len, args.max_new)
+    print(f"arch={args.arch}{' (smoke)' if args.smoke else ''} "
+          f"compression={args.compression} cache slots/seq/layer: {slots} | "
+          f"{args.num_requests} requests, rate="
+          f"{args.rate if args.rate > 0 else 'burst'} req/s, "
+          f"resp-dist={args.resp_dist}")
 
-    gen = jax.jit(lambda p, b, r: generate(
-        p, cfg, m, b, scfg, r, max_new_tokens=args.max_new,
-        eos_id=TOKENIZER.eos_id))
-    # warmup (compile)
-    ro = gen(params, batch, jax.random.PRNGKey(1))
-    jax.block_until_ready(ro.resp_tokens)
-    t0 = time.time()
-    ro = gen(params, batch, jax.random.PRNGKey(2))
-    jax.block_until_ready(ro.resp_tokens)
-    dt = time.time() - t0
-    toks = int(np.asarray(jax.device_get(ro.lengths)).sum())
-    rewards = binary_rewards(np.asarray(jax.device_get(ro.resp_tokens)), answers)
+    results = {}
+    if args.engine in ("continuous", "both"):
+        eng = ContinuousEngine(
+            params, cfg, m, scfg, batch_size=args.batch,
+            prompt_len=args.prompt_len, max_new_tokens=args.max_new,
+            eos_id=TOKENIZER.eos_id, decode_chunk=args.decode_chunk,
+            seed=args.seed)
+        if args.warmup:
+            eng.run(reqs)
+            eng.reset_clock()
+        t0 = time.perf_counter()
+        completions = eng.run(reqs)
+        wall = time.perf_counter() - t0
+        _report("continuous", completions, wall, args.slo_ms)
+        st = eng.stats
+        used = st["decode_steps"] * args.batch - st["wasted_row_steps"]
+        print(f"[continuous] decode steps: {st['decode_steps']:.0f} "
+              f"({st['chunks']:.0f} chunks), row-step utilization: "
+              f"{used / max(st['decode_steps'] * args.batch, 1):.0%}")
+        results["continuous"] = completions
+    if args.engine in ("lockstep", "both"):
+        srv = LockstepServer(
+            params, cfg, m, scfg, batch_size=args.batch,
+            prompt_len=args.prompt_len, max_new_tokens=args.max_new,
+            eos_id=TOKENIZER.eos_id, seed=args.seed)
+        if args.warmup:
+            srv.run(reqs)
+        t0 = time.perf_counter()
+        completions = srv.run(reqs)
+        wall = time.perf_counter() - t0
+        _report("lockstep", completions, wall, args.slo_ms)
+        results["lockstep"] = completions
 
-    slots = scfg.cache_slots if scfg.compression != "none" else ids.shape[1] + args.max_new
-    print(f"served batch={args.batch} new_tokens={toks} in {dt:.2f}s "
-          f"({toks/dt:.1f} tok/s) | cache slots/seq/layer: {slots} "
-          f"| accuracy: {rewards.mean():.3f}")
-    for i, (p, r) in enumerate(zip(problems[:4], decode_responses(
-            np.asarray(jax.device_get(ro.resp_tokens))))):
-        print(f"  [{i}] {p.prompt!r} -> {r!r} (gold {p.answer})")
+    if len(results) == 2:
+        same = all(np.array_equal(a.tokens, b.tokens) for a, b in
+                   zip(results["continuous"], results["lockstep"]))
+        print(f"token-identical across engines: {same}")
+
+    completions = next(iter(results.values()))
+    resp = [c.tokens for c in completions]
+    longest = max(len(r) for r in resp)
+    mat = np.zeros((len(resp), longest), np.int32)
+    for i, r in enumerate(resp):
+        mat[i, :len(r)] = r
+    acc = binary_rewards(mat, answers).mean()
+    print(f"accuracy: {acc:.3f}")
+    for i, r in enumerate(decode_responses(mat[:4])):
+        print(f"  [{i}] {problems[i].prompt!r} -> {r!r} "
+              f"(gold {answers[i]})")
     return 0
 
 

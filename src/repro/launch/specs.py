@@ -142,14 +142,14 @@ def decode_state_specs(cfg: ModelConfig, shape: ShapeSpec,
         isinstance(e, (str, type(None))) for e in x)
 
     def cache_sds(n_layers):
-        # every leaf (incl. the scalar fill counter) carries the stacked
+        # every leaf (incl. the per-row fill counter) carries the stacked
         # layer dim — prefill builds caches as scan ys
         return KVCache(
             k=SDS((n_layers, B, cfg.num_kv_heads, slots, cfg.head_dim), cdt),
             v=SDS((n_layers, B, cfg.num_kv_heads, slots, cfg.head_dim), cdt),
             pos=SDS((n_layers, B, cfg.num_kv_heads, slots), jnp.int32),
             score=SDS((n_layers, B, cfg.num_kv_heads, slots), jnp.float32),
-            fill=SDS((n_layers,), jnp.int32),
+            fill=SDS((n_layers, B), jnp.int32),
         )
 
     def cache_axes(stacked: bool = True):
@@ -159,7 +159,7 @@ def decode_state_specs(cfg: ModelConfig, shape: ShapeSpec,
             v=lead + ("batch", "kv_heads", "cache_slots", None),
             pos=lead + ("batch", "kv_heads", "cache_slots"),
             score=lead + ("batch", "kv_heads", "cache_slots"),
-            fill=lead,
+            fill=lead + ("batch",),
         )
 
     tok = SDS((B,), jnp.int32)

@@ -1,11 +1,39 @@
+"""Rollout engines.
+
+Two drivers share one compiled decode core (`engine.decode_sample_step`):
+
+* :func:`generate` — lockstep fixed-length rollout (the RL training path).
+* :class:`ContinuousEngine` — continuous-batching scheduler (the serving
+  path): request queue, slot recycling, prefill-into-running-batch.  Its
+  lockstep oracle/baseline is :func:`serve_lockstep`.
+
+See DESIGN.md §Sampling and §Continuous-batching for the sampling-key and
+scheduling contracts.
+"""
+from repro.rollout.continuous import (
+    Completion,
+    ContinuousEngine,
+    LockstepServer,
+    Request,
+    serve_lockstep,
+)
 from repro.rollout.engine import (
     RolloutBatch,
+    decode_sample_step,
+    fold_row_keys,
     generate,
     mismatch_kl_estimate,
     rescore,
     rescore_parts,
+    rollout_slots,
     sample_token,
+    sample_token_per_row,
 )
 
-__all__ = ["RolloutBatch", "generate", "rescore", "rescore_parts",
-           "sample_token", "mismatch_kl_estimate"]
+__all__ = [
+    "RolloutBatch", "generate", "rescore", "rescore_parts",
+    "sample_token", "sample_token_per_row", "fold_row_keys",
+    "decode_sample_step", "rollout_slots", "mismatch_kl_estimate",
+    "ContinuousEngine", "LockstepServer", "Request", "Completion",
+    "serve_lockstep",
+]

@@ -1,0 +1,466 @@
+"""Continuous-batching generation engine (slot-recycling scheduler).
+
+The lockstep `generate` decodes every row of a batch for the full
+``max_new_tokens`` — rows that hit EOS early burn compute feeding padding.
+This module keeps a fixed-size decode batch *continuously* full instead: a
+request queue feeds ``batch_size`` row slots; when a row finishes, its result
+is harvested, its per-layer cache block is wiped (`kvcache.reset_rows`), and
+the next queued prompt is prefilled (a compiled (1, P) prefill) and spliced
+into the freed row — while the other rows keep decoding.
+
+Everything on device is static-shape, so XLA compiles exactly four programs
+once — bootstrap prefill, per-request prefill, admission splice, and a
+``decode_chunk``-step scan of the shared :func:`decode_sample_step` core —
+and admission/eviction never recompiles anything.  The sparse budget cache is
+what makes the splice cheap: every row owns the same fixed
+``B_budget + B_buffer`` slot block regardless of logical sequence length, so
+"replace this row's sequence" is a constant-size scatter (the memory-wall
+property of the source paper, exercised at serving time).
+
+Scheduling invariants are documented in DESIGN.md §Continuous-batching:
+FIFO admission of arrived requests into free rows, per-request sampling-key
+chains (``fold_in(fold_in(base, uid), t)``) so outputs are independent of row
+placement and co-tenants, and host-side harvest at ``decode_chunk``
+granularity.
+
+Supports every family whose ModelFns prefill/decode_step take token-only
+batches (dense / hybrid / ssm, and vlm without patch prefixes); the audio
+enc-dec needs per-request frames and is not wired up here.  MoE runs too,
+but with a caveat: finite expert capacity ranks tokens across the *whole
+batch*, so a row's outputs can depend on its co-tenants and the
+token-identical-to-lockstep guarantee only holds for dropless configs
+(e.g. the smoke configs; DESIGN.md §Continuous-batching).
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, SparseRLConfig
+from repro.kvcache import KVCache, reset_rows
+from repro.models import ModelFns
+from repro.rollout.engine import decode_sample_step, rollout_slots
+
+
+@dataclass(frozen=True)
+class Request:
+    """One generation request.
+
+    ``prompt`` holds raw (unpadded) token ids, at most the engine's
+    ``prompt_len``.  ``arrival_time`` is seconds on the engine's virtual
+    clock (0 = available immediately); ``max_new_tokens`` caps this request
+    below the engine-wide maximum when set.
+    """
+    uid: int
+    prompt: np.ndarray
+    max_new_tokens: Optional[int] = None
+    arrival_time: float = 0.0
+
+
+@dataclass
+class Completion:
+    """Harvested result + timing for one request (times on the virtual clock)."""
+    uid: int
+    prompt: np.ndarray
+    tokens: np.ndarray          # response ids, EOS included when emitted
+    logps: np.ndarray           # pi_sparse log-probs, aligned with tokens
+    finish_reason: str          # "eos" | "length"
+    arrival_time: float
+    admit_time: float
+    finish_time: float
+    row: int
+
+    @property
+    def queue_wait(self) -> float:
+        return self.admit_time - self.arrival_time
+
+    @property
+    def latency(self) -> float:
+        return self.finish_time - self.arrival_time
+
+
+@dataclass
+class _RowState:
+    """Host-side view of one decode row's current tenant."""
+    req: Request
+    admit_time: float
+    tok_chunks: List[np.ndarray] = field(default_factory=list)
+    logp_chunks: List[np.ndarray] = field(default_factory=list)
+    n: int = 0                  # tokens emitted so far
+
+
+def _batch_axis(dst_shape, src_shape) -> Optional[int]:
+    """Axis where a full-batch leaf and its 1-request counterpart differ.
+
+    A single-request decode state matches the running state on every dim
+    except batch, so the (unique) differing axis IS the batch axis.  None
+    means the shapes coincide (batch_size == 1: whole-leaf replacement).
+    """
+    diff = [i for i, (a, b) in enumerate(zip(dst_shape, src_shape)) if a != b]
+    if not diff:
+        return None
+    if len(diff) != 1 or src_shape[diff[0]] != 1:
+        raise ValueError(f"ambiguous batch axis: {dst_shape} vs {src_shape}")
+    return diff[0]
+
+
+def insert_request_state(state, sub_state, row):
+    """Splice a 1-request decode state into ``state`` at batch index ``row``.
+
+    Works for any family's state pytree (KVCache slot blocks, SSM recurrent
+    state, position counters): each leaf's batch axis is recovered by shape
+    comparison, so no per-family wiring is needed.
+    """
+    def one(d, s):
+        ax = _batch_axis(d.shape, s.shape)
+        if ax is None:
+            return s.astype(d.dtype)
+        idx = (slice(None),) * ax + (row,)
+        return d.at[idx].set(jnp.squeeze(s, axis=ax).astype(d.dtype))
+
+    return jax.tree.map(one, state, sub_state)
+
+
+class ContinuousEngine:
+    """Fixed-batch continuous-batching scheduler over the shared decode core.
+
+    Usage::
+
+        eng = ContinuousEngine(params, cfg, mfns, scfg, batch_size=8,
+                               prompt_len=24, max_new_tokens=64,
+                               eos_id=TOKENIZER.eos_id, seed=0)
+        completions = eng.run(requests)
+
+    ``decode_chunk`` trades harvest latency for dispatch overhead: the engine
+    syncs with the host (EOS detection, admission) every ``decode_chunk``
+    compiled steps; a finished row wastes at most ``decode_chunk - 1`` steps
+    before recycling.  ``decode_chunk=1`` harvests immediately (used by the
+    equivalence tests); serving workloads amortize dispatch with 8-16.
+    """
+
+    def __init__(self, params, cfg: ModelConfig, mfns: ModelFns,
+                 scfg: SparseRLConfig, *, batch_size: int, prompt_len: int,
+                 max_new_tokens: int, eos_id: int, pad_id: int = 0,
+                 decode_chunk: int = 8, seed: int = 0):
+        if decode_chunk < 1:
+            raise ValueError("decode_chunk must be >= 1")
+        self.params = params
+        self.cfg = cfg
+        self.mfns = mfns
+        self.scfg = scfg
+        self.batch_size = batch_size
+        self.prompt_len = prompt_len
+        self.max_new_tokens = max_new_tokens
+        self.eos_id = eos_id
+        self.pad_id = pad_id
+        self.decode_chunk = decode_chunk
+        self.slots = rollout_slots(scfg, prompt_len, max_new_tokens)
+        self._base_key = jax.random.PRNGKey(seed)
+
+        def prefill_admit(p, batch, state, logits, counts, active, row_keys,
+                          row, row_key):
+            """Prefill one request and splice it into ``row`` of the running
+            batch — a single dispatch per admission."""
+            sub_logits, sub_state = mfns.prefill(p, cfg, batch, scfg,
+                                                 self.slots)
+            state = insert_request_state(state, sub_state, row)
+            return (state,
+                    logits.at[row].set(sub_logits[0]),
+                    counts.at[row].set(0),
+                    active.at[row].set(True),
+                    row_keys.at[row].set(row_key))
+
+        # donations: every program rewrites the decode state in place rather
+        # than copying the slot arrays (the whole point of fixed budgets)
+        self._prefill_admit = jax.jit(prefill_admit,
+                                      donate_argnums=(2, 3, 4, 5, 6))
+
+        def retire(state, active, row):
+            caches = getattr(state, "caches", None)
+            if isinstance(caches, KVCache):
+                # stacked caches carry a leading layer dim -> batch axis 1
+                state = state._replace(
+                    caches=reset_rows(caches, row, batch_axis=1))
+            return state, active.at[row].set(False)
+
+        self._retire = jax.jit(retire, donate_argnums=(0,))
+
+        def park(state, active):
+            caches = getattr(state, "caches", None)
+            if isinstance(caches, KVCache):
+                state = state._replace(caches=reset_rows(
+                    caches, jnp.arange(batch_size), batch_axis=1))
+            return state, jnp.zeros_like(active)
+
+        self._park = jax.jit(park, donate_argnums=(0,))
+
+        def chunk(p, state, logits, counts, active, row_keys):
+            def step(carry, _):
+                state, logits, counts = carry
+                keys_t = jax.vmap(jax.random.fold_in)(row_keys, counts)
+                state, logits, tok, logp, _ = decode_sample_step(
+                    p, cfg, mfns, scfg, state, logits, keys_t, active,
+                    pad_id=pad_id, per_row_keys=True)
+                return (state, logits, counts + 1), (tok, logp)
+
+            (state, logits, counts), (toks, logps) = jax.lax.scan(
+                step, (state, logits, counts), None, length=decode_chunk)
+            return state, logits, counts, toks, logps
+
+        self._chunk = jax.jit(chunk, donate_argnums=(1, 2, 3))
+
+        # ---- device state ----------------------------------------------
+        self.state = self._bootstrap_state()
+        self.logits = jnp.zeros((batch_size, cfg.vocab_size), jnp.float32)
+        self.counts = jnp.zeros((batch_size,), jnp.int32)
+        self.active = jnp.zeros((batch_size,), bool)
+        self.row_keys = jnp.zeros((batch_size,) + self._base_key.shape,
+                                  self._base_key.dtype)
+        # ---- host state ------------------------------------------------
+        self.rows: List[Optional[_RowState]] = [None] * batch_size
+        self.now = 0.0
+        self.stats: Dict[str, float] = {
+            "decode_steps": 0, "chunks": 0, "admissions": 0,
+            "wasted_row_steps": 0}
+
+    # ------------------------------------------------------------------
+    def _bootstrap_state(self):
+        """Decode state for an all-empty batch: one batched prefill over pad
+        prompts with an all-False valid mask (every cache slot comes out
+        POS_EMPTY, positions start at 0)."""
+        batch = {
+            "tokens": jnp.full((self.batch_size, self.prompt_len),
+                               self.pad_id, jnp.int32),
+            "valid_mask": jnp.zeros((self.batch_size, self.prompt_len), bool),
+        }
+        _, state = jax.jit(
+            lambda p, b: self.mfns.prefill(p, self.cfg, b, self.scfg,
+                                           self.slots))(self.params, batch)
+        return state
+
+    def _encode(self, prompt: np.ndarray):
+        """Left-pad one raw prompt to (1, prompt_len) + validity mask."""
+        p = np.asarray(prompt, np.int32).ravel()
+        if len(p) > self.prompt_len:
+            raise ValueError(
+                f"prompt length {len(p)} exceeds engine prompt_len "
+                f"{self.prompt_len}")
+        ids = np.full((1, self.prompt_len), self.pad_id, np.int32)
+        ids[0, self.prompt_len - len(p):] = p
+        mask = np.zeros((1, self.prompt_len), bool)
+        mask[0, self.prompt_len - len(p):] = True
+        return {"tokens": jnp.asarray(ids), "valid_mask": jnp.asarray(mask)}
+
+    def _free_rows(self) -> List[int]:
+        return [i for i, r in enumerate(self.rows) if r is None]
+
+    def _num_active(self) -> int:
+        return sum(r is not None for r in self.rows)
+
+    def _cap(self, req: Request) -> int:
+        if req.max_new_tokens is None:
+            return self.max_new_tokens
+        return min(req.max_new_tokens, self.max_new_tokens)
+
+    def reset_clock(self) -> None:
+        """Zero the virtual clock and counters (e.g. between a compile-warmup
+        run and a measured run) — compiled programs and device state stay."""
+        self.now = 0.0
+        for k in self.stats:
+            self.stats[k] = 0
+
+    # ------------------------------------------------------------------
+    def _admit_one(self, req: Request, row: int) -> None:
+        """Prefill ``req`` into the freed ``row`` (single fused dispatch);
+        the splice overwrites every slot of the row's cache block, so nothing
+        of the previous tenant can leak even without an explicit reset."""
+        row_key = jax.random.fold_in(self._base_key, req.uid)
+        (self.state, self.logits, self.counts, self.active,
+         self.row_keys) = self._prefill_admit(
+             self.params, self._encode(req.prompt), self.state, self.logits,
+             self.counts, self.active, self.row_keys, row, row_key)
+        self.rows[row] = _RowState(req=req, admit_time=self.now)
+        self.stats["admissions"] += 1
+
+    def _finish_row(self, row: int, finish_reason: str,
+                    out: List[Completion]) -> None:
+        rs = self.rows[row]
+        toks = (np.concatenate(rs.tok_chunks) if rs.tok_chunks
+                else np.zeros((0,), np.int32))
+        logps = (np.concatenate(rs.logp_chunks) if rs.logp_chunks
+                 else np.zeros((0,), np.float32))
+        out.append(Completion(
+            uid=rs.req.uid, prompt=rs.req.prompt,
+            tokens=toks.astype(np.int32), logps=logps.astype(np.float32),
+            finish_reason=finish_reason, arrival_time=rs.req.arrival_time,
+            admit_time=rs.admit_time, finish_time=self.now, row=row))
+        self.rows[row] = None
+
+    def run(self, requests: Sequence[Request]) -> List[Completion]:
+        """Serve ``requests`` to completion; returns Completions sorted by uid.
+
+        Requests become admissible once the virtual clock passes their
+        ``arrival_time``; the clock advances by the measured wall time of
+        each admission/decode chunk and jumps over idle gaps, so latency
+        statistics are honest service measurements without real-time sleeps.
+        """
+        pending = deque(sorted(requests,
+                               key=lambda r: (r.arrival_time, r.uid)))
+        out: List[Completion] = []
+        while pending or self._num_active():
+            t0 = time.perf_counter()
+            # FIFO admission of arrived requests into free rows
+            for row in self._free_rows():
+                if not (pending and pending[0].arrival_time <= self.now):
+                    break
+                self._admit_one(pending.popleft(), row)
+            if not self._num_active():
+                # idle: jump the virtual clock to the next arrival
+                self.now = max(self.now, pending[0].arrival_time)
+                continue
+            (self.state, self.logits, self.counts, toks, logps) = self._chunk(
+                self.params, self.state, self.logits, self.counts,
+                self.active, self.row_keys)
+            toks_h, logps_h = jax.device_get((toks, logps))  # (chunk, B)
+            self.now += time.perf_counter() - t0
+            t_harvest = time.perf_counter()
+            self.stats["chunks"] += 1
+            self.stats["decode_steps"] += self.decode_chunk
+            for row in range(self.batch_size):
+                rs = self.rows[row]
+                if rs is None:
+                    self.stats["wasted_row_steps"] += self.decode_chunk
+                    continue
+                remaining = self._cap(rs.req) - rs.n
+                window = toks_h[:remaining, row]
+                eos_hits = np.where(window == self.eos_id)[0]
+                if eos_hits.size:
+                    take, finish = int(eos_hits[0]) + 1, "eos"
+                elif remaining <= self.decode_chunk:
+                    take, finish = remaining, "length"
+                else:
+                    take, finish = self.decode_chunk, None
+                rs.tok_chunks.append(toks_h[:take, row])
+                rs.logp_chunks.append(logps_h[:take, row])
+                rs.n += take
+                if finish is None:
+                    continue
+                self.stats["wasted_row_steps"] += self.decode_chunk - take
+                self._finish_row(row, finish, out)
+                # slot recycling: re-admit straight into the freed row when
+                # the queue has an arrived request (the admission splice
+                # overwrites the whole block); otherwise wipe it
+                if pending and pending[0].arrival_time <= self.now:
+                    self._admit_one(pending.popleft(), row)
+                else:
+                    self.state, self.active = self._retire(
+                        self.state, self.active, row)
+            self.now += time.perf_counter() - t_harvest
+        # park: rows keep decoding pad tokens while inactive (static shapes),
+        # appending garbage KVs into their freed blocks; wipe them so the
+        # drained engine ends in the all-empty state
+        self.state, self.active = self._park(self.state, self.active)
+        return sorted(out, key=lambda c: c.uid)
+
+
+# ---------------------------------------------------------------------------
+# Lockstep baseline driver (shared by benchmarks, serve CLI and tests)
+# ---------------------------------------------------------------------------
+class LockstepServer:
+    """Serve a workload with the lockstep `generate`, one static batch at a
+    time: every batch decodes the full ``max_new_tokens`` regardless of
+    per-request caps or early EOS (the straggler cost continuous batching
+    removes).  Uses the identical per-request key chains as ContinuousEngine
+    — ``fold_in(fold_in(base, uid), t)`` — so for the same seed the two
+    paths are token-identical per request (the equivalence test's oracle).
+
+    The `generate` program compiles once in ``__init__`` and is reused across
+    ``run`` calls (like ContinuousEngine's programs), so warm-run timing is a
+    fair scheduling comparison.
+    """
+
+    def __init__(self, params, cfg: ModelConfig, mfns: ModelFns,
+                 scfg: SparseRLConfig, *, batch_size: int, prompt_len: int,
+                 max_new_tokens: int, eos_id: int, pad_id: int = 0,
+                 seed: int = 0):
+        from repro.rollout.engine import generate
+
+        self.params = params
+        self.batch_size = batch_size
+        self.prompt_len = prompt_len
+        self.max_new_tokens = max_new_tokens
+        self.eos_id = eos_id
+        self.pad_id = pad_id
+        self._base_key = jax.random.PRNGKey(seed)
+        self._gen = jax.jit(lambda p, b, keys: generate(
+            p, cfg, mfns, b, scfg, jax.random.PRNGKey(0),
+            max_new_tokens=max_new_tokens, eos_id=eos_id, pad_id=pad_id,
+            per_row_keys=keys))
+
+    def run(self, requests: Sequence[Request]) -> List[Completion]:
+        pending = deque(sorted(requests,
+                               key=lambda r: (r.arrival_time, r.uid)))
+        out: List[Completion] = []
+        now = 0.0
+        B, P = self.batch_size, self.prompt_len
+        while pending:
+            if pending[0].arrival_time > now:
+                now = pending[0].arrival_time
+            group = []
+            while pending and len(group) < B \
+                    and pending[0].arrival_time <= now:
+                group.append(pending.popleft())
+            # pad the batch to a constant shape (single compiled program)
+            ids = np.full((B, P), self.pad_id, np.int32)
+            mask = np.zeros((B, P), bool)
+            keys = []
+            for i, req in enumerate(group):
+                p = np.asarray(req.prompt, np.int32).ravel()
+                ids[i, P - len(p):] = p
+                mask[i, P - len(p):] = True
+                keys.append(jax.random.fold_in(self._base_key, req.uid))
+            for _ in range(B - len(group)):
+                keys.append(self._base_key)     # dummy rows, results dropped
+            batch = {"tokens": jnp.asarray(ids),
+                     "valid_mask": jnp.asarray(mask)}
+            t0 = time.perf_counter()
+            ro = self._gen(self.params, batch, jnp.stack(keys))
+            jax.block_until_ready(ro.resp_tokens)
+            admit = now
+            now += time.perf_counter() - t0
+            toks_h = np.asarray(ro.resp_tokens)
+            logps_h = np.asarray(ro.logp_sparse)
+            for i, req in enumerate(group):
+                cap = (self.max_new_tokens if req.max_new_tokens is None
+                       else min(req.max_new_tokens, self.max_new_tokens))
+                row = toks_h[i, :cap]
+                eos_hits = np.where(row == self.eos_id)[0]
+                if len(eos_hits):
+                    end, reason = eos_hits[0] + 1, "eos"
+                else:
+                    end, reason = cap, "length"
+                out.append(Completion(
+                    uid=req.uid, prompt=req.prompt,
+                    tokens=row[:end].astype(np.int32),
+                    logps=logps_h[i, :end].astype(np.float32),
+                    finish_reason=reason, arrival_time=req.arrival_time,
+                    admit_time=admit, finish_time=now, row=i))
+        return sorted(out, key=lambda c: c.uid)
+
+
+def serve_lockstep(params, cfg: ModelConfig, mfns: ModelFns,
+                   scfg: SparseRLConfig, requests: Sequence[Request], *,
+                   batch_size: int, prompt_len: int, max_new_tokens: int,
+                   eos_id: int, pad_id: int = 0, seed: int = 0
+                   ) -> List[Completion]:
+    """One-shot convenience wrapper around :class:`LockstepServer`."""
+    return LockstepServer(
+        params, cfg, mfns, scfg, batch_size=batch_size, prompt_len=prompt_len,
+        max_new_tokens=max_new_tokens, eos_id=eos_id, pad_id=pad_id,
+        seed=seed).run(requests)

@@ -5,11 +5,19 @@ fixed shapes, no host sync, no per-sequence early exit (finished rows feed
 padding; this is the TPU-native straggler story: a batch is never blocked on
 its longest row beyond the static bound).
 
+The single-step core (:func:`decode_sample_step`) is shared with the
+continuous-batching scheduler (`repro.rollout.continuous`): the training path
+scans it lockstep; the serving path drives it from a host loop with slot
+recycling.  Both sampling-key disciplines live here too — the lockstep
+default (one key per step, split across the batch) and the per-row chain
+(``fold_in(row_key, t)``) that makes a request's tokens independent of its
+batch placement (DESIGN.md §Sampling, §Continuous-batching).
+
 Per sampled token we record the *model-distribution* log-prob under the
 sparse sampler (pi_sparse, Eq. 2).  At the paper's sampling settings
 (temperature=1, top_p=1) the sampling distribution and the policy coincide,
 making the importance corrections exact; for other settings the deviation is
-documented in DESIGN.md.
+documented in DESIGN.md §Sampling.
 """
 from __future__ import annotations
 
@@ -61,41 +69,108 @@ def sample_token(rng, logits, temperature: float, top_p: float
     return tok, logp
 
 
+def sample_token_per_row(keys, logits, temperature: float, top_p: float
+                         ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-row variant of :func:`sample_token`: row b draws with its own key
+    ``keys[b]``.  The draw depends only on (key, that row's logits) — not on
+    batch size or row index — which is what lets the continuous scheduler
+    place a request in any free row and still reproduce the lockstep sample
+    chain (DESIGN.md §Continuous-batching).
+    """
+    def one(key, lg):
+        tok, logp = sample_token(key, lg[None], temperature, top_p)
+        return tok[0], logp[0]
+
+    return jax.vmap(one)(keys, logits)
+
+
+def fold_row_keys(row_keys: jnp.ndarray, t) -> jnp.ndarray:
+    """Step keys for token index ``t`` of every row's chain: fold_in(k_b, t)."""
+    return jax.vmap(lambda k: jax.random.fold_in(k, t))(row_keys)
+
+
+def decode_sample_step(params, cfg: ModelConfig, mfns: ModelFns,
+                       scfg: SparseRLConfig, state, logits, step_keys,
+                       active, *, pad_id: int = 0,
+                       per_row_keys: bool = False):
+    """One decode step, shared by the lockstep `generate` scan and the
+    continuous scheduler's host loop.
+
+    Samples the next token of every row from ``logits``, feeds ``pad_id`` on
+    inactive rows (finished / empty slots), and advances the model one step.
+    ``step_keys`` is a single PRNG key (default) or, with ``per_row_keys``,
+    (B,) already-folded per-row keys.
+
+    Returns (state, next_logits, tok, logp, ent).  The core is EOS-agnostic:
+    detection stays with the caller (carried `done` flags in lockstep;
+    host-side harvest in the scheduler).
+    """
+    if per_row_keys:
+        tok, logp = sample_token_per_row(step_keys, logits,
+                                         scfg.temperature, scfg.top_p)
+    else:
+        tok, logp = sample_token(step_keys, logits,
+                                 scfg.temperature, scfg.top_p)
+    tok = jnp.where(active, tok, pad_id)
+    logp = jnp.where(active, logp, 0.0)
+    ent = jnp.where(active, entropy_from_logits(logits), 0.0)
+    logits_next, state = mfns.decode_step(params, cfg, state, tok, scfg)
+    return state, logits_next, tok, logp, ent
+
+
+def rollout_slots(scfg: SparseRLConfig, prompt_len: int, max_new_tokens: int,
+                  prefix_len: int = 0) -> int:
+    """Cache slots per (layer, row): the fixed sparse budget, or — for the
+    dense baseline — enough for prompt + any multimodal prefix + all new
+    tokens (+ headroom so the degenerate recency eviction never triggers)."""
+    if scfg.compression != "none":
+        return scfg.cache_slots
+    return prompt_len + prefix_len + max_new_tokens + 8
+
+
 def generate(params, cfg: ModelConfig, mfns: ModelFns, batch: dict,
              scfg: SparseRLConfig, rng, *, max_new_tokens: int,
-             eos_id: int, pad_id: int = 0) -> RolloutBatch:
+             eos_id: int, pad_id: int = 0,
+             per_row_keys: Optional[jnp.ndarray] = None) -> RolloutBatch:
     """Sparse (or dense, per scfg.compression) rollout for a prompt batch.
 
     batch: the model batch dict; batch["tokens"] are left-padded prompts and
     batch["valid_mask"] marks real prompt tokens.
+
+    ``per_row_keys`` (optional, (B,) PRNG keys) switches sampling to the
+    per-row key chains used by the continuous scheduler — token t of row b
+    draws with ``fold_in(per_row_keys[b], t)`` — so the same request seeds
+    yield token-identical outputs here and there.  Default (None) keeps the
+    historical lockstep discipline: one key per step shared across the batch.
     """
     prompt = batch["tokens"]
     B, P = prompt.shape
     pmask = batch.get("valid_mask")
     if pmask is None:
         pmask = jnp.ones((B, P), bool)
-    # dense cache must hold prompt + any multimodal prefix + all new tokens
     prefix_len = (batch["prefix_embeds"].shape[1]
                   if batch.get("prefix_embeds") is not None else 0)
-    slots = (scfg.cache_slots if scfg.compression != "none"
-             else P + prefix_len + max_new_tokens + 8)
+    slots = rollout_slots(scfg, P, max_new_tokens, prefix_len)
     last_logits, state = mfns.prefill(params, cfg, batch, scfg, slots)
 
-    def step(carry, rng_t):
+    def step(carry, x_t):
         state, logits, done, ent_sum = carry
-        tok, logp = sample_token(rng_t, logits, scfg.temperature, scfg.top_p)
-        tok = jnp.where(done, pad_id, tok)
-        logp = jnp.where(done, 0.0, logp)
-        ent = jnp.where(done, 0.0, entropy_from_logits(logits))
+        if per_row_keys is None:
+            keys_t = x_t
+        else:
+            keys_t = fold_row_keys(per_row_keys, x_t)
+        state, logits_next, tok, logp, ent = decode_sample_step(
+            params, cfg, mfns, scfg, state, logits, keys_t, ~done,
+            pad_id=pad_id, per_row_keys=per_row_keys is not None)
         mask_t = ~done
         new_done = done | (tok == eos_id)
-        logits_next, state = mfns.decode_step(params, cfg, state, tok, scfg)
         return (state, logits_next, new_done, ent_sum + ent), (tok, logp, mask_t)
 
-    rngs = jax.random.split(rng, max_new_tokens)
+    xs = (jax.random.split(rng, max_new_tokens) if per_row_keys is None
+          else jnp.arange(max_new_tokens))
     done0 = jnp.zeros((B,), bool)
     (state, _, done, ent_sum), (toks, logps, masks) = jax.lax.scan(
-        step, (state, last_logits, done0, jnp.zeros((B,), jnp.float32)), rngs)
+        step, (state, last_logits, done0, jnp.zeros((B,), jnp.float32)), xs)
     resp_tokens = jnp.moveaxis(toks, 0, 1)                       # (B, T)
     logp_sparse = jnp.moveaxis(logps, 0, 1)
     resp_mask = jnp.moveaxis(masks, 0, 1)

@@ -1,0 +1,177 @@
+"""Continuous-batching scheduler: lockstep equivalence + slot recycling."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import SparseRLConfig, get_config
+from repro.data import TOKENIZER, encode_prompts, make_problems
+from repro.kvcache import KVCache, init_cache, reset_rows, write_rows
+from repro.kvcache.cache import POS_EMPTY
+from repro.models import get_model
+from repro.rollout import ContinuousEngine, Request, serve_lockstep
+
+CFG = get_config("qwen2.5-14b").smoke()
+M = get_model(CFG)
+PARAMS = M.init_params(CFG, jax.random.PRNGKey(0))
+PROMPT_LEN = 16
+
+
+def _requests(n, caps, seed=1):
+    problems = make_problems(n, seed, "easy")
+    ids, mask, _ = encode_prompts(problems, PROMPT_LEN)
+    return [Request(uid=i, prompt=ids[i][mask[i]], max_new_tokens=caps[i])
+            for i in range(n)]
+
+
+def _run_both(scfg, *, n=5, caps=(3, 7, 5, 8, 2), batch=2, max_new=8,
+              chunk=1, seed=42):
+    reqs = _requests(n, list(caps))
+    eng = ContinuousEngine(PARAMS, CFG, M, scfg, batch_size=batch,
+                           prompt_len=PROMPT_LEN, max_new_tokens=max_new,
+                           eos_id=TOKENIZER.eos_id, decode_chunk=chunk,
+                           seed=seed)
+    cont = eng.run(reqs)
+    lock = serve_lockstep(PARAMS, CFG, M, scfg, reqs, batch_size=batch,
+                          prompt_len=PROMPT_LEN, max_new_tokens=max_new,
+                          eos_id=TOKENIZER.eos_id, seed=seed)
+    return eng, cont, lock
+
+
+@pytest.mark.parametrize("compression", ["rkv", "none"])
+def test_continuous_matches_lockstep_token_identical(compression):
+    """N > batch-size requests through the continuous engine must produce
+    token-identical outputs (and log-probs) to the same prompts through
+    lockstep `generate`, one batch at a time, under the same seeds — i.e.
+    admission order, row placement and co-tenants are invisible to a
+    request."""
+    scfg = SparseRLConfig(kv_budget=16, kv_buffer=4, obs_window=2,
+                          num_sinks=1, compression=compression)
+    _, cont, lock = _run_both(scfg)
+    assert len(cont) == len(lock) == 5
+    for c, l in zip(cont, lock):
+        assert c.uid == l.uid
+        np.testing.assert_array_equal(c.tokens, l.tokens)
+        np.testing.assert_allclose(c.logps, l.logps, atol=1e-6)
+        assert c.finish_reason == l.finish_reason
+
+
+def test_continuous_chunked_harvest_same_tokens():
+    """decode_chunk only changes harvest granularity, never the tokens."""
+    scfg = SparseRLConfig(kv_budget=16, kv_buffer=4, obs_window=2,
+                          num_sinks=1, compression="rkv")
+    _, cont1, _ = _run_both(scfg, chunk=1)
+    _, cont4, _ = _run_both(scfg, chunk=4)
+    for a, b in zip(cont1, cont4):
+        np.testing.assert_array_equal(a.tokens, b.tokens)
+
+
+def test_continuous_hybrid_family():
+    """Slot recycling also splices SSM recurrent state + the shared-block
+    KV caches (zamba2-style hybrid)."""
+    cfg = get_config("zamba2-1.2b").smoke()
+    m = get_model(cfg)
+    params = m.init_params(cfg, jax.random.PRNGKey(0))
+    scfg = SparseRLConfig(kv_budget=16, kv_buffer=4, obs_window=2,
+                          num_sinks=1, compression="rkv")
+    reqs = _requests(4, [3, 6, 4, 5])
+    eng = ContinuousEngine(params, cfg, m, scfg, batch_size=2,
+                           prompt_len=PROMPT_LEN, max_new_tokens=6,
+                           eos_id=TOKENIZER.eos_id, decode_chunk=2, seed=3)
+    cont = eng.run(reqs)
+    lock = serve_lockstep(params, cfg, m, scfg, reqs, batch_size=2,
+                          prompt_len=PROMPT_LEN, max_new_tokens=6,
+                          eos_id=TOKENIZER.eos_id, seed=3)
+    for c, l in zip(cont, lock):
+        np.testing.assert_array_equal(c.tokens, l.tokens)
+
+
+def test_slot_recycling_leaves_no_stale_entries():
+    """After the queue drains, every retired row's cache block must be fully
+    wiped: pos back to POS_EMPTY, score zero, fill zero — stale entries would
+    bias the next tenant's eviction policy."""
+    scfg = SparseRLConfig(kv_budget=8, kv_buffer=2, obs_window=2,
+                          num_sinks=1, compression="rkv")
+    eng, cont, _ = _run_both(scfg, caps=(3, 7, 5, 8, 2))
+    assert eng.stats["admissions"] == 5          # rows were recycled (N > B)
+    caches = eng.state.caches                    # (L, B, H, S[, D]) leaves
+    assert (np.asarray(caches.pos) == POS_EMPTY).all()
+    assert (np.asarray(caches.score) == 0.0).all()
+    assert (np.asarray(caches.fill) == 0).all()
+    assert not bool(np.asarray(eng.active).any())
+
+
+def test_mid_run_recycled_row_is_fully_overwritten():
+    """While the engine is running, a row's valid cache entries must belong
+    exclusively to its *current* tenant: positions never exceed what that
+    request can have produced (prompt + emitted tokens)."""
+    scfg = SparseRLConfig(kv_budget=8, kv_buffer=2, obs_window=2,
+                          num_sinks=1, compression="rkv")
+    reqs = _requests(6, [2, 2, 9, 9, 3, 3])
+    eng = ContinuousEngine(PARAMS, CFG, M, scfg, batch_size=2,
+                           prompt_len=PROMPT_LEN, max_new_tokens=12,
+                           eos_id=TOKENIZER.eos_id, decode_chunk=1, seed=5)
+
+    orig_admit = eng._admit_one
+    seen = []
+
+    def checking_admit(req, row):
+        orig_admit(req, row)
+        # straight after admission the row's cache holds ONLY prompt tokens:
+        # every valid pos < prompt_len, nothing from the previous tenant
+        pos = np.asarray(eng.state.caches.pos)[:, row]       # (L, H, S)
+        valid = pos[pos >= 0]
+        assert valid.size, "admitted row has an empty cache"
+        assert valid.max() < PROMPT_LEN
+        seen.append(req.uid)
+
+    eng._admit_one = checking_admit
+    eng.run(reqs)
+    assert seen == [0, 1, 2, 3, 4, 5]            # FIFO admission order
+
+
+# ---------------------------------------------------------------------------
+# kvcache row helpers
+# ---------------------------------------------------------------------------
+def test_reset_rows_wipes_only_target_rows():
+    cache = KVCache(
+        k=jnp.ones((3, 2, 4, 5)), v=jnp.ones((3, 2, 4, 5)),
+        pos=jnp.arange(3 * 2 * 4).reshape(3, 2, 4).astype(jnp.int32),
+        score=jnp.ones((3, 2, 4)), fill=jnp.full((3,), 4, jnp.int32))
+    out = reset_rows(cache, jnp.asarray([1]))
+    assert (np.asarray(out.pos[1]) == POS_EMPTY).all()
+    assert (np.asarray(out.score[1]) == 0).all()
+    assert int(out.fill[1]) == 0
+    for row in (0, 2):
+        np.testing.assert_array_equal(np.asarray(out.pos[row]),
+                                      np.asarray(cache.pos[row]))
+        assert int(out.fill[row]) == 4
+
+
+def test_write_rows_splices_and_preserves_others():
+    dst = init_cache(3, 2, 4, 5, jnp.float32)
+    src = KVCache(
+        k=jnp.full((1, 2, 4, 5), 3.0), v=jnp.full((1, 2, 4, 5), 4.0),
+        pos=jnp.full((1, 2, 4), 7, jnp.int32),
+        score=jnp.full((1, 2, 4), 0.5), fill=jnp.full((1,), 2, jnp.int32))
+    out = write_rows(dst, src, jnp.asarray([2]))
+    assert (np.asarray(out.k[2]) == 3.0).all()
+    assert (np.asarray(out.pos[2]) == 7).all()
+    assert int(out.fill[2]) == 2
+    assert (np.asarray(out.pos[:2]) == POS_EMPTY).all()   # untouched rows
+    assert (np.asarray(out.fill[:2]) == 0).all()
+
+
+def test_stacked_reset_rows_batch_axis():
+    """reset_rows with batch_axis=1 operates on L-stacked caches (the layout
+    the engine's retire path sees)."""
+    L, B, H, S, D = 2, 3, 2, 4, 5
+    cache = KVCache(
+        k=jnp.ones((L, B, H, S, D)), v=jnp.ones((L, B, H, S, D)),
+        pos=jnp.zeros((L, B, H, S), jnp.int32),
+        score=jnp.ones((L, B, H, S)), fill=jnp.full((L, B), 4, jnp.int32))
+    out = reset_rows(cache, 1, batch_axis=1)
+    assert (np.asarray(out.pos[:, 1]) == POS_EMPTY).all()
+    assert (np.asarray(out.fill[:, 1]) == 0).all()
+    assert (np.asarray(out.pos[:, 0]) == 0).all()
+    assert (np.asarray(out.fill[:, [0, 2]]) == 4).all()

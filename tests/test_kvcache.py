@@ -1,17 +1,14 @@
-"""KV-cache invariants: unit + hypothesis property tests."""
-import jax
+"""KV-cache invariants (unit tests; the hypothesis-fuzzed properties live in
+test_properties.py so these always run even without hypothesis installed)."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.configs import SparseRLConfig
 from repro.kvcache import (
     append,
     attend,
     compress_prefill,
-    dense_prefill,
-    eviction_scores,
     init_cache,
     update_scores,
 )
@@ -42,7 +39,7 @@ def test_slots_never_exceeded(policy):
     scfg = _scfg(compression=policy)
     cache = _fill_cache(scfg, steps=30)
     assert cache.k.shape[-2] == scfg.cache_slots
-    assert int(cache.fill) == scfg.cache_slots
+    assert (np.asarray(cache.fill) == scfg.cache_slots).all()
     # all slots hold real tokens once full
     assert bool(cache.valid_mask().all())
 
@@ -131,59 +128,8 @@ def test_compress_prefill_short_prompt_verbatim():
     obs = jnp.zeros((B, H, T))
     cache = compress_prefill(k, v, mask, obs, 8, scfg, positions)
     assert cache.k.shape[-2] == 8
-    assert int(cache.fill) == 4
+    assert (np.asarray(cache.fill) == 4).all()
     # padding marked empty
     assert np.asarray(cache.pos)[1, 0, 0] == -1
 
 
-@settings(max_examples=30, deadline=None)
-@given(
-    slots=st.integers(4, 16),
-    steps=st.integers(1, 40),
-    policy=st.sampled_from(["rkv", "h2o", "streaming", "snapkv"]),
-)
-def test_property_cache_bounded_and_valid(slots, steps, policy):
-    """Memory bound + validity: the paper's core claim, fuzzed."""
-    scfg = SparseRLConfig(kv_budget=slots, kv_buffer=0, obs_window=2,
-                          num_sinks=1, compression=policy)
-    B, H, D = 1, 2, 4
-    cache = init_cache(B, H, slots, D, jnp.float32)
-    rng = np.random.default_rng(slots * 101 + steps)
-    for t in range(steps):
-        k = jnp.asarray(rng.normal(size=(B, H, D)), jnp.float32)
-        cache = append(cache, k, k, jnp.full((B,), t, jnp.int32), scfg)
-    pos = np.asarray(cache.pos)
-    assert pos.shape[-1] == slots                      # static bound
-    assert int(cache.fill) == min(steps, slots)
-    for b in range(pos.shape[0]):
-        for h in range(pos.shape[1]):                  # caches are per-head
-            valid = pos[b, h][pos[b, h] >= 0]
-            assert len(set(valid.tolist())) == len(valid)  # no dup tokens
-            assert valid.max(initial=-1) <= steps - 1
-            # newest token always present in every head's cache
-            if steps > 0:
-                assert (pos[b, h] == steps - 1).any()
-
-
-@settings(max_examples=20, deadline=None)
-@given(data=st.data())
-def test_property_attend_is_convex_combination(data):
-    """attention output lies in the convex hull of values; pooled probs sum
-    to group size over valid slots."""
-    B, H, S, D = 1, 1, data.draw(st.integers(2, 12)), 4
-    rng = np.random.default_rng(data.draw(st.integers(0, 10**6)))
-    k = jnp.asarray(rng.normal(size=(B, H, S, D)), jnp.float32)
-    v = jnp.asarray(rng.uniform(-1, 1, (B, H, S, D)), jnp.float32)
-    n_valid = data.draw(st.integers(1, S))
-    pos = jnp.asarray([[np.concatenate([np.arange(n_valid),
-                                        -np.ones(S - n_valid)])]], jnp.int32)
-    from repro.kvcache.cache import KVCache
-    cache = KVCache(k=k, v=v, pos=pos,
-                    score=jnp.zeros((B, H, S)), fill=jnp.asarray(S))
-    q = jnp.asarray(rng.normal(size=(B, 2, D)), jnp.float32)
-    out, probs = attend(q, cache)
-    assert float(out.max()) <= float(v.max()) + 1e-5
-    assert float(out.min()) >= float(v.min()) - 1e-5
-    np.testing.assert_allclose(float(probs.sum()), 2.0, rtol=1e-5)
-    # no attention mass on empty slots
-    np.testing.assert_allclose(np.asarray(probs)[0, 0, n_valid:], 0.0, atol=1e-7)

@@ -2,7 +2,10 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.configs import SparseRLConfig
 from repro.core import (
@@ -13,6 +16,7 @@ from repro.core import (
     sparsity_consistency_ratio,
 )
 from repro.data.tokenizer import TOKENIZER
+from repro.kvcache import KVCache, append, attend, init_cache
 
 
 @settings(max_examples=50, deadline=None)
@@ -88,6 +92,58 @@ def test_tokenizer_fuzz_roundtrip(s):
     ids = TOKENIZER.encode(s)
     assert TOKENIZER.decode(ids) == s
     assert all(0 <= i < TOKENIZER.vocab_size for i in ids)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    slots=st.integers(4, 16),
+    steps=st.integers(1, 40),
+    policy=st.sampled_from(["rkv", "h2o", "streaming", "snapkv"]),
+)
+def test_property_cache_bounded_and_valid(slots, steps, policy):
+    """Memory bound + validity: the paper's core claim, fuzzed."""
+    scfg = SparseRLConfig(kv_budget=slots, kv_buffer=0, obs_window=2,
+                          num_sinks=1, compression=policy)
+    B, H, D = 1, 2, 4
+    cache = init_cache(B, H, slots, D, jnp.float32)
+    rng = np.random.default_rng(slots * 101 + steps)
+    for t in range(steps):
+        k = jnp.asarray(rng.normal(size=(B, H, D)), jnp.float32)
+        cache = append(cache, k, k, jnp.full((B,), t, jnp.int32), scfg)
+    pos = np.asarray(cache.pos)
+    assert pos.shape[-1] == slots                      # static bound
+    assert (np.asarray(cache.fill) == min(steps, slots)).all()
+    for b in range(pos.shape[0]):
+        for h in range(pos.shape[1]):                  # caches are per-head
+            valid = pos[b, h][pos[b, h] >= 0]
+            assert len(set(valid.tolist())) == len(valid)  # no dup tokens
+            assert valid.max(initial=-1) <= steps - 1
+            # newest token always present in every head's cache
+            if steps > 0:
+                assert (pos[b, h] == steps - 1).any()
+
+
+@settings(max_examples=20, deadline=None)
+@given(data=st.data())
+def test_property_attend_is_convex_combination(data):
+    """attention output lies in the convex hull of values; pooled probs sum
+    to group size over valid slots."""
+    B, H, S, D = 1, 1, data.draw(st.integers(2, 12)), 4
+    rng = np.random.default_rng(data.draw(st.integers(0, 10**6)))
+    k = jnp.asarray(rng.normal(size=(B, H, S, D)), jnp.float32)
+    v = jnp.asarray(rng.uniform(-1, 1, (B, H, S, D)), jnp.float32)
+    n_valid = data.draw(st.integers(1, S))
+    pos = jnp.asarray([[np.concatenate([np.arange(n_valid),
+                                        -np.ones(S - n_valid)])]], jnp.int32)
+    cache = KVCache(k=k, v=v, pos=pos,
+                    score=jnp.zeros((B, H, S)), fill=jnp.full((B,), S))
+    q = jnp.asarray(rng.normal(size=(B, 2, D)), jnp.float32)
+    out, probs = attend(q, cache)
+    assert float(out.max()) <= float(v.max()) + 1e-5
+    assert float(out.min()) >= float(v.min()) - 1e-5
+    np.testing.assert_allclose(float(probs.sum()), 2.0, rtol=1e-5)
+    # no attention mass on empty slots
+    np.testing.assert_allclose(np.asarray(probs)[0, 0, n_valid:], 0.0, atol=1e-7)
 
 
 @settings(max_examples=30, deadline=None)
