@@ -105,6 +105,23 @@ def kernel_bench(fast: bool = False) -> List[str]:
     us = timeit(jax.jit(lambda *a: R.flash_attention_ref(*a)), qf, kf, vf,
                 pp, pp, iters=3)
     out.append(f"kernel/flash_attention_jnp,{us:.0f},Sq{Sq}")
+
+    from repro.kernels.paged_decode import paged_flash_decode
+    bs, nb = (64, 4) if fast else (128, 8)
+    N = B * nb + 1
+    kp = jnp.asarray(rng.normal(size=(N, Hkv, bs, Dh)), jnp.float32)
+    vp = jnp.asarray(rng.normal(size=(N, Hkv, bs, Dh)), jnp.float32)
+    posp = jnp.asarray(rng.integers(0, 500, (N, bs)), jnp.int32)
+    bt = jnp.arange(1, B * nb + 1, dtype=jnp.int32).reshape(B, nb)
+    fill = jnp.full((B,), nb * bs - bs // 2, jnp.int32)
+    us = timeit(jax.jit(R.paged_decode_ref), q, kp, vp, posp, bt, fill,
+                iters=5)
+    out.append(f"kernel/paged_decode_jnp,{us:.0f},B{B}xH{Hq}xS{nb*bs}"
+               f"(bs{bs})xD{Dh}")
+    us_k = timeit(lambda *a: paged_flash_decode(*a, interpret=True),
+                  q, kp, vp, posp, bt, fill, iters=1, warmup=1)
+    out.append(f"kernel/paged_decode_pallas_interp,{us_k:.0f},"
+               f"interpret_mode=CPU_semantics_only")
     return out
 
 

@@ -1,7 +1,10 @@
 """Benchmark harness entry point — one function per paper table/figure plus
-the perf benches.  Prints ``name,us_per_call,derived`` CSV.
+the perf benches.  Prints ``name,us_per_call,derived`` CSV; the serving
+benches additionally update the machine-readable ``BENCH_serving.json`` at
+the repo root (throughput, p50/p99 latency, prefix-hit rate) so the perf
+trajectory is tracked across PRs.
 
-  PYTHONPATH=src python -m benchmarks.run [--fast] [--only fig4,table1]
+  PYTHONPATH=src python -m benchmarks.run [--fast] [--only serving,kernels]
 """
 from __future__ import annotations
 
@@ -36,6 +39,7 @@ def main() -> None:
         ("kernels", F.kernel_bench),
         ("sharding", F.sharding_fallback_bench),
         ("serving", S.serving_bench),
+        ("serving_paged", S.paged_prefix_bench),
     ]
     if args.only:
         keep = set(args.only.split(","))

@@ -1,19 +1,26 @@
-"""Serving benchmark: continuous batching vs lockstep, across compression
-policies and batch sizes.
+"""Serving benchmarks: (1) continuous batching vs lockstep across
+compression policies and batch sizes, (2) paged cache backend (block-table
+pool + prefix sharing) vs contiguous on GRPO group-sampling workloads.
 
-The workload has mixed response lengths (per-request new-token caps drawn
-from a fixed spread), which is exactly where lockstep decoding bleeds: every
-batch runs to the global ``max_new`` while finished rows feed padding, so
-its useful-token fraction is mean(cap)/max_new.  Continuous batching
+The (1) workload has mixed response lengths (per-request new-token caps
+drawn from a fixed spread), which is exactly where lockstep decoding bleeds:
+every batch runs to the global ``max_new`` while finished rows feed padding,
+so its useful-token fraction is mean(cap)/max_new.  Continuous batching
 recycles a finished row's fixed-size slot block into the next queued prompt
-and keeps the decode batch full.  Both paths emit token-identical outputs
-per request (same per-request key chains), so the comparison is pure
-scheduling.
+and keeps the decode batch full.  The (2) workload repeats each prompt G
+times (group sampling): the paged backend must prefill each prompt once
+(cold prefix-hit rate (G-1)/G) and store its full prompt pages once,
+refcount-shared (DESIGN.md §Paged cache & prefix sharing).  Every engine
+pair is token-identical per request (same per-request key chains), so the
+comparisons are pure scheduling/caching.
 
   PYTHONPATH=src python -m benchmarks.serving --smoke
   PYTHONPATH=src python -m benchmarks.serving --smoke --policies rkv,none
 
-Row format matches benchmarks.run: ``name,us_per_call,derived``.
+Row format matches benchmarks.run: ``name,us_per_call,derived``.  Machine-
+readable results land in reports/benchmarks/serving.json and — the
+cross-PR perf trajectory — BENCH_serving.json at the repo root (throughput,
+p50/p99 latency, prefix-hit rate).
 """
 from __future__ import annotations
 
@@ -27,6 +34,32 @@ import jax
 import numpy as np
 
 OUT = "reports/benchmarks"
+ROOT = os.path.normpath(os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                     ".."))
+BENCH_JSON = os.path.join(ROOT, "BENCH_serving.json")
+
+
+def _pct(completions, q):
+    from repro.launch.serve import _pct as pct
+
+    return pct([c.latency for c in completions], q)
+
+
+def update_bench_json(section: str, payload) -> str:
+    """Merge one section into the machine-readable BENCH_serving.json at the
+    repo root (the cross-PR perf trajectory record)."""
+    data = {}
+    if os.path.exists(BENCH_JSON):
+        try:
+            with open(BENCH_JSON) as f:
+                data = json.load(f)
+        except (json.JSONDecodeError, OSError):
+            data = {}
+    data[section] = payload
+    with open(BENCH_JSON, "w") as f:
+        json.dump(data, f, indent=1)
+        f.write("\n")
+    return BENCH_JSON
 
 
 def _make_requests(n: int, prompt_len: int, max_new: int, seed: int):
@@ -91,6 +124,7 @@ def _bench_one(arch: str, policy: str, batch: int, n_requests: int,
                 lockstep_tps=toks_lock / t_lock,
                 continuous_tps=toks_cont / t_cont,
                 speedup=t_lock / t_cont, identical=identical,
+                latency_p50_s=_pct(cont, 50), latency_p99_s=_pct(cont, 99),
                 decode_steps=int(eng.stats["decode_steps"]),
                 wasted_row_steps=int(eng.stats["wasted_row_steps"]))
 
@@ -120,6 +154,94 @@ def serving_bench(fast: bool = False, *, arch: str = "qwen2.5-14b",
     os.makedirs(OUT, exist_ok=True)
     with open(os.path.join(OUT, "serving.json"), "w") as f:
         json.dump(rows, f, indent=1)
+    # smoke-scale numbers get their own section so the cross-PR trajectory
+    # never mixes non-comparable workloads
+    update_bench_json("continuous_vs_lockstep" + ("_smoke" if fast else ""),
+                      rows)
+    return out
+
+
+def _bench_paged_one(arch: str, group_size: int, n_prompts: int, batch: int,
+                     prompt_len: int, max_new: int, block_size: int,
+                     decode_chunk: int, seed: int):
+    """One paged-vs-contiguous cell on a GRPO group-sampling workload:
+    ``n_prompts`` prompts, each rolled out ``group_size`` times.  The paged
+    backend must (a) produce token-identical outputs and (b) prefill every
+    prompt exactly once — cold prefix-hit rate (G-1)/G."""
+    from repro.configs import SparseRLConfig, get_config
+    from repro.data import TOKENIZER
+    from repro.launch.serve import make_workload
+    from repro.models import get_model
+    from repro.rollout import ContinuousEngine
+
+    cfg = get_config(arch).smoke()
+    m = get_model(cfg)
+    params = m.init_params(cfg, jax.random.PRNGKey(seed))
+    scfg = SparseRLConfig(compression="none")   # the pool backend is dense
+    reqs, _, _ = make_workload(n_prompts, prompt_len, max_new, rate=0.0,
+                               resp_dist="mixed", seed=seed,
+                               group_size=group_size)
+    kw = dict(batch_size=batch, prompt_len=prompt_len,
+              max_new_tokens=max_new, eos_id=TOKENIZER.eos_id,
+              decode_chunk=decode_chunk, seed=seed)
+    base = ContinuousEngine(params, cfg, m, scfg, **kw)
+    eng = ContinuousEngine(params, cfg, m, scfg, cache_backend="paged",
+                           block_size=block_size, **kw)
+    # cold run: compiles + measures sharing (every hit skips one prefill)
+    cont, paged = base.run(reqs), eng.run(reqs)
+    identical = all(np.array_equal(a.tokens, b.tokens)
+                    for a, b in zip(cont, paged))
+    hit_rate = eng.prefix_hit_rate
+    prefills = int(eng.stats["prefills"])
+    blocks_peak = int(eng.stats["blocks_in_use_peak"])
+    # warm best-of-N: scheduling + admission cost with a hot prefix cache
+    t_base = t_paged = float("inf")
+    for _ in range(3):
+        base.reset_clock()
+        t0 = time.perf_counter()
+        cont = base.run(reqs)
+        t_base = min(t_base, time.perf_counter() - t0)
+        eng.reset_clock()
+        t0 = time.perf_counter()
+        paged = eng.run(reqs)
+        t_paged = min(t_paged, time.perf_counter() - t0)
+    toks = sum(len(c.tokens) for c in paged)
+    return dict(arch=arch, group_size=group_size, n_prompts=n_prompts,
+                batch=batch, block_size=block_size, tokens=toks,
+                contiguous_s=t_base, paged_s=t_paged,
+                contiguous_tps=sum(len(c.tokens) for c in cont) / t_base,
+                paged_tps=toks / t_paged,
+                speedup=t_base / t_paged, identical=identical,
+                prefix_hit_rate=hit_rate,
+                target_hit_rate=(group_size - 1) / group_size,
+                prefills=prefills, admissions=int(eng.stats["admissions"]),
+                latency_p50_s=_pct(paged, 50), latency_p99_s=_pct(paged, 99),
+                blocks_in_use_peak=blocks_peak,
+                pool_blocks=eng.pool_blocks - 1)
+
+
+def paged_prefix_bench(fast: bool = False, *, arch: str = "qwen2.5-14b",
+                       seed: int = 0) -> List[str]:
+    """Paged backend vs contiguous on group-sampling workloads; writes the
+    ``paged_prefix`` section of BENCH_serving.json."""
+    cells = ((4, 2),) if fast else ((4, 3), (8, 3))   # (G, n_prompts)
+    max_new = 16 if fast else 48
+    rows, out = [], []
+    for group_size, n_prompts in cells:
+        r = _bench_paged_one(arch, group_size, n_prompts, batch=4,
+                             prompt_len=16, max_new=max_new, block_size=16,
+                             decode_chunk=4, seed=seed)
+        rows.append(r)
+        base = f"serving/paged/g{group_size}"
+        out.append(f"{base}/contiguous,{r['contiguous_s']*1e6:.0f},"
+                   f"toks_per_s={r['contiguous_tps']:.1f}")
+        out.append(f"{base}/paged,{r['paged_s']*1e6:.0f},"
+                   f"toks_per_s={r['paged_tps']:.1f};"
+                   f"identical={r['identical']};"
+                   f"prefix_hit_rate={r['prefix_hit_rate']:.2f};"
+                   f"prefills={r['prefills']}/{r['admissions']};"
+                   f"blocks_peak={r['blocks_in_use_peak']}/{r['pool_blocks']}")
+    update_bench_json("paged_prefix" + ("_smoke" if fast else ""), rows)
     return out
 
 
@@ -140,16 +262,31 @@ def main(argv=None) -> int:
     rows = serving_bench(fast=args.smoke, arch=args.arch,
                          policies=tuple(args.policies.split(",")),
                          batches=batches, seed=args.seed)
+    rows += paged_prefix_bench(fast=args.smoke, arch=args.arch,
+                               seed=args.seed)
     for r in rows:
         print(r, flush=True)
-    # the acceptance bar: continuous must not serve slower than lockstep
+    # acceptance bar 1: continuous must not serve slower than lockstep
     with open(os.path.join(OUT, "serving.json")) as f:
         results = json.load(f)
     worst = min(r["speedup"] for r in results)
     ok = worst >= 1.0 and all(r["identical"] for r in results)
     print(f"continuous>=lockstep: {worst:.2f}x worst-case speedup "
           f"({'PASS' if ok else 'FAIL'})")
-    return 0 if ok else 1
+    # acceptance bar 2: the paged backend must be token-identical and
+    # prefill a G-way shared prompt once (cold hit rate >= (G-1)/G)
+    with open(BENCH_JSON) as f:
+        paged = json.load(f)[
+            "paged_prefix" + ("_smoke" if args.smoke else "")]
+    ok2 = all(r["identical"] and
+              r["prefix_hit_rate"] >= r["target_hit_rate"] - 1e-9
+              for r in paged)
+    print(f"paged: identical={all(r['identical'] for r in paged)}, "
+          f"hit rates " +
+          ",".join(f"{r['prefix_hit_rate']:.2f}>={r['target_hit_rate']:.2f}"
+                   for r in paged) +
+          f" ({'PASS' if ok2 else 'FAIL'}) -> {BENCH_JSON}")
+    return 0 if ok and ok2 else 1
 
 
 if __name__ == "__main__":

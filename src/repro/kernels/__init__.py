@@ -2,9 +2,10 @@ from repro.kernels.ops import (
     budget_attention,
     flash_attention,
     flash_decode,
+    paged_flash_decode,
     rkv_scores,
     use_kernels,
 )
 
 __all__ = ["budget_attention", "flash_decode", "flash_attention",
-           "rkv_scores", "use_kernels"]
+           "paged_flash_decode", "rkv_scores", "use_kernels"]

@@ -14,6 +14,7 @@ from repro.kernels import ref
 from repro.kernels.budget_attention import budget_attention as _budget_attention
 from repro.kernels.flash_attention import flash_attention_fwd as _flash_attention_fwd
 from repro.kernels.flash_decode import flash_decode as _flash_decode
+from repro.kernels.paged_decode import paged_flash_decode as _paged_flash_decode
 from repro.kernels.rkv_scores import rkv_scores as _rkv_scores
 
 _STATE = {"enabled": True}
@@ -37,6 +38,14 @@ def flash_decode(q, k, v, pos, *, block_s: int = 512):
     if not _STATE["enabled"]:
         return ref.flash_decode_ref(q, k, v, pos)
     return _flash_decode(q, k, v, pos, block_s=block_s, interpret=_interpret())
+
+
+def paged_flash_decode(q, k_pool, v_pool, pos_pool, block_tables, fill):
+    if not _STATE["enabled"]:
+        return ref.paged_decode_ref(q, k_pool, v_pool, pos_pool,
+                                    block_tables, fill)
+    return _paged_flash_decode(q, k_pool, v_pool, pos_pool, block_tables,
+                               fill, interpret=_interpret())
 
 
 def flash_attention(q, k, v, q_positions, kv_positions, *, causal=True,

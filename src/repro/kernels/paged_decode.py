@@ -1,0 +1,123 @@
+"""Pallas TPU kernel: paged flash-decode — 1-token attention over a
+block-table-paged KV pool (the serving path behind prefix sharing).
+
+Same online-softmax loop as `kernels/flash_decode.py`, but K/V tiles are not
+contiguous per row: each row's cache is a chain of fixed-size pool pages
+named by a block table, so shared prompt pages are read G times without
+being stored G times (`kvcache/paged.py`; DESIGN.md §Paged cache & prefix
+sharing).  The table is a *scalar-prefetch* operand — Mosaic reads it before
+the kernel body runs, so each grid step's page id feeds the K/V BlockSpec
+index maps directly and the gather costs nothing beyond the DMA it would
+issue anyway.
+
+TPU mapping:
+  * grid = (B, Hkv, nb): one program chain per (row, kv head); the page dim
+    ``nb`` is the innermost (sequential) axis, so Mosaic revisits the same
+    scratch while double-buffering page loads (compute/DMA overlap).
+  * scalar prefetch: block_tables (B, nb) and fill (B,) live in SMEM; index
+    maps clamp unmapped entries (-1) to page 0, and the in-kernel mask
+    (slot >= fill, pos < 0, unmapped page) zeroes their contribution.
+  * VMEM scratch: acc (G, Dh) f32 weighted accumulator, m/l (G, 1) f32
+    running max / normalizer — carried across the nb sequential steps,
+    finalized into o_ref on the last page.
+  * blocks: the GQA query group (G, Dh) and one (bs, Dh) page tile resident
+    per step; Dh = 128 aligns the MXU contraction, bs is a multiple of the
+    sublane count (>= 8) for dense tiling.
+
+Oracle: `kernels.ref.paged_decode_ref` (gather + masked softmax), tested
+with assert_allclose; `kernels.ops.paged_flash_decode` is the dispatching
+wrapper (interpret mode on CPU, Mosaic on TPU, jnp fallback switchable).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _kernel(bt_ref, fill_ref, q_ref, k_ref, v_ref, pos_ref, o_ref,
+            acc, m_s, l_s, *, scale: float, bs: int, nb: int):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+        m_s[...] = jnp.full_like(m_s, NEG)
+        l_s[...] = jnp.zeros_like(l_s)
+
+    q = q_ref[0, 0].astype(jnp.float32)                 # (G, Dh)
+    k = k_ref[0, 0].astype(jnp.float32)                 # (bs, Dh)
+    v = v_ref[0, 0].astype(jnp.float32)
+    slot = j * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+    mapped = bt_ref[b, j] >= 0
+    valid = (pos_ref[...] >= 0) & (slot < fill_ref[b]) & mapped  # (1, bs)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    s = jnp.where(valid, s, NEG)                        # (G, bs) via broadcast
+    m_prev = m_s[...]                                   # (G, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    p = jnp.where(valid, p, 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    l_s[...] = l_s[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+    acc[...] = acc[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_s[...] = m_new
+
+    @pl.when(j == nb - 1)
+    def _finish():
+        o_ref[0, 0] = (acc[...] / jnp.maximum(l_s[...], 1e-30)
+                       ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_flash_decode(q: jnp.ndarray, k_pool: jnp.ndarray,
+                       v_pool: jnp.ndarray, pos_pool: jnp.ndarray,
+                       block_tables: jnp.ndarray, fill: jnp.ndarray, *,
+                       interpret: bool = False) -> jnp.ndarray:
+    """q: (B, Hq, Dh); k_pool/v_pool: (N, Hkv, bs, Dh); pos_pool: (N, bs);
+    block_tables: (B, nb) int32 (-1 = unmapped); fill: (B,) int32.
+    Returns out (B, Hq, Dh)."""
+    B, Hq, Dh = q.shape
+    N, Hkv, bs, _ = k_pool.shape
+    nb = block_tables.shape[1]
+    G = Hq // Hkv
+    qf = q.reshape(B, Hkv, G, Dh)
+
+    # index maps receive (grid indices..., *scalar-prefetch refs)
+    def k_map(b, h, j, bt, fl):
+        return (jnp.maximum(bt[b, j], 0), h, 0, 0)
+
+    def pos_map(b, h, j, bt, fl):
+        return (jnp.maximum(bt[b, j], 0), 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, Hkv, nb),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, Dh), lambda b, h, j, bt, fl: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, bs, Dh), k_map),
+            pl.BlockSpec((1, 1, bs, Dh), k_map),
+            pl.BlockSpec((1, bs), pos_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, Dh),
+                               lambda b, h, j, bt, fl: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, Dh), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=1.0 / (Dh ** 0.5), bs=bs, nb=nb),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, Dh), q.dtype),
+        interpret=interpret,
+    )(block_tables, fill, qf, k_pool, v_pool, pos_pool)
+    return out.reshape(B, Hq, Dh)

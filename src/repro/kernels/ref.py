@@ -30,6 +30,26 @@ def flash_decode_ref(q, k, v, pos):
     return out
 
 
+def paged_decode_ref(q, k_pool, v_pool, pos_pool, block_tables, fill):
+    """Oracle for kernels.paged_decode: gather each row's page chain from
+    the pool, then masked decode attention (invalid = unwritten slot,
+    padding position, or unmapped page)."""
+    B, Hq, Dh = q.shape
+    N, Hkv, bs, _ = k_pool.shape
+    nb = block_tables.shape[1]
+    bt = jnp.maximum(block_tables, 0)
+    k = jnp.moveaxis(k_pool[bt], 2, 1).reshape(B, Hkv, nb * bs, Dh)
+    v = jnp.moveaxis(v_pool[bt], 2, 1).reshape(B, Hkv, nb * bs, Dh)
+    pos = pos_pool[bt].reshape(B, nb * bs)
+    slot = jnp.arange(nb * bs)[None, :]
+    mapped = jnp.repeat(block_tables >= 0, bs, axis=1)
+    valid = (pos >= 0) & (slot < fill[:, None]) & mapped        # (B, nb*bs)
+    pos = jnp.where(valid, pos, -1)
+    out, _ = budget_attention_ref(
+        q, k, v, jnp.broadcast_to(pos[:, None, :], (B, Hkv, nb * bs)))
+    return out
+
+
 def flash_attention_ref(q, k, v, q_positions, kv_positions, causal=True):
     """Oracle for kernels.flash_attention_fwd.  (B,S,H,D) layouts."""
     B, Sq, Hq, Dh = q.shape

@@ -14,6 +14,32 @@ import jax.numpy as jnp
 from repro.kvcache.cache import KVCache
 
 
+def attend_arrays(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                  pos: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Raw-array decode attention: q (B, Hq, Dh) over k/v (B, Hkv, S, Dh)
+    with pos (B, Hkv, S) (-1 = empty, masked).
+
+    Shared by both cache backends — the contiguous slotted cache attends its
+    slot arrays directly, the paged backend attends its *materialized* page
+    chains (`kvcache.paged.paged_attend`); running the identical math on
+    bitwise-identical arrays is what makes the two backends token-identical.
+    """
+    B, Hq, Dh = q.shape
+    _, Hkv, S, _ = k.shape
+    G = Hq // Hkv
+    qg = q.reshape(B, Hkv, G, Dh).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scale = 1.0 / jnp.sqrt(jnp.float32(Dh))
+    logits = jnp.einsum("bhgd,bhsd->bhgs", qg, kf) * scale
+    valid = (pos >= 0)[:, :, None, :]                          # (B,Hkv,1,S)
+    logits = jnp.where(valid, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    probs = jnp.where(valid, probs, 0.0)
+    out = jnp.einsum("bhgs,bhsd->bhgd", probs, vf)
+    return out.reshape(B, Hq, Dh).astype(q.dtype), probs.sum(axis=2)
+
+
 def attend(q: jnp.ndarray, cache: KVCache) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """q: (B, Hq, Dh) roped single-token queries.
 
@@ -21,17 +47,4 @@ def attend(q: jnp.ndarray, cache: KVCache) -> Tuple[jnp.ndarray, jnp.ndarray]:
     the attention mass each slot received, summed over the q-heads of its GQA
     group — the eviction-policy update signal.
     """
-    B, Hq, Dh = q.shape
-    _, Hkv, S, _ = cache.k.shape
-    G = Hq // Hkv
-    qg = q.reshape(B, Hkv, G, Dh).astype(jnp.float32)
-    k = cache.k.astype(jnp.float32)
-    v = cache.v.astype(jnp.float32)
-    scale = 1.0 / jnp.sqrt(jnp.float32(Dh))
-    logits = jnp.einsum("bhgd,bhsd->bhgs", qg, k) * scale
-    valid = cache.valid_mask()[:, :, None, :]                  # (B,Hkv,1,S)
-    logits = jnp.where(valid, logits, -1e30)
-    probs = jax.nn.softmax(logits, axis=-1)
-    probs = jnp.where(valid, probs, 0.0)
-    out = jnp.einsum("bhgs,bhsd->bhgd", probs, v)
-    return out.reshape(B, Hq, Dh).astype(q.dtype), probs.sum(axis=2)
+    return attend_arrays(q, cache.k, cache.v, cache.pos)

@@ -1,0 +1,391 @@
+"""Paged KV cache: block-table pool with refcounted prefix sharing.
+
+The contiguous slotted cache (`kvcache/cache.py`) gives every row its own
+``slots`` block of HBM, so G group rollouts of one prompt (GRPO sampling)
+store the shared prompt G times and prefill it G times.  This module keeps
+K/V in a global *block pool* instead — fixed-size pages indexed per row by a
+block table — so rows can map the same physical prompt blocks (vLLM-style
+paging, adapted to XLA's static shapes):
+
+  k_pool, v_pool : (N, Hkv, bs, Dh)  N pages of bs tokens each (one pool per
+                                     layer; callers stack a leading L dim)
+  pos_pool       : (N, bs) int32     absolute position per pooled token
+                                     (POS_EMPTY = padding, masks attention)
+  block_tables   : (B, nb) int32     row -> page chain, -1 = unmapped
+  fill           : (B,) int32        logical tokens written per row
+
+Device-side invariants (DESIGN.md §Paged cache & prefix sharing):
+
+* **Append-only, dense.**  The pool backend never evicts — it is the dense
+  (``compression="none"``) serving path.  Logical token ``t`` of a row lives
+  at page ``block_tables[b, t // bs]``, offset ``t % bs``; slot order IS
+  temporal order, exactly like the contiguous dense cache.
+* **Exclusive write pages.**  A row only ever appends into pages it owns
+  (refcount 1).  Shared prompt pages are read-only; the partially-filled
+  prompt tail page is materialized as a private copy at admission
+  (copy-on-write) *before* the first divergent append can land in it.
+* **Page 0 is the garbage sink.**  The allocator never hands out page 0;
+  unmapped table entries (-1) clamp to it, so retired rows decoding pad
+  tokens (static shapes keep every row stepping) scribble into page 0
+  instead of someone else's data.
+* **Token identity by materialization.**  `materialize` gathers a row's
+  pages back into the contiguous ``(B, Hkv, S, Dh)`` layout — bitwise equal
+  to what the contiguous cache would hold (zeros beyond ``fill``, POS_EMPTY
+  on padding) — and `paged_attend` runs the *same* attention math on it, so
+  paged decode is token-identical to the contiguous path (the equivalence
+  tests enforce this; the Pallas `kernels/paged_decode.py` gather kernel is
+  the TPU fast path with its own allclose oracle).
+
+Host-side, `BlockAllocator` (free list + refcounts, double-free checked)
+and `PrefixCache` (prompt-hash -> pinned page chain + last-token logits,
+LRU-evicted under pool pressure) implement the sharing policy; the
+continuous-batching engine drives both (`rollout/continuous.py`).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from dataclasses import dataclass
+from typing import Any, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kvcache.attend import attend_arrays
+from repro.kvcache.cache import POS_EMPTY
+
+
+# ---------------------------------------------------------------------------
+# Device side: the paged cache pytree + pure functions on it
+# ---------------------------------------------------------------------------
+@jax.tree_util.register_pytree_node_class
+@dataclass(frozen=True)
+class PagedKVCache:
+    """One layer's paged cache (callers may stack a leading layer dim on
+    every array leaf; ``seq_len`` is static aux data and survives stacking).
+
+    ``seq_len`` is the contiguous-equivalent slot count S the row geometry
+    was sized for (``rollout_slots``): `materialize` slices the gathered
+    page chain to exactly S so attention sees the same shape as the
+    contiguous backend (the token-identity requirement).
+    """
+
+    k_pool: jnp.ndarray       # (N, Hkv, bs, Dh)
+    v_pool: jnp.ndarray       # (N, Hkv, bs, Dh)
+    pos_pool: jnp.ndarray     # (N, bs) int32
+    block_tables: jnp.ndarray  # (B, nb) int32, -1 = unmapped
+    fill: jnp.ndarray         # (B,) int32
+    seq_len: int = dataclasses.field(metadata={"static": True}, default=0)
+
+    def tree_flatten(self):
+        return ((self.k_pool, self.v_pool, self.pos_pool,
+                 self.block_tables, self.fill), self.seq_len)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, seq_len=aux)
+
+    @property
+    def block_size(self) -> int:
+        return self.k_pool.shape[-2]
+
+    @property
+    def num_blocks(self) -> int:
+        return self.k_pool.shape[-3]
+
+    @property
+    def blocks_per_row(self) -> int:
+        return self.block_tables.shape[-1]
+
+
+GARBAGE_BLOCK = 0
+
+
+def init_paged(batch: int, kv_heads: int, num_blocks: int, block_size: int,
+               head_dim: int, blocks_per_row: int, seq_len: int,
+               dtype=jnp.bfloat16) -> PagedKVCache:
+    """All-empty pool: no pages mapped, nothing written."""
+    return PagedKVCache(
+        k_pool=jnp.zeros((num_blocks, kv_heads, block_size, head_dim), dtype),
+        v_pool=jnp.zeros((num_blocks, kv_heads, block_size, head_dim), dtype),
+        pos_pool=jnp.full((num_blocks, block_size), POS_EMPTY, jnp.int32),
+        block_tables=jnp.full((batch, blocks_per_row), -1, jnp.int32),
+        fill=jnp.zeros((batch,), jnp.int32),
+        seq_len=seq_len,
+    )
+
+
+def paged_append(cache: PagedKVCache, k_new: jnp.ndarray, v_new: jnp.ndarray,
+                 new_pos: jnp.ndarray) -> PagedKVCache:
+    """Append one token per row through the block table.
+
+    k_new/v_new: (B, Hkv, Dh); new_pos: (B,) absolute positions.  Rows whose
+    table is unmapped (retired/empty slots kept stepping for static shapes)
+    clamp to the garbage page; their junk is never attended because nothing
+    maps page 0.  The allocator guarantees the addressed page of an *active*
+    row is exclusively owned, so no cross-row write conflict exists.
+    """
+    B, Hkv, _ = k_new.shape
+    bs = cache.block_size
+    cap = cache.blocks_per_row * bs
+    widx = jnp.minimum(cache.fill, cap - 1)                      # (B,)
+    blk = jnp.take_along_axis(cache.block_tables,
+                              (widx // bs)[:, None], axis=-1)[:, 0]
+    blk = jnp.maximum(blk, GARBAGE_BLOCK)
+    off = widx % bs
+    bi = blk[:, None]
+    hi = jnp.arange(Hkv)[None, :]
+    oi = off[:, None]
+    return dataclasses.replace(
+        cache,
+        k_pool=cache.k_pool.at[bi, hi, oi].set(k_new.astype(cache.k_pool.dtype)),
+        v_pool=cache.v_pool.at[bi, hi, oi].set(v_new.astype(cache.v_pool.dtype)),
+        pos_pool=cache.pos_pool.at[blk, off].set(new_pos.astype(jnp.int32)),
+        fill=jnp.minimum(cache.fill + 1, cap),
+    )
+
+
+def materialize(cache: PagedKVCache
+                ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Gather each row's page chain into the contiguous cache layout.
+
+    Returns (k (B, Hkv, S, Dh), v, pos (B, Hkv, S)) with S = ``seq_len`` —
+    bitwise the arrays the contiguous dense cache would hold for the same
+    token stream: written slots carry the pooled values, everything beyond
+    ``fill`` is zero K/V with POS_EMPTY (so the downstream attention math is
+    identical, not merely close).
+    """
+    B, nb = cache.block_tables.shape
+    _, Hkv, bs, Dh = cache.k_pool.shape
+    S = cache.seq_len
+    assert 0 < S <= nb * bs, (S, nb, bs)
+    bt = jnp.maximum(cache.block_tables, GARBAGE_BLOCK)          # (B, nb)
+    def gather(pool):                                            # (B,nb,Hkv,bs,Dh)
+        g = pool[bt]
+        g = jnp.moveaxis(g, 2, 1)                                # (B,Hkv,nb,bs,..)
+        return g.reshape((B, Hkv, nb * bs) + g.shape[4:])[:, :, :S]
+    written = jnp.arange(S)[None, :] < cache.fill[:, None]       # (B, S)
+    k = jnp.where(written[:, None, :, None], gather(cache.k_pool), 0)
+    v = jnp.where(written[:, None, :, None], gather(cache.v_pool), 0)
+    pos = cache.pos_pool[bt].reshape(B, nb * bs)[:, :S]
+    pos = jnp.where(written, pos, POS_EMPTY)
+    pos = jnp.broadcast_to(pos[:, None, :], (B, Hkv, S))
+    return k, v, pos
+
+
+def paged_attend(q: jnp.ndarray, cache: PagedKVCache) -> jnp.ndarray:
+    """Decode-step attention over the paged cache (jnp model path).
+
+    q: (B, Hq, Dh) roped single-token queries -> out (B, Hq, Dh).  Gathers
+    the page chains to the contiguous layout and applies the exact attention
+    math of `kvcache.attend` — the token-identity anchor.  The streaming
+    Pallas kernel (`kernels/paged_decode.py`) is the TPU path that avoids
+    this materialization entirely.
+    """
+    k, v, pos = materialize(cache)
+    out, _ = attend_arrays(q, k, v, pos)
+    return out
+
+
+def write_prompt(cache: PagedKVCache, k_prompt: jnp.ndarray,
+                 v_prompt: jnp.ndarray, pos_prompt: jnp.ndarray,
+                 blocks: jnp.ndarray, tail_dst: jnp.ndarray, *,
+                 duplicate_tail: bool) -> PagedKVCache:
+    """Write one prefilled prompt into ``blocks`` (the prefix-cache chain).
+
+    k_prompt/v_prompt: (Hkv, P, Dh); pos_prompt: (P,) (POS_EMPTY on left
+    padding); blocks: (npb,) page ids with npb = ceil(P / bs).  With
+    ``duplicate_tail`` (static: P % bs != 0) the last — partial — page is
+    also written to ``tail_dst``, the admitted row's private copy, so the
+    shared chain stays read-only once appends start (copy-on-write
+    materialized eagerly; DESIGN.md §Paged cache & prefix sharing).
+    """
+    Hkv, P, Dh = k_prompt.shape
+    bs = cache.block_size
+    npb = blocks.shape[0]
+    pad = npb * bs - P
+    assert 0 <= pad < bs, (P, bs, npb)
+
+    def paginate(x, fill_value):
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)),
+                    constant_values=fill_value) if x.ndim == 3 else \
+            jnp.pad(x, ((0, pad),), constant_values=fill_value)
+        if x.ndim == 3:
+            return jnp.moveaxis(x.reshape(Hkv, npb, bs, Dh), 1, 0)
+        return x.reshape(npb, bs)
+
+    kb = paginate(k_prompt.astype(cache.k_pool.dtype), 0)
+    vb = paginate(v_prompt.astype(cache.v_pool.dtype), 0)
+    pb = paginate(pos_prompt.astype(jnp.int32), POS_EMPTY)
+    k_pool = cache.k_pool.at[blocks].set(kb)
+    v_pool = cache.v_pool.at[blocks].set(vb)
+    pos_pool = cache.pos_pool.at[blocks].set(pb)
+    if duplicate_tail:
+        k_pool = k_pool.at[tail_dst].set(kb[-1])
+        v_pool = v_pool.at[tail_dst].set(vb[-1])
+        pos_pool = pos_pool.at[tail_dst].set(pb[-1])
+    return dataclasses.replace(cache, k_pool=k_pool, v_pool=v_pool,
+                               pos_pool=pos_pool)
+
+
+def copy_block(cache: PagedKVCache, src: jnp.ndarray, dst: jnp.ndarray
+               ) -> PagedKVCache:
+    """Copy one page ``src`` -> ``dst`` (the admission-time copy-on-write of
+    a shared partial tail page).  Works on stacked caches too: the page axis
+    is indexed from the right, so a leading layer dim copies every layer."""
+    return dataclasses.replace(
+        cache,
+        k_pool=cache.k_pool.at[..., dst, :, :, :].set(
+            cache.k_pool[..., src, :, :, :]),
+        v_pool=cache.v_pool.at[..., dst, :, :, :].set(
+            cache.v_pool[..., src, :, :, :]),
+        pos_pool=cache.pos_pool.at[..., dst, :].set(
+            cache.pos_pool[..., src, :]),
+    )
+
+
+def paged_reset_rows(cache: PagedKVCache, rows, *, batch_axis: int = 0
+                     ) -> PagedKVCache:
+    """Unmap the given rows: table -> -1, fill -> 0 (counterpart of
+    `kvcache.reset_rows`; page *content* is junk-tolerant — unmapped pages
+    are unreachable, and the allocator recycles them wholesale)."""
+    idx = (slice(None),) * batch_axis + (rows,)
+    return dataclasses.replace(
+        cache,
+        block_tables=cache.block_tables.at[idx].set(-1),
+        fill=cache.fill.at[idx].set(0),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Host side: allocator + prefix cache (the sharing policy)
+# ---------------------------------------------------------------------------
+class PoolExhausted(RuntimeError):
+    """No free pages left (after prefix-cache eviction)."""
+
+
+class BlockAllocator:
+    """Free-list page allocator with refcounts.
+
+    Page 0 (the garbage sink) is permanently pinned and never handed out.
+    ``release`` on a zero-refcount page raises — the double-free guard the
+    unit tests exercise.
+    """
+
+    def __init__(self, num_blocks: int, block_size: int):
+        if num_blocks < 2:
+            raise ValueError("need >= 2 pages (page 0 is the garbage sink)")
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        self._ref = [0] * num_blocks
+        self._ref[GARBAGE_BLOCK] = 1
+        # pop() order 1, 2, 3, ... keeps tests/debugging deterministic
+        self._free = list(range(num_blocks - 1, 0, -1))
+
+    def alloc(self, n: int = 1) -> List[int]:
+        if n > len(self._free):
+            raise PoolExhausted(
+                f"requested {n} pages, {len(self._free)} free "
+                f"(pool={self.num_blocks})")
+        out = [self._free.pop() for _ in range(n)]
+        for b in out:
+            self._ref[b] = 1
+        return out
+
+    def retain(self, block: int) -> None:
+        if self._ref[block] <= 0:
+            raise ValueError(f"retain of unallocated page {block}")
+        self._ref[block] += 1
+
+    def release(self, block: int) -> bool:
+        """Drop one reference; returns True when the page went back to the
+        free list.  Raises on double free."""
+        if block == GARBAGE_BLOCK:
+            raise ValueError("page 0 is the pinned garbage sink")
+        if self._ref[block] <= 0:
+            raise ValueError(f"double free of page {block}")
+        self._ref[block] -= 1
+        if self._ref[block] == 0:
+            self._free.append(block)
+            return True
+        return False
+
+    def refcount(self, block: int) -> int:
+        return self._ref[block]
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def blocks_in_use(self) -> int:
+        """Allocated pages, excluding the pinned garbage sink."""
+        return self.num_blocks - 1 - len(self._free)
+
+
+@dataclass
+class PrefixEntry:
+    """One cached prompt prefill.
+
+    Pool backend: ``blocks`` is the refcount-pinned page chain holding the
+    prompt K/V (last entry is the partial tail page when one exists).
+    Splice backend (ssm/hybrid/compressed): ``sub_state`` is the full 1-row
+    decode state to splice.  Both keep the prompt's last-token logits so a
+    hit skips the model prefill entirely.
+    """
+    blocks: Tuple[int, ...] = ()
+    sub_state: Any = None
+    last_logits: Any = None
+    next_pos: Any = None
+    hits: int = 0
+
+
+class PrefixCache:
+    """LRU map: prompt key -> PrefixEntry, pinning pool pages via refcounts.
+
+    ``lookup`` misses/hits feed the engine's prefix-hit-rate metric;
+    ``evict_one`` releases the least-recently-used entry's pages (called by
+    the engine under pool pressure, and by ``insert`` past ``max_entries``).
+    """
+
+    def __init__(self, allocator: Optional[BlockAllocator] = None,
+                 max_entries: int = 32):
+        self.allocator = allocator
+        self.max_entries = max_entries
+        self._entries: "OrderedDict[bytes, PrefixEntry]" = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def lookup(self, key: bytes) -> Optional[PrefixEntry]:
+        e = self._entries.get(key)
+        if e is None:
+            self.misses += 1
+            return None
+        self._entries.move_to_end(key)
+        self.hits += 1
+        e.hits += 1
+        return e
+
+    def insert(self, key: bytes, entry: PrefixEntry) -> None:
+        assert key not in self._entries
+        self._entries[key] = entry
+        while len(self._entries) > self.max_entries:
+            if not self.evict_one():
+                break
+
+    def evict_one(self) -> bool:
+        """Release the LRU entry (and its pinned pages).  False when empty."""
+        if not self._entries:
+            return False
+        _, entry = self._entries.popitem(last=False)
+        if self.allocator is not None:
+            for b in entry.blocks:
+                self.allocator.release(b)
+        return True
+
+    def clear(self) -> None:
+        while self.evict_one():
+            pass

@@ -156,6 +156,8 @@ def build_cell(arch: str, shape: ShapeSpec, mesh, *,
 def summarize(compiled, lowered, info) -> Dict:
     ma = compiled.memory_analysis()
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):        # older jax: per-device dicts
+        ca = ca[0] if ca else {}
     txt = compiled.as_text()
     colls = collective_stats(txt)
     out = dict(

@@ -51,29 +51,35 @@ def _report(name, completions, wall_s, slo_ms=None):
     print(f"[{name}] finish reasons: {reasons}")
 
 
-def make_workload(n, prompt_len, max_new, rate, resp_dist, seed, level="easy"):
-    """n Requests over the synthetic math task: Poisson arrivals at ``rate``
-    req/s (rate 0 = burst at t=0) and fixed or long-tailed-mixed response
-    caps."""
+def make_workload(n, prompt_len, max_new, rate, resp_dist, seed, level="easy",
+                  group_size=1):
+    """n*group_size Requests over the synthetic math task: Poisson arrivals
+    at ``rate`` req/s (rate 0 = burst at t=0) and fixed or long-tailed-mixed
+    response caps.  ``group_size`` > 1 repeats each of the n prompts G times
+    under distinct uids — the GRPO group-sampling shape, where the paged
+    backend's prefix cache prefills each prompt once (hit rate (G-1)/G)."""
     from repro.data import encode_prompts, make_problems
     from repro.rollout import Request
 
     problems = make_problems(n, seed, level)
     ids, mask, answers = encode_prompts(problems, prompt_len)
+    total = n * group_size
     rng = np.random.default_rng(seed + 1)
     if rate > 0:
-        arrivals = np.cumsum(rng.exponential(1.0 / rate, size=n))
+        arrivals = np.cumsum(rng.exponential(1.0 / rate, size=total))
     else:
-        arrivals = np.zeros(n)
+        arrivals = np.zeros(total)
     if resp_dist == "mixed":
         lo = max(2, max_new // 16)
         spread = [lo, max(lo, max_new // 4), max(lo, max_new // 2), max_new]
-        caps = rng.choice(spread, size=n, p=[0.4, 0.3, 0.2, 0.1])
+        caps = rng.choice(spread, size=total, p=[0.4, 0.3, 0.2, 0.1])
     else:
-        caps = np.full(n, max_new)
-    reqs = [Request(uid=i, prompt=ids[i][mask[i]],
-                    max_new_tokens=int(caps[i]),
-                    arrival_time=float(arrivals[i])) for i in range(n)]
+        caps = np.full(total, max_new)
+    reqs = [Request(uid=u, prompt=ids[u // group_size][mask[u // group_size]],
+                    max_new_tokens=int(caps[u]),
+                    arrival_time=float(arrivals[u])) for u in range(total)]
+    problems = [problems[u // group_size] for u in range(total)]
+    answers = np.asarray([answers[u // group_size] for u in range(total)])
     return reqs, problems, answers
 
 
@@ -90,6 +96,15 @@ def main(argv=None):
     ap.add_argument("--max-new", type=int, default=64)
     ap.add_argument("--compression", default="rkv")
     ap.add_argument("--kv-budget", type=int, default=None)
+    ap.add_argument("--cache-backend", default="contiguous",
+                    choices=["contiguous", "paged"],
+                    help="paged = block-table pool with prefix sharing "
+                         "(DESIGN.md §Paged cache & prefix sharing)")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="paged backend: tokens per pool page")
+    ap.add_argument("--group-size", type=int, default=1,
+                    help="repeat each prompt G times (GRPO group sampling; "
+                         "total requests = num-requests * G)")
     ap.add_argument("--rate", type=float, default=0.0,
                     help="Poisson arrival rate, req/s (0 = burst at t=0)")
     ap.add_argument("--resp-dist", default="mixed",
@@ -132,12 +147,14 @@ def main(argv=None):
 
     reqs, problems, answers = make_workload(
         args.num_requests, args.prompt_len, args.max_new, args.rate,
-        args.resp_dist, args.seed)
+        args.resp_dist, args.seed, group_size=args.group_size)
     slots = rollout_slots(scfg, args.prompt_len, args.max_new)
     print(f"arch={args.arch}{' (smoke)' if args.smoke else ''} "
           f"compression={args.compression} cache slots/seq/layer: {slots} | "
-          f"{args.num_requests} requests, rate="
-          f"{args.rate if args.rate > 0 else 'burst'} req/s, "
+          f"backend={args.cache_backend} | "
+          f"{len(reqs)} requests"
+          f"{f' ({args.num_requests} prompts x G={args.group_size})' if args.group_size > 1 else ''}, "
+          f"rate={args.rate if args.rate > 0 else 'burst'} req/s, "
           f"resp-dist={args.resp_dist}")
 
     results = {}
@@ -146,10 +163,15 @@ def main(argv=None):
             params, cfg, m, scfg, batch_size=args.batch,
             prompt_len=args.prompt_len, max_new_tokens=args.max_new,
             eos_id=TOKENIZER.eos_id, decode_chunk=args.decode_chunk,
-            seed=args.seed)
+            seed=args.seed, cache_backend=args.cache_backend,
+            block_size=args.block_size)
         if args.warmup:
             eng.run(reqs)
             eng.reset_clock()
+            if eng.prefix is not None:
+                # report COLD sharing numbers (one prefill per prompt,
+                # (G-1)/G hit rate) — a warm cache would show 100%
+                eng.prefix.clear()
         t0 = time.perf_counter()
         completions = eng.run(reqs)
         wall = time.perf_counter() - t0
@@ -159,6 +181,16 @@ def main(argv=None):
         print(f"[continuous] decode steps: {st['decode_steps']:.0f} "
               f"({st['chunks']:.0f} chunks), row-step utilization: "
               f"{used / max(st['decode_steps'] * args.batch, 1):.0%}")
+        if args.cache_backend == "paged":
+            extra = ""
+            if eng.allocator is not None:
+                extra = (f" | pool pages in use (peak): "
+                         f"{st['blocks_in_use_peak']:.0f}/"
+                         f"{eng.pool_blocks - 1}")
+            print(f"[continuous] prefix sharing: "
+                  f"{st['prefills']:.0f} prefills for "
+                  f"{st['admissions']:.0f} admissions, hit rate "
+                  f"{eng.prefix_hit_rate:.0%}{extra}")
         results["continuous"] = completions
     if args.engine in ("lockstep", "both"):
         srv = LockstepServer(

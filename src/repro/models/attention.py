@@ -9,6 +9,7 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig, SparseRLConfig, dtype_of
 from repro.distributed.sharding import lsc
 from repro.kvcache import KVCache, append, attend, update_scores
+from repro.kvcache.paged import PagedKVCache, paged_append, paged_attend
 from repro.models.common import apply_dense, apply_rope, dense_init
 
 
@@ -127,7 +128,11 @@ def decode_attention(p, x_tok, cfg: ModelConfig, cache: KVCache,
                      ) -> Tuple[jnp.ndarray, KVCache]:
     """One-token decode.  x_tok: (B, D) hidden; cur_pos: (B,) absolute pos.
 
-    evict-if-full -> append -> attend (incl. new token) -> score update.
+    Contiguous cache: evict-if-full -> append -> attend (incl. new token) ->
+    score update.  Paged cache (block-table pool, dense only — no eviction,
+    no score update): append through the block table -> attend the
+    materialized page chains (identical math; DESIGN.md §Paged cache &
+    prefix sharing).
     """
     B, D = x_tok.shape
     x = x_tok[:, None, :]
@@ -135,9 +140,13 @@ def decode_attention(p, x_tok, cfg: ModelConfig, cache: KVCache,
     q1 = q[:, 0]                                                # (B, Hq, hd)
     k1 = jnp.swapaxes(k, 1, 2)[:, :, 0]                          # (B, Hkv, hd)
     v1 = jnp.swapaxes(v, 1, 2)[:, :, 0]
-    cache = append(cache, k1, v1, cur_pos, scfg)
-    out, probs_pooled = attend(q1, cache)
-    cache = update_scores(cache, probs_pooled, scfg)
+    if isinstance(cache, PagedKVCache):
+        cache = paged_append(cache, k1, v1, cur_pos)
+        out = paged_attend(q1, cache)
+    else:
+        cache = append(cache, k1, v1, cur_pos, scfg)
+        out, probs_pooled = attend(q1, cache)
+        cache = update_scores(cache, probs_pooled, scfg)
     out = out.reshape(B, cfg.num_heads * cfg.head_dim)
     y = apply_dense(p["wo"], out, x_tok.dtype)
     return y, cache

@@ -23,6 +23,7 @@ from repro.rollout.engine import (
     fold_row_keys,
     generate,
     mismatch_kl_estimate,
+    paged_rollout_geometry,
     rescore,
     rescore_parts,
     rollout_slots,
@@ -33,7 +34,8 @@ from repro.rollout.engine import (
 __all__ = [
     "RolloutBatch", "generate", "rescore", "rescore_parts",
     "sample_token", "sample_token_per_row", "fold_row_keys",
-    "decode_sample_step", "rollout_slots", "mismatch_kl_estimate",
+    "decode_sample_step", "rollout_slots", "paged_rollout_geometry",
+    "mismatch_kl_estimate",
     "ContinuousEngine", "LockstepServer", "Request", "Completion",
     "serve_lockstep",
 ]

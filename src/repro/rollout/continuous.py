@@ -23,6 +23,14 @@ chains (``fold_in(fold_in(base, uid), t)``) so outputs are independent of row
 placement and co-tenants, and host-side harvest at ``decode_chunk``
 granularity.
 
+``cache_backend="paged"`` (DESIGN.md §Paged cache & prefix sharing) swaps
+the per-row contiguous slot blocks for a refcount-shared block pool
+(`kvcache/paged.py`): admission consults a prompt-hash prefix cache, so G
+group rollouts of one prompt (GRPO sampling) prefill it once and share its
+prompt pages copy-on-write — token-identically to the contiguous backend.
+Where the pool does not apply (compressing policies, ssm/hybrid families)
+the same flag shares prefills by splicing the cached prefill state.
+
 Supports every family whose ModelFns prefill/decode_step take token-only
 batches (dense / hybrid / ssm, and vlm without patch prefixes); the audio
 enc-dec needs per-request frames and is not wired up here.  MoE runs too,
@@ -33,6 +41,8 @@ token-identical-to-lockstep guarantee only holds for dropless configs
 """
 from __future__ import annotations
 
+import dataclasses
+import functools
 import time
 from collections import deque
 from dataclasses import dataclass, field
@@ -42,10 +52,25 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ModelConfig, SparseRLConfig
+from repro.configs.base import DENSE, MOE, VLM, ModelConfig, SparseRLConfig, dtype_of
 from repro.kvcache import KVCache, reset_rows
+from repro.kvcache.paged import (
+    BlockAllocator,
+    PagedKVCache,
+    PoolExhausted,
+    PrefixCache,
+    PrefixEntry,
+    copy_block,
+    init_paged,
+    paged_reset_rows,
+    write_prompt,
+)
 from repro.models import ModelFns
-from repro.rollout.engine import decode_sample_step, rollout_slots
+from repro.rollout.engine import (
+    decode_sample_step,
+    paged_rollout_geometry,
+    rollout_slots,
+)
 
 
 @dataclass(frozen=True)
@@ -93,6 +118,8 @@ class _RowState:
     tok_chunks: List[np.ndarray] = field(default_factory=list)
     logp_chunks: List[np.ndarray] = field(default_factory=list)
     n: int = 0                  # tokens emitted so far
+    blocks: List[int] = field(default_factory=list)  # paged: pages this row
+                                # holds a reference on (released at finish)
 
 
 def _batch_axis(dst_shape, src_shape) -> Optional[int]:
@@ -142,14 +169,25 @@ class ContinuousEngine:
     compiled steps; a finished row wastes at most ``decode_chunk - 1`` steps
     before recycling.  ``decode_chunk=1`` harvests immediately (used by the
     equivalence tests); serving workloads amortize dispatch with 8-16.
+
+    ``cache_backend="paged"`` enables prefix sharing (and, for dense
+    transformer configs, the page pool — ``block_size`` tokens per page,
+    ``pool_blocks`` total, ``prefix_entries`` LRU prompt cache capacity);
+    ``stats["prefills"]`` / ``stats["prefix_hits"]`` /
+    ``stats["blocks_in_use_peak"]`` and :attr:`prefix_hit_rate` report the
+    sharing behaviour.
     """
 
     def __init__(self, params, cfg: ModelConfig, mfns: ModelFns,
                  scfg: SparseRLConfig, *, batch_size: int, prompt_len: int,
                  max_new_tokens: int, eos_id: int, pad_id: int = 0,
-                 decode_chunk: int = 8, seed: int = 0):
+                 decode_chunk: int = 8, seed: int = 0,
+                 cache_backend: str = "contiguous", block_size: int = 16,
+                 pool_blocks: Optional[int] = None, prefix_entries: int = 32):
         if decode_chunk < 1:
             raise ValueError("decode_chunk must be >= 1")
+        if cache_backend not in ("contiguous", "paged"):
+            raise ValueError(f"unknown cache_backend {cache_backend!r}")
         self.params = params
         self.cfg = cfg
         self.mfns = mfns
@@ -162,6 +200,47 @@ class ContinuousEngine:
         self.decode_chunk = decode_chunk
         self.slots = rollout_slots(scfg, prompt_len, max_new_tokens)
         self._base_key = jax.random.PRNGKey(seed)
+
+        # ---- cache backend ---------------------------------------------
+        # "paged" turns on admission-time prefix sharing everywhere; the
+        # block-table *pool* additionally replaces the contiguous slot
+        # arrays where it applies — dense compression on a transformer
+        # family.  Eviction policies score slots inside a private
+        # contiguous block and would tear refcount-shared pages, and
+        # ssm/hybrid recurrent state is already O(1), so those combinations
+        # keep the contiguous representation and share prefills by
+        # splicing the cached prefill state
+        # (DESIGN.md §Paged cache & prefix sharing).
+        self.cache_backend = cache_backend
+        self._share_prefix = cache_backend == "paged"
+        self._pool_paged = (self._share_prefix
+                            and scfg.compression == "none"
+                            and cfg.family in (DENSE, MOE, VLM))
+        self.allocator: Optional[BlockAllocator] = None
+        self.prefix: Optional[PrefixCache] = None
+        if self._pool_paged:
+            self.block_size = block_size
+            self.slots, self.blocks_per_row = paged_rollout_geometry(
+                scfg, prompt_len, max_new_tokens, block_size)
+            self._npb = -(-prompt_len // block_size)   # prompt pages
+            self._npb_full = prompt_len // block_size  # fully-shared pages
+            self._has_tail = prompt_len % block_size != 0
+            if pool_blocks is None:
+                # all rows resident + 4 rows' worth of slack for the
+                # prefix cache (page 0 is the pinned garbage sink)
+                pool_blocks = 1 + (batch_size + 4) * self.blocks_per_row
+            min_blocks = 1 + batch_size * self.blocks_per_row + self._npb
+            if pool_blocks < min_blocks:
+                raise ValueError(
+                    f"pool_blocks={pool_blocks} < minimum {min_blocks} "
+                    f"(batch {batch_size} x {self.blocks_per_row} pages "
+                    f"+ one cached prompt)")
+            self.pool_blocks = pool_blocks
+            self.allocator = BlockAllocator(pool_blocks, block_size)
+            self.prefix = PrefixCache(self.allocator,
+                                      max_entries=prefix_entries)
+        elif self._share_prefix:
+            self.prefix = PrefixCache(None, max_entries=prefix_entries)
 
         def prefill_admit(p, batch, state, logits, counts, active, row_keys,
                           row, row_key):
@@ -181,12 +260,108 @@ class ContinuousEngine:
         self._prefill_admit = jax.jit(prefill_admit,
                                       donate_argnums=(2, 3, 4, 5, 6))
 
+        def prefill_admit_share(p, batch, state, logits, counts, active,
+                                row_keys, row, row_key):
+            """Splice-sharing miss path: like `prefill_admit`, but also
+            returns the 1-request state + last-token logits so the prefix
+            cache can replay the admission without re-running the model."""
+            sub_logits, sub_state = mfns.prefill(p, cfg, batch, scfg,
+                                                 self.slots)
+            state = insert_request_state(state, sub_state, row)
+            return (state,
+                    logits.at[row].set(sub_logits[0]),
+                    counts.at[row].set(0),
+                    active.at[row].set(True),
+                    row_keys.at[row].set(row_key),
+                    sub_state, sub_logits[0])
+
+        self._prefill_admit_share = jax.jit(prefill_admit_share,
+                                            donate_argnums=(2, 3, 4, 5, 6))
+
+        def admit_cached(state, logits, counts, active, row_keys, row,
+                         row_key, sub_state, sub_logits_row):
+            """Splice-sharing hit path: splice the cached prefill state —
+            no model forward at all.  ``sub_state`` is NOT donated: the
+            prefix cache reuses it for every later hit."""
+            state = insert_request_state(state, sub_state, row)
+            return (state,
+                    logits.at[row].set(sub_logits_row),
+                    counts.at[row].set(0),
+                    active.at[row].set(True),
+                    row_keys.at[row].set(row_key))
+
+        self._admit_cached = jax.jit(admit_cached,
+                                     donate_argnums=(0, 1, 2, 3, 4))
+
+        if self._pool_paged:
+            npb, has_tail = self._npb, self._has_tail
+            P = prompt_len
+
+            def prefill_store(p, batch, state, logits, counts, active,
+                              row_keys, row, row_key, entry_blocks,
+                              row_table):
+                """Pool miss path: prefill once, write the prompt K/V into
+                the prefix-cache page chain (duplicating the partial tail
+                page into the row's private copy), and map the row's block
+                table — one dispatch."""
+                sub_logits, sub_state = mfns.prefill(p, cfg, batch, scfg, P)
+                kp = sub_state.caches.k[:, 0]          # (L, Hkv, P, Dh)
+                vp = sub_state.caches.v[:, 0]
+                pp = sub_state.caches.pos[:, 0, 0]     # (L, P)
+                caches = jax.vmap(
+                    functools.partial(write_prompt, duplicate_tail=has_tail),
+                    in_axes=(0, 0, 0, 0, None, None))(
+                        state.caches, kp, vp, pp, entry_blocks,
+                        row_table[npb - 1])
+                caches = dataclasses.replace(
+                    caches,
+                    block_tables=caches.block_tables.at[:, row].set(row_table),
+                    fill=caches.fill.at[:, row].set(P))
+                state = state._replace(
+                    caches=caches, pos=state.pos.at[row].set(sub_state.pos[0]))
+                return (state,
+                        logits.at[row].set(sub_logits[0]),
+                        counts.at[row].set(0),
+                        active.at[row].set(True),
+                        row_keys.at[row].set(row_key),
+                        sub_logits[0], sub_state.pos[0])
+
+            self._prefill_store = jax.jit(prefill_store,
+                                          donate_argnums=(2, 3, 4, 5, 6))
+
+            def admit_hit(state, logits, counts, active, row_keys, row,
+                          row_key, row_table, src_tail, entry_logits,
+                          entry_pos):
+                """Pool hit path: map the shared prompt pages into the row's
+                table and copy-on-write the partial tail page — no model
+                forward, no prompt K/V traffic beyond one page."""
+                caches = state.caches
+                if has_tail:
+                    caches = copy_block(caches, src_tail, row_table[npb - 1])
+                caches = dataclasses.replace(
+                    caches,
+                    block_tables=caches.block_tables.at[:, row].set(row_table),
+                    fill=caches.fill.at[:, row].set(P))
+                state = state._replace(caches=caches,
+                                       pos=state.pos.at[row].set(entry_pos))
+                return (state,
+                        logits.at[row].set(entry_logits),
+                        counts.at[row].set(0),
+                        active.at[row].set(True),
+                        row_keys.at[row].set(row_key))
+
+            self._admit_hit = jax.jit(admit_hit,
+                                      donate_argnums=(0, 1, 2, 3, 4))
+
         def retire(state, active, row):
             caches = getattr(state, "caches", None)
             if isinstance(caches, KVCache):
                 # stacked caches carry a leading layer dim -> batch axis 1
                 state = state._replace(
                     caches=reset_rows(caches, row, batch_axis=1))
+            elif isinstance(caches, PagedKVCache):
+                state = state._replace(
+                    caches=paged_reset_rows(caches, row, batch_axis=1))
             return state, active.at[row].set(False)
 
         self._retire = jax.jit(retire, donate_argnums=(0,))
@@ -195,6 +370,9 @@ class ContinuousEngine:
             caches = getattr(state, "caches", None)
             if isinstance(caches, KVCache):
                 state = state._replace(caches=reset_rows(
+                    caches, jnp.arange(batch_size), batch_axis=1))
+            elif isinstance(caches, PagedKVCache):
+                state = state._replace(caches=paged_reset_rows(
                     caches, jnp.arange(batch_size), batch_axis=1))
             return state, jnp.zeros_like(active)
 
@@ -227,13 +405,29 @@ class ContinuousEngine:
         self.now = 0.0
         self.stats: Dict[str, float] = {
             "decode_steps": 0, "chunks": 0, "admissions": 0,
-            "wasted_row_steps": 0}
+            "wasted_row_steps": 0, "prefills": 0, "prefix_hits": 0,
+            "blocks_in_use_peak": 0}
 
     # ------------------------------------------------------------------
     def _bootstrap_state(self):
-        """Decode state for an all-empty batch: one batched prefill over pad
-        prompts with an all-False valid mask (every cache slot comes out
-        POS_EMPTY, positions start at 0)."""
+        """Decode state for an all-empty batch.
+
+        Contiguous: one batched prefill over pad prompts with an all-False
+        valid mask (every cache slot comes out POS_EMPTY, positions start at
+        0).  Pool-paged: built directly — an empty pool with no pages
+        mapped needs no model forward."""
+        if self._pool_paged:
+            from repro.models.transformer import DecodeState
+
+            one = init_paged(
+                self.batch_size, self.cfg.num_kv_heads, self.pool_blocks,
+                self.block_size, self.cfg.head_dim, self.blocks_per_row,
+                self.slots, dtype_of(self.cfg.compute_dtype))
+            caches = jax.tree.map(
+                lambda x: jnp.stack([x] * self.cfg.num_layers), one)
+            return DecodeState(
+                caches=caches,
+                pos=jnp.zeros((self.batch_size,), jnp.int32))
         batch = {
             "tokens": jnp.full((self.batch_size, self.prompt_len),
                                self.pad_id, jnp.int32),
@@ -270,23 +464,140 @@ class ContinuousEngine:
 
     def reset_clock(self) -> None:
         """Zero the virtual clock and counters (e.g. between a compile-warmup
-        run and a measured run) — compiled programs and device state stay."""
+        run and a measured run) — compiled programs, device state and the
+        prefix cache stay (a warm prefix cache is the realistic steady
+        state; call ``self.prefix.clear()`` to measure cold)."""
         self.now = 0.0
         for k in self.stats:
             self.stats[k] = 0
 
+    @property
+    def prefix_hit_rate(self) -> float:
+        """Fraction of admissions served from the prefix cache (0 when
+        sharing is off).  G same-prompt rollouts admitted back-to-back give
+        (G-1)/G — the group-sampling win the paged backend exists for."""
+        adm = self.stats["admissions"]
+        return self.stats["prefix_hits"] / adm if adm else 0.0
+
     # ------------------------------------------------------------------
+    def _alloc_blocks(self, n: int) -> List[int]:
+        """Allocate pool pages, evicting LRU prefix-cache entries under
+        pressure (their pages come back once no active row shares them)."""
+        while True:
+            try:
+                return self.allocator.alloc(n)
+            except PoolExhausted:
+                if not self.prefix.evict_one():
+                    raise
+
+    def _admit_shared(self, req: Request, row: int, row_key) -> List[int]:
+        """Prefix-sharing admission (cache_backend="paged").
+
+        Pool mode — miss: prefill once, store the prompt pages refcounted in
+        the prefix cache, map them (full pages shared, tail copied) into the
+        row.  Hit: map the shared pages + copy-on-write the tail; the model
+        prefill is skipped entirely.  Splice mode (ssm/hybrid/compressed):
+        the cached 1-request prefill *state* is spliced instead of pages.
+        Returns the pages the row holds references on (pool mode).
+        """
+        key = np.asarray(req.prompt, np.int32).tobytes()
+        entry = self.prefix.lookup(key)
+        if not self._pool_paged:
+            if entry is None:
+                (self.state, self.logits, self.counts, self.active,
+                 self.row_keys, sub_state, sub_logits_row) = \
+                    self._prefill_admit_share(
+                        self.params, self._encode(req.prompt), self.state,
+                        self.logits, self.counts, self.active, self.row_keys,
+                        row, row_key)
+                self.prefix.insert(key, PrefixEntry(
+                    sub_state=sub_state, last_logits=sub_logits_row))
+                self.stats["prefills"] += 1
+            else:
+                (self.state, self.logits, self.counts, self.active,
+                 self.row_keys) = self._admit_cached(
+                     self.state, self.logits, self.counts, self.active,
+                     self.row_keys, row, row_key, entry.sub_state,
+                     entry.last_logits)
+                self.stats["prefix_hits"] += 1
+            return []
+        # pool mode: the row shares the prompt's full pages and owns the
+        # rest (tail copy + generation head-room)
+        n_own = self.blocks_per_row - self._npb_full
+        if entry is None:
+            # one atomic alloc: a PoolExhausted after a partial grab would
+            # leak the grabbed pages
+            blocks = self._alloc_blocks(n_own + self._npb)
+            own, entry_blocks = blocks[:n_own], blocks[n_own:]
+            row_table = [*entry_blocks[:self._npb_full], *own]
+            for b in entry_blocks[:self._npb_full]:
+                self.allocator.retain(b)
+            (self.state, self.logits, self.counts, self.active,
+             self.row_keys, e_logits, e_pos) = self._prefill_store(
+                 self.params, self._encode(req.prompt), self.state,
+                 self.logits, self.counts, self.active, self.row_keys, row,
+                 row_key, jnp.asarray(entry_blocks, jnp.int32),
+                 jnp.asarray(row_table, jnp.int32))
+            self.prefix.insert(key, PrefixEntry(
+                blocks=tuple(entry_blocks), last_logits=e_logits,
+                next_pos=e_pos))
+            self.stats["prefills"] += 1
+        else:
+            # pin the entry's whole chain FIRST: under pool pressure
+            # _alloc_blocks LRU-evicts prefix entries — possibly this very
+            # one — and an unpinned chain would be freed and handed back as
+            # the row's own pages (the COW source included)
+            pinned = list(entry.blocks[:self._npb_full])
+            src_tail = entry.blocks[-1] if self._has_tail else None
+            if src_tail is not None:
+                pinned.append(src_tail)
+            for b in pinned:
+                self.allocator.retain(b)
+            try:
+                own = self._alloc_blocks(n_own)
+            except PoolExhausted:
+                for b in pinned:
+                    self.allocator.release(b)
+                raise
+            row_table = [*entry.blocks[:self._npb_full], *own]
+            (self.state, self.logits, self.counts, self.active,
+             self.row_keys) = self._admit_hit(
+                 self.state, self.logits, self.counts, self.active,
+                 self.row_keys, row, row_key,
+                 jnp.asarray(row_table, jnp.int32),
+                 jnp.asarray(src_tail if src_tail is not None else 0,
+                             jnp.int32),
+                 entry.last_logits, entry.next_pos)
+            if src_tail is not None:
+                # the COW copy is enqueued; drop the temporary source pin
+                # (the row keeps its refs on the shared full pages)
+                self.allocator.release(src_tail)
+            self.stats["prefix_hits"] += 1
+        return row_table
+
     def _admit_one(self, req: Request, row: int) -> None:
         """Prefill ``req`` into the freed ``row`` (single fused dispatch);
-        the splice overwrites every slot of the row's cache block, so nothing
-        of the previous tenant can leak even without an explicit reset."""
+        the splice overwrites every slot of the row's cache block (or remaps
+        its whole block table), so nothing of the previous tenant can leak
+        even without an explicit reset."""
         row_key = jax.random.fold_in(self._base_key, req.uid)
-        (self.state, self.logits, self.counts, self.active,
-         self.row_keys) = self._prefill_admit(
-             self.params, self._encode(req.prompt), self.state, self.logits,
-             self.counts, self.active, self.row_keys, row, row_key)
-        self.rows[row] = _RowState(req=req, admit_time=self.now)
+        blocks: List[int] = []
+        if self._share_prefix:
+            blocks = self._admit_shared(req, row, row_key)
+        else:
+            (self.state, self.logits, self.counts, self.active,
+             self.row_keys) = self._prefill_admit(
+                 self.params, self._encode(req.prompt), self.state,
+                 self.logits, self.counts, self.active, self.row_keys, row,
+                 row_key)
+            self.stats["prefills"] += 1
+        self.rows[row] = _RowState(req=req, admit_time=self.now,
+                                   blocks=blocks)
         self.stats["admissions"] += 1
+        if self.allocator is not None:
+            self.stats["blocks_in_use_peak"] = max(
+                self.stats["blocks_in_use_peak"],
+                self.allocator.blocks_in_use)
 
     def _finish_row(self, row: int, finish_reason: str,
                     out: List[Completion]) -> None:
@@ -300,6 +611,11 @@ class ContinuousEngine:
             tokens=toks.astype(np.int32), logps=logps.astype(np.float32),
             finish_reason=finish_reason, arrival_time=rs.req.arrival_time,
             admit_time=rs.admit_time, finish_time=self.now, row=row))
+        if rs.blocks:
+            # drop this row's page references; shared prompt pages stay
+            # alive as long as the prefix cache (or a sibling row) pins them
+            for b in rs.blocks:
+                self.allocator.release(b)
         self.rows[row] = None
 
     def run(self, requests: Sequence[Request]) -> List[Completion]:

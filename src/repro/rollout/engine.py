@@ -128,6 +128,21 @@ def rollout_slots(scfg: SparseRLConfig, prompt_len: int, max_new_tokens: int,
     return prompt_len + prefix_len + max_new_tokens + 8
 
 
+def paged_rollout_geometry(scfg: SparseRLConfig, prompt_len: int,
+                           max_new_tokens: int, block_size: int
+                           ) -> Tuple[int, int]:
+    """Row geometry for the paged cache backend: (seq_len, blocks_per_row).
+
+    ``seq_len`` is exactly :func:`rollout_slots` for the same workload — the
+    paged backend materializes its page chains to this many slots so the
+    attention math matches the contiguous backend bit for bit (DESIGN.md
+    §Paged cache & prefix sharing); ``blocks_per_row`` rounds it up to whole
+    pages (the per-row block-table width).
+    """
+    slots = rollout_slots(scfg, prompt_len, max_new_tokens)
+    return slots, -(-slots // block_size)
+
+
 def generate(params, cfg: ModelConfig, mfns: ModelFns, batch: dict,
              scfg: SparseRLConfig, rng, *, max_new_tokens: int,
              eos_id: int, pad_id: int = 0,

@@ -40,7 +40,10 @@ def test_prefill_flops_match_hlo_unrolled():
     p_sds = jax.eval_shape(lambda: m.init_params(cfg, jax.random.PRNGKey(0)))
     t_sds = jax.ShapeDtypeStruct((B, S), jnp.int32)
     compiled = jax.jit(fwd).lower(p_sds, t_sds).compile()
-    hlo_flops = compiled.cost_analysis()["flops"]
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):        # older jax: list of per-device dicts
+        ca = ca[0]
+    hlo_flops = ca["flops"]
 
     cost = prefill_cost(cfg, shape, MeshShape(pod=1, data=1, model=1),
                         SparseRLConfig())

@@ -1,0 +1,316 @@
+"""Paged KV cache: allocator/refcount invariants, copy-on-write, and
+token-identity of the paged continuous-batching backend vs the contiguous
+one across model families (DESIGN.md §Paged cache & prefix sharing)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import SparseRLConfig, get_config
+from repro.data import TOKENIZER, encode_prompts, make_problems
+from repro.kvcache.cache import POS_EMPTY
+from repro.kvcache.paged import (
+    BlockAllocator,
+    PagedKVCache,
+    PoolExhausted,
+    PrefixCache,
+    PrefixEntry,
+    init_paged,
+    materialize,
+    paged_append,
+    paged_reset_rows,
+    write_prompt,
+)
+from repro.models import get_model
+from repro.rollout import ContinuousEngine, Request
+
+PROMPT_LEN = 16
+
+
+# ---------------------------------------------------------------------------
+# Allocator / prefix cache (host side)
+# ---------------------------------------------------------------------------
+def test_allocator_alloc_free_refcount():
+    a = BlockAllocator(8, 4)
+    xs = a.alloc(3)
+    assert 0 not in xs                      # page 0 is the garbage sink
+    assert a.blocks_in_use == 3
+    a.retain(xs[0])
+    assert a.release(xs[0]) is False        # still referenced by the retain
+    assert a.release(xs[0]) is True         # now actually freed
+    assert a.blocks_in_use == 2
+    a2 = a.alloc(1)[0]                      # freed page is reusable
+    assert a.refcount(a2) == 1
+
+
+def test_allocator_never_double_frees():
+    a = BlockAllocator(4, 4)
+    (b,) = a.alloc(1)
+    a.release(b)
+    with pytest.raises(ValueError):
+        a.release(b)
+    with pytest.raises(ValueError):
+        a.release(0)                        # the garbage sink is pinned
+    with pytest.raises(ValueError):
+        a.retain(b)                         # can't resurrect a freed page
+
+
+def test_allocator_exhaustion_and_prefix_eviction():
+    a = BlockAllocator(4, 4)                # 3 usable pages
+    with pytest.raises(PoolExhausted):
+        a.alloc(4)
+    pc = PrefixCache(a, max_entries=8)
+    pc.insert(b"x", PrefixEntry(blocks=tuple(a.alloc(2))))
+    with pytest.raises(PoolExhausted):
+        a.alloc(2)
+    assert pc.evict_one()                   # LRU eviction releases the pages
+    assert len(a.alloc(2)) == 2
+
+
+def test_prefix_cache_lru_and_capacity():
+    a = BlockAllocator(16, 4)
+    pc = PrefixCache(a, max_entries=2)
+    ba, bb, bc = a.alloc(1), a.alloc(1), a.alloc(1)
+    pc.insert(b"a", PrefixEntry(blocks=tuple(ba)))
+    pc.insert(b"b", PrefixEntry(blocks=tuple(bb)))
+    assert pc.lookup(b"a") is not None      # touches "a": "b" is now LRU
+    pc.insert(b"c", PrefixEntry(blocks=tuple(bc)))
+    assert len(pc) == 2
+    assert pc.lookup(b"b") is None          # evicted...
+    assert a.refcount(bb[0]) == 0           # ...and its page released
+    assert a.refcount(ba[0]) == 1
+
+
+# ---------------------------------------------------------------------------
+# Device-side pool semantics
+# ---------------------------------------------------------------------------
+def _prompt_arrays(rng, Hkv, P, Dh, pad=2):
+    k = jnp.asarray(rng.normal(size=(Hkv, P, Dh)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(Hkv, P, Dh)), jnp.float32)
+    pos = jnp.asarray([POS_EMPTY] * pad + list(range(P - pad)), jnp.int32)
+    return k, v, pos
+
+
+def test_copy_on_write_preserves_shared_prefix():
+    """Two rows mapping the same shared prompt pages diverge via appends;
+    the shared pages (the prefix-cache entry) must stay bit-identical."""
+    rng = np.random.default_rng(0)
+    Hkv, Dh, bs, nb, P, S = 2, 4, 4, 4, 6, 14
+    c = init_paged(2, Hkv, num_blocks=16, block_size=bs, head_dim=Dh,
+                   blocks_per_row=nb, seq_len=S, dtype=jnp.float32)
+    kp, vp, pp = _prompt_arrays(rng, Hkv, P, Dh)
+    # entry chain: full page 1, tail page 2 (P=6, bs=4); rows share page 1
+    # and own private tail copies 3 / 4 plus generation pages 5..8
+    c = write_prompt(c, kp, vp, pp, jnp.asarray([1, 2]), jnp.asarray(3),
+                     duplicate_tail=True)
+    from repro.kvcache.paged import copy_block
+    c = copy_block(c, jnp.asarray(2), jnp.asarray(4))
+    tables = jnp.asarray([[1, 3, 5, 6], [1, 4, 7, 8]], jnp.int32)
+    c = PagedKVCache(c.k_pool, c.v_pool, c.pos_pool, tables,
+                     jnp.full((2,), P, jnp.int32), seq_len=S)
+    entry_k = np.asarray(c.k_pool[jnp.asarray([1, 2])])
+    entry_pos = np.asarray(c.pos_pool[jnp.asarray([1, 2])])
+    for t in range(5):                       # divergent appends per row
+        kn = jnp.asarray(rng.normal(size=(2, Hkv, Dh)), jnp.float32)
+        c = paged_append(c, kn, kn * 2, jnp.full((2,), P - 2 + t, jnp.int32))
+    # shared pages untouched
+    np.testing.assert_array_equal(np.asarray(c.k_pool[jnp.asarray([1, 2])]),
+                                  entry_k)
+    np.testing.assert_array_equal(np.asarray(c.pos_pool[jnp.asarray([1, 2])]),
+                                  entry_pos)
+    k, v, pos = materialize(c)
+    # both rows still see the identical shared prefix...
+    np.testing.assert_array_equal(np.asarray(k[0, :, :P]),
+                                  np.asarray(k[1, :, :P]))
+    np.testing.assert_array_equal(np.asarray(pos[0, :, :P]),
+                                  np.asarray(pos[1, :, :P]))
+    # ...and genuinely diverged after it
+    assert not np.array_equal(np.asarray(k[0, :, P:P + 5]),
+                              np.asarray(k[1, :, P:P + 5]))
+
+
+def test_materialize_matches_contiguous_layout():
+    """A paged row materializes to exactly the contiguous cache arrays:
+    prompt + appends in temporal order, zeros/POS_EMPTY beyond fill."""
+    rng = np.random.default_rng(1)
+    Hkv, Dh, bs, nb, P, S = 2, 4, 4, 3, 6, 12
+    c = init_paged(1, Hkv, num_blocks=8, block_size=bs, head_dim=Dh,
+                   blocks_per_row=nb, seq_len=S, dtype=jnp.float32)
+    kp, vp, pp = _prompt_arrays(rng, Hkv, P, Dh)
+    c = write_prompt(c, kp, vp, pp, jnp.asarray([1, 2]), jnp.asarray(0),
+                     duplicate_tail=False)
+    c = PagedKVCache(c.k_pool, c.v_pool, c.pos_pool,
+                     jnp.asarray([[1, 2, 3]], jnp.int32),
+                     jnp.asarray([P], jnp.int32), seq_len=S)
+    appends = []
+    for t in range(4):
+        kn = jnp.asarray(rng.normal(size=(1, Hkv, Dh)), jnp.float32)
+        appends.append(np.asarray(kn[0]))
+        c = paged_append(c, kn, kn, jnp.asarray([P - 2 + t], jnp.int32))
+    k, _, pos = materialize(c)
+    want_k = np.concatenate([np.asarray(kp),
+                             np.stack(appends, axis=1),
+                             np.zeros((Hkv, S - P - 4, Dh), np.float32)],
+                            axis=1)
+    np.testing.assert_array_equal(np.asarray(k[0]), want_k)
+    want_pos = np.concatenate([np.asarray(pp), np.arange(P - 2, P + 2),
+                               np.full(S - P - 4, POS_EMPTY)])
+    np.testing.assert_array_equal(np.asarray(pos[0, 0]), want_pos)
+
+
+def test_paged_reset_rows_unmaps_only_targets():
+    c = init_paged(3, 2, num_blocks=8, block_size=4, head_dim=4,
+                   blocks_per_row=2, seq_len=8, dtype=jnp.float32)
+    c = PagedKVCache(c.k_pool, c.v_pool, c.pos_pool,
+                     jnp.ones((3, 2), jnp.int32),
+                     jnp.full((3,), 5, jnp.int32), seq_len=8)
+    out = paged_reset_rows(c, jnp.asarray([1]))
+    assert (np.asarray(out.block_tables[1]) == -1).all()
+    assert int(out.fill[1]) == 0
+    for row in (0, 2):
+        assert (np.asarray(out.block_tables[row]) == 1).all()
+        assert int(out.fill[row]) == 5
+
+
+# ---------------------------------------------------------------------------
+# Engine: token identity + prefix sharing across families
+# ---------------------------------------------------------------------------
+def _group_requests(n_prompts, group_size, caps, seed=1):
+    problems = make_problems(n_prompts, seed, "easy")
+    ids, mask, _ = encode_prompts(problems, PROMPT_LEN)
+    reqs, uid = [], 0
+    for i in range(n_prompts):
+        for _ in range(group_size):
+            reqs.append(Request(uid=uid, prompt=ids[i][mask[i]],
+                                max_new_tokens=caps[uid % len(caps)]))
+            uid += 1
+    return reqs
+
+
+def _run_pair(arch, compression, *, group=2, n_prompts=2, caps=(4, 6, 5, 3),
+              max_new=6, chunk=1, seed=7, block_size=12):
+    cfg = get_config(arch).smoke()
+    m = get_model(cfg)
+    params = m.init_params(cfg, jax.random.PRNGKey(0))
+    scfg = SparseRLConfig(kv_budget=16, kv_buffer=4, obs_window=2,
+                          num_sinks=1, compression=compression)
+    reqs = _group_requests(n_prompts, group, list(caps))
+    kw = dict(batch_size=2, prompt_len=PROMPT_LEN, max_new_tokens=max_new,
+              eos_id=TOKENIZER.eos_id, decode_chunk=chunk, seed=seed)
+    cont = ContinuousEngine(params, cfg, m, scfg, **kw).run(reqs)
+    eng = ContinuousEngine(params, cfg, m, scfg, cache_backend="paged",
+                           block_size=block_size, **kw)
+    paged = eng.run(reqs)
+    return eng, cont, paged
+
+
+@pytest.mark.parametrize("arch,compression,pool", [
+    ("qwen2.5-14b", "none", True),    # dense transformer: block-table pool
+    ("zamba2-1.2b", "rkv", False),    # hybrid: prefill-state splice sharing
+    ("mamba2-370m", "none", False),   # pure SSM: O(1) state, splice sharing
+])
+def test_paged_backend_token_identical(arch, compression, pool):
+    """The paged backend must emit byte-identical tokens and log-probs to
+    the contiguous continuous-batching path on the same seeds, for dense,
+    hybrid and SSM families — prefix sharing (and, for dense, the page
+    pool) must be invisible in the outputs."""
+    eng, cont, paged = _run_pair(arch, compression)
+    assert eng._pool_paged == pool
+    assert len(cont) == len(paged) == 4
+    for c, p in zip(cont, paged):
+        assert c.uid == p.uid
+        np.testing.assert_array_equal(c.tokens, p.tokens)
+        np.testing.assert_allclose(c.logps, p.logps, atol=0)
+        assert c.finish_reason == p.finish_reason
+    # shared prompts were prefilled once each
+    assert eng.stats["prefills"] == 2
+    assert eng.stats["prefix_hits"] == 2
+
+
+def test_prefix_hit_rate_group_sampling():
+    """G rollouts of one prompt: exactly one model prefill, cold hit rate
+    (G-1)/G (the paged backend's acceptance bar), and a block-table tail
+    page that does not divide the prompt length (copy-on-write exercised)."""
+    G = 4
+    eng, cont, paged = _run_pair("qwen2.5-14b", "none", group=G, n_prompts=1,
+                                 caps=(3, 6, 4, 5), block_size=12)
+    assert eng._has_tail                    # 16 % 12 != 0: COW path active
+    assert eng.stats["admissions"] == G
+    assert eng.stats["prefills"] == 1
+    assert eng.prefix_hit_rate == pytest.approx((G - 1) / G)
+    for c, p in zip(cont, paged):
+        np.testing.assert_array_equal(c.tokens, p.tokens)
+    # group members genuinely diverged (distinct uids -> distinct key chains)
+    assert len({p.tokens.tobytes() for p in paged}) > 1
+
+
+def test_paged_pool_pages_released_after_drain():
+    """After the queue drains, every row's page references are released —
+    only the prefix-cache entries keep pages pinned (no leak, no double
+    free across recycled rows)."""
+    eng, _, _ = _run_pair("qwen2.5-14b", "none", group=3, n_prompts=2,
+                          caps=(3, 7, 5, 8, 2, 4), chunk=2)
+    assert all(r is None for r in eng.rows)
+    assert eng.allocator.blocks_in_use == len(eng.prefix) * eng._npb
+    assert not bool(np.asarray(eng.active).any())
+    # retired rows are unmapped on device
+    assert (np.asarray(eng.state.caches.block_tables) == -1).all()
+    assert (np.asarray(eng.state.caches.fill) == 0).all()
+
+
+def test_paged_decode_chunk_invariance():
+    """decode_chunk changes harvest granularity only, pool backend included."""
+    _, _, paged1 = _run_pair("qwen2.5-14b", "none", chunk=1)
+    _, _, paged4 = _run_pair("qwen2.5-14b", "none", chunk=4)
+    for a, b in zip(paged1, paged4):
+        np.testing.assert_array_equal(a.tokens, b.tokens)
+
+
+def test_hit_path_pins_entry_against_lru_eviction():
+    """A prefix-cache hit must pin the entry's pages before allocating the
+    row's own pages: under pool pressure the LRU eviction can reach the
+    very entry being admitted, and unpinned pages would be freed and handed
+    straight back as the row's append pages (silent KV corruption).  With
+    the pin, a genuinely-too-small pool fails loudly (PoolExhausted) and
+    rolls the pins back cleanly."""
+    cfg = get_config("qwen2.5-14b").smoke()
+    m = get_model(cfg)
+    params = m.init_params(cfg, jax.random.PRNGKey(0))
+    scfg = SparseRLConfig(compression="none")
+    problems = make_problems(2, 3, "easy")
+    ids, mask, _ = encode_prompts(problems, PROMPT_LEN)
+    X, Y = ids[0][mask[0]], ids[1][mask[1]]
+    eng = ContinuousEngine(params, cfg, m, scfg, batch_size=2,
+                           prompt_len=PROMPT_LEN, max_new_tokens=8,
+                           eos_id=TOKENIZER.eos_id, cache_backend="paged",
+                           block_size=12, seed=0)
+    n_own = eng.blocks_per_row - eng._npb_full
+    eng._admit_one(Request(uid=0, prompt=Y), 0)   # long-running pins entry Y
+    eng._admit_one(Request(uid=1, prompt=X), 1)
+    for b in eng.rows[1].blocks:                  # X finishes, pages released
+        eng.allocator.release(b)
+    eng.rows[1] = None
+    x_blocks = eng.prefix.lookup(np.asarray(X, np.int32).tobytes()).blocks
+    # drain the free list completely: the admission is forced through
+    # eviction, which (after Y, whose full page row 0 pins) reaches entry X
+    # itself — whose pages the hit path must have pinned
+    eng.allocator.alloc(eng.allocator.num_free)
+    with pytest.raises(PoolExhausted):
+        eng._admit_one(Request(uid=2, prompt=X), 1)
+    assert eng.rows[1] is None                    # admission fully unwound
+    # entry X was evicted and the temporary pins rolled back: its pages are
+    # free again, never aliased into another row's table mid-admission
+    for b in x_blocks:
+        assert eng.allocator.refcount(b) == 0
+    # freed: X's npb pages + Y's entry-only tail page(s)
+    assert eng.allocator.num_free == eng._npb + (eng._npb - eng._npb_full)
+
+
+def test_paged_rejects_unknown_backend():
+    cfg = get_config("qwen2.5-14b").smoke()
+    m = get_model(cfg)
+    params = m.init_params(cfg, jax.random.PRNGKey(0))
+    with pytest.raises(ValueError):
+        ContinuousEngine(params, cfg, m, SparseRLConfig(compression="none"),
+                         batch_size=2, prompt_len=8, max_new_tokens=4,
+                         eos_id=1, cache_backend="virtual")

@@ -1,0 +1,115 @@
+#!/usr/bin/env python3
+"""Markdown link checker for the repo's documentation cross-references.
+
+Checks, with no network access and no third-party deps:
+
+1. Relative links ``[text](path)`` in README.md / DESIGN.md / ROADMAP.md
+   point at files that exist.
+2. Anchor links (``file.md#anchor`` or in-page ``#anchor``) resolve to a
+   heading in the target document (GitHub's slug rules: lowercase, strip
+   punctuation, spaces -> hyphens).
+3. Every ``DESIGN.md §Section`` reference — in the checked docs *and* in
+   src/ / tests/ / benchmarks/ docstrings — names a real DESIGN.md section
+   (prefix match, so prose may continue after the section name).
+
+Exit code 1 with a per-problem report when anything dangles; used as a CI
+step and by tests/test_docs.py so doc refactors can't silently rot links.
+
+  python tools/check_doc_links.py [repo_root]
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+DOCS = ("README.md", "DESIGN.md", "ROADMAP.md")
+CODE_GLOBS = ("src/**/*.py", "tests/*.py", "benchmarks/*.py", "examples/*.py")
+LINK_RE = re.compile(r"(?<!\!)\[[^\]]+\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*?)\s*$", re.M)
+SECTION_REF_RE = re.compile(r"§")
+
+
+def github_slug(heading: str) -> str:
+    s = heading.strip().lower()
+    s = re.sub(r"[^\w\- ]", "", s)          # drop punctuation (&, :, ...)
+    return s.replace(" ", "-")
+
+
+def headings_of(path: Path):
+    return HEADING_RE.findall(path.read_text(encoding="utf-8"))
+
+
+def check_links(root: Path):
+    problems = []
+    for name in DOCS:
+        doc = root / name
+        if not doc.exists():
+            problems.append(f"{name}: missing document")
+            continue
+        text = doc.read_text(encoding="utf-8")
+        for target in LINK_RE.findall(text):
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            path_part, _, anchor = target.partition("#")
+            dest = doc if not path_part else (doc.parent / path_part)
+            if not dest.exists():
+                problems.append(f"{name}: broken link -> {target}")
+                continue
+            if anchor and dest.suffix == ".md":
+                slugs = {github_slug(h) for h in headings_of(dest)}
+                if anchor not in slugs:
+                    problems.append(
+                        f"{name}: dangling anchor -> {target} "
+                        f"(no heading slugs to '{anchor}' in {dest.name})")
+    return problems
+
+
+def check_design_sections(root: Path):
+    """Every `DESIGN.md §...` reference (including `, §...` continuations)
+    must prefix-match a DESIGN.md section name.  Bare §-refs to the paper
+    (`paper §5.1`) or other docs are not checked."""
+    design = root / "DESIGN.md"
+    if not design.exists():
+        return ["DESIGN.md missing"]
+    sections = sorted(
+        {h for h in headings_of(design)}, key=len, reverse=True)
+    files = [root / n for n in DOCS]
+    for pat in CODE_GLOBS:
+        files.extend(sorted(root.glob(pat)))
+    problems = []
+    for f in files:
+        text = f.read_text(encoding="utf-8", errors="replace")
+        for m in SECTION_REF_RE.finditer(text):
+            context = re.sub(r"\s+", " ", text[max(0, m.start() - 70):
+                                               m.start()])
+            if "DESIGN.md" not in context:
+                continue                    # a paper/other-doc § reference
+            ref = text[m.end():m.end() + 80]
+            # docstring wrapping may break a section name across lines with
+            # indentation; collapse runs of whitespace before matching
+            ref = re.sub(r"\s+", " ", ref)
+            if ref.startswith("<"):
+                continue                    # meta-prose placeholder §<...>
+            if not any(ref.startswith(s) for s in sections):
+                problems.append(
+                    f"{f.relative_to(root)}: §-reference does not match any "
+                    f"DESIGN.md section: §{ref[:40]!r}")
+    return problems
+
+
+def main(argv=None) -> int:
+    root = Path(argv[1] if argv and len(argv) > 1
+                else Path(__file__).resolve().parent.parent)
+    problems = check_links(root) + check_design_sections(root)
+    for p in problems:
+        print(f"LINKCHECK: {p}")
+    if problems:
+        print(f"LINKCHECK: {len(problems)} problem(s)")
+        return 1
+    print("LINKCHECK: all markdown links and DESIGN.md §-references resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv))
