@@ -1,7 +1,11 @@
 """Shared benchmark scaffolding: smoke-scale training runs for the paper's
-tables/figures, with one function per experimental condition."""
+tables/figures, with one function per experimental condition, plus the
+machine-readable BENCH_*.json writers the CI regression gate
+(tools/bench_gate.py) compares against."""
 from __future__ import annotations
 
+import json
+import os
 import shutil
 import time
 from dataclasses import replace
@@ -15,6 +19,29 @@ from repro.runtime import Trainer, TrainerOptions
 
 ARCH = "qwen2.5-14b"          # qwen-family backbone (paper: Qwen2.5 series)
 ARCH_SMALL = "qwen1.5-32b"    # second family for cross-arch rows
+
+REPO_ROOT = os.path.normpath(
+    os.path.join(os.path.dirname(os.path.abspath(__file__)), ".."))
+
+
+def update_bench_json(path: str, section: str, payload) -> str:
+    """Merge one section into a machine-readable BENCH_*.json at the repo
+    root — the cross-PR perf trajectory record, and the committed baseline
+    the CI smoke regression gate (tools/bench_gate.py) diffs fresh runs
+    against.  Unknown/corrupt existing content is replaced, other sections
+    are preserved."""
+    data = {}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                data = json.load(f)
+        except (json.JSONDecodeError, OSError):
+            data = {}
+    data[section] = payload
+    with open(path, "w") as f:
+        json.dump(data, f, indent=1)
+        f.write("\n")
+    return path
 
 
 def make_trainer(condition: str, *, steps: int, seed: int = 0,

@@ -9,14 +9,13 @@ from __future__ import annotations
 
 import json
 import os
-from typing import Dict, List
+from typing import List
 
 import numpy as np
 
 from benchmarks.common import (
     make_trainer,
     run_condition,
-    timeit,
     toks_saving,
     window_mean,
 )

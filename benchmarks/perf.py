@@ -96,7 +96,6 @@ def kernel_bench(fast: bool = False) -> List[str]:
                f"interpret_mode=CPU_semantics_only")
 
     from repro.kernels import ref as R
-    from repro.kernels.flash_attention import flash_attention_fwd
     Sq = 128 if fast else 256
     qf = jnp.asarray(rng.normal(size=(1, Sq, 4, 32)), jnp.float32)
     kf = jnp.asarray(rng.normal(size=(1, Sq, 2, 32)), jnp.float32)

@@ -1,0 +1,213 @@
+"""Training-rollout benchmark: continuous-paged vs lockstep on one RL phase.
+
+This is the training-side counterpart of benchmarks/serving.py — the
+workload is a rollout *phase* exactly as the Trainer issues it
+(``num_prompts`` prompts x G group rollouts, group-major uids), not open
+serving traffic.  The lockstep baseline is the Trainer's historical backend:
+one full-width batch decoded for the global ``max_new`` — every row pays the
+pad-to-max tail.  The continuous-paged backend streams the same requests
+through `ContinuousEngine.run(group_size=G)` with ``cache_backend="paged"``:
+shared prompt pages prefilled once per group (cold prefix-hit rate
+(G-1)/G), per-request early exit freeing slots for the next group.  Both
+paths use identical per-request sampling-key chains, so outputs are
+token-identical and the comparison is pure scheduling + caching (DESIGN.md
+§Training on the continuous engine).
+
+Mixed response lengths come from per-request new-token caps with the serve
+CLI's long-tailed spread — the regime the paper's RL rollouts live in (most
+responses EOS early, a few run to the cap) and where the lockstep tail
+bleeds: its useful-token fraction is mean(len)/max_new.
+
+Also demonstrated: ``mismatch_kl_estimate`` masked to true response lengths
+(early-exited rows are right-padded; averaging the pad tail in would dilute
+and bias the Fig. 3 statistic).
+
+  PYTHONPATH=src python -m benchmarks.rollout --smoke
+
+Row format matches benchmarks.run (``name,us_per_call,derived``);
+machine-readable results land in reports/benchmarks/rollout.json and — the
+cross-PR perf trajectory + the CI smoke regression-gate baseline
+(tools/bench_gate.py) — BENCH_rollout.json at the repo root.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from typing import List
+
+import jax
+import numpy as np
+
+from benchmarks.common import REPO_ROOT, update_bench_json
+
+OUT = "reports/benchmarks"
+BENCH_JSON = os.path.join(REPO_ROOT, "BENCH_rollout.json")
+
+
+def _phase_requests(n_prompts: int, group_size: int, prompt_len: int,
+                    max_new: int, seed: int):
+    """Group-major phase workload with mixed-length caps: prompt p's group
+    occupies uids [p*G, (p+1)*G), every member shares the prompt (the prefix
+    the paged backend deduplicates) but draws its own response cap."""
+    from repro.data import encode_prompts, make_problems
+    from repro.rollout import Request
+
+    problems = make_problems(n_prompts, seed, "easy")
+    ids, mask, _ = encode_prompts(problems, prompt_len)
+    total = n_prompts * group_size
+    rng = np.random.default_rng(seed + 1)
+    lo = max(2, max_new // 16)
+    spread = [lo, max(lo, max_new // 4), max(lo, max_new // 2), max_new]
+    caps = rng.choice(spread, size=total, p=[0.4, 0.3, 0.2, 0.1])
+    return [Request(uid=u, prompt=ids[u // group_size][mask[u // group_size]],
+                    max_new_tokens=int(caps[u]))
+            for u in range(total)]
+
+
+def _bench_phase(arch: str, policy: str, group_size: int, n_prompts: int,
+                 batch: int, prompt_len: int, max_new: int, block_size: int,
+                 decode_chunk: int, seed: int):
+    """One phase cell: lockstep full-width batch vs continuous-paged engine
+    on the identical request set.  Returns the measured row dict."""
+    from repro.configs import SparseRLConfig, get_config
+    from repro.data import TOKENIZER
+    from repro.models import get_model
+    from repro.rollout import (
+        ContinuousEngine,
+        LockstepServer,
+        build_train_rollout,
+        mismatch_kl_estimate,
+        rescore,
+    )
+    from dataclasses import replace
+
+    cfg = get_config(arch).smoke()
+    m = get_model(cfg)
+    params = m.init_params(cfg, jax.random.PRNGKey(seed))
+    scfg = SparseRLConfig(compression=policy)
+    if policy != "none":
+        scfg = replace(scfg, kv_budget=16, kv_buffer=8, obs_window=4,
+                       num_sinks=2)
+    total = n_prompts * group_size
+    reqs = _phase_requests(n_prompts, group_size, prompt_len, max_new, seed)
+
+    # the Trainer's lockstep shape: ONE batch as wide as the whole phase,
+    # decoded to the global max_new (LockstepServer with batch_size=total)
+    srv = LockstepServer(params, cfg, m, scfg, batch_size=total,
+                         prompt_len=prompt_len, max_new_tokens=max_new,
+                         eos_id=TOKENIZER.eos_id, seed=seed)
+    eng = ContinuousEngine(params, cfg, m, scfg, batch_size=batch,
+                           prompt_len=prompt_len, max_new_tokens=max_new,
+                           eos_id=TOKENIZER.eos_id, decode_chunk=decode_chunk,
+                           seed=seed, cache_backend="paged",
+                           block_size=block_size)
+    # cold run compiles both + measures the sharing behaviour
+    lock, cont = srv.run(reqs), eng.run(reqs, group_size=group_size)
+    identical = all(np.array_equal(a.tokens, b.tokens)
+                    for a, b in zip(cont, lock))
+    hit_rate = eng.prefix_hit_rate
+    prefills = int(eng.stats["prefills"])
+    eng.end_phase()      # bulk release + allocator leak check, phase-style
+    # warm best-of-N phase wall-clock (what the Trainer pays every step)
+    t_lock = t_cont = float("inf")
+    for _ in range(3):
+        t0 = time.perf_counter()
+        lock = srv.run(reqs)
+        t_lock = min(t_lock, time.perf_counter() - t0)
+        eng.reset_clock()
+        t0 = time.perf_counter()
+        cont = eng.run(reqs, group_size=group_size)
+        t_cont = min(t_cont, time.perf_counter() - t0)
+        eng.end_phase()
+
+    # trainer-ready assembly + the masked mismatch-KL statistic
+    ids = np.zeros((total, prompt_len), np.int32)
+    pmask = np.zeros((total, prompt_len), bool)
+    for r in reqs:
+        p = np.asarray(r.prompt, np.int32)
+        ids[r.uid, prompt_len - len(p):] = p
+        pmask[r.uid, prompt_len - len(p):] = True
+    tr = build_train_rollout(cont, ids, pmask, max_new_tokens=max_new,
+                             pad_id=eng.pad_id, stats=eng.stats)
+    logp_old = rescore(params, cfg, m, tr.rollout)
+    kl = float(mismatch_kl_estimate(logp_old, tr.rollout.logp_sparse,
+                                    tr.rollout.resp_mask,
+                                    lengths=tr.rollout.lengths))
+    toks = int(np.sum(np.asarray(tr.rollout.lengths)))
+    return dict(arch=arch, policy=policy, group_size=group_size,
+                n_prompts=n_prompts, batch=batch, max_new=max_new,
+                tokens=toks, lockstep_s=t_lock, continuous_s=t_cont,
+                lockstep_tps=toks / t_lock, continuous_tps=toks / t_cont,
+                speedup=t_lock / t_cont, identical=identical,
+                prefix_hit_rate=hit_rate,
+                target_hit_rate=(group_size - 1) / group_size,
+                prefills=prefills, admissions=int(eng.stats["admissions"]),
+                lockstep_decode_steps=max_new,
+                useful_token_frac=toks / (total * max_new),
+                mismatch_kl=kl)
+
+
+def rollout_train_bench(fast: bool = False, *, arch: str = "qwen2.5-14b",
+                        seed: int = 0) -> List[str]:
+    """Continuous-paged rollout phase vs lockstep; writes the
+    ``rollout_phase`` section of BENCH_rollout.json.  The acceptance bound
+    (continuous phase wall-clock <= lockstep on mixed-length groups) is
+    enforced here and re-enforced by the CI gate on the smoke section."""
+    cells = (("none", 4, 4),) if fast else (("none", 8, 4), ("rkv", 8, 4))
+    max_new = 32 if fast else 64
+    rows, out = [], []
+    for policy, group_size, n_prompts in cells:
+        # engine rows = half the phase: slots recycle across groups but each
+        # decode step stays wide enough to amortize dispatch (the Trainer's
+        # decode_batch auto-default makes the same choice)
+        batch = n_prompts * group_size // 2
+        r = _bench_phase(arch, policy, group_size, n_prompts, batch=batch,
+                         prompt_len=16, max_new=max_new, block_size=16,
+                         decode_chunk=8, seed=seed)
+        rows.append(r)
+        base = f"rollout_phase/{policy}/g{group_size}"
+        out.append(f"{base}/lockstep,{r['lockstep_s']*1e6:.0f},"
+                   f"toks_per_s={r['lockstep_tps']:.1f};"
+                   f"useful_frac={r['useful_token_frac']:.2f}")
+        out.append(f"{base}/continuous_paged,{r['continuous_s']*1e6:.0f},"
+                   f"toks_per_s={r['continuous_tps']:.1f};"
+                   f"speedup={r['speedup']:.2f};"
+                   f"identical={r['identical']};"
+                   f"prefix_hit_rate={r['prefix_hit_rate']:.2f};"
+                   f"mismatch_kl={r['mismatch_kl']:.4f}")
+    os.makedirs(OUT, exist_ok=True)
+    with open(os.path.join(OUT, "rollout.json"), "w") as f:
+        json.dump(rows, f, indent=1)
+    update_bench_json(BENCH_JSON,
+                      "rollout_phase" + ("_smoke" if fast else ""), rows)
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small fast workload (CPU CI)")
+    ap.add_argument("--arch", default="qwen2.5-14b")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+    print("name,us_per_call,derived")
+    for r in rollout_train_bench(fast=args.smoke, arch=args.arch,
+                                 seed=args.seed):
+        print(r, flush=True)
+    # acceptance bar: the continuous-paged phase must not be slower than the
+    # lockstep phase, token-identically (the ISSUE-3 bound; the CI smoke
+    # gate re-checks the committed JSON so it cannot silently regress)
+    with open(os.path.join(OUT, "rollout.json")) as f:
+        rows = json.load(f)
+    worst = min(r["speedup"] for r in rows)
+    ok = worst >= 1.0 and all(r["identical"] for r in rows)
+    print(f"continuous_paged<=lockstep phase wall-clock: worst speedup "
+          f"{worst:.2f}x, identical={all(r['identical'] for r in rows)} "
+          f"({'PASS' if ok else 'FAIL'}) -> {BENCH_JSON}")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

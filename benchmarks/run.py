@@ -1,8 +1,10 @@
 """Benchmark harness entry point — one function per paper table/figure plus
-the perf benches.  Prints ``name,us_per_call,derived`` CSV; the serving
-benches additionally update the machine-readable ``BENCH_serving.json`` at
-the repo root (throughput, p50/p99 latency, prefix-hit rate) so the perf
-trajectory is tracked across PRs.
+the perf benches.  Prints ``name,us_per_call,derived`` CSV; the serving and
+training-rollout benches additionally update the machine-readable
+``BENCH_serving.json`` / ``BENCH_rollout.json`` at the repo root
+(throughput, p50/p99 latency, prefix-hit rate, phase wall-clock) so the
+perf trajectory is tracked across PRs and regression-gated in CI
+(tools/bench_gate.py).
 
   PYTHONPATH=src python -m benchmarks.run [--fast] [--only serving,kernels]
 """
@@ -24,6 +26,7 @@ def main() -> None:
 
     from benchmarks import paper_tables as P
     from benchmarks import perf as F
+    from benchmarks import rollout as R
     from benchmarks import serving as S
 
     benches = [
@@ -40,6 +43,7 @@ def main() -> None:
         ("sharding", F.sharding_fallback_bench),
         ("serving", S.serving_bench),
         ("serving_paged", S.paged_prefix_bench),
+        ("rollout_train", R.rollout_train_bench),
     ]
     if args.only:
         keep = set(args.only.split(","))

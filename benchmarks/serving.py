@@ -33,10 +33,11 @@ from typing import List, Optional
 import jax
 import numpy as np
 
+from benchmarks.common import REPO_ROOT
+from benchmarks.common import update_bench_json as _update_json
+
 OUT = "reports/benchmarks"
-ROOT = os.path.normpath(os.path.join(os.path.dirname(os.path.abspath(__file__)),
-                                     ".."))
-BENCH_JSON = os.path.join(ROOT, "BENCH_serving.json")
+BENCH_JSON = os.path.join(REPO_ROOT, "BENCH_serving.json")
 
 
 def _pct(completions, q):
@@ -46,20 +47,8 @@ def _pct(completions, q):
 
 
 def update_bench_json(section: str, payload) -> str:
-    """Merge one section into the machine-readable BENCH_serving.json at the
-    repo root (the cross-PR perf trajectory record)."""
-    data = {}
-    if os.path.exists(BENCH_JSON):
-        try:
-            with open(BENCH_JSON) as f:
-                data = json.load(f)
-        except (json.JSONDecodeError, OSError):
-            data = {}
-    data[section] = payload
-    with open(BENCH_JSON, "w") as f:
-        json.dump(data, f, indent=1)
-        f.write("\n")
-    return BENCH_JSON
+    """Merge one section into BENCH_serving.json (see common.py helper)."""
+    return _update_json(BENCH_JSON, section, payload)
 
 
 def _make_requests(n: int, prompt_len: int, max_new: int, seed: int):

@@ -11,8 +11,7 @@ bound per-architecture by the registry.
 """
 from __future__ import annotations
 
-import dataclasses
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 from typing import Optional, Tuple
 
 # ---------------------------------------------------------------------------

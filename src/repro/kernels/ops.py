@@ -8,7 +8,6 @@ pure-jnp oracle (the production fallback / A-B testing switch).
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.budget_attention import budget_attention as _budget_attention

@@ -25,7 +25,7 @@ H2O/SnapKV/R-KV semantics.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional, Tuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp

@@ -310,6 +310,22 @@ class BlockAllocator:
             return True
         return False
 
+    def release_many(self, blocks) -> int:
+        """Bulk `release` — one call per page chain instead of per page.
+
+        The RL-training path retires whole groups at once (a finished row's
+        chain at harvest, a cancelled straggler's chain at group close, and
+        every prefix-cache pin at phase end), so the bulk form keeps those
+        paths single-statement and atomic-looking in the scheduler.  Fails
+        on the FIRST bad page exactly like `release` (double frees must not
+        be silently swallowed mid-chain).  Returns how many pages went back
+        to the free list.
+        """
+        freed = 0
+        for b in blocks:
+            freed += bool(self.release(b))
+        return freed
+
     def refcount(self, block: int) -> int:
         return self._ref[block]
 
@@ -382,8 +398,7 @@ class PrefixCache:
             return False
         _, entry = self._entries.popitem(last=False)
         if self.allocator is not None:
-            for b in entry.blocks:
-                self.allocator.release(b)
+            self.allocator.release_many(entry.blocks)
         return True
 
     def clear(self) -> None:

@@ -26,14 +26,13 @@ Conventions:
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional
 
 from repro.configs.base import (
     AUDIO,
     HYBRID,
     MOE,
     SSM,
-    VLM,
     ModelConfig,
     ShapeSpec,
     SparseRLConfig,

@@ -27,7 +27,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import ARCH_IDS, SparseRLConfig, TrainConfig, get_config, get_shapes
-from repro.configs.base import AUDIO, HYBRID, SSM, ModelConfig, ShapeSpec
+from repro.configs.base import HYBRID, SSM, ModelConfig, ShapeSpec
 from repro.distributed.sharding import named_sharding, param_rules, use_mesh_rules
 from repro.launch import specs as S
 from repro.launch import steps as ST

@@ -9,7 +9,7 @@ from __future__ import annotations
 import argparse
 import json
 import os
-from typing import Dict, List, Optional
+from typing import Dict, List
 
 from repro.configs import ARCH_IDS, SparseRLConfig, get_config, get_shapes
 from repro.launch.costs import MeshShape, cell_cost

@@ -6,11 +6,10 @@ The same specs serve the dry-run lowering and the roofline accounting.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import (
     AUDIO,

@@ -14,8 +14,7 @@ can ``jax.jit(...).lower(*ShapeDtypeStructs).compile()`` them directly, and
 """
 from __future__ import annotations
 
-import functools
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp

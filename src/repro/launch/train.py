@@ -31,6 +31,25 @@ def main(argv=None):
     ap.add_argument("--no-reweight", action="store_true")
     ap.add_argument("--kv-budget", type=int, default=None)
     ap.add_argument("--group-size", type=int, default=8)
+    ap.add_argument("--rollout-backend", default="lockstep",
+                    choices=["lockstep", "continuous"],
+                    help="rollout phase driver: fixed-length lockstep scan, "
+                         "or the continuous-batching engine with group "
+                         "admission and EOS early-exit — see DESIGN.md "
+                         "§Training on the continuous engine")
+    ap.add_argument("--cache-backend", default="contiguous",
+                    choices=["contiguous", "paged"],
+                    help="continuous backend only: paged = prompt pages "
+                         "prefilled once per group, refcount-shared")
+    ap.add_argument("--decode-batch", type=int, default=0,
+                    help="continuous backend: engine row slots "
+                         "(0 = half the phase's requests)")
+    ap.add_argument("--decode-chunk", type=int, default=4,
+                    help="continuous backend: decode steps per host harvest")
+    ap.add_argument("--group-slack", type=int, default=0,
+                    help="over-provision each group by k rollouts; keep G "
+                         "(continuous: first G to finish, stragglers "
+                         "cancelled mid-flight)")
     ap.add_argument("--lr", type=float, default=None)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt-dir", default="/tmp/srl_train")
@@ -74,7 +93,12 @@ def main(argv=None):
                        warmup_steps=max(args.steps // 20, 2),
                        checkpoint_every=max(args.steps // 4, 10))
     opts = TrainerOptions(num_prompts=16 if smoke_scale else 128,
-                          prompt_len=24, max_new_tokens=scfg.max_new_tokens)
+                          prompt_len=24, max_new_tokens=scfg.max_new_tokens,
+                          rollout_backend=args.rollout_backend,
+                          cache_backend=args.cache_backend,
+                          decode_batch=args.decode_batch,
+                          decode_chunk=args.decode_chunk,
+                          group_slack=args.group_slack)
     tr = Trainer(cfg, scfg, tcfg, opts)
     hist = tr.train(args.steps - tr.step, log_every=10)
     tr.save_checkpoint()

@@ -8,7 +8,7 @@ states (cross K/V computed once at prefill).
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional, Tuple
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp

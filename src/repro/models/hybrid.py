@@ -10,7 +10,7 @@ shared attn block), plus L - n_super*K trailing mamba layers.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional, Tuple
+from typing import NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp

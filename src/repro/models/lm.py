@@ -15,11 +15,10 @@ convention consumed by the rollout engine, trainer and launcher:
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Callable, Optional, Tuple
+from typing import Callable
 
-import jax.numpy as jnp
 
-from repro.configs.base import AUDIO, DENSE, HYBRID, MOE, SSM, VLM, ModelConfig, SparseRLConfig
+from repro.configs.base import AUDIO, DENSE, HYBRID, MOE, SSM, VLM, ModelConfig
 
 
 @dataclass(frozen=True)

@@ -11,7 +11,7 @@ Shapes: x heads H = d_inner / P (head dim P); B/C shared across heads
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional, Tuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp

@@ -19,7 +19,6 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, dtype_of
 from repro.distributed.sharding import lsc
-from repro.models.common import dense_init
 
 
 def moe_init(rng, cfg: ModelConfig):

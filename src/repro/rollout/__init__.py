@@ -2,13 +2,17 @@
 
 Two drivers share one compiled decode core (`engine.decode_sample_step`):
 
-* :func:`generate` — lockstep fixed-length rollout (the RL training path).
-* :class:`ContinuousEngine` — continuous-batching scheduler (the serving
-  path): request queue, slot recycling, prefill-into-running-batch.  Its
-  lockstep oracle/baseline is :func:`serve_lockstep`.
+* :func:`generate` — lockstep fixed-length rollout (the RL training
+  baseline backend).
+* :class:`ContinuousEngine` — continuous-batching scheduler: request queue,
+  slot recycling, prefill-into-running-batch.  It serves inference traffic
+  AND, via ``Trainer(rollout_backend="continuous")``, the RL training
+  rollout phase (group admission + :func:`build_train_rollout` assembling
+  Completions into the lockstep `RolloutBatch` layout).  Its lockstep
+  oracle/baseline is :func:`serve_lockstep`.
 
-See DESIGN.md §Sampling and §Continuous-batching for the sampling-key and
-scheduling contracts.
+See DESIGN.md §Sampling, §Continuous-batching and §Training on the
+continuous engine for the sampling-key, scheduling and group contracts.
 """
 from repro.rollout.continuous import (
     Completion,
@@ -19,6 +23,8 @@ from repro.rollout.continuous import (
 )
 from repro.rollout.engine import (
     RolloutBatch,
+    TrainRollout,
+    build_train_rollout,
     decode_sample_step,
     fold_row_keys,
     generate,
@@ -32,7 +38,8 @@ from repro.rollout.engine import (
 )
 
 __all__ = [
-    "RolloutBatch", "generate", "rescore", "rescore_parts",
+    "RolloutBatch", "TrainRollout", "build_train_rollout",
+    "generate", "rescore", "rescore_parts",
     "sample_token", "sample_token_per_row", "fold_row_keys",
     "decode_sample_step", "rollout_slots", "paged_rollout_geometry",
     "mismatch_kl_estimate",

@@ -100,6 +100,8 @@ class Completion:
     admit_time: float
     finish_time: float
     row: int
+    ents: Optional[np.ndarray] = None  # sampling entropy per token (training
+                                # telemetry; None from the lockstep server)
 
     @property
     def queue_wait(self) -> float:
@@ -117,6 +119,7 @@ class _RowState:
     admit_time: float
     tok_chunks: List[np.ndarray] = field(default_factory=list)
     logp_chunks: List[np.ndarray] = field(default_factory=list)
+    ent_chunks: List[np.ndarray] = field(default_factory=list)
     n: int = 0                  # tokens emitted so far
     blocks: List[int] = field(default_factory=list)  # paged: pages this row
                                 # holds a reference on (released at finish)
@@ -382,14 +385,14 @@ class ContinuousEngine:
             def step(carry, _):
                 state, logits, counts = carry
                 keys_t = jax.vmap(jax.random.fold_in)(row_keys, counts)
-                state, logits, tok, logp, _ = decode_sample_step(
+                state, logits, tok, logp, ent = decode_sample_step(
                     p, cfg, mfns, scfg, state, logits, keys_t, active,
                     pad_id=pad_id, per_row_keys=True)
-                return (state, logits, counts + 1), (tok, logp)
+                return (state, logits, counts + 1), (tok, logp, ent)
 
-            (state, logits, counts), (toks, logps) = jax.lax.scan(
+            (state, logits, counts), (toks, logps, ents) = jax.lax.scan(
                 step, (state, logits, counts), None, length=decode_chunk)
-            return state, logits, counts, toks, logps
+            return state, logits, counts, toks, logps, ents
 
         self._chunk = jax.jit(chunk, donate_argnums=(1, 2, 3))
 
@@ -406,7 +409,7 @@ class ContinuousEngine:
         self.stats: Dict[str, float] = {
             "decode_steps": 0, "chunks": 0, "admissions": 0,
             "wasted_row_steps": 0, "prefills": 0, "prefix_hits": 0,
-            "blocks_in_use_peak": 0}
+            "blocks_in_use_peak": 0, "cancelled": 0}
 
     # ------------------------------------------------------------------
     def _bootstrap_state(self):
@@ -470,6 +473,38 @@ class ContinuousEngine:
         self.now = 0.0
         for k in self.stats:
             self.stats[k] = 0
+
+    # -- RL-phase lifecycle (training backend) --------------------------
+    # (contracts: DESIGN.md §Training on the continuous engine)
+    def begin_phase(self, params=None, base_key=None) -> None:
+        """Point the engine at this phase's learner weights and sampling key.
+
+        Both are plain (donation-free) arguments of the compiled programs,
+        so swapping them between RL phases never recompiles anything — the
+        engine built at trainer init serves every phase.  Also zeroes the
+        clock/counters so per-phase stats are honest.
+        """
+        if params is not None:
+            self.params = params
+        if base_key is not None:
+            self._base_key = base_key
+        self.reset_clock()
+
+    def end_phase(self) -> Dict[str, float]:
+        """Bulk release at RL phase end: drop every prefix-cache pin (the
+        next phase's weights invalidate cached prefills anyway) and verify
+        the page pool drained — a leaked refcount here would slowly eat the
+        pool across phases, so it is an error, not a warning.  Returns a
+        snapshot of the phase's counters."""
+        if self.prefix is not None:
+            self.prefix.clear()
+        if self.allocator is not None:
+            leaked = self.allocator.blocks_in_use
+            if leaked:
+                raise RuntimeError(
+                    f"paged pool leak at phase end: {leaked} page(s) still "
+                    f"referenced after prefix-cache clear")
+        return dict(self.stats)
 
     @property
     def prefix_hit_rate(self) -> float:
@@ -606,26 +641,79 @@ class ContinuousEngine:
                 else np.zeros((0,), np.int32))
         logps = (np.concatenate(rs.logp_chunks) if rs.logp_chunks
                  else np.zeros((0,), np.float32))
+        ents = (np.concatenate(rs.ent_chunks) if rs.ent_chunks
+                else np.zeros((0,), np.float32))
         out.append(Completion(
             uid=rs.req.uid, prompt=rs.req.prompt,
             tokens=toks.astype(np.int32), logps=logps.astype(np.float32),
             finish_reason=finish_reason, arrival_time=rs.req.arrival_time,
-            admit_time=rs.admit_time, finish_time=self.now, row=row))
+            admit_time=rs.admit_time, finish_time=self.now, row=row,
+            ents=ents.astype(np.float32)))
         if rs.blocks:
             # drop this row's page references; shared prompt pages stay
             # alive as long as the prefix cache (or a sibling row) pins them
-            for b in rs.blocks:
-                self.allocator.release(b)
+            self.allocator.release_many(rs.blocks)
         self.rows[row] = None
 
-    def run(self, requests: Sequence[Request]) -> List[Completion]:
+    def _cancel_row(self, row: int) -> None:
+        """Abort a row's in-flight request (group over-provisioning: a
+        straggler whose group already collected its G finishers).  No
+        Completion is produced; the row's pages go back to the pool and the
+        slot is wiped so the next admission sees a clean row."""
+        rs = self.rows[row]
+        if rs.blocks:
+            self.allocator.release_many(rs.blocks)
+        self.rows[row] = None
+        self.state, self.active = self._retire(self.state, self.active, row)
+        self.stats["cancelled"] += 1
+
+    def run(self, requests: Sequence[Request], *,
+            group_size: Optional[int] = None,
+            group_slack: int = 0) -> List[Completion]:
         """Serve ``requests`` to completion; returns Completions sorted by uid.
 
         Requests become admissible once the virtual clock passes their
         ``arrival_time``; the clock advances by the measured wall time of
         each admission/decode chunk and jumps over idle gaps, so latency
         statistics are honest service measurements without real-time sleeps.
+
+        ``group_size``/``group_slack`` enable the RL-training group
+        discipline (DESIGN.md §Training on the continuous engine): uids must
+        be group-major over groups of ``group_size + group_slack`` requests
+        (``gid = uid // (G + slack)``).  With slack > 0 each group is
+        over-provisioned; the *first G to finish* are kept (first-G-finished
+        admission) and the moment a group collects its G finishers its
+        stragglers are cancelled — queued members are dropped and in-flight
+        members retired — so their slots admit the next group instead of
+        decoding a tail nobody will use.  Exactly G Completions per group
+        come back.
         """
+        track_groups = group_size is not None and group_slack > 0
+        Gs = (group_size + group_slack) if track_groups else 0
+        finished_in: Dict[int, int] = {}
+
+        def group_done(uid: int) -> bool:
+            return (track_groups
+                    and finished_in.get(uid // Gs, 0) >= group_size)
+
+        def on_finished(uid: int) -> None:
+            """Count a finisher; on the G-th, cancel the group's stragglers
+            (queued members drop, in-flight members retire)."""
+            if not track_groups:
+                return
+            gid = uid // Gs
+            finished_in[gid] = finished_in.get(gid, 0) + 1
+            if finished_in[gid] != group_size:
+                return
+            survivors = [r for r in pending if r.uid // Gs != gid]
+            if len(survivors) != len(pending):
+                self.stats["cancelled"] += len(pending) - len(survivors)
+                pending.clear()
+                pending.extend(survivors)
+            for r2, rs2 in enumerate(self.rows):
+                if rs2 is not None and rs2.req.uid // Gs == gid:
+                    self._cancel_row(r2)
+
         pending = deque(sorted(requests,
                                key=lambda r: (r.arrival_time, r.uid)))
         out: List[Completion] = []
@@ -640,10 +728,12 @@ class ContinuousEngine:
                 # idle: jump the virtual clock to the next arrival
                 self.now = max(self.now, pending[0].arrival_time)
                 continue
-            (self.state, self.logits, self.counts, toks, logps) = self._chunk(
+            (self.state, self.logits, self.counts, toks, logps,
+             ents) = self._chunk(
                 self.params, self.state, self.logits, self.counts,
                 self.active, self.row_keys)
-            toks_h, logps_h = jax.device_get((toks, logps))  # (chunk, B)
+            toks_h, logps_h, ents_h = jax.device_get(
+                (toks, logps, ents))                           # (chunk, B)
             self.now += time.perf_counter() - t0
             t_harvest = time.perf_counter()
             self.stats["chunks"] += 1
@@ -652,6 +742,11 @@ class ContinuousEngine:
                 rs = self.rows[row]
                 if rs is None:
                     self.stats["wasted_row_steps"] += self.decode_chunk
+                    continue
+                if group_done(rs.req.uid):
+                    # a sibling finishing earlier in this sweep closed the
+                    # group; this straggler's chunk is discarded
+                    self._cancel_row(row)
                     continue
                 remaining = self._cap(rs.req) - rs.n
                 window = toks_h[:remaining, row]
@@ -664,11 +759,14 @@ class ContinuousEngine:
                     take, finish = self.decode_chunk, None
                 rs.tok_chunks.append(toks_h[:take, row])
                 rs.logp_chunks.append(logps_h[:take, row])
+                rs.ent_chunks.append(ents_h[:take, row])
                 rs.n += take
                 if finish is None:
                     continue
                 self.stats["wasted_row_steps"] += self.decode_chunk - take
+                uid = rs.req.uid
                 self._finish_row(row, finish, out)
+                on_finished(uid)
                 # slot recycling: re-admit straight into the freed row when
                 # the queue has an arrived request (the admission splice
                 # overwrites the whole block); otherwise wipe it

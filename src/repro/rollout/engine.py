@@ -21,11 +21,11 @@ documented in DESIGN.md §Sampling.
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import NamedTuple, Optional, Tuple
+from typing import Dict, NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ModelConfig, SparseRLConfig
 from repro.models import ModelFns
@@ -46,6 +46,74 @@ class RolloutBatch(NamedTuple):
 
     def full_mask(self) -> jnp.ndarray:
         return jnp.concatenate([self.prompt_mask, self.resp_mask], axis=1)
+
+
+class TrainRollout(NamedTuple):
+    """One RL rollout phase produced by the continuous engine.
+
+    ``rollout`` is group-major and trainer-ready: the same (B, T) layout the
+    lockstep `generate` returns, assembled from per-request Completions (the
+    per-token ``logp_sparse`` comes from the sampler pass recorded in-engine,
+    so rejection sampling and Eq. 7 reweighting consume identical inputs on
+    both backends — DESIGN.md §Training on the continuous engine).  ``keep``
+    maps each row back to the uid of the submitted request (group-major
+    ascending; with ``group_slack`` the dropped stragglers are absent), so
+    the caller can align answers/rewards.  ``finished_eos`` marks rows that
+    exited on EOS before the token cap — the early-exit rows whose freed
+    slots admitted the next group.
+    """
+    rollout: RolloutBatch
+    keep: np.ndarray          # (B,) int32 kept request uids
+    finished_eos: np.ndarray  # (B,) bool
+    stats: Dict[str, float]   # engine counter snapshot for telemetry
+
+
+def build_train_rollout(completions: Sequence, prompt_tokens: np.ndarray,
+                        prompt_mask: np.ndarray, *, max_new_tokens: int,
+                        pad_id: int = 0,
+                        stats: Optional[Dict[str, float]] = None
+                        ) -> TrainRollout:
+    """Assemble engine Completions into the lockstep `RolloutBatch` layout.
+
+    ``prompt_tokens``/``prompt_mask`` are the tiled (total_requests, P)
+    arrays the requests were cut from; rows are selected by completion uid so
+    prompts stay bit-identical to the lockstep path.  Early-exited rows are
+    right-padded to ``max_new_tokens`` with ``pad_id`` (the same id the
+    engine fed and `generate` emits on inactive rows — pass the engine's,
+    don't assume 0), ``resp_mask`` False and ``logp_sparse`` 0 on the tail
+    — exactly the post-EOS convention of `generate` (active rows only), so
+    both backends feed the same masked arrays to rescore and the Eq. 7
+    loss.
+    """
+    comps = sorted(completions, key=lambda c: c.uid)
+    B, T = len(comps), max_new_tokens
+    keep = np.asarray([c.uid for c in comps], np.int32)
+    resp = np.full((B, T), pad_id, np.int32)
+    logp = np.zeros((B, T), np.float32)
+    mask = np.zeros((B, T), bool)
+    lengths = np.zeros((B,), np.int32)
+    entropy = np.zeros((B,), np.float32)
+    eos = np.zeros((B,), bool)
+    for i, c in enumerate(comps):
+        n = len(c.tokens)
+        assert n <= T, (n, T)
+        resp[i, :n] = c.tokens
+        logp[i, :n] = c.logps
+        mask[i, :n] = True
+        lengths[i] = n
+        eos[i] = c.finish_reason == "eos"
+        if c.ents is not None and n:
+            entropy[i] = float(np.mean(c.ents[:n]))
+    ro = RolloutBatch(
+        prompt_tokens=jnp.asarray(prompt_tokens[keep], jnp.int32),
+        prompt_mask=jnp.asarray(prompt_mask[keep], bool),
+        resp_tokens=jnp.asarray(resp),
+        resp_mask=jnp.asarray(mask),
+        logp_sparse=jnp.asarray(logp),
+        lengths=jnp.asarray(lengths),
+        entropy=jnp.asarray(entropy))
+    return TrainRollout(rollout=ro, keep=keep, finished_eos=eos,
+                        stats=dict(stats or {}))
 
 
 def sample_token(rng, logits, temperature: float, top_p: float
@@ -238,7 +306,22 @@ def rescore(params, cfg: ModelConfig, mfns: ModelFns, ro: RolloutBatch,
 
 
 def mismatch_kl_estimate(logp_old: jnp.ndarray, logp_sparse: jnp.ndarray,
-                         mask: jnp.ndarray) -> jnp.ndarray:
-    """Monte-Carlo KL(pi_sparse || pi_old) on sampled tokens (paper Fig. 3)."""
+                         mask: jnp.ndarray,
+                         lengths: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Monte-Carlo KL(pi_sparse || pi_old) on sampled tokens (paper Fig. 3).
+
+    ``lengths`` (optional, (B,) response lengths) additionally masks the
+    padded tail of early-exited rows.  Continuous-engine rollouts EOS at
+    per-row lengths and are right-padded to the batch width; a caller-built
+    mask that covers the full width (e.g. ones) would average those pad
+    positions in — their ``logp_sparse`` is exactly 0 while ``logp_old`` is
+    the teacher-forced log-prob of a pad token, so the estimate gets diluted
+    AND biased.  Passing ``lengths`` clips the mask to real tokens so both
+    backends report the same statistic.
+    """
+    mask = mask.astype(bool)
+    if lengths is not None:
+        T = logp_sparse.shape[-1]
+        mask = mask & (jnp.arange(T)[None, :] < lengths[:, None])
     d = (logp_sparse - logp_old) * mask
     return jnp.sum(d) / (jnp.sum(mask) + 1e-9)

@@ -14,17 +14,27 @@ One Trainer drives the paper's full loop:
                 corrects intra-phase staleness), AdamW, global-norm clip.
 
 Fault tolerance: auto-resume from the newest checkpoint; atomic saves every
-``checkpoint_every`` steps (params, opt state, step).  Straggler mitigation:
-rollouts are fixed-length lockstep (no host sync on the long tail) and groups
-can be over-provisioned (``group_slack``: sample G+k, keep the G best-formed
-— finished preferred).  Composes with the paper's rejection sampling.
+``checkpoint_every`` steps (params, opt state, step).
+
+Rollout backends (``rollout_backend``; DESIGN.md §Training on the continuous
+engine): ``"lockstep"`` decodes every row for the full ``max_new_tokens`` in
+one compiled scan — no host sync on the long tail; ``"continuous"`` streams
+the phase's num_prompts x G group requests through the serving
+`ContinuousEngine` — shared prompt pages prefilled once per group
+(``cache_backend="paged"``), per-request EOS early-exit freeing slots for
+the next group instead of lockstep's pad-to-max tail.  Both use the same
+per-request sampling-key chains, so a fixed-length phase is token-identical
+across backends.  Straggler mitigation composes with either: groups can be
+over-provisioned (``group_slack``: sample G+k, keep G — lockstep keeps the
+best-formed after the fact, continuous keeps the first G to finish and
+cancels the stragglers mid-flight).
 """
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass
 from functools import partial
-from typing import Dict, Optional
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -36,8 +46,16 @@ from repro.core import group_advantages, sparse_rl_loss
 from repro.data import TOKENIZER, PromptLoader
 from repro.models import get_model
 from repro.optim import adamw
+from repro.rollout import (
+    ContinuousEngine,
+    Request,
+    RolloutBatch,
+    build_train_rollout,
+    generate,
+    paged_rollout_geometry,
+    rescore,
+)
 from repro.rewards import binary_rewards
-from repro.rollout import generate, rescore
 
 
 @dataclass
@@ -49,6 +67,13 @@ class TrainerOptions:
     use_ref_kl: bool = False
     level: str = "easy"
     log_samples: bool = False
+    # -- rollout backend (DESIGN.md §Training on the continuous engine) --
+    rollout_backend: str = "lockstep"   # "lockstep" | "continuous"
+    cache_backend: str = "contiguous"   # continuous only: "contiguous"|"paged"
+    decode_batch: int = 0          # continuous: engine row slots (0 = auto:
+                                   # half the phase's requests, >= G)
+    decode_chunk: int = 4          # continuous: steps between host harvests
+    block_size: int = 16           # paged pool: tokens per page
 
 
 class Trainer:
@@ -67,8 +92,38 @@ class Trainer:
         self.loader = PromptLoader(batch_prompts=opts.num_prompts,
                                    prompt_len=opts.prompt_len,
                                    seed=tcfg.seed, level=opts.level)
+        if opts.rollout_backend not in ("lockstep", "continuous"):
+            raise ValueError(
+                f"unknown rollout_backend {opts.rollout_backend!r}")
+        self.engine: Optional[ContinuousEngine] = None
+        if opts.rollout_backend == "continuous":
+            self.engine = self._build_engine()
         self._maybe_resume()
         self._build_jit()
+
+    def _build_engine(self) -> ContinuousEngine:
+        """One ContinuousEngine for the whole run: programs compile once;
+        per-phase weights/keys swap in via `begin_phase` (no recompiles)."""
+        opts, scfg = self.opts, self.scfg
+        total = opts.num_prompts * (scfg.group_size + opts.group_slack)
+        bs = opts.decode_batch or min(total,
+                                      max(scfg.group_size, total // 2))
+        kw = dict(batch_size=bs, prompt_len=opts.prompt_len,
+                  max_new_tokens=opts.max_new_tokens,
+                  eos_id=self.tok.eos_id, pad_id=self.tok.pad_id,
+                  decode_chunk=opts.decode_chunk, seed=self.tcfg.seed,
+                  cache_backend=opts.cache_backend)
+        if opts.cache_backend == "paged":
+            # pool sizing: every resident row's chain + one pinned prompt
+            # chain per distinct prompt in the phase + COW/tail headroom
+            _, bpr = paged_rollout_geometry(
+                scfg, opts.prompt_len, opts.max_new_tokens, opts.block_size)
+            npb = -(-opts.prompt_len // opts.block_size)
+            kw.update(block_size=opts.block_size,
+                      pool_blocks=1 + bs * bpr + opts.num_prompts * npb
+                      + 2 * bpr,
+                      prefix_entries=opts.num_prompts + 4)
+        return ContinuousEngine(self.params, self.cfg, self.m, scfg, **kw)
 
     # -- persistence ---------------------------------------------------------
     def _maybe_resume(self):
@@ -96,9 +151,15 @@ class Trainer:
         @partial(jax.jit, static_argnames=("max_new",))
         def _rollout(params, tokens, mask, rng, max_new):
             batch = {"tokens": tokens, "valid_mask": mask}
+            # per-request key chains — fold_in(fold_in(rng, uid), t), uid =
+            # row index — the continuous engine's sampling discipline, so
+            # the two backends draw identical tokens for identical phases
+            # (DESIGN.md §Training on the continuous engine)
+            row_keys = jax.vmap(lambda u: jax.random.fold_in(rng, u))(
+                jnp.arange(tokens.shape[0]))
             return generate(params, cfg, m, batch, scfg, rng,
                             max_new_tokens=max_new, eos_id=self.tok.eos_id,
-                            pad_id=self.tok.pad_id)
+                            pad_id=self.tok.pad_id, per_row_keys=row_keys)
 
         @jax.jit
         def _rescore(params, ro):
@@ -127,25 +188,58 @@ class Trainer:
         self._update_fn = _update
 
     # -- group helpers ---------------------------------------------------------
-    def _select_groups(self, ro, rewards: np.ndarray, G: int, slack: int):
-        """Straggler mitigation: from G+slack rollouts per prompt keep G,
-        preferring finished (EOS'd) then shorter responses."""
-        if slack == 0:
-            return ro, rewards
+    @staticmethod
+    def _select_keep(lengths: np.ndarray, T: int, G: int,
+                     slack: int) -> np.ndarray:
+        """Lockstep straggler mitigation: from G+slack rollouts per prompt
+        keep G, preferring finished (EOS'd) then shorter responses.  Returns
+        the kept row indices, group-major ascending (the layout
+        `group_advantages` reshapes over)."""
         Gs = G + slack
-        lengths = np.asarray(jax.device_get(ro.lengths))
-        T = ro.resp_tokens.shape[1]
         n_prompts = lengths.shape[0] // Gs
         keep_idx = []
         for p in range(n_prompts):
             rows = np.arange(p * Gs, (p + 1) * Gs)
             finished = lengths[rows] < T
             order = np.lexsort((lengths[rows], ~finished))
-            keep_idx.extend(rows[order[:G]])
-        keep = np.asarray(keep_idx)
-        take = lambda x: x[keep]
-        ro2 = jax.tree.map(lambda x: jnp.asarray(np.asarray(jax.device_get(x))[keep]), ro)
-        return ro2, rewards[keep]
+            keep_idx.extend(sorted(rows[order[:G]]))
+        return np.asarray(keep_idx)
+
+    # -- rollout phase (backend dispatch) --------------------------------------
+    def _rollout_phase(self, np_tokens: np.ndarray, np_mask: np.ndarray,
+                       rng) -> Tuple[RolloutBatch, np.ndarray,
+                                     Dict[str, float]]:
+        """Sample the phase's G+slack rollouts per prompt and reduce to G.
+
+        ``np_tokens``/``np_mask`` are the tiled (num_prompts * (G+slack), P)
+        prompt arrays.  Returns (rollout, keep, stats): ``rollout`` is the
+        trainer-ready (num_prompts * G, T) batch, ``keep`` the kept row
+        indices into the tiled arrays (aligns rewards/answers), ``stats``
+        engine counters (empty for lockstep).
+        """
+        opts, scfg = self.opts, self.scfg
+        G, slack = scfg.group_size, opts.group_slack
+        if opts.rollout_backend == "continuous":
+            eng = self.engine
+            eng.begin_phase(params=self.params, base_key=rng)
+            reqs = [Request(uid=u, prompt=np_tokens[u][np_mask[u]])
+                    for u in range(np_tokens.shape[0])]
+            comps = eng.run(reqs, group_size=G, group_slack=slack)
+            tr = build_train_rollout(
+                comps, np_tokens, np_mask,
+                max_new_tokens=opts.max_new_tokens, pad_id=eng.pad_id,
+                stats=eng.end_phase())
+            return tr.rollout, tr.keep, tr.stats
+        ro = self._rollout_fn(self.params, jnp.asarray(np_tokens),
+                              jnp.asarray(np_mask), rng,
+                              max_new=opts.max_new_tokens)
+        if slack == 0:
+            return ro, np.arange(np_tokens.shape[0]), {}
+        lengths = np.asarray(jax.device_get(ro.lengths))
+        keep = self._select_keep(lengths, ro.resp_tokens.shape[1], G, slack)
+        ro = jax.tree.map(
+            lambda x: jnp.asarray(np.asarray(jax.device_get(x))[keep]), ro)
+        return ro, keep, {}
 
     # -- one full RL step -------------------------------------------------------
     def train_step(self) -> Dict[str, float]:
@@ -155,16 +249,16 @@ class Trainer:
         G = scfg.group_size
         Gs = G + opts.group_slack
         # tile prompts G+slack times (group-major)
-        tokens = jnp.asarray(np.repeat(prompts, Gs, axis=0))
-        mask = jnp.asarray(np.repeat(pmask, Gs, axis=0))
+        np_tokens = np.repeat(np.asarray(prompts, np.int32), Gs, axis=0)
+        np_mask = np.repeat(np.asarray(pmask, bool), Gs, axis=0)
         answers_rep = list(np.repeat(np.asarray(answers, dtype=object), Gs))
 
         self.rng, r1 = jax.random.split(self.rng)
-        ro = self._rollout_fn(self.params, tokens, mask, r1,
-                              max_new=opts.max_new_tokens)
+        t_roll = time.time()
+        ro, keep, ro_stats = self._rollout_phase(np_tokens, np_mask, r1)
+        rollout_s = time.time() - t_roll
         rewards = binary_rewards(np.asarray(jax.device_get(ro.resp_tokens)),
-                                 answers_rep)
-        ro, rewards = self._select_groups(ro, rewards, G, opts.group_slack)
+                                 [answers_rep[u] for u in keep])
 
         adv = group_advantages(jnp.asarray(rewards.reshape(-1, G))).reshape(-1)
         logp_old = self._rescore_fn(self.params, ro)
@@ -198,8 +292,17 @@ class Trainer:
             resp_len=float(jax.device_get(ro.lengths).mean()),
             entropy=float(jax.device_get(ro.entropy).mean()),
             lr=float(jax.device_get(lr)),
+            rollout_s=rollout_s,
             step_time_s=time.time() - t0,
         )
+        if ro_stats:
+            agg.update(
+                prefix_hit_rate=(float(ro_stats["prefix_hits"])
+                                 / max(float(ro_stats["admissions"]), 1.0)),
+                rollout_prefills=float(ro_stats["prefills"]),
+                rollout_cancelled=float(ro_stats["cancelled"]),
+                rollout_decode_steps=float(ro_stats["decode_steps"]),
+            )
         return agg
 
     def train(self, steps: int, log_every: int = 10, callback=None):

@@ -1,0 +1,105 @@
+"""tools/bench_gate.py: the CI benchmark regression gate (pure JSON logic,
+no jax) — hard bounds (identity, rollout speedup >= 1) and the tolerance
+band against committed baselines."""
+import importlib.util
+import json
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+spec = importlib.util.spec_from_file_location(
+    "bench_gate", ROOT / "tools" / "bench_gate.py")
+bench_gate = importlib.util.module_from_spec(spec)
+sys.modules["bench_gate"] = bench_gate
+spec.loader.exec_module(bench_gate)
+
+
+def _row(speedup=1.2, identical=True, policy="none", batch=4, group_size=4,
+         n_prompts=4):
+    return dict(policy=policy, batch=batch, group_size=group_size,
+                n_prompts=n_prompts, speedup=speedup, identical=identical)
+
+
+def _write(d: Path, serving, rollout):
+    d.mkdir(parents=True, exist_ok=True)
+    (d / "BENCH_serving.json").write_text(json.dumps(serving))
+    (d / "BENCH_rollout.json").write_text(json.dumps(rollout))
+
+
+def _full(speedups=(1.2, 1.2, 1.2), identical=True):
+    s_cl, s_pp, s_rp = speedups
+    serving = {"continuous_vs_lockstep_smoke": [_row(s_cl)],
+               "paged_prefix_smoke": [_row(s_pp)]}
+    # the full-scale section rides along unchanged in CI (only the smoke
+    # bench re-runs) but its hard bounds are still vetted
+    rollout = {"rollout_phase_smoke": [_row(s_rp, identical=identical)],
+               "rollout_phase": [_row(1.4)]}
+    return serving, rollout
+
+
+def test_gate_passes_within_tolerance(tmp_path):
+    _write(tmp_path / "committed", *_full((1.5, 1.5, 1.5)))
+    _write(tmp_path / "fresh", *_full((1.2, 1.2, 1.2)))  # -20% < 35% band
+    assert bench_gate.gate(tmp_path / "committed", tmp_path / "fresh",
+                           0.35) == []
+
+
+def test_gate_fails_on_regression_beyond_tolerance(tmp_path):
+    _write(tmp_path / "committed", *_full((2.0, 1.5, 1.5)))
+    _write(tmp_path / "fresh", *_full((1.0, 1.5, 1.5)))  # -50% > 35% band
+    problems = bench_gate.gate(tmp_path / "committed", tmp_path / "fresh",
+                               0.35)
+    assert len(problems) == 1 and "regressed" in problems[0]
+
+
+def test_gate_hard_floor_on_rollout_speedup(tmp_path):
+    """rollout_phase speedup < 1.0 fails even with no committed baseline:
+    the ISSUE-3 bound (continuous-paged phase <= lockstep) is absolute."""
+    _write(tmp_path / "fresh", *_full((1.2, 1.2, 0.9)))
+    problems = bench_gate.gate(tmp_path / "missing", tmp_path / "fresh",
+                               0.35)
+    assert any("slower than lockstep" in p for p in problems)
+
+
+def test_gate_fails_on_lost_token_identity(tmp_path):
+    _write(tmp_path / "committed", *_full())
+    _write(tmp_path / "fresh", *_full(identical=False))
+    problems = bench_gate.gate(tmp_path / "committed", tmp_path / "fresh",
+                               0.35)
+    assert any("token-identical" in p for p in problems)
+
+
+def test_gate_fails_on_missing_fresh_section(tmp_path):
+    serving, rollout = _full()
+    _write(tmp_path / "committed", serving, rollout)
+    _write(tmp_path / "fresh", serving, {})   # rollout bench didn't run
+    problems = bench_gate.gate(tmp_path / "committed", tmp_path / "fresh",
+                               0.35)
+    assert any("missing from fresh" in p for p in problems)
+
+
+def test_gate_matches_rows_by_key_not_order(tmp_path):
+    """Reordered rows pair with their committed counterparts by identity
+    fields, so a section shuffle cannot hide (or fake) a regression."""
+    serving = {"continuous_vs_lockstep_smoke": [
+        _row(2.0, policy="rkv", batch=4), _row(1.1, policy="none", batch=4)],
+        "paged_prefix_smoke": [_row(1.2)]}
+    rollout = {"rollout_phase_smoke": [_row(1.2)],
+               "rollout_phase": [_row(1.4)]}
+    _write(tmp_path / "committed", serving, rollout)
+    shuffled = {"continuous_vs_lockstep_smoke": [
+        _row(1.1, policy="none", batch=4), _row(2.0, policy="rkv", batch=4)],
+        "paged_prefix_smoke": [_row(1.2)]}
+    _write(tmp_path / "fresh", shuffled, rollout)
+    assert bench_gate.gate(tmp_path / "committed", tmp_path / "fresh",
+                           0.35) == []
+
+
+def test_gate_cli_exit_codes(tmp_path):
+    _write(tmp_path / "committed", *_full())
+    _write(tmp_path / "fresh", *_full())
+    assert bench_gate.main(["--committed", str(tmp_path / "committed"),
+                            "--fresh", str(tmp_path / "fresh")]) == 0
+    _write(tmp_path / "fresh2", *_full((1.2, 1.2, 0.5)))
+    assert bench_gate.main(["--committed", str(tmp_path / "committed"),
+                            "--fresh", str(tmp_path / "fresh2")]) == 1

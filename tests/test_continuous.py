@@ -175,3 +175,36 @@ def test_stacked_reset_rows_batch_axis():
     assert (np.asarray(out.fill[:, 1]) == 0).all()
     assert (np.asarray(out.pos[:, 0]) == 0).all()
     assert (np.asarray(out.fill[:, [0, 2]]) == 4).all()
+
+
+def test_group_slack_first_g_finished_cancels_stragglers():
+    """RL group discipline (DESIGN.md §Training on the continuous engine):
+    G+k uids per group, exactly the first G finishers survive, and each
+    survivor's tokens equal its own slack-free run (placement/cancellation
+    invisible to a request)."""
+    scfg = SparseRLConfig(kv_budget=16, kv_buffer=4, obs_window=2,
+                          num_sinks=1, compression="rkv")
+    G, slack, n_groups = 2, 1, 2
+    Gs = G + slack
+    problems = make_problems(n_groups, 9, "easy")
+    ids, mask, _ = encode_prompts(problems, PROMPT_LEN)
+    reqs = [Request(uid=g * Gs + i, prompt=ids[g][mask[g]])
+            for g in range(n_groups) for i in range(Gs)]
+    eng = ContinuousEngine(PARAMS, CFG, M, scfg, batch_size=3,
+                           prompt_len=PROMPT_LEN, max_new_tokens=8,
+                           eos_id=TOKENIZER.eos_id, decode_chunk=1, seed=21)
+    kept = eng.run(reqs, group_size=G, group_slack=slack)
+    assert len(kept) == n_groups * G
+    per_group = {}
+    for c in kept:
+        per_group.setdefault(c.uid // Gs, []).append(c.uid)
+    assert all(len(v) == G for v in per_group.values())
+    assert eng.stats["cancelled"] == n_groups * slack
+    # survivors' tokens match their own run without any group machinery
+    eng2 = ContinuousEngine(PARAMS, CFG, M, scfg, batch_size=3,
+                            prompt_len=PROMPT_LEN, max_new_tokens=8,
+                            eos_id=TOKENIZER.eos_id, decode_chunk=1, seed=21)
+    alone = {c.uid: c for c in eng2.run([r for r in reqs
+                                         if r.uid in {c.uid for c in kept}])}
+    for c in kept:
+        np.testing.assert_array_equal(c.tokens, alone[c.uid].tokens)

@@ -13,7 +13,6 @@ import textwrap
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.configs import LM_SHAPES, SparseRLConfig, get_config

@@ -3,7 +3,6 @@
 Kernels execute in Pallas interpret mode on CPU (same semantics as the
 Mosaic TPU lowering, bit-for-bit kernel body).
 """
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

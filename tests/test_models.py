@@ -131,7 +131,6 @@ def test_mamba2_state_invariance_to_padding():
 
 def test_flash_matches_materialized_attention():
     """model-level flash path == materialized path (same params/tokens)."""
-    from repro.models import transformer as T
     cfg = get_config("yi-34b").smoke()
     m = get_model(cfg)
     params = m.init_params(cfg, jax.random.PRNGKey(0))

@@ -2,7 +2,6 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import SparseRLConfig, get_config
 from repro.models import get_model
@@ -108,3 +107,24 @@ def test_rescore_vlm_prefix_offset():
     lp = rescore(params, cfg, m, ro, extra_batch=batch)
     err = jnp.abs(jnp.where(ro.resp_mask, lp - ro.logp_sparse, 0.0)).max()
     assert float(err) < 1e-4
+
+
+def test_mismatch_kl_lengths_mask_excludes_padded_tail():
+    """Early-exited rows are right-padded; passing ``lengths`` must clip any
+    over-wide caller mask so the pad tail (logp_sparse exactly 0, logp_old a
+    real pad-token log-prob) neither dilutes nor biases the estimate."""
+    logp_sparse = jnp.asarray([[-1.0, -2.0, 0.0, 0.0],
+                               [-0.5, -0.5, -0.5, -0.5]])
+    logp_old = jnp.asarray([[-1.5, -1.5, -9.0, -9.0],
+                            [-0.25, -0.25, -0.25, -0.25]])
+    lengths = jnp.asarray([2, 4])
+    ones = jnp.ones((2, 4), bool)
+    exact = jnp.asarray([[True, True, False, False],
+                         [True, True, True, True]])
+    clipped = mismatch_kl_estimate(logp_old, logp_sparse, ones,
+                                   lengths=lengths)
+    reference = mismatch_kl_estimate(logp_old, logp_sparse, exact)
+    np.testing.assert_allclose(float(clipped), float(reference), rtol=1e-6)
+    # the unmasked average really is different (the bug being guarded)
+    diluted = mismatch_kl_estimate(logp_old, logp_sparse, ones)
+    assert abs(float(diluted) - float(reference)) > 1e-3

@@ -1,7 +1,6 @@
 """Substrate tests: optimizer, checkpoint (fault tolerance), data, rewards,
 sharding rules."""
 import os
-import shutil
 
 import jax
 import jax.numpy as jnp

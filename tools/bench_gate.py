@@ -1,0 +1,130 @@
+#!/usr/bin/env python3
+"""Benchmark regression gate for CI (stdlib only, no jax import).
+
+Compares freshly-run smoke sections of the BENCH_*.json files against the
+committed baselines and fails (exit 1) when:
+
+1. any fresh row reports ``identical: false`` — the schedulers must stay
+   token-identical to their lockstep oracles (a wrong-but-fast engine is a
+   bug, not a speedup);
+2. a ``rollout_phase(_smoke)`` row has ``speedup < 1.0`` — the ISSUE-3
+   acceptance bound: the continuous-paged training rollout phase may never
+   be slower than the lockstep phase on the mixed-length group workload;
+3. a fresh row's ``speedup`` regresses below ``committed * (1 - tolerance)``
+   — rows are matched by their identity fields (policy/batch/group_size/...),
+   so reordering sections does not confuse the gate.
+
+The tolerance band (default 0.35) absorbs shared-CI-runner noise; the hard
+bounds (1) and (2) have no band.  A section missing from the committed
+baseline is skipped for (3) — first landing of a new bench — but its hard
+bounds still apply.  Usage (the ci.yml bench job):
+
+  cp BENCH_serving.json BENCH_rollout.json /tmp/bench_committed/
+  python -m benchmarks.serving --smoke && python -m benchmarks.rollout --smoke
+  python tools/bench_gate.py --committed /tmp/bench_committed --fresh .
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+# section -> fields identifying a row within it (used to pair fresh rows
+# with committed rows for the regression comparison)
+GATED_SECTIONS = {
+    "BENCH_serving.json": {
+        "continuous_vs_lockstep_smoke": ("policy", "batch"),
+        "paged_prefix_smoke": ("group_size", "n_prompts"),
+    },
+    "BENCH_rollout.json": {
+        "rollout_phase_smoke": ("policy", "group_size", "n_prompts"),
+        # CI only re-runs the smoke benches, so for the full-scale section
+        # fresh == committed and the tolerance check is a no-op — but the
+        # hard bounds below still vet the committed numbers on every push
+        "rollout_phase": ("policy", "group_size", "n_prompts"),
+    },
+}
+# sections whose rows must meet speedup >= 1.0 regardless of history
+HARD_FLOOR_SECTIONS = ("rollout_phase", "rollout_phase_smoke")
+
+
+def _row_key(row: dict, fields) -> tuple:
+    return tuple(row.get(f) for f in fields)
+
+
+def gate_section(name: str, fresh_rows, committed_rows, key_fields,
+                 tolerance: float):
+    """Pure comparison for one section; returns a list of problem strings."""
+    problems = []
+    committed_by_key = {_row_key(r, key_fields): r
+                       for r in (committed_rows or [])}
+    for row in fresh_rows:
+        key = _row_key(row, key_fields)
+        label = f"{name}{list(key)}"
+        if row.get("identical") is False:
+            problems.append(f"{label}: outputs not token-identical")
+        speedup = row.get("speedup")
+        if speedup is None:
+            problems.append(f"{label}: row has no 'speedup' field")
+            continue
+        if name in HARD_FLOOR_SECTIONS and speedup < 1.0:
+            problems.append(
+                f"{label}: speedup {speedup:.2f} < 1.00 — continuous-paged "
+                f"rollout phase slower than lockstep")
+        base = committed_by_key.get(key)
+        if base is not None and "speedup" in base:
+            floor = base["speedup"] * (1.0 - tolerance)
+            if speedup < floor:
+                problems.append(
+                    f"{label}: speedup {speedup:.2f} regressed below "
+                    f"{floor:.2f} (committed {base['speedup']:.2f} "
+                    f"- {tolerance:.0%} tolerance)")
+    return problems
+
+
+def gate(committed_dir: Path, fresh_dir: Path, tolerance: float):
+    problems = []
+    for fname, sections in GATED_SECTIONS.items():
+        fresh_path = fresh_dir / fname
+        if not fresh_path.exists():
+            problems.append(f"{fname}: missing from fresh results "
+                            f"(did the bench run?)")
+            continue
+        fresh = json.loads(fresh_path.read_text())
+        committed_path = committed_dir / fname
+        committed = (json.loads(committed_path.read_text())
+                     if committed_path.exists() else {})
+        for section, key_fields in sections.items():
+            if section not in fresh:
+                problems.append(f"{fname}:{section}: section missing from "
+                                f"fresh results")
+                continue
+            problems.extend(gate_section(
+                section, fresh[section], committed.get(section),
+                key_fields, tolerance))
+    return problems
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--committed", required=True, type=Path,
+                    help="directory holding the committed BENCH_*.json")
+    ap.add_argument("--fresh", required=True, type=Path,
+                    help="directory holding the freshly-run BENCH_*.json")
+    ap.add_argument("--tolerance", type=float, default=0.35,
+                    help="allowed fractional speedup regression vs the "
+                         "committed baseline (CI-runner noise band)")
+    args = ap.parse_args(argv)
+    problems = gate(args.committed, args.fresh, args.tolerance)
+    for p in problems:
+        print(f"BENCHGATE: {p}")
+    if problems:
+        print(f"BENCHGATE: {len(problems)} problem(s)")
+        return 1
+    print("BENCHGATE: all smoke benchmarks within tolerance of the "
+          "committed baselines")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
