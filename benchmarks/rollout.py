@@ -47,28 +47,36 @@ BENCH_JSON = os.path.join(REPO_ROOT, "BENCH_rollout.json")
 
 
 def _phase_requests(n_prompts: int, group_size: int, prompt_len: int,
-                    max_new: int, seed: int):
+                    max_new: int, seed: int, plen_dist: str = "fixed"):
     """Group-major phase workload with mixed-length caps: prompt p's group
     occupies uids [p*G, (p+1)*G), every member shares the prompt (the prefix
-    the paged backend deduplicates) but draws its own response cap."""
+    the paged backend deduplicates) but draws its own response cap.
+
+    ``plen_dist="mixed"`` additionally spreads PROMPT lengths (full / half /
+    quarter per prompt, shared across the group) — the workload where
+    chunked batched prefill stops short prompts paying for engine-wide
+    padding at admission."""
     from repro.data import encode_prompts, make_problems
+    from repro.launch.serve import mix_prompt_lengths
     from repro.rollout import Request
 
     problems = make_problems(n_prompts, seed, "easy")
     ids, mask, _ = encode_prompts(problems, prompt_len)
+    prompts = mix_prompt_lengths(
+        [ids[i][mask[i]] for i in range(n_prompts)], seed, plen_dist)
     total = n_prompts * group_size
     rng = np.random.default_rng(seed + 1)
     lo = max(2, max_new // 16)
     spread = [lo, max(lo, max_new // 4), max(lo, max_new // 2), max_new]
     caps = rng.choice(spread, size=total, p=[0.4, 0.3, 0.2, 0.1])
-    return [Request(uid=u, prompt=ids[u // group_size][mask[u // group_size]],
+    return [Request(uid=u, prompt=prompts[u // group_size],
                     max_new_tokens=int(caps[u]))
             for u in range(total)]
 
 
 def _bench_phase(arch: str, policy: str, group_size: int, n_prompts: int,
                  batch: int, prompt_len: int, max_new: int, block_size: int,
-                 decode_chunk: int, seed: int):
+                 decode_chunk: int, seed: int, plen_dist: str = "fixed"):
     """One phase cell: lockstep full-width batch vs continuous-paged engine
     on the identical request set.  Returns the measured row dict."""
     from repro.configs import SparseRLConfig, get_config
@@ -91,7 +99,8 @@ def _bench_phase(arch: str, policy: str, group_size: int, n_prompts: int,
         scfg = replace(scfg, kv_budget=16, kv_buffer=8, obs_window=4,
                        num_sinks=2)
     total = n_prompts * group_size
-    reqs = _phase_requests(n_prompts, group_size, prompt_len, max_new, seed)
+    reqs = _phase_requests(n_prompts, group_size, prompt_len, max_new, seed,
+                           plen_dist)
 
     # the Trainer's lockstep shape: ONE batch as wide as the whole phase,
     # decoded to the global max_new (LockstepServer with batch_size=total)
@@ -103,8 +112,13 @@ def _bench_phase(arch: str, policy: str, group_size: int, n_prompts: int,
                            eos_id=TOKENIZER.eos_id, decode_chunk=decode_chunk,
                            seed=seed, cache_backend="paged",
                            block_size=block_size)
-    # cold run compiles both + measures the sharing behaviour
-    lock, cont = srv.run(reqs), eng.run(reqs, group_size=group_size)
+    # cold run compiles both + measures the sharing behaviour.  The engine
+    # runs the phase under LPT admission ("longest"): per-request caps are
+    # known up front in an RL phase, so long-cap members start first and
+    # overlap everyone else instead of draining near-alone at phase end
+    # (token-identical either way: per-request key chains)
+    lock, cont = srv.run(reqs), eng.run(reqs, group_size=group_size,
+                                        schedule="longest")
     identical = all(np.array_equal(a.tokens, b.tokens)
                     for a, b in zip(cont, lock))
     hit_rate = eng.prefix_hit_rate
@@ -118,8 +132,10 @@ def _bench_phase(arch: str, policy: str, group_size: int, n_prompts: int,
         t_lock = min(t_lock, time.perf_counter() - t0)
         eng.reset_clock()
         t0 = time.perf_counter()
-        cont = eng.run(reqs, group_size=group_size)
-        t_cont = min(t_cont, time.perf_counter() - t0)
+        cont = eng.run(reqs, group_size=group_size, schedule="longest")
+        t_last = time.perf_counter() - t0
+        t_cont = min(t_cont, t_last)
+        run_stats = dict(eng.stats)        # per-run counters (clock reset)
         eng.end_phase()
 
     # trainer-ready assembly + the masked mismatch-KL statistic
@@ -138,7 +154,8 @@ def _bench_phase(arch: str, policy: str, group_size: int, n_prompts: int,
     toks = int(np.sum(np.asarray(tr.rollout.lengths)))
     return dict(arch=arch, policy=policy, group_size=group_size,
                 n_prompts=n_prompts, batch=batch, max_new=max_new,
-                tokens=toks, lockstep_s=t_lock, continuous_s=t_cont,
+                plen_dist=plen_dist, tokens=toks,
+                lockstep_s=t_lock, continuous_s=t_cont,
                 lockstep_tps=toks / t_lock, continuous_tps=toks / t_cont,
                 speedup=t_lock / t_cont, identical=identical,
                 prefix_hit_rate=hit_rate,
@@ -146,6 +163,15 @@ def _bench_phase(arch: str, policy: str, group_size: int, n_prompts: int,
                 prefills=prefills, admissions=int(eng.stats["admissions"]),
                 lockstep_decode_steps=max_new,
                 useful_token_frac=toks / (total * max_new),
+                # host-side admission-dispatch share of the last warm run
+                # (the chunked-prefill cost the decode batch never stalls on)
+                prefill_s=float(run_stats["prefill_s"]),
+                prefill_s_frac=float(run_stats["prefill_s"]) / max(t_last,
+                                                                   1e-12),
+                prefill_dispatches=int(run_stats["prefill_dispatches"]),
+                prefill_tokens=int(run_stats["prefill_tokens"]),
+                wasted_row_frac=(float(run_stats["wasted_row_steps"])
+                                 / max(run_stats["decode_steps"] * batch, 1)),
                 mismatch_kl=kl)
 
 
@@ -154,20 +180,37 @@ def rollout_train_bench(fast: bool = False, *, arch: str = "qwen2.5-14b",
     """Continuous-paged rollout phase vs lockstep; writes the
     ``rollout_phase`` section of BENCH_rollout.json.  The acceptance bound
     (continuous phase wall-clock <= lockstep on mixed-length groups) is
-    enforced here and re-enforced by the CI gate on the smoke section."""
-    cells = (("none", 4, 4),) if fast else (("none", 8, 4), ("rkv", 8, 4))
+    enforced here and re-enforced by the CI gate on the smoke section.
+
+    Cells sweep the PROMPT-length distribution too (``plen_dist``): "fixed"
+    keeps every prompt at its natural encoded length (the historical cell);
+    "mixed" spreads full/half/quarter prompt lengths — where the
+    length-aware hot loop (chunked batched prefill + fill-aware decode +
+    async harvest) actually earns its win, because lockstep pads every
+    prompt to P while the engine buckets them."""
+    cells = ((("none", 4, 4, "fixed"), ("none", 4, 4, "mixed")) if fast else
+             (("none", 8, 4, "fixed"), ("none", 8, 4, "mixed"),
+              ("rkv", 8, 4, "mixed")))
     max_new = 32 if fast else 64
+    # full phases harvest every 16 steps (mean response ~17 tokens: fewer
+    # host syncs, recycling still fine-grained); the short smoke phases
+    # (max_new 32) keep 8 so slots still turn over a few times per phase
+    decode_chunk = 8 if fast else 16
     rows, out = [], []
-    for policy, group_size, n_prompts in cells:
+    for policy, group_size, n_prompts, plen_dist in cells:
         # engine rows = half the phase: slots recycle across groups but each
         # decode step stays wide enough to amortize dispatch (the Trainer's
         # decode_batch auto-default makes the same choice)
         batch = n_prompts * group_size // 2
+        # block_size 8 gives the pool TWO admission buckets (16 and 8) at
+        # prompt_len 16, so the mixed-plen cells actually exercise the
+        # short bucket (pool bucket widths are P - j*block_size)
         r = _bench_phase(arch, policy, group_size, n_prompts, batch=batch,
-                         prompt_len=16, max_new=max_new, block_size=16,
-                         decode_chunk=8, seed=seed)
+                         prompt_len=16, max_new=max_new, block_size=8,
+                         decode_chunk=decode_chunk, seed=seed,
+                         plen_dist=plen_dist)
         rows.append(r)
-        base = f"rollout_phase/{policy}/g{group_size}"
+        base = f"rollout_phase/{policy}/g{group_size}/{plen_dist}"
         out.append(f"{base}/lockstep,{r['lockstep_s']*1e6:.0f},"
                    f"toks_per_s={r['lockstep_tps']:.1f};"
                    f"useful_frac={r['useful_token_frac']:.2f}")
@@ -176,6 +219,8 @@ def rollout_train_bench(fast: bool = False, *, arch: str = "qwen2.5-14b",
                    f"speedup={r['speedup']:.2f};"
                    f"identical={r['identical']};"
                    f"prefix_hit_rate={r['prefix_hit_rate']:.2f};"
+                   f"prefill_s={r['prefill_s_frac']:.2f};"
+                   f"wasted_row_frac={r['wasted_row_frac']:.2f};"
                    f"mismatch_kl={r['mismatch_kl']:.4f}")
     os.makedirs(OUT, exist_ok=True)
     with open(os.path.join(OUT, "rollout.json"), "w") as f:

@@ -51,20 +51,25 @@ def update_bench_json(section: str, payload) -> str:
     return _update_json(BENCH_JSON, section, payload)
 
 
-def _make_requests(n: int, prompt_len: int, max_new: int, seed: int):
+def _make_requests(n: int, prompt_len: int, max_new: int, seed: int,
+                   plen_dist: str = "fixed"):
     """n burst-arrival requests with the serve CLI's long-tailed spread of
     per-request response caps (most responses short, a few near ``max_new``
     — the shape real serving traffic has, and the regime where lockstep
-    decoding pays ``max_new`` steps for every row)."""
+    decoding pays ``max_new`` steps for every row).  ``plen_dist="mixed"``
+    additionally spreads prompt lengths — where the chunked-prefill length
+    buckets stop short prompts paying engine-wide padding at admission."""
     from repro.launch.serve import make_workload
 
     reqs, _, _ = make_workload(n, prompt_len, max_new, rate=0.0,
-                               resp_dist="mixed", seed=seed)
+                               resp_dist="mixed", seed=seed,
+                               plen_dist=plen_dist)
     return reqs
 
 
 def _bench_one(arch: str, policy: str, batch: int, n_requests: int,
-               prompt_len: int, max_new: int, decode_chunk: int, seed: int):
+               prompt_len: int, max_new: int, decode_chunk: int, seed: int,
+               plen_dist: str = "fixed"):
     """Returns a dict of measured numbers for one (policy, batch) cell."""
     from dataclasses import replace
 
@@ -80,7 +85,7 @@ def _bench_one(arch: str, policy: str, batch: int, n_requests: int,
     if policy != "none":
         scfg = replace(scfg, kv_budget=16, kv_buffer=8, obs_window=4,
                        num_sinks=2)
-    reqs = _make_requests(n_requests, prompt_len, max_new, seed)
+    reqs = _make_requests(n_requests, prompt_len, max_new, seed, plen_dist)
 
     srv = LockstepServer(params, cfg, m, scfg, batch_size=batch,
                          prompt_len=prompt_len, max_new_tokens=max_new,
@@ -108,14 +113,17 @@ def _bench_one(arch: str, policy: str, batch: int, n_requests: int,
     identical = all(np.array_equal(a.tokens, b.tokens)
                     for a, b in zip(cont, lock))
     return dict(policy=policy, batch=batch, n_requests=n_requests,
-                max_new=max_new, tokens=toks_cont,
+                max_new=max_new, plen_dist=plen_dist, tokens=toks_cont,
                 lockstep_s=t_lock, continuous_s=t_cont,
                 lockstep_tps=toks_lock / t_lock,
                 continuous_tps=toks_cont / t_cont,
                 speedup=t_lock / t_cont, identical=identical,
                 latency_p50_s=_pct(cont, 50), latency_p99_s=_pct(cont, 99),
                 decode_steps=int(eng.stats["decode_steps"]),
-                wasted_row_steps=int(eng.stats["wasted_row_steps"]))
+                wasted_row_steps=int(eng.stats["wasted_row_steps"]),
+                prefill_s=float(eng.stats["prefill_s"]),
+                prefill_dispatches=int(eng.stats["prefill_dispatches"]),
+                prefill_tokens=int(eng.stats["prefill_tokens"]))
 
 
 def serving_bench(fast: bool = False, *, arch: str = "qwen2.5-14b",
@@ -130,16 +138,22 @@ def serving_bench(fast: bool = False, *, arch: str = "qwen2.5-14b",
     rows, out = [], []
     for policy in policies:
         for batch in batches:
-            r = _bench_one(arch, policy, batch, n_requests, prompt_len,
-                           max_new, decode_chunk, seed)
-            rows.append(r)
-            base = f"serving/{policy}/b{batch}"
-            out.append(f"{base}/lockstep,{r['lockstep_s']*1e6:.0f},"
-                       f"toks_per_s={r['lockstep_tps']:.1f}")
-            out.append(f"{base}/continuous,{r['continuous_s']*1e6:.0f},"
-                       f"toks_per_s={r['continuous_tps']:.1f};"
-                       f"speedup={r['speedup']:.2f};"
-                       f"identical={r['identical']}")
+            # mixed prompt lengths only on the first batch size: the sweep
+            # that shows the chunked-prefill win without doubling runtime
+            plens = ("fixed", "mixed") if batch == batches[0] else ("fixed",)
+            for plen_dist in plens:
+                r = _bench_one(arch, policy, batch, n_requests, prompt_len,
+                               max_new, decode_chunk, seed,
+                               plen_dist=plen_dist)
+                rows.append(r)
+                base = f"serving/{policy}/b{batch}/{plen_dist}"
+                out.append(f"{base}/lockstep,{r['lockstep_s']*1e6:.0f},"
+                           f"toks_per_s={r['lockstep_tps']:.1f}")
+                out.append(f"{base}/continuous,{r['continuous_s']*1e6:.0f},"
+                           f"toks_per_s={r['continuous_tps']:.1f};"
+                           f"speedup={r['speedup']:.2f};"
+                           f"identical={r['identical']};"
+                           f"prefill_dispatches={r['prefill_dispatches']}")
     os.makedirs(OUT, exist_ok=True)
     with open(os.path.join(OUT, "serving.json"), "w") as f:
         json.dump(rows, f, indent=1)

@@ -109,7 +109,10 @@ def sparse_rl_loss(logp_theta: jnp.ndarray,
         "rejection_rate": 1.0 - jnp.mean(m_rs),
         "clip_ratio": masked_mean(clipped.astype(jnp.float32), token_mask),
         "mean_xi": masked_mean(xi, token_mask),
-        "min_log_xi": jnp.min(jnp.where(token_mask, logp_old - logp_sparse, 0.0)),
+        # masked positions fill with +inf, not 0: a 0 fill clamps the metric
+        # at 0 whenever every valid log-ratio is positive
+        "min_log_xi": jnp.min(jnp.where(token_mask, logp_old - logp_sparse,
+                                        jnp.inf)),
         "mismatch_kl": mismatch_kl,
         "mean_ratio": masked_mean(w * jnp.ones_like(xi), token_mask),
         "accepted_frac_tokens": masked_mean(

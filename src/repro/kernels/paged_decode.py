@@ -14,12 +14,22 @@ TPU mapping:
   * grid = (B, Hkv, nb): one program chain per (row, kv head); the page dim
     ``nb`` is the innermost (sequential) axis, so Mosaic revisits the same
     scratch while double-buffering page loads (compute/DMA overlap).
-  * scalar prefetch: block_tables (B, nb) and fill (B,) live in SMEM; index
-    maps clamp unmapped entries (-1) to page 0, and the in-kernel mask
-    (slot >= fill, pos < 0, unmapped page) zeroes their contribution.
+  * scalar prefetch: block_tables (B, nb), fill (B,) and the derived
+    num_pages (B,) = ceil(fill / bs) live in SMEM; index maps clamp unmapped
+    entries (-1) to page 0, and the in-kernel mask (slot >= fill, pos < 0,
+    unmapped page) zeroes their contribution.
+  * fill-aware early exit: a row only has ``num_pages[b]`` live pages — a
+    freshly admitted row's table maps its whole generation head-room, but
+    everything past ceil(fill/bs) is unwritten.  The K/V index maps clamp
+    the page index to ``num_pages[b] - 1``, so every trailing grid step
+    re-addresses the page already resident in VMEM and Mosaic elides the
+    DMA (the block index did not change); the kernel body is ``pl.when``-
+    guarded on ``j < num_pages[b]`` so those steps are pure no-ops.  A row
+    whose fill is one page costs one page of K/V traffic, not nb.
   * VMEM scratch: acc (G, Dh) f32 weighted accumulator, m/l (G, 1) f32
     running max / normalizer — carried across the nb sequential steps,
-    finalized into o_ref on the last page.
+    finalized into o_ref on the last grid step (which may itself be a
+    skipped page: the scratch simply passes through).
   * blocks: the GQA query group (G, Dh) and one (bs, Dh) page tile resident
     per step; Dh = 128 aligns the MXU contraction, bs is a multiple of the
     sublane count (>= 8) for dense tiling.
@@ -40,8 +50,8 @@ from jax.experimental.pallas import tpu as pltpu
 NEG = -1e30
 
 
-def _kernel(bt_ref, fill_ref, q_ref, k_ref, v_ref, pos_ref, o_ref,
-            acc, m_s, l_s, *, scale: float, bs: int, nb: int):
+def _kernel(bt_ref, fill_ref, npages_ref, q_ref, k_ref, v_ref, pos_ref,
+            o_ref, acc, m_s, l_s, *, scale: float, bs: int, nb: int):
     b = pl.program_id(0)
     j = pl.program_id(2)
 
@@ -51,24 +61,30 @@ def _kernel(bt_ref, fill_ref, q_ref, k_ref, v_ref, pos_ref, o_ref,
         m_s[...] = jnp.full_like(m_s, NEG)
         l_s[...] = jnp.zeros_like(l_s)
 
-    q = q_ref[0, 0].astype(jnp.float32)                 # (G, Dh)
-    k = k_ref[0, 0].astype(jnp.float32)                 # (bs, Dh)
-    v = v_ref[0, 0].astype(jnp.float32)
-    slot = j * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
-    mapped = bt_ref[b, j] >= 0
-    valid = (pos_ref[...] >= 0) & (slot < fill_ref[b]) & mapped  # (1, bs)
-    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
-                            preferred_element_type=jnp.float32) * scale
-    s = jnp.where(valid, s, NEG)                        # (G, bs) via broadcast
-    m_prev = m_s[...]                                   # (G, 1)
-    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
-    p = jnp.exp(s - m_new)
-    p = jnp.where(valid, p, 0.0)
-    corr = jnp.exp(m_prev - m_new)
-    l_s[...] = l_s[...] * corr + jnp.sum(p, axis=1, keepdims=True)
-    acc[...] = acc[...] * corr + jax.lax.dot_general(
-        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
-    m_s[...] = m_new
+    # fill-aware skip: pages at/past the row's live count contribute nothing
+    # (their slots are all >= fill), so the whole update is predicated out —
+    # the index maps already re-addressed the resident page, eliding the DMA
+    @pl.when(j < npages_ref[b])
+    def _update():
+        q = q_ref[0, 0].astype(jnp.float32)             # (G, Dh)
+        k = k_ref[0, 0].astype(jnp.float32)             # (bs, Dh)
+        v = v_ref[0, 0].astype(jnp.float32)
+        slot = j * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+        mapped = bt_ref[b, j] >= 0
+        valid = (pos_ref[...] >= 0) & (slot < fill_ref[b]) & mapped  # (1, bs)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        s = jnp.where(valid, s, NEG)                    # (G, bs) via broadcast
+        m_prev = m_s[...]                               # (G, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        p = jnp.where(valid, p, 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_s[...] = l_s[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        acc[...] = acc[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_s[...] = m_new
 
     @pl.when(j == nb - 1)
     def _finish():
@@ -89,25 +105,33 @@ def paged_flash_decode(q: jnp.ndarray, k_pool: jnp.ndarray,
     nb = block_tables.shape[1]
     G = Hq // Hkv
     qf = q.reshape(B, Hkv, G, Dh)
+    # live pages per row: everything past ceil(fill / bs) is unwritten
+    # head-room whose slots the fill mask rejects anyway — skip it wholesale
+    num_pages = jnp.minimum(-(-fill // bs), nb).astype(jnp.int32)  # (B,)
 
-    # index maps receive (grid indices..., *scalar-prefetch refs)
-    def k_map(b, h, j, bt, fl):
-        return (jnp.maximum(bt[b, j], 0), h, 0, 0)
+    # index maps receive (grid indices..., *scalar-prefetch refs); the page
+    # index is clamped to the row's last live page so skipped steps
+    # re-address the resident block (same index -> the DMA is elided)
+    def k_map(b, h, j, bt, fl, npg):
+        jc = jnp.maximum(jnp.minimum(j, npg[b] - 1), 0)
+        return (jnp.maximum(bt[b, jc], 0), h, 0, 0)
 
-    def pos_map(b, h, j, bt, fl):
-        return (jnp.maximum(bt[b, j], 0), 0)
+    def pos_map(b, h, j, bt, fl, npg):
+        jc = jnp.maximum(jnp.minimum(j, npg[b] - 1), 0)
+        return (jnp.maximum(bt[b, jc], 0), 0)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
+        num_scalar_prefetch=3,
         grid=(B, Hkv, nb),
         in_specs=[
-            pl.BlockSpec((1, 1, G, Dh), lambda b, h, j, bt, fl: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, G, Dh),
+                         lambda b, h, j, bt, fl, npg: (b, h, 0, 0)),
             pl.BlockSpec((1, 1, bs, Dh), k_map),
             pl.BlockSpec((1, 1, bs, Dh), k_map),
             pl.BlockSpec((1, bs), pos_map),
         ],
         out_specs=pl.BlockSpec((1, 1, G, Dh),
-                               lambda b, h, j, bt, fl: (b, h, 0, 0)),
+                               lambda b, h, j, bt, fl, npg: (b, h, 0, 0)),
         scratch_shapes=[
             pltpu.VMEM((G, Dh), jnp.float32),
             pltpu.VMEM((G, 1), jnp.float32),
@@ -119,5 +143,5 @@ def paged_flash_decode(q: jnp.ndarray, k_pool: jnp.ndarray,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, Hkv, G, Dh), q.dtype),
         interpret=interpret,
-    )(block_tables, fill, qf, k_pool, v_pool, pos_pool)
+    )(block_tables, fill, num_pages, qf, k_pool, v_pool, pos_pool)
     return out.reshape(B, Hq, Dh)

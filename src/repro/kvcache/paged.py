@@ -190,21 +190,33 @@ def paged_attend(q: jnp.ndarray, cache: PagedKVCache) -> jnp.ndarray:
 def write_prompt(cache: PagedKVCache, k_prompt: jnp.ndarray,
                  v_prompt: jnp.ndarray, pos_prompt: jnp.ndarray,
                  blocks: jnp.ndarray, tail_dst: jnp.ndarray, *,
-                 duplicate_tail: bool) -> PagedKVCache:
+                 duplicate_tail: bool, skip_pages: int = 0) -> PagedKVCache:
     """Write one prefilled prompt into ``blocks`` (the prefix-cache chain).
 
-    k_prompt/v_prompt: (Hkv, P, Dh); pos_prompt: (P,) (POS_EMPTY on left
-    padding); blocks: (npb,) page ids with npb = ceil(P / bs).  With
-    ``duplicate_tail`` (static: P % bs != 0) the last — partial — page is
-    also written to ``tail_dst``, the admitted row's private copy, so the
-    shared chain stays read-only once appends start (copy-on-write
+    k_prompt/v_prompt: (Hkv, W, Dh); pos_prompt: (W,) (POS_EMPTY on left
+    padding); blocks: (npb,) page ids covering the row's whole prompt
+    region, with the K/V spanning the last ``npb - skip_pages`` pages.
+
+    ``skip_pages`` (static) is the chunked-prefill partial-chain path
+    (DESIGN.md §Chunked prefill & fill-aware decode): a prompt bucketed to
+    width W < P leaves the leading ``(P - W) // bs`` pages of its chain as
+    pure left-padding — no K/V is produced for them, so only their
+    positions are wiped to POS_EMPTY (recycled pages carry a previous
+    tenant's valid-looking positions; stale K/V under POS_EMPTY is inert,
+    exactly like the pad columns of a full-width prefill).
+
+    With ``duplicate_tail`` (static: P % bs != 0) the last — partial —
+    page is also written to ``tail_dst``, the admitted row's private copy,
+    so the shared chain stays read-only once appends start (copy-on-write
     materialized eagerly; DESIGN.md §Paged cache & prefix sharing).
     """
-    Hkv, P, Dh = k_prompt.shape
+    Hkv, W, Dh = k_prompt.shape
     bs = cache.block_size
-    npb = blocks.shape[0]
-    pad = npb * bs - P
-    assert 0 <= pad < bs, (P, bs, npb)
+    npb = blocks.shape[0] - skip_pages
+    assert npb >= 1, (blocks.shape[0], skip_pages)
+    pad = npb * bs - W
+    assert 0 <= pad < bs, (W, bs, npb)
+    written = blocks[skip_pages:]
 
     def paginate(x, fill_value):
         x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)),
@@ -217,9 +229,11 @@ def write_prompt(cache: PagedKVCache, k_prompt: jnp.ndarray,
     kb = paginate(k_prompt.astype(cache.k_pool.dtype), 0)
     vb = paginate(v_prompt.astype(cache.v_pool.dtype), 0)
     pb = paginate(pos_prompt.astype(jnp.int32), POS_EMPTY)
-    k_pool = cache.k_pool.at[blocks].set(kb)
-    v_pool = cache.v_pool.at[blocks].set(vb)
-    pos_pool = cache.pos_pool.at[blocks].set(pb)
+    k_pool = cache.k_pool.at[written].set(kb)
+    v_pool = cache.v_pool.at[written].set(vb)
+    pos_pool = cache.pos_pool.at[written].set(pb)
+    if skip_pages:
+        pos_pool = pos_pool.at[blocks[:skip_pages]].set(POS_EMPTY)
     if duplicate_tail:
         k_pool = k_pool.at[tail_dst].set(kb[-1])
         v_pool = v_pool.at[tail_dst].set(vb[-1])
@@ -374,6 +388,13 @@ class PrefixCache:
 
     def __len__(self) -> int:
         return len(self._entries)
+
+    def contains(self, key: bytes) -> bool:
+        """Pure membership peek: no LRU touch, no hit/miss accounting.
+        The admission scheduler uses it to cost a candidate (hits are free,
+        misses consume prefill-chunk budget) without perturbing the stats
+        the real ``lookup`` keeps."""
+        return key in self._entries
 
     def lookup(self, key: bytes) -> Optional[PrefixEntry]:
         e = self._entries.get(key)

@@ -50,18 +50,42 @@ def _report(name, completions, wall_s, slo_ms=None):
     print(f"[{name}] finish reasons: {reasons}")
 
 
+def mix_prompt_lengths(prompts, seed, plen_dist="mixed"):
+    """Spread PROMPT lengths: each prompt keeps its full, half or quarter
+    tokens (drawn per prompt, min 3) — the ONE definition of the "mixed"
+    prompt-length workload, shared by the serving and rollout benchmarks so
+    their ``plen_dist`` row labels always mean the same distribution."""
+    if plen_dist == "fixed":
+        return list(prompts)
+    if plen_dist != "mixed":
+        raise ValueError(f"unknown plen_dist {plen_dist!r}")
+    rng = np.random.default_rng(seed + 2)
+    fracs = rng.choice([1.0, 0.5, 0.25], size=len(prompts), p=[0.3, 0.4, 0.3])
+    return [p[:max(3, int(round(len(p) * f)))]
+            for p, f in zip(prompts, fracs)]
+
+
 def make_workload(n, prompt_len, max_new, rate, resp_dist, seed, level="easy",
-                  group_size=1):
+                  group_size=1, plen_dist="fixed"):
     """n*group_size Requests over the synthetic math task: Poisson arrivals
     at ``rate`` req/s (rate 0 = burst at t=0) and fixed or long-tailed-mixed
     response caps.  ``group_size`` > 1 repeats each of the n prompts G times
     under distinct uids — the GRPO group-sampling shape, where the paged
-    backend's prefix cache prefills each prompt once (hit rate (G-1)/G)."""
+    backend's prefix cache prefills each prompt once (hit rate (G-1)/G).
+
+    ``plen_dist="mixed"`` additionally spreads PROMPT lengths (each prompt
+    keeps its full, half or quarter tokens, drawn per prompt) — the regime
+    the chunked-prefill length buckets exist for: short prompts stop paying
+    for engine-wide padding at admission (DESIGN.md §Chunked prefill &
+    fill-aware decode).  Truncation is per prompt, so group members still
+    share their (shortened) prompt."""
     from repro.data import encode_prompts, make_problems
     from repro.rollout import Request
 
     problems = make_problems(n, seed, level)
     ids, mask, answers = encode_prompts(problems, prompt_len)
+    prompts = mix_prompt_lengths([ids[i][mask[i]] for i in range(n)],
+                                 seed, plen_dist)
     total = n * group_size
     rng = np.random.default_rng(seed + 1)
     if rate > 0:
@@ -74,7 +98,7 @@ def make_workload(n, prompt_len, max_new, rate, resp_dist, seed, level="easy",
         caps = rng.choice(spread, size=total, p=[0.4, 0.3, 0.2, 0.1])
     else:
         caps = np.full(total, max_new)
-    reqs = [Request(uid=u, prompt=ids[u // group_size][mask[u // group_size]],
+    reqs = [Request(uid=u, prompt=prompts[u // group_size],
                     max_new_tokens=int(caps[u]),
                     arrival_time=float(arrivals[u])) for u in range(total)]
     problems = [problems[u // group_size] for u in range(total)]
@@ -109,7 +133,20 @@ def main(argv=None):
     ap.add_argument("--resp-dist", default="mixed",
                     choices=["mixed", "fixed"],
                     help="per-request response-cap distribution")
+    ap.add_argument("--plen-dist", default="fixed",
+                    choices=["fixed", "mixed"],
+                    help="prompt-length distribution (mixed = per-prompt "
+                         "full/half/quarter truncation; exercises the "
+                         "chunked-prefill length buckets)")
     ap.add_argument("--decode-chunk", type=int, default=8)
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="prompt-token budget per admission sweep "
+                         "(Sarathi-style chunked prefill; default auto)")
+    ap.add_argument("--overlap-harvest", action="store_true",
+                    help="async double-buffered harvest: chunk t+1 "
+                         "dispatched before chunk t is fetched (wins when "
+                         "host bookkeeping rivals chunk compute; costs a "
+                         "chunk-sized bubble per finished request)")
     ap.add_argument("--slo-ms", type=float, default=None)
     ap.add_argument("--warmup", action="store_true",
                     help="run the workload once first so reported numbers "
@@ -146,7 +183,8 @@ def main(argv=None):
 
     reqs, problems, answers = make_workload(
         args.num_requests, args.prompt_len, args.max_new, args.rate,
-        args.resp_dist, args.seed, group_size=args.group_size)
+        args.resp_dist, args.seed, group_size=args.group_size,
+        plen_dist=args.plen_dist)
     slots = rollout_slots(scfg, args.prompt_len, args.max_new)
     print(f"arch={args.arch}{' (smoke)' if args.smoke else ''} "
           f"compression={args.compression} cache slots/seq/layer: {slots} | "
@@ -163,7 +201,8 @@ def main(argv=None):
             prompt_len=args.prompt_len, max_new_tokens=args.max_new,
             eos_id=TOKENIZER.eos_id, decode_chunk=args.decode_chunk,
             seed=args.seed, cache_backend=args.cache_backend,
-            block_size=args.block_size)
+            block_size=args.block_size, prefill_chunk=args.prefill_chunk,
+            overlap_harvest=args.overlap_harvest)
         if args.warmup:
             eng.run(reqs)
             eng.reset_clock()
@@ -180,6 +219,10 @@ def main(argv=None):
         print(f"[continuous] decode steps: {st['decode_steps']:.0f} "
               f"({st['chunks']:.0f} chunks), row-step utilization: "
               f"{used / max(st['decode_steps'] * args.batch, 1):.0%}")
+        print(f"[continuous] prefill: {st['prefills']:.0f} prompts in "
+              f"{st['prefill_dispatches']:.0f} batched dispatches, "
+              f"{st['prefill_tokens']:.0f} padded tokens "
+              f"({st['prefill_s']*1e3:.0f} ms host-side dispatch)")
         if args.cache_backend == "paged":
             extra = ""
             if eng.allocator is not None:

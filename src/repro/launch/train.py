@@ -46,6 +46,13 @@ def main(argv=None):
                          "(0 = half the phase's requests)")
     ap.add_argument("--decode-chunk", type=int, default=4,
                     help="continuous backend: decode steps per host harvest")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="continuous backend: prompt-token budget per "
+                         "admission sweep (Sarathi-style chunked prefill; "
+                         "default auto)")
+    ap.add_argument("--overlap-harvest", action="store_true",
+                    help="continuous backend: async double-buffered harvest "
+                         "(dispatch chunk t+1 before fetching chunk t)")
     ap.add_argument("--group-slack", type=int, default=0,
                     help="over-provision each group by k rollouts; keep G "
                          "(continuous: first G to finish, stragglers "
@@ -98,6 +105,8 @@ def main(argv=None):
                           cache_backend=args.cache_backend,
                           decode_batch=args.decode_batch,
                           decode_chunk=args.decode_chunk,
+                          prefill_chunk=args.prefill_chunk,
+                          overlap_harvest=args.overlap_harvest,
                           group_slack=args.group_slack)
     tr = Trainer(cfg, scfg, tcfg, opts)
     hist = tr.train(args.steps - tr.step, log_every=10)

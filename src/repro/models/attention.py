@@ -105,6 +105,9 @@ def obs_window_scores(p, x, cfg: ModelConfig, positions, valid_mask,
     positions over all keys, pooled over the window and the GQA group.
     Returns (B, Hkv, S).  Cheap: only W x S logits, no S x S matrix."""
     B, S, D = x.shape
+    # chunked prefill can present a bucket narrower than the window; the
+    # selection signal then pools over every available query column
+    window = min(window, S)
     q, k, _ = _project_qkv(p, x, cfg, positions)
     # last `window` valid positions are ... the last `window` columns when the
     # prompt is left-padded (our convention).

@@ -5,11 +5,38 @@ The lockstep `generate` decodes every row of a batch for the full
 This module keeps a fixed-size decode batch *continuously* full instead: a
 request queue feeds ``batch_size`` row slots; when a row finishes, its result
 is harvested, its per-layer cache block is wiped (`kvcache.reset_rows`), and
-the next queued prompt is prefilled (a compiled (1, P) prefill) and spliced
-into the freed row — while the other rows keep decoding.
+the next queued prompts are prefilled and spliced into the freed rows —
+while the other rows keep decoding.
 
-Everything on device is static-shape, so XLA compiles exactly four programs
-once — bootstrap prefill, per-request prefill, admission splice, and a
+The admission hot path is *length-aware* (DESIGN.md §Chunked prefill &
+fill-aware decode).  Prompts are padded to the smallest *length bucket*
+that fits them — not the engine-wide ``prompt_len`` — and every scheduler
+iteration packs all same-bucket admissions into ONE batched prefill
+dispatch, capped at ``prefill_chunk`` prompt tokens per iteration
+(Sarathi-style chunking: an admission burst is spread over successive
+decode steps instead of stalling the resident batch behind one long
+serial prefill train).  Bucketed positions are offset so token *i* of a
+length-``n`` prompt sits at absolute position ``P - n + i`` exactly as a
+full-width prefill would place it — padding contributes exact zeros to
+attention, so outputs stay token-identical to the lockstep oracle.
+
+Harvest can be *asynchronously double-buffered* (``overlap_harvest``):
+chunk ``t+1`` is dispatched before chunk ``t``'s tokens are
+``device_get``-ed, so host-side EOS detection, admission bookkeeping and
+allocator work overlap device compute.  Each dispatched chunk carries a
+snapshot of its row tenants; a row that finishes inside chunk ``t``
+decodes (discarded) tokens for the chunk already in flight and is
+recycled one chunk later — a pipeline bubble of up to ``decode_chunk``
+steps per finish.  The flag therefore defaults OFF: it wins when
+host-side bookkeeping is material next to a chunk's device time (big
+batches, long responses, real accelerators with dispatch latency) and
+loses on short grouped rollouts where finishes come every chunk — both
+modes are token-identical, so flipping it is purely a throughput call
+(measured tradeoff in DESIGN.md §Chunked prefill & fill-aware decode).
+
+Everything on device is static-shape, so XLA compiles a small closed set of
+programs once — bootstrap prefill, one batched prefill-admit program per
+(bucket width, admission count) pair actually seen, admission splice, and a
 ``decode_chunk``-step scan of the shared :func:`decode_sample_step` core —
 and admission/eviction never recompiles anything.  The sparse budget cache is
 what makes the splice cheap: every row owns the same fixed
@@ -123,6 +150,8 @@ class _RowState:
     n: int = 0                  # tokens emitted so far
     blocks: List[int] = field(default_factory=list)  # paged: pages this row
                                 # holds a reference on (released at finish)
+    done: bool = False          # finished/cancelled; an in-flight chunk that
+                                # still carries this tenant is discarded
 
 
 def _batch_axis(dst_shape, src_shape) -> Optional[int]:
@@ -157,6 +186,48 @@ def insert_request_state(state, sub_state, row):
     return jax.tree.map(one, state, sub_state)
 
 
+def sub_batch_axes(state, sub_shapes):
+    """Per-leaf batch axes of ``state`` vs a 1-request state's shapes.
+
+    ``sub_shapes`` comes from ``jax.eval_shape`` of a 1-row prefill — no
+    model forward runs.  Returns a matching pytree of ints (-1 = shapes
+    coincide, i.e. batch_size == 1: whole-leaf replacement).  Computed once
+    at engine init, it lets the batched admission splice scatter A
+    requests at once without re-deriving the axis per dispatch (and without
+    the A-vs-other-dim ambiguity the 1-row shape diff never has).
+    """
+    def one(d, s):
+        ax = _batch_axis(d.shape, s.shape)
+        return -1 if ax is None else ax
+
+    return jax.tree.map(one, state, sub_shapes)
+
+
+def insert_request_states(state, sub_state, rows, axes):
+    """Splice an A-request decode state into ``state`` at batch indices
+    ``rows`` (the batched counterpart of :func:`insert_request_state`;
+    ``axes`` from :func:`sub_batch_axes`)."""
+    def one(d, s, ax):
+        if ax < 0:
+            return s.astype(d.dtype)
+        idx = (slice(None),) * ax + (rows,)
+        return d.at[idx].set(s.astype(d.dtype))
+
+    return jax.tree.map(one, state, sub_state, axes)
+
+
+def slice_request_state(sub_state, i: int, axes):
+    """1-request slice (batch dim kept) of an A-batched prefill state —
+    the per-request ``PrefixEntry.sub_state`` a batched splice-sharing miss
+    stores for later hits."""
+    def one(s, ax):
+        if ax < 0:
+            return s
+        return jax.lax.slice_in_dim(s, i, i + 1, axis=ax)
+
+    return jax.tree.map(one, sub_state, axes)
+
+
 class ContinuousEngine:
     """Fixed-batch continuous-batching scheduler over the shared decode core.
 
@@ -186,11 +257,24 @@ class ContinuousEngine:
                  max_new_tokens: int, eos_id: int, pad_id: int = 0,
                  decode_chunk: int = 8, seed: int = 0,
                  cache_backend: str = "contiguous", block_size: int = 16,
-                 pool_blocks: Optional[int] = None, prefix_entries: int = 32):
+                 pool_blocks: Optional[int] = None, prefix_entries: int = 32,
+                 prefill_chunk: Optional[int] = None,
+                 overlap_harvest: bool = False):
         if decode_chunk < 1:
             raise ValueError("decode_chunk must be >= 1")
         if cache_backend not in ("contiguous", "paged"):
             raise ValueError(f"unknown cache_backend {cache_backend!r}")
+        if prefill_chunk is None:
+            # enough budget to keep admission latency low (a couple of
+            # full-width prompts per decode chunk) without ever letting one
+            # burst monopolize an iteration
+            prefill_chunk = max(2 * prompt_len, 64)
+        if prefill_chunk < prompt_len:
+            raise ValueError(
+                f"prefill_chunk={prefill_chunk} < prompt_len={prompt_len}: "
+                f"a full-length prompt could never be admitted")
+        self.prefill_chunk = prefill_chunk
+        self.overlap_harvest = overlap_harvest
         self.params = params
         self.cfg = cfg
         self.mfns = mfns
@@ -245,47 +329,49 @@ class ContinuousEngine:
         elif self._share_prefix:
             self.prefix = PrefixCache(None, max_entries=prefix_entries)
 
-        def prefill_admit(p, batch, state, logits, counts, active, row_keys,
-                          row, row_key):
-            """Prefill one request and splice it into ``row`` of the running
-            batch — a single dispatch per admission."""
-            sub_logits, sub_state = mfns.prefill(p, cfg, batch, scfg,
-                                                 self.slots)
-            state = insert_request_state(state, sub_state, row)
-            return (state,
-                    logits.at[row].set(sub_logits[0]),
-                    counts.at[row].set(0),
-                    active.at[row].set(True),
-                    row_keys.at[row].set(row_key))
+        # ---- admission length buckets ----------------------------------
+        # a prompt is padded to the smallest bucket width that fits it (not
+        # the engine-wide P); bucketed positions are offset by P - W so the
+        # produced K/V is bit-identical to a full-width prefill.  Pool mode
+        # constrains widths to P - j*block_size so the uncovered left-pad
+        # region is always whole pages (cleared, not written).
+        if self._pool_paged:
+            self._buckets = sorted(
+                w for w in (prompt_len - j * block_size
+                            for j in range(self._npb)) if w >= 1)
+        else:
+            # compressed policies select prompt slots from an
+            # obs_window-query score — keep every bucket at least that wide
+            # so the selection signal (and thus the kept set) is identical
+            # to a full-width prefill's
+            floor = 8 if scfg.compression == "none" else max(
+                8, scfg.obs_window)
+            w, widths = floor, []
+            while w < prompt_len:
+                widths.append(w)
+                w *= 2
+            self._buckets = widths + [prompt_len]
+        # batched-admission sizes (split larger groups): bounded so the
+        # compiled-program set stays small — at most |buckets| x |A| prefill
+        # programs over the engine's lifetime
+        self._a_sizes = [a for a in (1, 2, 4, 8) if a <= batch_size]
+        self._programs: Dict[tuple, object] = {}
+        # per-request sampling keys for a batch of uids, one dispatch
+        self._fold_keys = jax.jit(
+            lambda base, uids: jax.vmap(
+                lambda u: jax.random.fold_in(base, u))(uids))
 
         # donations: every program rewrites the decode state in place rather
         # than copying the slot arrays (the whole point of fixed budgets)
-        self._prefill_admit = jax.jit(prefill_admit,
-                                      donate_argnums=(2, 3, 4, 5, 6))
-
-        def prefill_admit_share(p, batch, state, logits, counts, active,
-                                row_keys, row, row_key):
-            """Splice-sharing miss path: like `prefill_admit`, but also
-            returns the 1-request state + last-token logits so the prefix
-            cache can replay the admission without re-running the model."""
-            sub_logits, sub_state = mfns.prefill(p, cfg, batch, scfg,
-                                                 self.slots)
-            state = insert_request_state(state, sub_state, row)
-            return (state,
-                    logits.at[row].set(sub_logits[0]),
-                    counts.at[row].set(0),
-                    active.at[row].set(True),
-                    row_keys.at[row].set(row_key),
-                    sub_state, sub_logits[0])
-
-        self._prefill_admit_share = jax.jit(prefill_admit_share,
-                                            donate_argnums=(2, 3, 4, 5, 6))
 
         def admit_cached(state, logits, counts, active, row_keys, row,
-                         row_key, sub_state, sub_logits_row):
+                         base_key, uid, sub_state, sub_logits_row):
             """Splice-sharing hit path: splice the cached prefill state —
             no model forward at all.  ``sub_state`` is NOT donated: the
-            prefix cache reuses it for every later hit."""
+            prefix cache reuses it for every later hit.  The per-request
+            sampling key is folded in here (inside the jit) so the host
+            never pays an eager fold_in dispatch per hit."""
+            row_key = jax.random.fold_in(base_key, uid)
             state = insert_request_state(state, sub_state, row)
             return (state,
                     logits.at[row].set(sub_logits_row),
@@ -296,65 +382,8 @@ class ContinuousEngine:
         self._admit_cached = jax.jit(admit_cached,
                                      donate_argnums=(0, 1, 2, 3, 4))
 
-        if self._pool_paged:
-            npb, has_tail = self._npb, self._has_tail
-            P = prompt_len
-
-            def prefill_store(p, batch, state, logits, counts, active,
-                              row_keys, row, row_key, entry_blocks,
-                              row_table):
-                """Pool miss path: prefill once, write the prompt K/V into
-                the prefix-cache page chain (duplicating the partial tail
-                page into the row's private copy), and map the row's block
-                table — one dispatch."""
-                sub_logits, sub_state = mfns.prefill(p, cfg, batch, scfg, P)
-                kp = sub_state.caches.k[:, 0]          # (L, Hkv, P, Dh)
-                vp = sub_state.caches.v[:, 0]
-                pp = sub_state.caches.pos[:, 0, 0]     # (L, P)
-                caches = jax.vmap(
-                    functools.partial(write_prompt, duplicate_tail=has_tail),
-                    in_axes=(0, 0, 0, 0, None, None))(
-                        state.caches, kp, vp, pp, entry_blocks,
-                        row_table[npb - 1])
-                caches = dataclasses.replace(
-                    caches,
-                    block_tables=caches.block_tables.at[:, row].set(row_table),
-                    fill=caches.fill.at[:, row].set(P))
-                state = state._replace(
-                    caches=caches, pos=state.pos.at[row].set(sub_state.pos[0]))
-                return (state,
-                        logits.at[row].set(sub_logits[0]),
-                        counts.at[row].set(0),
-                        active.at[row].set(True),
-                        row_keys.at[row].set(row_key),
-                        sub_logits[0], sub_state.pos[0])
-
-            self._prefill_store = jax.jit(prefill_store,
-                                          donate_argnums=(2, 3, 4, 5, 6))
-
-            def admit_hit(state, logits, counts, active, row_keys, row,
-                          row_key, row_table, src_tail, entry_logits,
-                          entry_pos):
-                """Pool hit path: map the shared prompt pages into the row's
-                table and copy-on-write the partial tail page — no model
-                forward, no prompt K/V traffic beyond one page."""
-                caches = state.caches
-                if has_tail:
-                    caches = copy_block(caches, src_tail, row_table[npb - 1])
-                caches = dataclasses.replace(
-                    caches,
-                    block_tables=caches.block_tables.at[:, row].set(row_table),
-                    fill=caches.fill.at[:, row].set(P))
-                state = state._replace(caches=caches,
-                                       pos=state.pos.at[row].set(entry_pos))
-                return (state,
-                        logits.at[row].set(entry_logits),
-                        counts.at[row].set(0),
-                        active.at[row].set(True),
-                        row_keys.at[row].set(row_key))
-
-            self._admit_hit = jax.jit(admit_hit,
-                                      donate_argnums=(0, 1, 2, 3, 4))
+        # (the pool-mode hit path is the batched "hitp" program, built on
+        # first use by `_admit_program` like the prefill kinds)
 
         def retire(state, active, row):
             caches = getattr(state, "caches", None)
@@ -403,13 +432,26 @@ class ContinuousEngine:
         self.active = jnp.zeros((batch_size,), bool)
         self.row_keys = jnp.zeros((batch_size,) + self._base_key.shape,
                                   self._base_key.dtype)
+        # per-leaf batch axes of a 1-request prefill state vs the running
+        # state (shapes only — eval_shape runs no model).  The pool backend
+        # never splices sub-states, and its hand-built PagedKVCache state
+        # does not structurally match a prefill's contiguous output.
+        self._sub_axes = None
+        if not self._pool_paged:
+            sub_shapes = jax.eval_shape(
+                lambda p, b: mfns.prefill(p, cfg, b, scfg, self.slots),
+                self.params, self._encode(np.zeros((1,), np.int32)))[1]
+            self._sub_axes = sub_batch_axes(self.state, sub_shapes)
         # ---- host state ------------------------------------------------
         self.rows: List[Optional[_RowState]] = [None] * batch_size
+        self._staged: List[tuple] = []      # (req, row) awaiting flush
+        self._dirty: set = set()            # finished rows not yet retired
         self.now = 0.0
         self.stats: Dict[str, float] = {
             "decode_steps": 0, "chunks": 0, "admissions": 0,
             "wasted_row_steps": 0, "prefills": 0, "prefix_hits": 0,
-            "blocks_in_use_peak": 0, "cancelled": 0}
+            "blocks_in_use_peak": 0, "cancelled": 0, "prefill_s": 0.0,
+            "prefill_dispatches": 0, "prefill_tokens": 0}
 
     # ------------------------------------------------------------------
     def _bootstrap_state(self):
@@ -453,6 +495,152 @@ class ContinuousEngine:
         mask = np.zeros((1, self.prompt_len), bool)
         mask[0, self.prompt_len - len(p):] = True
         return {"tokens": jnp.asarray(ids), "valid_mask": jnp.asarray(mask)}
+
+    # -- length-aware admission -----------------------------------------
+    # (DESIGN.md §Chunked prefill & fill-aware decode)
+    def _bucket(self, n: int) -> int:
+        """Smallest bucket width that fits an n-token prompt."""
+        for w in self._buckets:
+            if w >= n:
+                return w
+        raise ValueError(f"prompt length {n} exceeds engine prompt_len "
+                         f"{self.prompt_len}")
+
+    def _encode_many(self, prompts: Sequence[np.ndarray], width: int):
+        """Left-pad A raw prompts to (A, width) + mask + offset positions.
+
+        Positions are ``P - width + j`` so a valid token lands at the same
+        absolute position a full-width prefill gives it — the bucketing is
+        invisible to RoPE, the cache and the sampler (token identity)."""
+        A, P = len(prompts), self.prompt_len
+        ids = np.full((A, width), self.pad_id, np.int32)
+        mask = np.zeros((A, width), bool)
+        for i, prompt in enumerate(prompts):
+            p = np.asarray(prompt, np.int32).ravel()
+            if len(p) > width:
+                raise ValueError(f"prompt length {len(p)} > bucket {width}")
+            ids[i, width - len(p):] = p
+            mask[i, width - len(p):] = True
+        pos = np.broadcast_to(np.arange(P - width, P, dtype=np.int32),
+                              (A, width))
+        # plain numpy: the arrays cross to the device once, at the jit call
+        # boundary of the admission program (no eager per-array dispatch)
+        return {"tokens": ids, "valid_mask": mask, "positions": pos}
+
+    def _admit_program(self, kind: str, width: int, A: int):
+        """Compiled batched prefill-admit program for (bucket, count).
+
+        Built on first use and cached — the set is bounded by
+        |buckets| x |A sizes| x 3 kinds.  All kinds prefill an (A, width)
+        prompt batch in ONE model forward and scatter the A requests into
+        their rows in the same dispatch:
+
+          * ``admit``  — plain contiguous splice (no sharing),
+          * ``share``  — splice-sharing miss: also returns per-request
+            1-row sub-states + last logits for the prefix cache,
+          * ``store``  — pool miss: writes the prompt K/V into each
+            request's page chain (partial-chain `write_prompt`: the
+            bucketed width leaves the leading pad pages cleared, not
+            written) and maps the rows' block tables,
+          * ``hitp``   — A pool HITS in one dispatch (``width`` ignored):
+            maps each hit's shared pages + copy-on-writes its tail — the
+            dominant admission kind under GRPO group sampling ((G-1)/G of
+            admissions), so batching it saves most of the per-admission
+            dispatch overhead.
+        """
+        key = (kind, width, A)
+        prog = self._programs.get(key)
+        if prog is not None:
+            return prog
+        mfns, cfg, scfg = self.mfns, self.cfg, self.scfg
+
+        if kind in ("admit", "share"):
+            axes = self._sub_axes
+
+            def admit(p, batch, state, logits, counts, active, row_keys,
+                      rows, keys):
+                sub_logits, sub_state = mfns.prefill(p, cfg, batch, scfg,
+                                                     self.slots)
+                state = insert_request_states(state, sub_state, rows, axes)
+                outs = (state,
+                        logits.at[rows].set(sub_logits),
+                        counts.at[rows].set(0),
+                        active.at[rows].set(True),
+                        row_keys.at[rows].set(keys))
+                if kind == "share":
+                    subs = [slice_request_state(sub_state, i, axes)
+                            for i in range(A)]
+                    return outs + (subs, sub_logits)
+                return outs
+
+            prog = jax.jit(admit, donate_argnums=(2, 3, 4, 5, 6))
+        elif kind == "store":
+            P, npb, has_tail = self.prompt_len, self._npb, self._has_tail
+            skip = (P - width) // self.block_size   # leading pad-only pages
+
+            def store(p, batch, state, logits, counts, active, row_keys,
+                      rows, keys, entry_blocks, row_tables):
+                sub_logits, sub_state = mfns.prefill(p, cfg, batch, scfg,
+                                                     width)
+                caches = state.caches
+                wp = functools.partial(write_prompt,
+                                       duplicate_tail=has_tail,
+                                       skip_pages=skip)
+                for i in range(A):
+                    kp = sub_state.caches.k[:, i]      # (L, Hkv, W, Dh)
+                    vp = sub_state.caches.v[:, i]
+                    pp = sub_state.caches.pos[:, i, 0]  # (L, W)
+                    caches = jax.vmap(wp, in_axes=(0, 0, 0, 0, None, None))(
+                        caches, kp, vp, pp, entry_blocks[i],
+                        row_tables[i, npb - 1])
+                caches = dataclasses.replace(
+                    caches,
+                    block_tables=caches.block_tables.at[:, rows].set(
+                        row_tables),
+                    fill=caches.fill.at[:, rows].set(P))
+                state = state._replace(
+                    caches=caches, pos=state.pos.at[rows].set(sub_state.pos))
+                return (state,
+                        logits.at[rows].set(sub_logits),
+                        counts.at[rows].set(0),
+                        active.at[rows].set(True),
+                        row_keys.at[rows].set(keys),
+                        sub_logits, sub_state.pos)
+
+            prog = jax.jit(store, donate_argnums=(2, 3, 4, 5, 6))
+        elif kind == "hitp":
+            P, npb, has_tail = self.prompt_len, self._npb, self._has_tail
+
+            def hitp(state, logits, counts, active, row_keys, rows,
+                     base_key, uids, row_tables, src_tails, e_logits, e_pos):
+                """A batched pool hits: per-request keys folded in-jit;
+                ``e_logits``/``e_pos`` arrive as A-tuples of the entries'
+                cached arrays and stack on device."""
+                keys = jax.vmap(
+                    lambda u: jax.random.fold_in(base_key, u))(uids)
+                caches = state.caches
+                if has_tail:
+                    caches = copy_block(caches, src_tails,
+                                        row_tables[:, npb - 1])
+                caches = dataclasses.replace(
+                    caches,
+                    block_tables=caches.block_tables.at[:, rows].set(
+                        row_tables),
+                    fill=caches.fill.at[:, rows].set(P))
+                state = state._replace(
+                    caches=caches,
+                    pos=state.pos.at[rows].set(jnp.stack(e_pos)))
+                return (state,
+                        logits.at[rows].set(jnp.stack(e_logits)),
+                        counts.at[rows].set(0),
+                        active.at[rows].set(True),
+                        row_keys.at[rows].set(keys))
+
+            prog = jax.jit(hitp, donate_argnums=(0, 1, 2, 3, 4))
+        else:
+            raise ValueError(f"unknown admission program kind {kind!r}")
+        self._programs[key] = prog
+        return prog
 
     def _free_rows(self) -> List[int]:
         return [i for i, r in enumerate(self.rows) if r is None]
@@ -525,114 +713,299 @@ class ContinuousEngine:
                 if not self.prefix.evict_one():
                     raise
 
-    def _admit_shared(self, req: Request, row: int, row_key) -> List[int]:
-        """Prefix-sharing admission (cache_backend="paged").
-
-        Pool mode — miss: prefill once, store the prompt pages refcounted in
-        the prefix cache, map them (full pages shared, tail copied) into the
-        row.  Hit: map the shared pages + copy-on-write the tail; the model
-        prefill is skipped entirely.  Splice mode (ssm/hybrid/compressed):
-        the cached 1-request prefill *state* is spliced instead of pages.
-        Returns the pages the row holds references on (pool mode).
-        """
-        key = np.asarray(req.prompt, np.int32).tobytes()
-        entry = self.prefix.lookup(key)
-        if not self._pool_paged:
-            if entry is None:
-                (self.state, self.logits, self.counts, self.active,
-                 self.row_keys, sub_state, sub_logits_row) = \
-                    self._prefill_admit_share(
-                        self.params, self._encode(req.prompt), self.state,
-                        self.logits, self.counts, self.active, self.row_keys,
-                        row, row_key)
-                self.prefix.insert(key, PrefixEntry(
-                    sub_state=sub_state, last_logits=sub_logits_row))
-                self.stats["prefills"] += 1
-            else:
-                (self.state, self.logits, self.counts, self.active,
-                 self.row_keys) = self._admit_cached(
-                     self.state, self.logits, self.counts, self.active,
-                     self.row_keys, row, row_key, entry.sub_state,
-                     entry.last_logits)
-                self.stats["prefix_hits"] += 1
-            return []
-        # pool mode: the row shares the prompt's full pages and owns the
-        # rest (tail copy + generation head-room)
-        n_own = self.blocks_per_row - self._npb_full
-        if entry is None:
-            # one atomic alloc: a PoolExhausted after a partial grab would
-            # leak the grabbed pages
-            blocks = self._alloc_blocks(n_own + self._npb)
-            own, entry_blocks = blocks[:n_own], blocks[n_own:]
-            row_table = [*entry_blocks[:self._npb_full], *own]
-            for b in entry_blocks[:self._npb_full]:
-                self.allocator.retain(b)
-            (self.state, self.logits, self.counts, self.active,
-             self.row_keys, e_logits, e_pos) = self._prefill_store(
-                 self.params, self._encode(req.prompt), self.state,
-                 self.logits, self.counts, self.active, self.row_keys, row,
-                 row_key, jnp.asarray(entry_blocks, jnp.int32),
-                 jnp.asarray(row_table, jnp.int32))
-            self.prefix.insert(key, PrefixEntry(
-                blocks=tuple(entry_blocks), last_logits=e_logits,
-                next_pos=e_pos))
-            self.stats["prefills"] += 1
-        else:
-            # pin the entry's whole chain FIRST: under pool pressure
-            # _alloc_blocks LRU-evicts prefix entries — possibly this very
-            # one — and an unpinned chain would be freed and handed back as
-            # the row's own pages (the COW source included)
-            pinned = list(entry.blocks[:self._npb_full])
-            src_tail = entry.blocks[-1] if self._has_tail else None
-            if src_tail is not None:
-                pinned.append(src_tail)
-            for b in pinned:
-                self.allocator.retain(b)
-            try:
-                own = self._alloc_blocks(n_own)
-            except PoolExhausted:
-                for b in pinned:
-                    self.allocator.release(b)
-                raise
-            row_table = [*entry.blocks[:self._npb_full], *own]
-            (self.state, self.logits, self.counts, self.active,
-             self.row_keys) = self._admit_hit(
-                 self.state, self.logits, self.counts, self.active,
-                 self.row_keys, row, row_key,
-                 jnp.asarray(row_table, jnp.int32),
-                 jnp.asarray(src_tail if src_tail is not None else 0,
-                             jnp.int32),
-                 entry.last_logits, entry.next_pos)
-            if src_tail is not None:
-                # the COW copy is enqueued; drop the temporary source pin
-                # (the row keeps its refs on the shared full pages)
-                self.allocator.release(src_tail)
-            self.stats["prefix_hits"] += 1
-        return row_table
+    # -- staged batched admission ---------------------------------------
+    def _stage_admit(self, req: Request, row: int) -> None:
+        """Reserve ``row`` for ``req``; the actual prefill happens at the
+        next :meth:`_flush_admissions` (batched with co-staged requests)."""
+        self.rows[row] = _RowState(req=req, admit_time=self.now)
+        self._dirty.discard(row)
+        self._staged.append((req, row))
 
     def _admit_one(self, req: Request, row: int) -> None:
-        """Prefill ``req`` into the freed ``row`` (single fused dispatch);
-        the splice overwrites every slot of the row's cache block (or remaps
-        its whole block table), so nothing of the previous tenant can leak
-        even without an explicit reset."""
-        row_key = jax.random.fold_in(self._base_key, req.uid)
-        blocks: List[int] = []
-        if self._share_prefix:
-            blocks = self._admit_shared(req, row, row_key)
-        else:
-            (self.state, self.logits, self.counts, self.active,
-             self.row_keys) = self._prefill_admit(
-                 self.params, self._encode(req.prompt), self.state,
-                 self.logits, self.counts, self.active, self.row_keys, row,
-                 row_key)
-            self.stats["prefills"] += 1
-        self.rows[row] = _RowState(req=req, admit_time=self.now,
-                                   blocks=blocks)
+        """Immediate single-request admission (stage + flush).  The splice
+        overwrites every slot of the row's cache block (or remaps its whole
+        block table), so nothing of the previous tenant can leak even
+        without an explicit reset."""
+        self._stage_admit(req, row)
+        self._flush_admissions()
+
+    def _admit_cost(self, req: Request, staged_keys: set) -> int:
+        """Prefill-chunk budget cost of admitting ``req`` now: the bucket
+        width for a prompt that must be prefilled, 0 for a prefix-cache hit
+        (no model forward) or a duplicate of a co-staged prompt (it rides
+        the sibling's prefill)."""
+        n = len(np.asarray(req.prompt, np.int32).ravel())
+        if not self._share_prefix:
+            return self._bucket(n)
+        key = np.asarray(req.prompt, np.int32).tobytes()
+        if key in staged_keys or self.prefix.contains(key):
+            return 0
+        staged_keys.add(key)
+        return self._bucket(n)
+
+    def _flush_admissions(self) -> None:
+        """Dispatch every staged admission, batched by length bucket.
+
+        On ``PoolExhausted`` the already-dispatched admissions stand, the
+        failed and not-yet-dispatched ones are unwound (their rows revert
+        to free AND are retired on device: staging had cleared their
+        deferred-retire marker, and a row left active with a table mapping
+        released pages would append into the next tenant's pages) and the
+        exception propagates — exactly the single-request unwind contract,
+        extended to a batch."""
+        if not self._staged:
+            return
+        t0 = time.perf_counter()
+        staged, self._staged = self._staged, []
+        admitted: set = set()
+        try:
+            if self._share_prefix:
+                self._flush_shared(staged, admitted)
+            else:
+                self._flush_plain(staged, admitted)
+        except PoolExhausted:
+            for req, row in staged:
+                if req.uid not in admitted:
+                    self.rows[row] = None
+                    self._dirty.discard(row)
+                    self.state, self.active = self._retire(
+                        self.state, self.active, row)
+            raise
+        finally:
+            self.stats["prefill_s"] += time.perf_counter() - t0
+            if self.allocator is not None:
+                self.stats["blocks_in_use_peak"] = max(
+                    self.stats["blocks_in_use_peak"],
+                    self.allocator.blocks_in_use)
+
+    def _split_batches(self, group):
+        """Split one bucket's admissions into compiled batch sizes."""
+        while group:
+            a = next(x for x in reversed(self._a_sizes) if x <= len(group))
+            yield group[:a]
+            group = group[a:]
+
+    def _flush_plain(self, staged, admitted) -> None:
+        by_w: Dict[int, list] = {}
+        for req, row in staged:
+            w = self._bucket(len(np.asarray(req.prompt, np.int32).ravel()))
+            by_w.setdefault(w, []).append((req, row))
+        for w in sorted(by_w):
+            for part in self._split_batches(by_w[w]):
+                self._dispatch_plain(w, part, admitted)
+
+    def _dispatch_plain(self, width: int, part, admitted) -> None:
+        reqs = [req for req, _ in part]
+        rows = np.asarray([row for _, row in part], np.int32)
+        keys = self._fold_keys(self._base_key,
+                               np.asarray([r.uid for r in reqs], np.int32))
+        prog = self._admit_program("admit", width, len(part))
+        (self.state, self.logits, self.counts, self.active,
+         self.row_keys) = prog(
+             self.params, self._encode_many([r.prompt for r in reqs], width),
+             self.state, self.logits, self.counts, self.active,
+             self.row_keys, rows, keys)
+        for req, _ in part:
+            admitted.add(req.uid)
+        self.stats["prefills"] += len(part)
+        self.stats["admissions"] += len(part)
+        self.stats["prefill_dispatches"] += 1
+        self.stats["prefill_tokens"] += width * len(part)
+
+    def _pin_entry(self, entry: PrefixEntry) -> List[int]:
+        """Pin a pool entry's chain (full pages + the COW tail source) so
+        LRU eviction under this flush's later allocation pressure cannot
+        free pages about to be mapped — an unpinned chain could be freed
+        and handed straight back as another row's append pages (silent KV
+        corruption).  The full-page pins become the row's own refs at
+        dispatch; the tail pin is dropped once the COW copy is enqueued."""
+        pinned = list(entry.blocks[:self._npb_full])
+        if self._has_tail:
+            pinned.append(entry.blocks[-1])
+        for b in pinned:
+            self.allocator.retain(b)
+        return pinned
+
+    def _flush_shared(self, staged, admitted) -> None:
+        """Prefix-sharing flush: hits splice cached prefills (no model
+        forward — pool hits in batched ``hitp`` dispatches); distinct
+        missed prompts batch into bucketed prefills; co-staged duplicates
+        of a miss defer until the miss lands, then ride the same hit batch
+        — G same-prompt group rollouts staged together still cost exactly
+        ONE prefill.
+
+        Hit entries are pinned at classification time, and each created
+        miss entry with deferred members is pinned the moment it exists —
+        always BEFORE the next allocation could LRU-evict it."""
+        hit_jobs, miss_groups, order, created = [], {}, [], {}
+        for req, row in staged:
+            key = np.asarray(req.prompt, np.int32).tobytes()
+            if key in miss_groups:
+                miss_groups[key].append((req, row))
+                continue
+            entry = self.prefix.lookup(key)
+            if entry is None:
+                miss_groups[key] = [(req, row)]
+                order.append(key)
+            else:
+                pins = self._pin_entry(entry) if self._pool_paged else []
+                hit_jobs.append((req, row, entry, pins))
+        by_w: Dict[int, list] = {}
+        for key in order:
+            req, row = miss_groups[key][0]
+            w = self._bucket(len(np.asarray(req.prompt, np.int32).ravel()))
+            by_w.setdefault(w, []).append((key, req, row))
+        try:
+            for w in sorted(by_w):
+                for part in self._split_batches(by_w[w]):
+                    if self._pool_paged:
+                        self._dispatch_store(w, part, admitted, created)
+                    else:
+                        self._dispatch_share(w, part, admitted, created)
+                    for key, _, _ in part:
+                        for req2, row2 in miss_groups[key][1:]:
+                            entry = created[key]
+                            pins = (self._pin_entry(entry)
+                                    if self._pool_paged else [])
+                            hit_jobs.append((req2, row2, entry, pins))
+            if self._pool_paged:
+                self._dispatch_hits_pool(hit_jobs, admitted)
+            else:
+                for req, row, entry, _ in hit_jobs:
+                    self._admit_hit_splice(req, row, entry)
+                    admitted.add(req.uid)
+        except PoolExhausted:
+            # drop the pins of every hit job that never dispatched
+            for req, _, _, pins in hit_jobs:
+                if req.uid not in admitted and pins:
+                    self.allocator.release_many(pins)
+            raise
+
+    def _dispatch_share(self, width: int, part, admitted, created) -> None:
+        """Splice-sharing miss batch: one (A, W) prefill; per-request 1-row
+        sub-states come back for the prefix cache."""
+        reqs = [req for _, req, _ in part]
+        rows = np.asarray([row for _, _, row in part], np.int32)
+        keys = self._fold_keys(self._base_key,
+                               np.asarray([r.uid for r in reqs], np.int32))
+        prog = self._admit_program("share", width, len(part))
+        (self.state, self.logits, self.counts, self.active, self.row_keys,
+         subs, sub_logits) = prog(
+             self.params, self._encode_many([r.prompt for r in reqs], width),
+             self.state, self.logits, self.counts, self.active,
+             self.row_keys, rows, keys)
+        for i, (key, req, _) in enumerate(part):
+            entry = PrefixEntry(sub_state=subs[i], last_logits=sub_logits[i])
+            self.prefix.insert(key, entry)
+            created[key] = entry           # deferred hits splice from the
+            admitted.add(req.uid)          # object even if later evicted
+        self.stats["prefills"] += len(part)
+        self.stats["admissions"] += len(part)
+        self.stats["prefill_dispatches"] += 1
+        self.stats["prefill_tokens"] += width * len(part)
+
+    def _dispatch_store(self, width: int, part, admitted, created) -> None:
+        """Pool miss batch: allocate every request's chain first (so a
+        PoolExhausted mid-batch dispatches nothing and leaks nothing), then
+        one (A, W) prefill writes all the prompt page chains."""
+        n_own = self.blocks_per_row - self._npb_full
+        allocs = []                        # (blocks, entry_blocks, row_table)
+        try:
+            for _ in part:
+                blocks = self._alloc_blocks(n_own + self._npb)
+                own, entry_blocks = blocks[:n_own], blocks[n_own:]
+                row_table = [*entry_blocks[:self._npb_full], *own]
+                allocs.append((blocks, entry_blocks, row_table))
+        except PoolExhausted:
+            for blocks, _, _ in allocs:
+                self.allocator.release_many(blocks)
+            raise
+        reqs = [req for _, req, _ in part]
+        rows = np.asarray([row for _, _, row in part], np.int32)
+        keys = self._fold_keys(self._base_key,
+                               np.asarray([r.uid for r in reqs], np.int32))
+        for _, entry_blocks, _ in allocs:
+            for b in entry_blocks[:self._npb_full]:
+                self.allocator.retain(b)   # the row's refs on shared pages
+        prog = self._admit_program("store", width, len(part))
+        (self.state, self.logits, self.counts, self.active, self.row_keys,
+         e_logits, e_pos) = prog(
+             self.params, self._encode_many([r.prompt for r in reqs], width),
+             self.state, self.logits, self.counts, self.active,
+             self.row_keys, rows, keys,
+             np.asarray([eb for _, eb, _ in allocs], np.int32),
+             np.asarray([rt for _, _, rt in allocs], np.int32))
+        for i, (key, req, row) in enumerate(part):
+            _, entry_blocks, row_table = allocs[i]
+            entry = PrefixEntry(
+                blocks=tuple(entry_blocks), last_logits=e_logits[i],
+                next_pos=e_pos[i])
+            self.prefix.insert(key, entry)
+            created[key] = entry
+            self.rows[row].blocks = list(row_table)
+            admitted.add(req.uid)
+        self.stats["prefills"] += len(part)
+        self.stats["admissions"] += len(part)
+        self.stats["prefill_dispatches"] += 1
+        self.stats["prefill_tokens"] += width * len(part)
+
+    def _admit_hit_splice(self, req: Request, row: int, entry: PrefixEntry
+                          ) -> None:
+        """Splice-mode prefix hit: splice the cached 1-row prefill state —
+        no model forward."""
+        (self.state, self.logits, self.counts, self.active,
+         self.row_keys) = self._admit_cached(
+             self.state, self.logits, self.counts, self.active,
+             self.row_keys, row, self._base_key, req.uid,
+             entry.sub_state, entry.last_logits)
+        self.stats["prefix_hits"] += 1
         self.stats["admissions"] += 1
-        if self.allocator is not None:
-            self.stats["blocks_in_use_peak"] = max(
-                self.stats["blocks_in_use_peak"],
-                self.allocator.blocks_in_use)
+
+    def _dispatch_hits_pool(self, jobs, admitted) -> None:
+        """Pool prefix hits, batched: each row shares its entry's full
+        pages (the pre-taken pins become the row's refs) and owns the rest
+        (tail copy + generation head-room).  Own-page allocation may
+        LRU-evict prefix entries under pressure — the pins taken at
+        classification time are what keeps every mapped chain alive.  On
+        exhaustion the allocatable prefix dispatches; the rest unwinds in
+        the caller."""
+        n_own = self.blocks_per_row - self._npb_full
+        ready, exhausted = [], None
+        for req, row, entry, pins in jobs:
+            try:
+                own = self._alloc_blocks(n_own)
+            except PoolExhausted as e:
+                exhausted = e
+                break
+            ready.append((req, row, entry, own))
+        for part in self._split_batches(ready):
+            prog = self._admit_program("hitp", 0, len(part))
+            rows = np.asarray([row for _, row, _, _ in part], np.int32)
+            uids = np.asarray([req.uid for req, _, _, _ in part], np.int32)
+            tables = np.asarray(
+                [[*e.blocks[:self._npb_full], *own]
+                 for _, _, e, own in part], np.int32)
+            tails = np.asarray(
+                [e.blocks[-1] if self._has_tail else 0
+                 for _, _, e, _ in part], np.int32)
+            (self.state, self.logits, self.counts, self.active,
+             self.row_keys) = prog(
+                 self.state, self.logits, self.counts, self.active,
+                 self.row_keys, rows, self._base_key, uids, tables, tails,
+                 tuple(e.last_logits for _, _, e, _ in part),
+                 tuple(e.next_pos for _, _, e, _ in part))
+            for req, row, entry, own in part:
+                if self._has_tail:
+                    # the COW copy is enqueued; drop the temporary source
+                    # pin (the row keeps its refs on the shared full pages)
+                    self.allocator.release(entry.blocks[-1])
+                self.rows[row].blocks = [*entry.blocks[:self._npb_full],
+                                         *own]
+                admitted.add(req.uid)
+                self.stats["prefix_hits"] += 1
+                self.stats["admissions"] += 1
+        if exhausted is not None:
+            raise exhausted
 
     def _finish_row(self, row: int, finish_reason: str,
                     out: List[Completion]) -> None:
@@ -653,7 +1026,12 @@ class ContinuousEngine:
             # drop this row's page references; shared prompt pages stay
             # alive as long as the prefix cache (or a sibling row) pins them
             self.allocator.release_many(rs.blocks)
+        rs.done = True
         self.rows[row] = None
+        # retire is deferred to the next admission sweep: the row is either
+        # re-admitted (the splice overwrites everything) or wiped there,
+        # always before the next chunk dispatch
+        self._dirty.add(row)
 
     def _cancel_row(self, row: int) -> None:
         """Abort a row's in-flight request (group over-provisioning: a
@@ -663,19 +1041,31 @@ class ContinuousEngine:
         rs = self.rows[row]
         if rs.blocks:
             self.allocator.release_many(rs.blocks)
+        rs.done = True
         self.rows[row] = None
         self.state, self.active = self._retire(self.state, self.active, row)
+        self._dirty.discard(row)
         self.stats["cancelled"] += 1
 
     def run(self, requests: Sequence[Request], *,
             group_size: Optional[int] = None,
-            group_slack: int = 0) -> List[Completion]:
+            group_slack: int = 0,
+            schedule: str = "fifo") -> List[Completion]:
         """Serve ``requests`` to completion; returns Completions sorted by uid.
 
         Requests become admissible once the virtual clock passes their
         ``arrival_time``; the clock advances by the measured wall time of
         each admission/decode chunk and jumps over idle gaps, so latency
         statistics are honest service measurements without real-time sleeps.
+
+        ``schedule`` orders co-arrived requests: "fifo" (uid order — the
+        fair serving default) or "longest" (descending token cap — LPT
+        makespan scheduling for batch phases: the long-cap stragglers start
+        first and their decode overlaps everyone else's, instead of
+        draining near-alone at phase end).  Per-request sampling-key chains
+        make admission order invisible in each request's tokens, so the
+        policy is purely a throughput knob (arrival time stays the primary
+        key: nothing is admitted before it arrives).
 
         ``group_size``/``group_slack`` enable the RL-training group
         discipline (DESIGN.md §Training on the continuous engine): uids must
@@ -714,38 +1104,61 @@ class ContinuousEngine:
                 if rs2 is not None and rs2.req.uid // Gs == gid:
                     self._cancel_row(r2)
 
-        pending = deque(sorted(requests,
-                               key=lambda r: (r.arrival_time, r.uid)))
+        if schedule == "fifo":
+            order = lambda r: (r.arrival_time, r.uid)            # noqa: E731
+        elif schedule == "longest":
+            order = lambda r: (r.arrival_time, -self._cap(r), r.uid)  # noqa: E731
+        else:
+            raise ValueError(f"unknown schedule {schedule!r}")
+        pending = deque(sorted(requests, key=order))
         out: List[Completion] = []
-        while pending or self._num_active():
-            t0 = time.perf_counter()
-            # FIFO admission of arrived requests into free rows
+        # in-flight decode chunks: (toks, logps, ents, tenant snapshot).
+        # With overlap_harvest the loop keeps one chunk in flight past the
+        # one being harvested (ping-pong output buffers: chunk t's outputs
+        # are device_get-ed while chunk t+1 writes its own), so host-side
+        # harvest/admission bookkeeping overlaps device compute.
+        inflight: deque = deque()
+        depth = 1 if self.overlap_harvest else 0
+
+        def admit_sweep() -> None:
+            """FIFO admission of arrived requests into free rows, capped at
+            ``prefill_chunk`` prompt tokens per sweep (budget overflow waits
+            for the next sweep — the resident batch keeps decoding instead
+            of stalling behind a long admission burst), then one batched
+            flush.  Freed rows that admitted nothing are retired before the
+            next dispatch so they stop appending into recycled pages."""
+            spent, staged_keys = 0, set()
             for row in self._free_rows():
                 if not (pending and pending[0].arrival_time <= self.now):
                     break
-                self._admit_one(pending.popleft(), row)
-            if not self._num_active():
-                # idle: jump the virtual clock to the next arrival
-                self.now = max(self.now, pending[0].arrival_time)
-                continue
-            (self.state, self.logits, self.counts, toks, logps,
-             ents) = self._chunk(
-                self.params, self.state, self.logits, self.counts,
-                self.active, self.row_keys)
+                cost = self._admit_cost(pending[0], staged_keys)
+                if spent and spent + cost > self.prefill_chunk:
+                    break
+                spent += cost
+                self._stage_admit(pending.popleft(), row)
+            self._flush_admissions()
+            for row in sorted(self._dirty):
+                self.state, self.active = self._retire(
+                    self.state, self.active, row)
+            self._dirty.clear()
+
+        def harvest_one() -> None:
+            """Harvest the oldest in-flight chunk against its dispatch-time
+            tenant snapshot (a tenant that finished meanwhile — possible
+            only with overlap — marks its rows' outputs as discard)."""
+            toks_d, logps_d, ents_d, tenants = inflight.popleft()
             toks_h, logps_h, ents_h = jax.device_get(
-                (toks, logps, ents))                           # (chunk, B)
-            self.now += time.perf_counter() - t0
-            t_harvest = time.perf_counter()
+                (toks_d, logps_d, ents_d))                     # (chunk, B)
             self.stats["chunks"] += 1
             self.stats["decode_steps"] += self.decode_chunk
             for row in range(self.batch_size):
-                rs = self.rows[row]
-                if rs is None:
+                rs = tenants[row]
+                if rs is None or rs.done:
                     self.stats["wasted_row_steps"] += self.decode_chunk
                     continue
                 if group_done(rs.req.uid):
-                    # a sibling finishing earlier in this sweep closed the
-                    # group; this straggler's chunk is discarded
+                    # a sibling finishing earlier closed the group; this
+                    # straggler's chunk is discarded
                     self._cancel_row(row)
                     continue
                 remaining = self._cap(rs.req) - rs.n
@@ -767,18 +1180,28 @@ class ContinuousEngine:
                 uid = rs.req.uid
                 self._finish_row(row, finish, out)
                 on_finished(uid)
-                # slot recycling: re-admit straight into the freed row when
-                # the queue has an arrived request (the admission splice
-                # overwrites the whole block); otherwise wipe it
-                if pending and pending[0].arrival_time <= self.now:
-                    self._admit_one(pending.popleft(), row)
-                else:
-                    self.state, self.active = self._retire(
-                        self.state, self.active, row)
-            self.now += time.perf_counter() - t_harvest
+
+        while pending or self._num_active() or inflight:
+            t0 = time.perf_counter()
+            admit_sweep()
+            dispatched = False
+            if self._num_active():
+                (self.state, self.logits, self.counts, toks, logps,
+                 ents) = self._chunk(
+                    self.params, self.state, self.logits, self.counts,
+                    self.active, self.row_keys)
+                inflight.append((toks, logps, ents, list(self.rows)))
+                dispatched = True
+            if inflight and (len(inflight) > depth or not dispatched):
+                harvest_one()
+            self.now += time.perf_counter() - t0
+            if not (self._num_active() or inflight) and pending:
+                # idle: jump the virtual clock to the next arrival
+                self.now = max(self.now, pending[0].arrival_time)
         # park: rows keep decoding pad tokens while inactive (static shapes),
         # appending garbage KVs into their freed blocks; wipe them so the
         # drained engine ends in the all-empty state
+        self._dirty.clear()
         self.state, self.active = self._park(self.state, self.active)
         return sorted(out, key=lambda c: c.uid)
 

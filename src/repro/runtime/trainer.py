@@ -74,6 +74,13 @@ class TrainerOptions:
                                    # half the phase's requests, >= G)
     decode_chunk: int = 4          # continuous: steps between host harvests
     block_size: int = 16           # paged pool: tokens per page
+    prefill_chunk: Optional[int] = None  # continuous: prompt-token budget
+                                   # per admission sweep (None = auto)
+    overlap_harvest: bool = False  # continuous: async double-buffered
+                                   # harvest (chunk t+1 dispatched before
+                                   # chunk t's tokens are fetched); wins on
+                                   # long-response/accelerator workloads,
+                                   # costs a chunk-sized bubble per finish
 
 
 class Trainer:
@@ -112,7 +119,9 @@ class Trainer:
                   max_new_tokens=opts.max_new_tokens,
                   eos_id=self.tok.eos_id, pad_id=self.tok.pad_id,
                   decode_chunk=opts.decode_chunk, seed=self.tcfg.seed,
-                  cache_backend=opts.cache_backend)
+                  cache_backend=opts.cache_backend,
+                  prefill_chunk=opts.prefill_chunk,
+                  overlap_harvest=opts.overlap_harvest)
         if opts.cache_backend == "paged":
             # pool sizing: every resident row's chain + one pinned prompt
             # chain per distinct prompt in the phase + COW/tail headroom

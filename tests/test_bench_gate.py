@@ -103,3 +103,29 @@ def test_gate_cli_exit_codes(tmp_path):
     _write(tmp_path / "fresh2", *_full((1.2, 1.2, 0.5)))
     assert bench_gate.main(["--committed", str(tmp_path / "committed"),
                             "--fresh", str(tmp_path / "fresh2")]) == 1
+
+
+def test_gate_ignores_key_fields_unknown_to_old_baselines(tmp_path):
+    """A fresh row may carry identity fields the committed baseline predates
+    (e.g. ``plen_dist``): matching restricts the key to fields the baseline
+    knows, so the regression check still pairs the rows instead of silently
+    skipping them."""
+    serving = {"continuous_vs_lockstep_smoke": [_row(1.2)],
+               "paged_prefix_smoke": [_row(1.2)]}
+    old_rollout = {"rollout_phase_smoke": [_row(2.0)],       # no plen_dist
+                   "rollout_phase": [_row(1.4)]}
+    _write(tmp_path / "committed", serving, old_rollout)
+    fresh_row = dict(_row(1.0), plen_dist="mixed")           # -50% regression
+    new_rollout = {"rollout_phase_smoke": [fresh_row],
+                   "rollout_phase": [dict(_row(1.4), plen_dist="mixed")]}
+    _write(tmp_path / "fresh", serving, new_rollout)
+    problems = bench_gate.gate(tmp_path / "committed", tmp_path / "fresh",
+                               0.35)
+    assert len(problems) == 1 and "regressed" in problems[0]
+    # once the baseline itself carries the field, it participates in the key
+    new_base = {"rollout_phase_smoke": [dict(_row(2.0), plen_dist="fixed"),
+                                        dict(_row(1.1), plen_dist="mixed")],
+                "rollout_phase": [dict(_row(1.4), plen_dist="mixed")]}
+    _write(tmp_path / "committed2", serving, new_base)
+    assert bench_gate.gate(tmp_path / "committed2", tmp_path / "fresh",
+                           0.35) == []

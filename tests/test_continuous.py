@@ -112,20 +112,29 @@ def test_mid_run_recycled_row_is_fully_overwritten():
                            prompt_len=PROMPT_LEN, max_new_tokens=12,
                            eos_id=TOKENIZER.eos_id, decode_chunk=1, seed=5)
 
-    orig_admit = eng._admit_one
-    seen = []
+    orig_stage = eng._stage_admit
+    orig_flush = eng._flush_admissions
+    seen, flushed = [], []
 
-    def checking_admit(req, row):
-        orig_admit(req, row)
-        # straight after admission the row's cache holds ONLY prompt tokens:
-        # every valid pos < prompt_len, nothing from the previous tenant
-        pos = np.asarray(eng.state.caches.pos)[:, row]       # (L, H, S)
-        valid = pos[pos >= 0]
-        assert valid.size, "admitted row has an empty cache"
-        assert valid.max() < PROMPT_LEN
+    def checking_stage(req, row):
+        orig_stage(req, row)
         seen.append(req.uid)
+        flushed.append(row)
 
-    eng._admit_one = checking_admit
+    def checking_flush():
+        rows, flushed[:] = list(flushed), []
+        orig_flush()
+        # straight after the admission flush each admitted row's cache holds
+        # ONLY prompt tokens: every valid pos < prompt_len, nothing from the
+        # previous tenant
+        for row in rows:
+            pos = np.asarray(eng.state.caches.pos)[:, row]   # (L, H, S)
+            valid = pos[pos >= 0]
+            assert valid.size, "admitted row has an empty cache"
+            assert valid.max() < PROMPT_LEN
+
+    eng._stage_admit = checking_stage
+    eng._flush_admissions = checking_flush
     eng.run(reqs)
     assert seen == [0, 1, 2, 3, 4, 5]            # FIFO admission order
 
@@ -208,3 +217,95 @@ def test_group_slack_first_g_finished_cancels_stragglers():
                                          if r.uid in {c.uid for c in kept}])}
     for c in kept:
         np.testing.assert_array_equal(c.tokens, alone[c.uid].tokens)
+
+
+# ---------------------------------------------------------------------------
+# Length-aware hot loop: chunked batched prefill + async harvest
+# (DESIGN.md §Chunked prefill & fill-aware decode)
+# ---------------------------------------------------------------------------
+def _run_engine(scfg, reqs, *, batch=4, max_new=8, chunk=2, seed=42, **kw):
+    eng = ContinuousEngine(PARAMS, CFG, M, scfg, batch_size=batch,
+                           prompt_len=PROMPT_LEN, max_new_tokens=max_new,
+                           eos_id=TOKENIZER.eos_id, decode_chunk=chunk,
+                           seed=seed, **kw)
+    return eng, eng.run(reqs)
+
+
+def test_overlap_harvest_tokens_identical_to_sync():
+    """Async double-buffered harvest only changes WHEN chunks are fetched,
+    never the tokens: per-request key chains make the pipeline bubble
+    (a finished row decoding one extra in-flight chunk) invisible."""
+    scfg = SparseRLConfig(kv_budget=16, kv_buffer=4, obs_window=2,
+                          num_sinks=1, compression="rkv")
+    reqs = _requests(7, [3, 9, 5, 8, 2, 6, 4])
+    _, sync = _run_engine(scfg, reqs, overlap_harvest=False)
+    eng, overlapped = _run_engine(scfg, reqs, overlap_harvest=True)
+    for a, b in zip(sync, overlapped):
+        assert a.uid == b.uid
+        np.testing.assert_array_equal(a.tokens, b.tokens)
+        np.testing.assert_allclose(a.logps, b.logps, atol=1e-6)
+        assert a.finish_reason == b.finish_reason
+
+
+def test_chunked_prefill_budget_invariant_and_batched():
+    """prefill_chunk only paces admissions (Sarathi chunking): a budget of
+    exactly one full-width prompt per sweep and an effectively-unbounded
+    budget must emit identical tokens; the unbounded run actually batches
+    (fewer prefill dispatches than prefills)."""
+    scfg = SparseRLConfig(kv_budget=16, kv_buffer=4, obs_window=2,
+                          num_sinks=1, compression="rkv")
+    reqs = _requests(8, [3, 7, 5, 8, 2, 6, 4, 5])
+    _, tight = _run_engine(scfg, reqs, prefill_chunk=PROMPT_LEN)
+    eng, loose = _run_engine(scfg, reqs, prefill_chunk=64 * PROMPT_LEN)
+    for a, b in zip(tight, loose):
+        np.testing.assert_array_equal(a.tokens, b.tokens)
+    assert eng.stats["prefills"] == 8
+    # the first sweep admits a whole batch of 4 in at most 2 dispatches
+    assert eng.stats["prefill_dispatches"] < eng.stats["prefills"]
+
+
+@pytest.mark.parametrize("compression", ["rkv", "none"])
+def test_length_buckets_shrink_prefill_padding(compression):
+    """Mixed-length prompts: short ones are padded to their bucket, not the
+    engine-wide P — and the bucketed positions keep outputs
+    lockstep-identical (the lockstep oracle always pads to P)."""
+    scfg = SparseRLConfig(kv_budget=16, kv_buffer=4, obs_window=2,
+                          num_sinks=1, compression=compression)
+    base = _requests(6, [3, 7, 5, 8, 2, 6])
+    # truncate half the prompts below the smallest (8) bucket
+    reqs = [r if i % 2 else
+            Request(uid=r.uid, prompt=r.prompt[:4],
+                    max_new_tokens=r.max_new_tokens)
+            for i, r in enumerate(base)]
+    eng, cont = _run_engine(scfg, reqs, batch=2)
+    lock = serve_lockstep(PARAMS, CFG, M, scfg, reqs, batch_size=2,
+                          prompt_len=PROMPT_LEN, max_new_tokens=8,
+                          eos_id=TOKENIZER.eos_id, seed=42)
+    for c, l in zip(cont, lock):
+        np.testing.assert_array_equal(c.tokens, l.tokens)
+        np.testing.assert_allclose(c.logps, l.logps, atol=1e-6)
+    # 3 prompts fit the 8-bucket, 3 pay full width
+    assert eng.stats["prefill_tokens"] < PROMPT_LEN * eng.stats["prefills"]
+
+
+def test_lpt_schedule_tokens_identical_to_fifo():
+    """schedule="longest" (LPT makespan admission for batch phases) only
+    reorders co-arrived admissions; per-request key chains keep every
+    request's tokens identical to the FIFO run."""
+    scfg = SparseRLConfig(kv_budget=16, kv_buffer=4, obs_window=2,
+                          num_sinks=1, compression="rkv")
+    reqs = _requests(6, [9, 2, 8, 3, 7, 4])
+    eng_f = ContinuousEngine(PARAMS, CFG, M, scfg, batch_size=2,
+                             prompt_len=PROMPT_LEN, max_new_tokens=12,
+                             eos_id=TOKENIZER.eos_id, decode_chunk=2, seed=11)
+    fifo = eng_f.run(reqs)
+    eng_l = ContinuousEngine(PARAMS, CFG, M, scfg, batch_size=2,
+                             prompt_len=PROMPT_LEN, max_new_tokens=12,
+                             eos_id=TOKENIZER.eos_id, decode_chunk=2, seed=11)
+    lpt = eng_l.run(reqs, schedule="longest")
+    assert [c.uid for c in fifo] == [c.uid for c in lpt]
+    for a, b in zip(fifo, lpt):
+        np.testing.assert_array_equal(a.tokens, b.tokens)
+        np.testing.assert_allclose(a.logps, b.logps, atol=1e-6)
+    with pytest.raises(ValueError):
+        eng_l.run(reqs, schedule="shortest")

@@ -89,6 +89,40 @@ def test_paged_decode_sweep(bs, nb, dtype):
                                np.asarray(o_ref, jnp.float32), **tol)
 
 
+@pytest.mark.parametrize("bs,nb", [(8, 4), (16, 3)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_decode_ragged_fills(bs, nb, dtype):
+    """Fill-aware early exit vs the oracle on ragged fills: a fully-mapped
+    table (generation head-room, the serving state) with per-row fills of
+    one page, a partial single page, a mid-chain partial page, the full
+    chain, and an empty unmapped row.  The clamped index maps + pl.when
+    skip must be invisible in the output."""
+    B, Hq, Hkv, Dh = 5, 4, 2, 16
+    N = B * nb + 1
+    rng = np.random.default_rng(bs + nb)
+    q = _mk(rng, (B, Hq, Dh), dtype)
+    k_pool = _mk(rng, (N, Hkv, bs, Dh), dtype)
+    v_pool = _mk(rng, (N, Hkv, bs, Dh), dtype)
+    pos_pool = jnp.asarray(rng.integers(0, 99, (N, bs)), jnp.int32)
+    bt = np.arange(1, B * nb + 1, dtype=np.int32).reshape(B, nb)
+    bt[4, :] = -1                          # empty row: nothing mapped
+    fill = jnp.asarray([bs,                # exactly one live page
+                        bs // 2,           # partial single page
+                        (nb - 1) * bs + 1,  # partial page mid/end of chain
+                        nb * bs,           # every page live
+                        0], jnp.int32)     # nothing written
+    o = paged_flash_decode(q, k_pool, v_pool, pos_pool, jnp.asarray(bt),
+                           fill, interpret=True)
+    o_ref = ref.paged_decode_ref(q, k_pool, v_pool, pos_pool,
+                                 jnp.asarray(bt), fill)
+    tol = TOL if dtype == jnp.bfloat16 else TOL32
+    np.testing.assert_allclose(np.asarray(o, jnp.float32),
+                               np.asarray(o_ref, jnp.float32), **tol)
+    # the empty row attends nothing: exact zeros on both paths
+    assert not np.asarray(o_ref[4], np.float32).any()
+    np.testing.assert_array_equal(np.asarray(o[4], jnp.float32), 0.0)
+
+
 def test_paged_decode_matches_paged_attend():
     """Kernel contract == production jnp paged decode path: attending a
     materialized PagedKVCache equals streaming its pages in the kernel."""

@@ -314,3 +314,136 @@ def test_paged_rejects_unknown_backend():
         ContinuousEngine(params, cfg, m, SparseRLConfig(compression="none"),
                          batch_size=2, prompt_len=8, max_new_tokens=4,
                          eos_id=1, cache_backend="virtual")
+
+
+def test_write_prompt_partial_chain_skip_pages():
+    """Chunked-prefill partial write: a bucketed prompt covers only the
+    trailing pages of its chain; the leading pad-only pages are wiped to
+    POS_EMPTY (recycled pages carry a previous tenant's valid positions)
+    and the materialized row matches a full-width write on every *valid*
+    slot."""
+    Hkv, Dh, bs, P, W = 2, 4, 4, 12, 8            # skip = (12-8)/4 = 1 page
+    npb = P // bs
+    c = init_paged(1, Hkv, num_blocks=2 * npb + 1, block_size=bs, head_dim=Dh,
+                   blocks_per_row=npb, seq_len=P, dtype=jnp.float32)
+    # poison the pool: every page starts with valid-looking positions
+    c = PagedKVCache(c.k_pool, jnp.full_like(c.v_pool, 7.0),
+                     jnp.zeros_like(c.pos_pool), c.block_tables, c.fill,
+                     seq_len=P)
+    rng = np.random.default_rng(0)
+    kW = jnp.asarray(rng.normal(size=(Hkv, W, Dh)), jnp.float32)
+    posW = jnp.asarray([POS_EMPTY] * 2 + list(range(P - W + 2, P)), jnp.int32)
+    chain = jnp.asarray([1, 2, 3], jnp.int32)
+    out = write_prompt(c, kW, kW * 0.5, posW, chain, jnp.int32(0),
+                       duplicate_tail=False, skip_pages=1)
+    out = PagedKVCache(out.k_pool, out.v_pool, out.pos_pool,
+                       jnp.asarray([[1, 2, 3]], jnp.int32),
+                       jnp.asarray([P], jnp.int32), seq_len=P)
+    # full-width oracle: same prompt written without skip into another chain
+    kP = jnp.concatenate([jnp.zeros((Hkv, P - W, Dh)), kW], axis=1)
+    posP = jnp.concatenate([jnp.full((P - W,), POS_EMPTY, jnp.int32),
+                            posW])
+    full = write_prompt(c, kP, kP * 0.5, posP,
+                        jnp.asarray([4, 5, 6], jnp.int32), jnp.int32(0),
+                        duplicate_tail=False)
+    full = PagedKVCache(full.k_pool, full.v_pool, full.pos_pool,
+                        jnp.asarray([[4, 5, 6]], jnp.int32),
+                        jnp.asarray([P], jnp.int32), seq_len=P)
+    k_a, v_a, pos_a = materialize(out)
+    k_b, v_b, pos_b = materialize(full)
+    np.testing.assert_array_equal(pos_a, pos_b)   # skip page wiped to EMPTY
+    valid = np.asarray(pos_a[0, 0]) >= 0
+    np.testing.assert_array_equal(np.asarray(k_a)[..., valid, :],
+                                  np.asarray(k_b)[..., valid, :])
+    np.testing.assert_array_equal(np.asarray(v_a)[..., valid, :],
+                                  np.asarray(v_b)[..., valid, :])
+
+
+def _pressure_engine(pool_slack=0, prefix_entries=2, batch=2):
+    cfg = get_config("qwen2.5-14b").smoke()
+    m = get_model(cfg)
+    params = m.init_params(cfg, jax.random.PRNGKey(0))
+    scfg = SparseRLConfig(compression="none")
+    eng = ContinuousEngine(params, cfg, m, scfg, batch_size=batch,
+                           prompt_len=PROMPT_LEN, max_new_tokens=8,
+                           eos_id=TOKENIZER.eos_id, cache_backend="paged",
+                           block_size=8, seed=0,
+                           pool_blocks=1 + batch * 4 + 2 + pool_slack,
+                           prefix_entries=prefix_entries)
+    return eng
+
+
+def test_lru_eviction_under_pool_pressure_no_leak_at_end_phase():
+    """More distinct prompts than the prefix cache/pool can pin: LRU
+    entries evict mid-phase, evicted prompts re-admit as fresh misses in a
+    later phase, refcounts stay consistent (end_phase's leak check is the
+    assertion) and outputs are reproducible."""
+    problems = make_problems(4, 11, "easy")
+    ids, mask, _ = encode_prompts(problems, PROMPT_LEN)
+    reqs = [Request(uid=i, prompt=ids[i][mask[i]], max_new_tokens=4)
+            for i in range(4)]
+    eng = _pressure_engine()
+    first = eng.run(reqs)
+    assert eng.stats["prefills"] == 4             # all distinct prompts
+    assert len(eng.prefix) <= 2                   # LRU evictions happened
+    stats = eng.end_phase()                       # raises on any page leak
+    assert eng.allocator.blocks_in_use == 0
+    assert stats["admissions"] == 4
+    # evicted prompts come back as misses; same seeds -> same tokens
+    eng.begin_phase()
+    second = eng.run(reqs)
+    assert eng.stats["prefills"] == 4             # phase-end cleared them all
+    eng.end_phase()
+    assert eng.allocator.blocks_in_use == 0
+    for a, b in zip(first, second):
+        np.testing.assert_array_equal(a.tokens, b.tokens)
+
+
+def test_pool_exhausted_under_pressure_unwinds_and_keeps_refcounts():
+    """A genuinely-too-full pool: the admission evicts every prefix entry
+    trying to make room, then fails loudly with PoolExhausted — the staged
+    row reverts to free and no page reference is left dangling."""
+    problems = make_problems(2, 13, "easy")
+    ids, mask, _ = encode_prompts(problems, PROMPT_LEN)
+    eng = _pressure_engine()
+    eng._admit_one(Request(uid=0, prompt=ids[0][mask[0]]), 0)
+    free_before_squat = eng.allocator.num_free
+    squat = eng.allocator.alloc(free_before_squat)   # external pressure
+    with pytest.raises(PoolExhausted):
+        eng._admit_one(Request(uid=1, prompt=ids[1][mask[1]]), 1)
+    assert eng.rows[1] is None                    # admission fully unwound
+    assert len(eng.prefix) == 0                   # evicted trying to fit
+    # only the first row's pages + the squatter remain referenced
+    assert eng.allocator.blocks_in_use == len(squat) + len(eng.rows[0].blocks)
+    eng.allocator.release_many(squat)
+    # the engine still works once pressure lifts
+    eng._admit_one(Request(uid=1, prompt=ids[1][mask[1]]), 1)
+    assert eng.rows[1] is not None
+
+
+def test_pool_bucketed_prefill_short_prompts_identical():
+    """Pool-mode chunked prefill: prompts short enough for a sub-chain
+    bucket (width P - j*block_size) leave their leading pad pages cleared,
+    not written — and stay token-identical to the contiguous backend."""
+    cfg = get_config("qwen2.5-14b").smoke()
+    m = get_model(cfg)
+    params = m.init_params(cfg, jax.random.PRNGKey(0))
+    scfg = SparseRLConfig(compression="none")
+    problems = make_problems(2, 5, "easy")
+    ids, mask, _ = encode_prompts(problems, PROMPT_LEN)
+    # 3/4-token prompts -> bucket 16 - 2*6 = 4 with block_size=6 (skip=2)
+    reqs = [Request(uid=u, prompt=ids[u // 2][mask[u // 2]][:3 + u // 2],
+                    max_new_tokens=(4, 6, 5, 3)[u]) for u in range(4)]
+    kw = dict(batch_size=2, prompt_len=PROMPT_LEN, max_new_tokens=6,
+              eos_id=TOKENIZER.eos_id, decode_chunk=1, seed=7)
+    cont = ContinuousEngine(params, cfg, m, scfg, **kw).run(reqs)
+    eng = ContinuousEngine(params, cfg, m, scfg, cache_backend="paged",
+                           block_size=6, **kw)
+    paged = eng.run(reqs)
+    assert 4 in eng._buckets                      # the short bucket exists
+    assert eng.stats["prefills"] == 2             # two distinct prompts
+    # every miss prefilled at the 4-wide bucket, not the engine-wide P
+    assert eng.stats["prefill_tokens"] == 4 * eng.stats["prefills"]
+    for c, p in zip(cont, paged):
+        np.testing.assert_array_equal(c.tokens, p.tokens)
+        np.testing.assert_allclose(c.logps, p.logps, atol=0)

@@ -150,3 +150,24 @@ def test_ref_kl_term():
     out_wo = sparse_rl_loss(lt, lo, ls, adv, mask, scfg)
     assert float(out_with.loss) > float(out_wo.loss) - 1e-6
     assert "ref_kl" in out_with.metrics
+
+
+def test_min_log_xi_not_clamped_by_masked_fill():
+    """min_log_xi must be the min over VALID tokens only.  Masked positions
+    used to fill with 0.0 inside the min, clamping the metric at 0 whenever
+    every valid log-ratio is positive (regression: fill is +inf now)."""
+    B, T = 2, 4
+    lt = jnp.zeros((B, T))
+    lo = jnp.zeros((B, T))
+    # every valid token: log xi = logp_old - logp_sparse = +0.3
+    ls = jnp.full((B, T), -0.3)
+    mask = jnp.ones((B, T), bool).at[0, 3].set(False)
+    adv = jnp.ones((B,))
+    out = sparse_rl_loss(lt, lo, ls, adv, mask, SparseRLConfig())
+    np.testing.assert_allclose(float(out.metrics["min_log_xi"]), 0.3,
+                               rtol=1e-6)
+    # a genuinely negative log-ratio still wins the min
+    ls2 = ls.at[1, 2].set(0.5)            # log xi = -0.5 there
+    out2 = sparse_rl_loss(lt, lo, ls2, adv, mask, SparseRLConfig())
+    np.testing.assert_allclose(float(out2.metrics["min_log_xi"]), -0.5,
+                               rtol=1e-6)

@@ -33,15 +33,16 @@ from pathlib import Path
 # with committed rows for the regression comparison)
 GATED_SECTIONS = {
     "BENCH_serving.json": {
-        "continuous_vs_lockstep_smoke": ("policy", "batch"),
+        "continuous_vs_lockstep_smoke": ("policy", "batch", "plen_dist"),
         "paged_prefix_smoke": ("group_size", "n_prompts"),
     },
     "BENCH_rollout.json": {
-        "rollout_phase_smoke": ("policy", "group_size", "n_prompts"),
+        "rollout_phase_smoke": ("policy", "group_size", "n_prompts",
+                                "plen_dist"),
         # CI only re-runs the smoke benches, so for the full-scale section
         # fresh == committed and the tolerance check is a no-op — but the
         # hard bounds below still vet the committed numbers on every push
-        "rollout_phase": ("policy", "group_size", "n_prompts"),
+        "rollout_phase": ("policy", "group_size", "n_prompts", "plen_dist"),
     },
 }
 # sections whose rows must meet speedup >= 1.0 regardless of history
@@ -52,15 +53,28 @@ def _row_key(row: dict, fields) -> tuple:
     return tuple(row.get(f) for f in fields)
 
 
+def _known_fields(key_fields, committed_rows) -> tuple:
+    """Identity fields the committed baseline actually knows about.
+
+    Newly-added row fields (e.g. ``plen_dist``) are absent from baselines
+    committed before the field existed; matching on them would orphan every
+    fresh row and silently skip the regression check.  Restricting the key
+    to fields the old baseline carries keeps those rows paired (and the new
+    field starts gating as soon as the baseline is regenerated)."""
+    return tuple(f for f in key_fields
+                 if any(f in r for r in committed_rows))
+
+
 def gate_section(name: str, fresh_rows, committed_rows, key_fields,
                  tolerance: float):
     """Pure comparison for one section; returns a list of problem strings."""
     problems = []
-    committed_by_key = {_row_key(r, key_fields): r
+    match_fields = _known_fields(key_fields, committed_rows or [])
+    committed_by_key = {_row_key(r, match_fields): r
                        for r in (committed_rows or [])}
     for row in fresh_rows:
-        key = _row_key(row, key_fields)
-        label = f"{name}{list(key)}"
+        key = _row_key(row, match_fields)
+        label = f"{name}{[v for v in _row_key(row, key_fields) if v is not None]}"
         if row.get("identical") is False:
             problems.append(f"{label}: outputs not token-identical")
         speedup = row.get("speedup")
