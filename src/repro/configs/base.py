@@ -266,6 +266,11 @@ class SparseRLConfig:
     reject: bool = True           # Sparsity-Aware Rejection Sampling
     xi_clip_max: float = 10.0     # numerical safety cap on xi (beyond-paper)
     sequence_level: bool = False  # GSPO-style variant (beyond-paper)
+    # Async actor-learner staleness correction (beyond-paper; DESIGN.md
+    # §Async pipeline & staleness correction): cap on the per-token
+    # behavior-policy ratio rho_t = pi_prox / pi_behave — the same
+    # variance-control role xi_clip_max plays for the sparsity ratio.
+    staleness_clip: float = 2.0
 
     @property
     def cache_slots(self) -> int:

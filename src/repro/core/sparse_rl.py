@@ -15,6 +15,24 @@ All ratio math is done in log space; xi is capped (``xi_clip_max``) for
 variance control — a numerical-safety deviation from the paper documented in
 DESIGN.md (the paper's Eq. 7 uses raw xi; with eps-rejection active the cap
 binds only in the far tail).
+
+Async actor-learner extension (beyond-paper; DESIGN.md §Async pipeline &
+staleness correction): when rollouts are produced by a pipelined actor whose
+weights lag the learner, a FOURTH policy appears —
+
+  pi_behave — dense policy of the *sampler-version* weights (the snapshot
+              the token was actually drawn under)
+
+and pi_old splits into (pi_behave, pi_prox): ``logp_old`` keeps its role as
+the PPO proximal anchor (dense log-probs under the learner weights at
+update time — identical to today's sync trainer), while ``logp_behave``
+carries the dense sampler-version log-probs.  The staleness mismatch is
+absorbed exactly like the sparsity mismatch: a per-token importance ratio
+rho_t = pi_prox / pi_behave, capped at ``staleness_clip``, composed
+multiplicatively with xi outside the PPO clip.  At lag 0 the two policies
+coincide bitwise, log rho_t = 0 exactly, rho_t = exp(0) = 1.0, and the loss
+degenerates to the sync objective (multiplication by the float 1.0 is exact
+in IEEE arithmetic) — the equivalence the async e2e test pins.
 """
 from __future__ import annotations
 
@@ -58,17 +76,28 @@ def sparse_rl_loss(logp_theta: jnp.ndarray,
                    token_mask: jnp.ndarray,
                    scfg: SparseRLConfig,
                    *,
-                   logp_ref: Optional[jnp.ndarray] = None) -> SparseRLOut:
+                   logp_ref: Optional[jnp.ndarray] = None,
+                   logp_behave: Optional[jnp.ndarray] = None) -> SparseRLOut:
     """The Sparse-RL objective, Eq. 7 (negated for minimization).
 
-      J = E[ 1/G sum_i M_RS(o_i) 1/|o_i| sum_t xi_{i,t}
+      J = E[ 1/G sum_i M_RS(o_i) 1/|o_i| sum_t rho_{i,t} xi_{i,t}
              * min(w_{i,t} A_i, clip(w_{i,t}, 1±eps) A_i) ]  - kl_coef * KL
 
     logp_theta   (B, T): learner log-probs (differentiated)
-    logp_old     (B, T): dense old-policy log-probs (stop-grad)
+    logp_old     (B, T): dense proximal log-probs (stop-grad): the learner
+                         weights at update time — in the sync trainer this
+                         IS the dense old policy of the sampler
     logp_sparse  (B, T): sparse sampler log-probs recorded at rollout time
     advantages   (B,)  : group-normalized rewards
     token_mask   (B, T): True for response tokens up to (incl.) EOS
+    logp_behave  (B, T): optional — dense log-probs under each token's
+                         *sampler-version* weights (async pipeline).  When
+                         given, xi and the rejection mask pair it with
+                         logp_sparse (the exact dense-vs-sparse contrast of
+                         the weights that sampled the token), and the
+                         staleness ratio rho_t = min(pi_old/pi_behave,
+                         staleness_clip) composes with xi outside the clip.
+                         None (sync) == rho_t = 1 identically.
 
     Ablations: scfg.reject / scfg.reweight toggle the two corrections
     (both False == the paper's "naive sparse" baseline);
@@ -76,9 +105,18 @@ def sparse_rl_loss(logp_theta: jnp.ndarray,
     """
     logp_old = jax.lax.stop_gradient(logp_old)
     logp_sparse = jax.lax.stop_gradient(logp_sparse)
+    if logp_behave is None:
+        lb = logp_old
+        rho = None
+    else:
+        lb = jax.lax.stop_gradient(logp_behave)
+        # staleness importance ratio, capped like xi (variance control);
+        # at lag 0 logp_old == lb bitwise -> rho == exp(0) == 1.0 exactly
+        log_rho = (logp_old.astype(jnp.float32) - lb.astype(jnp.float32))
+        rho = jnp.exp(jnp.minimum(log_rho, jnp.log(scfg.staleness_clip)))
 
-    xi = sparsity_consistency_ratio(logp_old, logp_sparse, scfg.xi_clip_max)
-    m_rs = rejection_mask(logp_old, logp_sparse, token_mask, scfg.rejection_eps)
+    xi = sparsity_consistency_ratio(lb, logp_sparse, scfg.xi_clip_max)
+    m_rs = rejection_mask(lb, logp_sparse, token_mask, scfg.rejection_eps)
 
     if not scfg.reject:
         m_rs = jnp.ones_like(m_rs)
@@ -98,26 +136,33 @@ def sparse_rl_loss(logp_theta: jnp.ndarray,
         w = jnp.exp(jnp.clip(logp_theta - logp_old, -20.0, 20.0))
 
     obj, clipped = ppo_clip_term(w, advantages[:, None], scfg.clip_eps)
-    per_tok = xi_w * obj
+    per_tok = xi_w * obj if rho is None else rho * xi_w * obj
     per_seq = masked_mean(per_tok, token_mask, axis=-1)          # 1/|o_i|
     loss = -jnp.mean(m_rs * per_seq)
 
-    # mismatch KL (paper Fig. 3): KL(pi_sparse || pi_old) estimated on the
-    # sampled tokens: E_sparse[log pi_sparse - log pi_old]
-    mismatch_kl = masked_mean(logp_sparse - logp_old, token_mask)
+    # mismatch KL (paper Fig. 3): KL(pi_sparse || pi_dense) estimated on the
+    # sampled tokens: E_sparse[log pi_sparse - log pi_dense], paired with
+    # the dense policy of the weights that actually sampled (lb)
+    mismatch_kl = masked_mean(logp_sparse - lb, token_mask)
     metrics = {
         "rejection_rate": 1.0 - jnp.mean(m_rs),
         "clip_ratio": masked_mean(clipped.astype(jnp.float32), token_mask),
         "mean_xi": masked_mean(xi, token_mask),
         # masked positions fill with +inf, not 0: a 0 fill clamps the metric
         # at 0 whenever every valid log-ratio is positive
-        "min_log_xi": jnp.min(jnp.where(token_mask, logp_old - logp_sparse,
+        "min_log_xi": jnp.min(jnp.where(token_mask, lb - logp_sparse,
                                         jnp.inf)),
         "mismatch_kl": mismatch_kl,
         "mean_ratio": masked_mean(w * jnp.ones_like(xi), token_mask),
         "accepted_frac_tokens": masked_mean(
             jnp.broadcast_to(m_rs[:, None], token_mask.shape), token_mask),
     }
+    if rho is not None:
+        # staleness telemetry: how far the learner drifted from each
+        # token's sampler snapshot (KL estimate on sampled tokens) and the
+        # mean applied correction
+        metrics["mean_rho"] = masked_mean(rho, token_mask)
+        metrics["staleness_kl"] = masked_mean(lb - logp_old, token_mask)
     if logp_ref is not None and scfg.kl_coef > 0:
         kl = masked_mean(k3_kl(jax.lax.stop_gradient(logp_ref), logp_theta),
                          token_mask)

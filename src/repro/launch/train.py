@@ -57,6 +57,21 @@ def main(argv=None):
                     help="over-provision each group by k rollouts; keep G "
                          "(continuous: first G to finish, stragglers "
                          "cancelled mid-flight)")
+    ap.add_argument("--pipeline", default="sync",
+                    choices=["sync", "async"],
+                    help="async = overlapped actor-learner pipeline "
+                         "(requires --rollout-backend continuous): a "
+                         "producer thread streams finished rollout groups "
+                         "into a bounded staging queue while the learner "
+                         "updates — see DESIGN.md "
+                         "§Async pipeline & staleness correction")
+    ap.add_argument("--max-lag", type=int, default=1,
+                    help="async pipeline: max learner steps the rollout "
+                         "weights may trail (0 = serialized handoff, "
+                         "bit-identical to --pipeline sync)")
+    ap.add_argument("--stage-groups", type=int, default=0,
+                    help="async pipeline: staging-queue capacity in groups "
+                         "(0 = auto: two phases' worth)")
     ap.add_argument("--lr", type=float, default=None)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt-dir", default="/tmp/srl_train")
@@ -107,7 +122,9 @@ def main(argv=None):
                           decode_chunk=args.decode_chunk,
                           prefill_chunk=args.prefill_chunk,
                           overlap_harvest=args.overlap_harvest,
-                          group_slack=args.group_slack)
+                          group_slack=args.group_slack,
+                          pipeline=args.pipeline, max_lag=args.max_lag,
+                          stage_groups=args.stage_groups)
     tr = Trainer(cfg, scfg, tcfg, opts)
     hist = tr.train(args.steps - tr.step, log_every=10)
     tr.save_checkpoint()

@@ -70,6 +70,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import threading
 import time
 from collections import deque
 from dataclasses import dataclass, field
@@ -129,6 +130,12 @@ class Completion:
     row: int
     ents: Optional[np.ndarray] = None  # sampling entropy per token (training
                                 # telemetry; None from the lockstep server)
+    weight_version: int = 0     # engine weight version at admission (async
+                                # actor-learner pipeline; 0 = never swapped)
+    tok_versions: Optional[np.ndarray] = None  # per-token weight version of
+                                # the params that PRODUCED the logits each
+                                # token was sampled from (exact across
+                                # mid-run hot-swaps; None from lockstep)
 
     @property
     def queue_wait(self) -> float:
@@ -147,9 +154,12 @@ class _RowState:
     tok_chunks: List[np.ndarray] = field(default_factory=list)
     logp_chunks: List[np.ndarray] = field(default_factory=list)
     ent_chunks: List[np.ndarray] = field(default_factory=list)
+    ver_chunks: List[np.ndarray] = field(default_factory=list)  # per-token
+                                # weight version (see Completion.tok_versions)
     n: int = 0                  # tokens emitted so far
     blocks: List[int] = field(default_factory=list)  # paged: pages this row
                                 # holds a reference on (released at finish)
+    weight_version: int = 0     # engine weight version at admission
     done: bool = False          # finished/cancelled; an in-flight chunk that
                                 # still carries this tenant is discarded
 
@@ -447,11 +457,27 @@ class ContinuousEngine:
         self._staged: List[tuple] = []      # (req, row) awaiting flush
         self._dirty: set = set()            # finished rows not yet retired
         self.now = 0.0
+        # ---- versioned weights (async actor-learner pipeline) ----------
+        # `weight_version` tags the current params; `set_params` stages a
+        # hot-swap that the run loop applies at the next admission-sweep
+        # boundary (never mid-chunk — DESIGN.md
+        # §Async pipeline & staleness correction).  `_logits_ver[b]` is the version of the
+        # params that produced row b's CARRIED logits: the first token of a
+        # chunk dispatched right after a swap is still sampled from
+        # pre-swap logits, and per-token version accounting must say so.
+        self.weight_version = 0
+        self._pending_swap: Optional[tuple] = None   # (params, version)
+        self._swap_lock = threading.Lock()  # guards stage vs. take-and-clear
+        self._logits_ver = np.zeros((batch_size,), np.int64)
+        # per-phase timing telemetry (reset with the clock)
+        self._phase_waits: List[float] = []     # arrival -> admission
+        self._phase_lats: List[float] = []      # arrival -> finish
         self.stats: Dict[str, float] = {
             "decode_steps": 0, "chunks": 0, "admissions": 0,
             "wasted_row_steps": 0, "prefills": 0, "prefix_hits": 0,
             "blocks_in_use_peak": 0, "cancelled": 0, "prefill_s": 0.0,
-            "prefill_dispatches": 0, "prefill_tokens": 0}
+            "prefill_dispatches": 0, "prefill_tokens": 0,
+            "weight_swaps": 0, "staged_peak": 0}
 
     # ------------------------------------------------------------------
     def _bootstrap_state(self):
@@ -661,29 +687,84 @@ class ContinuousEngine:
         self.now = 0.0
         for k in self.stats:
             self.stats[k] = 0
+        self._phase_waits = []
+        self._phase_lats = []
 
     # -- RL-phase lifecycle (training backend) --------------------------
     # (contracts: DESIGN.md §Training on the continuous engine)
-    def begin_phase(self, params=None, base_key=None) -> None:
+    def begin_phase(self, params=None, base_key=None,
+                    weight_version: Optional[int] = None) -> None:
         """Point the engine at this phase's learner weights and sampling key.
 
         Both are plain (donation-free) arguments of the compiled programs,
         so swapping them between RL phases never recompiles anything — the
         engine built at trainer init serves every phase.  Also zeroes the
-        clock/counters so per-phase stats are honest.
+        clock/counters so per-phase stats are honest.  ``weight_version``
+        tags the weights for the async pipeline's per-request staleness
+        accounting (sync callers may ignore it: version stays 0).
         """
         if params is not None:
             self.params = params
         if base_key is not None:
             self._base_key = base_key
+        if weight_version is not None:
+            self.weight_version = weight_version
+        # a swap staged before this phase is subsumed by an equal-or-newer
+        # explicit handoff; a strictly newer pending swap still applies at
+        # the first sweep
+        with self._swap_lock:
+            if (self._pending_swap is not None
+                    and self._pending_swap[1] <= self.weight_version):
+                self._pending_swap = None
         self.reset_clock()
+
+    def set_params(self, params, weight_version: int) -> None:
+        """Stage a mid-run weight hot-swap (async learner -> actor handoff).
+
+        Callable from another thread; the stage and the run loop's
+        take-and-clear share a lock so a swap staged concurrently with a
+        sweep's apply can never be silently dropped.  The swap is applied
+        ONLY at a sweep boundary — never inside a dispatched decode chunk
+        — so every in-flight row's per-request key chain and per-token
+        version accounting stay intact, and newly admitted groups always
+        sample from the freshest snapshot (DESIGN.md §Async pipeline &
+        staleness correction).
+        """
+        with self._swap_lock:
+            self._pending_swap = (params, weight_version)
+
+    def _apply_pending_swap(self) -> None:
+        """Apply a staged hot-swap at an admission-sweep boundary.
+
+        Cached prefills were computed under the outgoing weights, so the
+        prefix cache is invalidated with the swap (its pins drop; rows
+        still decoding keep their own page refs).  The first post-swap
+        admission of each group therefore re-prefills its prompt — the
+        price of freshness, visible as a hit-rate dip in the phase stats.
+        """
+        with self._swap_lock:
+            swap = self._pending_swap
+            self._pending_swap = None
+        if swap is None:
+            return
+        params, version = swap
+        if version <= self.weight_version:
+            return
+        self.params = params
+        self.weight_version = version
+        if self.prefix is not None:
+            self.prefix.clear()
+        self.stats["weight_swaps"] += 1
 
     def end_phase(self) -> Dict[str, float]:
         """Bulk release at RL phase end: drop every prefix-cache pin (the
         next phase's weights invalidate cached prefills anyway) and verify
         the page pool drained — a leaked refcount here would slowly eat the
         pool across phases, so it is an error, not a warning.  Returns a
-        snapshot of the phase's counters."""
+        snapshot of the phase's counters plus derived pool/queueing
+        telemetry: peak pool usage (absolute and as a fraction of the
+        pool), peak admission-staging depth, and p50/p99 of per-request
+        admission wait and latency on the virtual clock."""
         if self.prefix is not None:
             self.prefix.clear()
         if self.allocator is not None:
@@ -692,7 +773,20 @@ class ContinuousEngine:
                 raise RuntimeError(
                     f"paged pool leak at phase end: {leaked} page(s) still "
                     f"referenced after prefix-cache clear")
-        return dict(self.stats)
+        stats = dict(self.stats)
+        if self.allocator is not None:
+            stats["pool_blocks"] = self.pool_blocks
+            stats["pool_peak_frac"] = (self.stats["blocks_in_use_peak"]
+                                       / max(self.pool_blocks, 1))
+        if self._phase_waits:
+            w = np.asarray(self._phase_waits)
+            stats["admit_wait_p50"] = float(np.percentile(w, 50))
+            stats["admit_wait_p99"] = float(np.percentile(w, 99))
+        if self._phase_lats:
+            lt = np.asarray(self._phase_lats)
+            stats["latency_p50"] = float(np.percentile(lt, 50))
+            stats["latency_p99"] = float(np.percentile(lt, 99))
+        return stats
 
     @property
     def prefix_hit_rate(self) -> float:
@@ -716,10 +810,18 @@ class ContinuousEngine:
     # -- staged batched admission ---------------------------------------
     def _stage_admit(self, req: Request, row: int) -> None:
         """Reserve ``row`` for ``req``; the actual prefill happens at the
-        next :meth:`_flush_admissions` (batched with co-staged requests)."""
-        self.rows[row] = _RowState(req=req, admit_time=self.now)
+        next :meth:`_flush_admissions` (batched with co-staged requests).
+        Any pending weight swap was applied at the top of this sweep, so
+        the recorded admission version is the version the flush's prefill
+        will actually run under."""
+        self.rows[row] = _RowState(req=req, admit_time=self.now,
+                                   weight_version=self.weight_version)
+        self._logits_ver[row] = self.weight_version
+        self._phase_waits.append(self.now - req.arrival_time)
         self._dirty.discard(row)
         self._staged.append((req, row))
+        self.stats["staged_peak"] = max(self.stats["staged_peak"],
+                                        len(self._staged))
 
     def _admit_one(self, req: Request, row: int) -> None:
         """Immediate single-request admission (stage + flush).  The splice
@@ -1016,12 +1118,17 @@ class ContinuousEngine:
                  else np.zeros((0,), np.float32))
         ents = (np.concatenate(rs.ent_chunks) if rs.ent_chunks
                 else np.zeros((0,), np.float32))
+        vers = (np.concatenate(rs.ver_chunks) if rs.ver_chunks
+                else np.zeros((0,), np.int64))
+        self._phase_lats.append(self.now - rs.req.arrival_time)
         out.append(Completion(
             uid=rs.req.uid, prompt=rs.req.prompt,
             tokens=toks.astype(np.int32), logps=logps.astype(np.float32),
             finish_reason=finish_reason, arrival_time=rs.req.arrival_time,
             admit_time=rs.admit_time, finish_time=self.now, row=row,
-            ents=ents.astype(np.float32)))
+            ents=ents.astype(np.float32),
+            weight_version=rs.weight_version,
+            tok_versions=vers.astype(np.int64)))
         if rs.blocks:
             # drop this row's page references; shared prompt pages stay
             # alive as long as the prefix cache (or a sibling row) pins them
@@ -1050,7 +1157,8 @@ class ContinuousEngine:
     def run(self, requests: Sequence[Request], *,
             group_size: Optional[int] = None,
             group_slack: int = 0,
-            schedule: str = "fifo") -> List[Completion]:
+            schedule: str = "fifo",
+            on_group=None) -> List[Completion]:
         """Serve ``requests`` to completion; returns Completions sorted by uid.
 
         Requests become admissible once the virtual clock passes their
@@ -1077,23 +1185,41 @@ class ContinuousEngine:
         members retired — so their slots admit the next group instead of
         decoding a tail nobody will use.  Exactly G Completions per group
         come back.
+
+        ``on_group`` (optional, requires ``group_size``) streams finished
+        groups to the caller from inside the scheduling loop: the moment a
+        group collects its G finishers (and, with slack, before its
+        stragglers are cancelled) ``on_group(gid, completions)`` fires with
+        the G members sorted by uid.  A blocking callback back-pressures
+        the whole engine — the async actor-learner pipeline uses exactly
+        this to bound its staging queue.
         """
-        track_groups = group_size is not None and group_slack > 0
+        track_groups = group_size is not None and (group_slack > 0
+                                                   or on_group is not None)
         Gs = (group_size + group_slack) if track_groups else 0
-        finished_in: Dict[int, int] = {}
+        closed: set = set()           # gids that collected their G finishers
+        gid_members: Dict[int, List[Completion]] = {}
 
         def group_done(uid: int) -> bool:
-            return (track_groups
-                    and finished_in.get(uid // Gs, 0) >= group_size)
+            return track_groups and group_slack > 0 and uid // Gs in closed
 
-        def on_finished(uid: int) -> None:
-            """Count a finisher; on the G-th, cancel the group's stragglers
-            (queued members drop, in-flight members retire)."""
+        def on_finished(comp: Completion) -> None:
+            """Collect a finisher; on the G-th, close the group, stream it
+            to ``on_group`` and cancel its stragglers (queued members drop,
+            in-flight members retire).  A closed gid stays in ``closed``
+            forever, so the group can never reopen or fire twice."""
             if not track_groups:
                 return
-            gid = uid // Gs
-            finished_in[gid] = finished_in.get(gid, 0) + 1
-            if finished_in[gid] != group_size:
+            gid = comp.uid // Gs
+            members = gid_members.setdefault(gid, [])
+            members.append(comp)
+            if len(members) != group_size:
+                return
+            closed.add(gid)
+            if on_group is not None:
+                on_group(gid, sorted(members, key=lambda c: c.uid))
+            del gid_members[gid]
+            if group_slack == 0:
                 return
             survivors = [r for r in pending if r.uid // Gs != gid]
             if len(survivors) != len(pending):
@@ -1126,7 +1252,11 @@ class ContinuousEngine:
             for the next sweep — the resident batch keeps decoding instead
             of stalling behind a long admission burst), then one batched
             flush.  Freed rows that admitted nothing are retired before the
-            next dispatch so they stop appending into recycled pages."""
+            next dispatch so they stop appending into recycled pages.  Any
+            staged weight hot-swap applies first, so this sweep's
+            admissions prefill — and are version-tagged — under the new
+            snapshot."""
+            self._apply_pending_swap()
             spent, staged_keys = 0, set()
             for row in self._free_rows():
                 if not (pending and pending[0].arrival_time <= self.now):
@@ -1146,7 +1276,8 @@ class ContinuousEngine:
             """Harvest the oldest in-flight chunk against its dispatch-time
             tenant snapshot (a tenant that finished meanwhile — possible
             only with overlap — marks its rows' outputs as discard)."""
-            toks_d, logps_d, ents_d, tenants = inflight.popleft()
+            (toks_d, logps_d, ents_d, tenants, ver_first,
+             chunk_ver) = inflight.popleft()
             toks_h, logps_h, ents_h = jax.device_get(
                 (toks_d, logps_d, ents_d))                     # (chunk, B)
             self.stats["chunks"] += 1
@@ -1173,24 +1304,34 @@ class ContinuousEngine:
                 rs.tok_chunks.append(toks_h[:take, row])
                 rs.logp_chunks.append(logps_h[:take, row])
                 rs.ent_chunks.append(ents_h[:take, row])
+                # per-token sampler version: the chunk's FIRST token is
+                # sampled from the logits carried into the dispatch (the
+                # pre-swap params for the chunk right after a swap); the
+                # rest from logits the chunk computed itself
+                vers = np.full((take,), chunk_ver, np.int64)
+                if take:
+                    vers[0] = ver_first[row]
+                rs.ver_chunks.append(vers)
                 rs.n += take
                 if finish is None:
                     continue
                 self.stats["wasted_row_steps"] += self.decode_chunk - take
-                uid = rs.req.uid
                 self._finish_row(row, finish, out)
-                on_finished(uid)
+                on_finished(out[-1])
 
         while pending or self._num_active() or inflight:
             t0 = time.perf_counter()
             admit_sweep()
             dispatched = False
             if self._num_active():
+                ver_first = self._logits_ver.copy()
+                self._logits_ver[:] = self.weight_version
                 (self.state, self.logits, self.counts, toks, logps,
                  ents) = self._chunk(
                     self.params, self.state, self.logits, self.counts,
                     self.active, self.row_keys)
-                inflight.append((toks, logps, ents, list(self.rows)))
+                inflight.append((toks, logps, ents, list(self.rows),
+                                 ver_first, self.weight_version))
                 dispatched = True
             if inflight and (len(inflight) > depth or not dispatched):
                 harvest_one()

@@ -61,11 +61,20 @@ class TrainRollout(NamedTuple):
     the caller can align answers/rewards.  ``finished_eos`` marks rows that
     exited on EOS before the token cap — the early-exit rows whose freed
     slots admitted the next group.
+
+    ``weight_versions``/``tok_versions`` carry the async pipeline's
+    staleness accounting (DESIGN.md §Async pipeline & staleness
+    correction): per-row admission version, and per token the version of
+    the weights that produced the logits the token was sampled from (the
+    pad tail repeats the row's last version — masked out anyway).  Sync
+    phases are all-zeros.
     """
     rollout: RolloutBatch
     keep: np.ndarray          # (B,) int32 kept request uids
     finished_eos: np.ndarray  # (B,) bool
     stats: Dict[str, float]   # engine counter snapshot for telemetry
+    weight_versions: Optional[np.ndarray] = None  # (B,) int64
+    tok_versions: Optional[np.ndarray] = None     # (B, T) int64
 
 
 def build_train_rollout(completions: Sequence, prompt_tokens: np.ndarray,
@@ -94,6 +103,8 @@ def build_train_rollout(completions: Sequence, prompt_tokens: np.ndarray,
     lengths = np.zeros((B,), np.int32)
     entropy = np.zeros((B,), np.float32)
     eos = np.zeros((B,), bool)
+    row_ver = np.zeros((B,), np.int64)
+    tok_ver = np.zeros((B, T), np.int64)
     for i, c in enumerate(comps):
         n = len(c.tokens)
         assert n <= T, (n, T)
@@ -104,6 +115,13 @@ def build_train_rollout(completions: Sequence, prompt_tokens: np.ndarray,
         eos[i] = c.finish_reason == "eos"
         if c.ents is not None and n:
             entropy[i] = float(np.mean(c.ents[:n]))
+        row_ver[i] = getattr(c, "weight_version", 0)
+        tv = getattr(c, "tok_versions", None)
+        # pad tail repeats the last real version so per-version rescore
+        # selection is total (the tail is resp_mask-ed out of the loss)
+        tok_ver[i, :] = tv[n - 1] if (tv is not None and n) else row_ver[i]
+        if tv is not None and n:
+            tok_ver[i, :n] = tv[:n]
     ro = RolloutBatch(
         prompt_tokens=jnp.asarray(prompt_tokens[keep], jnp.int32),
         prompt_mask=jnp.asarray(prompt_mask[keep], bool),
@@ -113,7 +131,8 @@ def build_train_rollout(completions: Sequence, prompt_tokens: np.ndarray,
         lengths=jnp.asarray(lengths),
         entropy=jnp.asarray(entropy))
     return TrainRollout(rollout=ro, keep=keep, finished_eos=eos,
-                        stats=dict(stats or {}))
+                        stats=dict(stats or {}),
+                        weight_versions=row_ver, tok_versions=tok_ver)
 
 
 def sample_token(rng, logits, temperature: float, top_p: float

@@ -1,3 +1,4 @@
+from repro.runtime.async_pipeline import AsyncPipeline, WeightStore
 from repro.runtime.trainer import Trainer, TrainerOptions
 
-__all__ = ["Trainer", "TrainerOptions"]
+__all__ = ["Trainer", "TrainerOptions", "AsyncPipeline", "WeightStore"]

@@ -1,0 +1,401 @@
+"""Async actor-learner pipeline: overlapped rollout/update with versioned
+weights and staleness-aware off-policy correction.
+
+The sync Trainer alternates two serial stages — a rollout phase (the actor)
+and a minibatched Sparse-RL update (the learner).  This module overlaps
+them (DESIGN.md §Async pipeline & staleness correction):
+
+  * :class:`WeightStore` — a versioned snapshot ring with refcounts.  The
+    learner publishes its params after every phase update; snapshots stay
+    alive while any in-flight rollout group still needs them for the
+    behavior-policy rescore, and the ring evicts unreferenced history
+    beyond its capacity.  JAX arrays are immutable, so a snapshot is a
+    reference, not a copy — publishing is O(1).
+  * a rollout **producer** thread that drives `ContinuousEngine` phase by
+    phase and streams each finished group (`run(on_group=...)`) into a
+    bounded staging queue.  A full queue blocks the callback inside the
+    engine's scheduling loop — backpressure reaches all the way into
+    admission.
+  * the **learner** consumer (the caller's thread): drains the queue,
+    verifies/rewards each group the moment it lands, and runs the phase's
+    minibatch updates when the phase's last group arrives.  After each
+    update it bumps the weight version, publishes the snapshot, and stages
+    a mid-run hot-swap into the engine (`set_params`, applied at the next
+    admission-sweep boundary), so groups admitted later in the producer's
+    current phase already sample from the freshest weights.
+
+``max_lag`` is the backpressure bound: the producer may run at most
+``max_lag`` phases ahead of the learner's completed-update count —
+rollout phase ``s`` waits until updates through ``s - max_lag - 1``.  At
+``max_lag=0`` the handoff fully serializes — rollout ``s`` starts only
+after update ``s-1`` — and because the staleness ratio degenerates to 1.0
+bitwise (see `core/sparse_rl.py`), the pipeline is token-, logp- and
+param-identical to the sync trainer (pinned by the e2e test).  At
+``max_lag>=1`` phase ``s+1``'s rollout overlaps update ``s``; the measured
+weight staleness is absorbed by the loss's clipped per-token behavior
+ratio, fed from the per-token weight versions the engine records across
+hot-swaps.
+
+Thread model: exactly two threads touch trainer state, with a strict
+split — the producer reads the loader/WeightStore and owns the engine; the
+learner owns ``params``/``opt_state``/``step`` and never touches the
+engine beyond the (atomic) ``set_params`` staging.  All crossings go
+through the staging queue or the WeightStore's lock.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from collections import OrderedDict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.rewards import binary_rewards
+from repro.rollout import Request, build_train_rollout
+
+
+class WeightStore:
+    """Versioned ring of immutable param snapshots with refcounts.
+
+    ``publish`` assigns monotonically increasing versions (starting at
+    ``start_version`` so a resumed run continues its checkpointed version
+    line).  ``acquire``/``release`` pin a snapshot across the
+    producer->learner handoff; eviction drops only unreferenced snapshots,
+    oldest first, once the ring exceeds ``capacity`` — a referenced
+    snapshot is never dropped, so ``capacity`` bounds garbage, not safety.
+    Acquiring an evicted version raises ``KeyError``: with the pipeline's
+    ``max_lag`` gating and ``capacity >= max_lag + 2`` that is a real
+    bookkeeping bug, not an expected race.
+    """
+
+    def __init__(self, capacity: int = 4, start_version: int = 0):
+        if capacity < 1:
+            raise ValueError("WeightStore capacity must be >= 1")
+        self.capacity = capacity
+        self._next = start_version
+        self._snaps: "OrderedDict[int, list]" = OrderedDict()  # v -> [params, refs]
+        self._lock = threading.Lock()
+
+    def publish(self, params) -> int:
+        with self._lock:
+            v = self._next
+            self._next += 1
+            self._snaps[v] = [params, 0]
+            self._evict_locked()
+            return v
+
+    def _evict_locked(self) -> None:
+        # oldest-first, unreferenced only, never the newest snapshot
+        for v in list(self._snaps):
+            if len(self._snaps) <= self.capacity:
+                break
+            if self._snaps[v][1] == 0 and v != next(reversed(self._snaps)):
+                del self._snaps[v]
+
+    def acquire(self, version: Optional[int] = None):
+        """Pin and return ``(version, params)``; None pins the newest."""
+        with self._lock:
+            if not self._snaps:
+                raise KeyError("WeightStore is empty")
+            if version is None:
+                version = next(reversed(self._snaps))
+            snap = self._snaps[version]     # KeyError on evicted = real bug
+            snap[1] += 1
+            return version, snap[0]
+
+    def release(self, version: int) -> None:
+        with self._lock:
+            snap = self._snaps.get(version)
+            if snap is None or snap[1] <= 0:
+                raise ValueError(f"release of unheld version {version}")
+            snap[1] -= 1
+            self._evict_locked()
+
+    @property
+    def latest_version(self) -> int:
+        with self._lock:
+            return next(reversed(self._snaps)) if self._snaps else self._next - 1
+
+    def refs(self, version: int) -> int:
+        with self._lock:
+            return self._snaps[version][1]
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._snaps)
+
+    def __contains__(self, version: int) -> bool:
+        with self._lock:
+            return version in self._snaps
+
+
+# ---------------------------------------------------------------------------
+# staging-queue items (producer -> learner), strictly phase-ordered
+# ---------------------------------------------------------------------------
+@dataclass
+class _PhaseStart:
+    step: int
+    np_tokens: np.ndarray        # (total, P) tiled prompts
+    np_mask: np.ndarray          # (total, P)
+    answers_rep: list            # per-uid answers
+    n_groups: int
+
+
+@dataclass
+class _Group:
+    step: int
+    gid: int
+    comps: list                  # G Completions, uid-ascending
+    params_by_ver: dict          # version -> params (store refs held)
+    rewards: Optional[np.ndarray] = None   # filled by the learner on arrival
+
+
+@dataclass
+class _PhaseEnd:
+    step: int
+    stats: Dict[str, float]
+    rollout_s: float
+
+
+@dataclass
+class _ProducerExit:
+    error: Optional[BaseException] = None
+
+
+@dataclass
+class _PhaseBuf:
+    meta: _PhaseStart
+    groups: Dict[int, _Group] = field(default_factory=dict)
+
+
+class AsyncPipeline:
+    """Overlapped producer/consumer driver around a configured Trainer.
+
+    Built by ``Trainer.train`` when ``opts.pipeline == "async"``; reuses
+    the trainer's engine, loader, jitted update programs and checkpoint
+    schedule, so the learner side is the sync trainer's phase update
+    verbatim (which is what makes the lag-0 equivalence provable rather
+    than approximate).
+    """
+
+    def __init__(self, trainer):
+        opts = trainer.opts
+        if trainer.engine is None:
+            raise ValueError("AsyncPipeline requires the continuous engine")
+        self.t = trainer
+        self.max_lag = opts.max_lag
+        self.store = WeightStore(
+            capacity=opts.weight_ring or (opts.max_lag + 2),
+            start_version=trainer.weight_version)
+        # bounded staging queue: group payloads + the light phase markers
+        qsize = opts.stage_groups or max(2 * opts.num_prompts, 4)
+        self.queue: "queue.Queue" = queue.Queue(maxsize=qsize)
+        self._cv = threading.Condition()
+        self._done_step = trainer.step      # steps whose update completed
+        self._stop = False
+
+    # -- producer (background thread) -----------------------------------
+    def _put(self, item) -> None:
+        """queue.put that stays interruptible if the learner died."""
+        while True:
+            try:
+                self.queue.put(item, timeout=0.2)
+                return
+            except queue.Full:
+                if self._stop:
+                    raise RuntimeError("pipeline stopped")
+
+    def _produce(self, start: int, steps: int) -> None:
+        t = self.t
+        opts, scfg = t.opts, t.scfg
+        G, slack = scfg.group_size, opts.group_slack
+        try:
+            for s in range(start, start + steps):
+                with self._cv:
+                    # max_lag backpressure: do not run ahead of the learner
+                    while s - self._done_step > self.max_lag:
+                        if self._stop:
+                            return
+                        self._cv.wait(0.2)
+                    if self._stop:
+                        return
+                np_tokens, np_mask, answers_rep = t.tiled_phase_inputs(s)
+                self._put(_PhaseStart(step=s, np_tokens=np_tokens,
+                                      np_mask=np_mask,
+                                      answers_rep=answers_rep,
+                                      n_groups=opts.num_prompts))
+                t0 = time.time()
+                ver, params_v = self.store.acquire()    # freshest snapshot
+                t.engine.begin_phase(params=params_v, base_key=t.phase_key(s),
+                                     weight_version=ver)
+                reqs = [Request(uid=u, prompt=np_tokens[u][np_mask[u]])
+                        for u in range(np_tokens.shape[0])]
+
+                def on_group(gid: int, comps: list, _s=s) -> None:
+                    # pin every sampler version this group's tokens used
+                    # BEFORE queueing (the learner releases after its
+                    # update); blocking put = engine-wide backpressure
+                    by_ver = {}
+                    for c in comps:
+                        for v in np.unique(c.tok_versions):
+                            v = int(v)
+                            if v not in by_ver:
+                                by_ver[v] = self.store.acquire(v)[1]
+                    self._put(_Group(step=_s, gid=gid, comps=comps,
+                                     params_by_ver=by_ver))
+
+                t.engine.run(reqs, group_size=G, group_slack=slack,
+                             on_group=on_group)
+                stats = t.engine.end_phase()
+                self.store.release(ver)
+                self._put(_PhaseEnd(step=s, stats=stats,
+                                    rollout_s=time.time() - t0))
+            self._put(_ProducerExit())
+        except BaseException as e:                     # noqa: BLE001
+            # surface the failure on the learner thread (a daemon thread's
+            # traceback would otherwise vanish)
+            try:
+                self._put(_ProducerExit(error=e))
+            except RuntimeError:
+                pass
+
+    # -- learner (caller's thread) ---------------------------------------
+    def _group_rewards(self, meta: _PhaseStart, item: _Group) -> np.ndarray:
+        """Verify a group the moment it arrives (overlapped with the
+        engine's decode of the rest of the phase)."""
+        T = self.t.opts.max_new_tokens
+        toks = np.full((len(item.comps), T), self.t.engine.pad_id, np.int32)
+        for i, c in enumerate(item.comps):
+            toks[i, :len(c.tokens)] = c.tokens
+        return binary_rewards(
+            toks, [meta.answers_rep[c.uid] for c in item.comps])
+
+    def _behavior_logps(self, ro, tok_versions: np.ndarray,
+                        params_by_ver: dict, logp_old):
+        """Per-token dense log-probs under each token's sampler-version
+        weights: one teacher-forced rescore per distinct STALE version,
+        gathered per token.  Tokens sampled under the learner's current
+        version reuse ``logp_old`` — the proximal rescore the phase update
+        needs anyway IS their behavior policy (same param arrays), so no
+        forward runs twice.  Returns None when every token was sampled
+        under the current weights (the lag-0 case) so the caller can take
+        the sync update graph."""
+        t = self.t
+        distinct = [int(v) for v in np.unique(tok_versions)]
+        if distinct == [t.weight_version]:
+            return None
+        lb = np.zeros(tok_versions.shape, np.float32)
+        for v in distinct:
+            if v == t.weight_version:
+                lv = np.asarray(jax.device_get(logp_old))
+            else:
+                lv = np.asarray(jax.device_get(
+                    t._rescore_fn(params_by_ver[v], ro)))
+            lb = np.where(tok_versions == v, lv, lb)
+        return jax.numpy.asarray(lb)
+
+    def _phase_update(self, buf: _PhaseBuf) -> Dict[str, float]:
+        t = self.t
+        meta = buf.meta
+        groups = [buf.groups[g] for g in sorted(buf.groups)]
+        comps = [c for g in groups for c in g.comps]
+        rewards = np.concatenate([g.rewards for g in groups])
+        tr = build_train_rollout(
+            comps, meta.np_tokens, meta.np_mask,
+            max_new_tokens=t.opts.max_new_tokens, pad_id=t.engine.pad_id)
+        t.last_rollout = tr.rollout
+        params_by_ver: dict = {}
+        for g in groups:
+            params_by_ver.update(g.params_by_ver)
+        logp_old = t._rescore_fn(t.params, tr.rollout)
+        logp_behave = self._behavior_logps(tr.rollout, tr.tok_versions,
+                                           params_by_ver, logp_old)
+        agg = t._phase_update(tr.rollout, rewards, logp_behave=logp_behave,
+                              logp_old=logp_old)
+        if logp_behave is not None:
+            # staleness telemetry in learner-steps (the "measurable
+            # fourth mismatch"): how many updates behind each token's
+            # sampler snapshot was, averaged over real tokens
+            mask = np.asarray(tr.rollout.resp_mask)
+            lagv = (t.weight_version - 1) - tr.tok_versions  # pre-bump ver
+            agg["staleness_lag"] = float(lagv[mask].mean()) if mask.any() \
+                else 0.0
+        else:
+            agg["staleness_lag"] = 0.0
+        for g in groups:
+            for v in g.params_by_ver:
+                self.store.release(v)
+        return agg
+
+    def train(self, steps: int, log_every: int = 10,
+              callback=None) -> List[Dict[str, float]]:
+        t = self.t
+        if steps <= 0:
+            return []
+        v0 = self.store.publish(t.params)
+        assert v0 == t.weight_version, (v0, t.weight_version)
+        producer = threading.Thread(
+            target=self._produce, args=(t.step, steps),
+            name="rollout-producer", daemon=True)
+        producer.start()
+        history: List[Dict[str, float]] = []
+        phases: Dict[int, _PhaseBuf] = {}
+        t_step = time.time()
+        try:
+            while len(history) < steps:
+                item = self.queue.get()
+                if isinstance(item, _ProducerExit):
+                    if item.error is not None:
+                        raise item.error
+                    raise RuntimeError(
+                        "rollout producer exited before the learner "
+                        "finished (max_lag gate out of sync?)")
+                if isinstance(item, _PhaseStart):
+                    phases[item.step] = _PhaseBuf(meta=item)
+                elif isinstance(item, _Group):
+                    buf = phases[item.step]
+                    item.rewards = self._group_rewards(buf.meta, item)
+                    buf.groups[item.gid] = item
+                elif isinstance(item, _PhaseEnd):
+                    buf = phases.pop(item.step)
+                    assert len(buf.groups) == buf.meta.n_groups, \
+                        (len(buf.groups), buf.meta.n_groups)
+                    metrics = self._phase_update(buf)
+                    metrics.update(
+                        rollout_s=item.rollout_s,
+                        step_time_s=time.time() - t_step,
+                        **t._engine_stat_metrics(item.stats))
+                    t_step = time.time()
+                    # publish + stage the hot-swap so groups the producer
+                    # admits from here on sample the fresh weights
+                    v = self.store.publish(t.params)
+                    assert v == t.weight_version, (v, t.weight_version)
+                    t.engine.set_params(t.params, v)
+                    with self._cv:
+                        self._done_step = item.step + 1
+                        self._cv.notify_all()
+                    history.append(metrics)
+                    if callback:
+                        callback(t.step, metrics)
+                    if log_every and t.step % log_every == 0:
+                        msg = " ".join(
+                            f"{k}={v:.4f}"
+                            for k, v in sorted(metrics.items())
+                            if isinstance(v, float))
+                        print(f"[step {t.step} async] {msg}", flush=True)
+        finally:
+            with self._cv:
+                self._stop = True
+                self._cv.notify_all()
+            # drain so a blocked producer can exit, then join it
+            while producer.is_alive():
+                try:
+                    self.queue.get(timeout=0.1)
+                except queue.Empty:
+                    pass
+                producer.join(timeout=0.1)
+        return history

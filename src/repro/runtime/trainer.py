@@ -28,6 +28,16 @@ across backends.  Straggler mitigation composes with either: groups can be
 over-provisioned (``group_slack``: sample G+k, keep G — lockstep keeps the
 best-formed after the fact, continuous keeps the first G to finish and
 cancels the stragglers mid-flight).
+
+Pipelines (``pipeline``; DESIGN.md §Async pipeline & staleness correction):
+``"sync"`` is the lockstep phase loop above; ``"async"`` overlaps the
+rollout producer and the learner (`runtime/async_pipeline.py`): a
+background thread streams finished groups from the continuous engine into
+a bounded staging queue while the learner updates, with ``max_lag``
+bounding how many steps the sampler weights may trail the learner and a
+clipped per-token staleness correction absorbing the measured lag in the
+loss.  ``max_lag=0`` serializes the handoff and is bit-identical to the
+sync trainer.
 """
 from __future__ import annotations
 
@@ -81,6 +91,17 @@ class TrainerOptions:
                                    # chunk t's tokens are fetched); wins on
                                    # long-response/accelerator workloads,
                                    # costs a chunk-sized bubble per finish
+    # -- actor-learner pipeline (DESIGN.md
+    # §Async pipeline & staleness correction) --
+    pipeline: str = "sync"         # "sync" | "async" (async requires the
+                                   # continuous rollout backend)
+    max_lag: int = 1               # async: max learner steps the rollout
+                                   # producer may run behind (0 = lockstep
+                                   # with the sync trainer, bit-identical)
+    stage_groups: int = 0          # async: bounded staging-queue capacity
+                                   # in groups (0 = auto: 2 phases' worth)
+    weight_ring: int = 0           # async: WeightStore snapshot-ring
+                                   # capacity (0 = auto: max_lag + 2)
 
 
 class Trainer:
@@ -96,12 +117,37 @@ class Trainer:
         self.opt_state = adamw.init(self.params)
         self.ref_params = jax.tree.map(jnp.copy, self.params) if opts.use_ref_kl else None
         self.step = 0
+        self.last_rollout: Optional[RolloutBatch] = None
         self.loader = PromptLoader(batch_prompts=opts.num_prompts,
                                    prompt_len=opts.prompt_len,
                                    seed=tcfg.seed, level=opts.level)
         if opts.rollout_backend not in ("lockstep", "continuous"):
             raise ValueError(
                 f"unknown rollout_backend {opts.rollout_backend!r}")
+        if opts.pipeline not in ("sync", "async"):
+            raise ValueError(f"unknown pipeline {opts.pipeline!r}")
+        if opts.pipeline == "async":
+            if opts.rollout_backend != "continuous":
+                raise ValueError(
+                    "pipeline='async' requires rollout_backend='continuous'"
+                    " (the producer streams groups from ContinuousEngine)")
+            if opts.max_lag < 0:
+                raise ValueError(f"max_lag must be >= 0, got {opts.max_lag}")
+            if opts.stage_groups < 0:
+                raise ValueError(
+                    f"stage_groups must be >= 0, got {opts.stage_groups}")
+            if opts.weight_ring and opts.weight_ring < opts.max_lag + 2:
+                # a ring smaller than max_lag+2 can evict a snapshot that
+                # an in-flight rollout group still needs for its behavior
+                # rescore — a guaranteed mid-run KeyError, not a tuning knob
+                raise ValueError(
+                    f"weight_ring={opts.weight_ring} < max_lag+2="
+                    f"{opts.max_lag + 2}: in-flight sampler versions could "
+                    f"be evicted (0 = auto)")
+        # monotone weight-version counter: bumped once per completed phase
+        # update; tags rollouts for the async staleness correction and is
+        # checkpointed so a resumed run keeps a consistent version line
+        self.weight_version = 0
         self.engine: Optional[ContinuousEngine] = None
         if opts.rollout_backend == "continuous":
             self.engine = self._build_engine()
@@ -143,6 +189,7 @@ class Trainer:
             self.params = restored["params"]
             self.opt_state = restored["opt"]
             self.step = step
+            self.weight_version = int(extra.get("weight_version", step))
             rng_key = extra.get("rng")
             if rng_key is not None:
                 self.rng = jnp.asarray(np.array(rng_key, dtype=np.uint32))
@@ -151,7 +198,8 @@ class Trainer:
         save(self.tcfg.checkpoint_dir, self.step,
              {"params": self.params, "opt": self.opt_state},
              keep=self.tcfg.keep_checkpoints,
-             extra={"rng": np.asarray(jax.device_get(self.rng)).tolist()})
+             extra={"rng": np.asarray(jax.device_get(self.rng)).tolist(),
+                    "weight_version": int(self.weight_version)})
 
     # -- jitted inner functions ----------------------------------------------
     def _build_jit(self):
@@ -174,16 +222,17 @@ class Trainer:
         def _rescore(params, ro):
             return rescore(params, cfg, m, ro)
 
-        def _loss(params, ro, logp_old, logp_ref, adv):
+        def _loss(params, ro, logp_old, logp_behave, logp_ref, adv):
             logp_theta = rescore(params, cfg, m, ro)
             out = sparse_rl_loss(logp_theta, logp_old, ro.logp_sparse, adv,
-                                 ro.resp_mask, scfg, logp_ref=logp_ref)
+                                 ro.resp_mask, scfg, logp_ref=logp_ref,
+                                 logp_behave=logp_behave)
             return out.loss, out.metrics
 
-        @jax.jit
-        def _update(params, opt_state, ro, logp_old, logp_ref, adv, lr):
+        def _update(params, opt_state, ro, logp_old, logp_behave, logp_ref,
+                    adv, lr):
             (loss, metrics), grads = jax.value_and_grad(_loss, has_aux=True)(
-                params, ro, logp_old, logp_ref, adv)
+                params, ro, logp_old, logp_behave, logp_ref, adv)
             params, opt_state, om = adamw.update(
                 params, grads, opt_state, lr=lr,
                 b1=self.tcfg.adam_b1, b2=self.tcfg.adam_b2,
@@ -192,9 +241,43 @@ class Trainer:
             metrics = dict(metrics, loss=loss, **om)
             return params, opt_state, metrics
 
+        # two jitted variants: the sync path (logp_behave=None baked out of
+        # the graph — bitwise identical to the historical update) and the
+        # async staleness-corrected path (extra (B, T) behavior log-probs)
+        _update_sync = jax.jit(
+            lambda p, o, ro, lo, lrf, adv, lr:
+            _update(p, o, ro, lo, None, lrf, adv, lr))
+        _update_stale = jax.jit(_update)
+
         self._rollout_fn = _rollout
         self._rescore_fn = _rescore
-        self._update_fn = _update
+        self._update_fn = _update_sync
+        self._update_stale_fn = _update_stale
+
+    # -- phase inputs ----------------------------------------------------------
+    def tiled_phase_inputs(self, step: int):
+        """The (G+slack)-tiled, group-major prompt arrays for one phase:
+        ``(np_tokens, np_mask, answers_rep)``.  Shared by the sync step and
+        the async rollout producer — the lag-0 bit-identity guarantee
+        requires both paths to assemble exactly these arrays."""
+        prompts, pmask, answers = self.loader.get(step)
+        Gs = self.scfg.group_size + self.opts.group_slack
+        np_tokens = np.repeat(np.asarray(prompts, np.int32), Gs, axis=0)
+        np_mask = np.repeat(np.asarray(pmask, bool), Gs, axis=0)
+        answers_rep = list(np.repeat(np.asarray(answers, dtype=object), Gs))
+        return np_tokens, np_mask, answers_rep
+
+    # -- sampling-key discipline ----------------------------------------------
+    def phase_key(self, step: int) -> jax.Array:
+        """Rollout base key for phase ``step``: ``fold_in(root, step)``.
+
+        Deriving per-phase keys from the checkpointed root (instead of
+        advancing a split chain) makes the key sequence a pure function of
+        (seed, step): a resumed run — sync or async, where the rollout
+        producer may have run ahead of the last checkpoint — regenerates
+        exactly the keys the uninterrupted run would have used.
+        """
+        return jax.random.fold_in(self.rng, step)
 
     # -- group helpers ---------------------------------------------------------
     @staticmethod
@@ -250,27 +333,26 @@ class Trainer:
             lambda x: jnp.asarray(np.asarray(jax.device_get(x))[keep]), ro)
         return ro, keep, {}
 
-    # -- one full RL step -------------------------------------------------------
-    def train_step(self) -> Dict[str, float]:
-        t0 = time.time()
-        opts, scfg, tcfg = self.opts, self.scfg, self.tcfg
-        prompts, pmask, answers = self.loader.get(self.step)
+    # -- the phase update (shared by the sync step and the async learner) ------
+    def _phase_update(self, ro: RolloutBatch, rewards: np.ndarray, *,
+                      logp_behave=None, logp_old=None) -> Dict[str, float]:
+        """Run one phase's Sparse-RL update on an assembled rollout batch.
+
+        ``rewards`` aligns with ``ro`` rows (group-major).  ``logp_behave``
+        (async only) carries the dense per-token log-probs under each
+        token's sampler-version weights; None selects the sync update
+        graph, which the staleness-corrected loss degenerates to bitwise
+        at lag 0.  ``logp_old`` lets the async learner pass the proximal
+        rescore it already computed (it doubles as the current-version
+        behavior plane) instead of paying the forward twice.  Advances
+        ``step`` and ``weight_version`` and saves a checkpoint on
+        schedule.
+        """
+        scfg, tcfg = self.scfg, self.tcfg
         G = scfg.group_size
-        Gs = G + opts.group_slack
-        # tile prompts G+slack times (group-major)
-        np_tokens = np.repeat(np.asarray(prompts, np.int32), Gs, axis=0)
-        np_mask = np.repeat(np.asarray(pmask, bool), Gs, axis=0)
-        answers_rep = list(np.repeat(np.asarray(answers, dtype=object), Gs))
-
-        self.rng, r1 = jax.random.split(self.rng)
-        t_roll = time.time()
-        ro, keep, ro_stats = self._rollout_phase(np_tokens, np_mask, r1)
-        rollout_s = time.time() - t_roll
-        rewards = binary_rewards(np.asarray(jax.device_get(ro.resp_tokens)),
-                                 [answers_rep[u] for u in keep])
-
         adv = group_advantages(jnp.asarray(rewards.reshape(-1, G))).reshape(-1)
-        logp_old = self._rescore_fn(self.params, ro)
+        if logp_old is None:
+            logp_old = self._rescore_fn(self.params, ro)
         logp_ref = (self._rescore_fn(self.ref_params, ro)
                     if self.ref_params is not None else None)
 
@@ -287,34 +369,75 @@ class Trainer:
             ro_u = jax.tree.map(lambda x: x[sl], ro)
             lo = logp_old[sl]
             lrf = logp_ref[sl] if logp_ref is not None else None
-            self.params, self.opt_state, metrics = self._update_fn(
-                self.params, self.opt_state, ro_u, lo, lrf, adv[sl], lr)
+            if logp_behave is None:
+                self.params, self.opt_state, metrics = self._update_fn(
+                    self.params, self.opt_state, ro_u, lo, lrf, adv[sl], lr)
+            else:
+                self.params, self.opt_state, metrics = self._update_stale_fn(
+                    self.params, self.opt_state, ro_u, lo, logp_behave[sl],
+                    lrf, adv[sl], lr)
             for k, v in metrics.items():
                 agg[k] = agg.get(k, 0.0) + float(jax.device_get(v)) / n_updates
 
         self.step += 1
+        self.weight_version += 1
         if tcfg.checkpoint_every and self.step % tcfg.checkpoint_every == 0:
             self.save_checkpoint()
-
         agg.update(
             reward=float(rewards.mean()),
             resp_len=float(jax.device_get(ro.lengths).mean()),
             entropy=float(jax.device_get(ro.entropy).mean()),
             lr=float(jax.device_get(lr)),
-            rollout_s=rollout_s,
-            step_time_s=time.time() - t0,
         )
+        return agg
+
+    @staticmethod
+    def _engine_stat_metrics(ro_stats: Dict[str, float]) -> Dict[str, float]:
+        """Engine phase counters -> trainer log metrics (pool pressure,
+        admission staging/wait telemetry, swap count)."""
+        out = dict(
+            prefix_hit_rate=(float(ro_stats["prefix_hits"])
+                             / max(float(ro_stats["admissions"]), 1.0)),
+            rollout_prefills=float(ro_stats["prefills"]),
+            rollout_cancelled=float(ro_stats["cancelled"]),
+            rollout_decode_steps=float(ro_stats["decode_steps"]),
+            rollout_staged_peak=float(ro_stats["staged_peak"]),
+            rollout_weight_swaps=float(ro_stats.get("weight_swaps", 0)),
+        )
+        for src, dst in (("pool_peak_frac", "rollout_pool_peak_frac"),
+                         ("blocks_in_use_peak", "rollout_pool_peak_blocks"),
+                         ("admit_wait_p50", "rollout_admit_wait_p50"),
+                         ("admit_wait_p99", "rollout_admit_wait_p99"),
+                         ("latency_p50", "rollout_latency_p50"),
+                         ("latency_p99", "rollout_latency_p99")):
+            if src in ro_stats:
+                out[dst] = float(ro_stats[src])
+        return out
+
+    # -- one full RL step -------------------------------------------------------
+    def train_step(self) -> Dict[str, float]:
+        t0 = time.time()
+        np_tokens, np_mask, answers_rep = self.tiled_phase_inputs(self.step)
+        r1 = self.phase_key(self.step)
+        t_roll = time.time()
+        ro, keep, ro_stats = self._rollout_phase(np_tokens, np_mask, r1)
+        rollout_s = time.time() - t_roll
+        self.last_rollout = ro          # equivalence-test hook
+        rewards = binary_rewards(np.asarray(jax.device_get(ro.resp_tokens)),
+                                 [answers_rep[u] for u in keep])
+
+        agg = self._phase_update(ro, rewards)
+        agg.update(rollout_s=rollout_s, step_time_s=time.time() - t0)
         if ro_stats:
-            agg.update(
-                prefix_hit_rate=(float(ro_stats["prefix_hits"])
-                                 / max(float(ro_stats["admissions"]), 1.0)),
-                rollout_prefills=float(ro_stats["prefills"]),
-                rollout_cancelled=float(ro_stats["cancelled"]),
-                rollout_decode_steps=float(ro_stats["decode_steps"]),
-            )
+            agg.update(self._engine_stat_metrics(ro_stats))
         return agg
 
     def train(self, steps: int, log_every: int = 10, callback=None):
+        if self.opts.pipeline == "async":
+            from repro.runtime.async_pipeline import AsyncPipeline
+
+            return AsyncPipeline(self).train(steps, log_every=log_every,
+                                             callback=callback)
         history = []
         for _ in range(steps):
             metrics = self.train_step()

@@ -1,0 +1,276 @@
+"""Async actor-learner pipeline (DESIGN.md §Async pipeline & staleness
+correction): WeightStore ring semantics, engine weight hot-swap +
+per-token version accounting, group streaming, the lag-0 sync-equivalence
+guarantee, lag>=1 stability, and checkpoint round-trips that include the
+optimizer state and the weight-version counter."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import SparseRLConfig, TrainConfig, get_config
+from repro.data import TOKENIZER
+from repro.models import get_model
+from repro.rollout import ContinuousEngine, Request
+from repro.runtime import Trainer, TrainerOptions, WeightStore
+
+
+# ---------------------------------------------------------------------------
+# WeightStore
+# ---------------------------------------------------------------------------
+def test_weight_store_versions_and_ring_eviction():
+    ws = WeightStore(capacity=2, start_version=5)
+    assert ws.publish({"w": 0}) == 5
+    assert ws.publish({"w": 1}) == 6
+    assert ws.publish({"w": 2}) == 7
+    assert len(ws) == 2 and 5 not in ws          # oldest unreferenced dropped
+    v, params = ws.acquire()
+    assert v == 7 and params == {"w": 2}
+    ws.release(7)
+    with pytest.raises(KeyError):
+        ws.acquire(5)                            # evicted version = hard error
+
+
+def test_weight_store_refcount_pins_across_eviction():
+    ws = WeightStore(capacity=2, start_version=0)
+    ws.publish({"w": 0})
+    v0, _ = ws.acquire(0)                        # pin the oldest
+    ws.publish({"w": 1})
+    ws.publish({"w": 2})
+    ws.publish({"w": 3})
+    assert 0 in ws                               # referenced: never evicted
+    assert ws.refs(0) == 1
+    ws.release(0)
+    ws.publish({"w": 4})                         # next publish collects it
+    assert 0 not in ws
+    with pytest.raises(ValueError):
+        ws.release(0)                            # unheld release = bug signal
+
+
+# ---------------------------------------------------------------------------
+# Engine: hot-swap at sweep boundaries + per-token version accounting
+# ---------------------------------------------------------------------------
+def _smoke_engine(decode_chunk=2, batch_size=4, max_new=8):
+    cfg = get_config("qwen2.5-14b").smoke()
+    m = get_model(cfg)
+    params = m.init_params(cfg, jax.random.PRNGKey(0))
+    scfg = SparseRLConfig(compression="none", group_size=4)
+    eng = ContinuousEngine(params, cfg, m, scfg, batch_size=batch_size,
+                           prompt_len=8, max_new_tokens=max_new,
+                           eos_id=TOKENIZER.eos_id, decode_chunk=decode_chunk,
+                           seed=0, cache_backend="paged", block_size=4)
+    return eng, params, cfg, m
+
+
+def test_set_params_swaps_at_sweep_boundary_and_tags_versions():
+    """A hot-swap staged mid-run applies at the next admission sweep: rows
+    admitted later carry the new version, the first post-swap token of an
+    in-flight row is still attributed to the old params (the carried
+    logits), and the prefix cache is invalidated with the swap."""
+    eng, params, cfg, m = _smoke_engine(decode_chunk=2, batch_size=2)
+    eng.begin_phase(params=params, base_key=jax.random.PRNGKey(3),
+                    weight_version=7)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(3, 60, size=6) for _ in range(4)]
+    params2 = jax.tree.map(lambda x: x * 1.01, params)
+    seen = []
+
+    def on_group(gid, comps):
+        seen.append((gid, [c.uid for c in comps]))
+        if gid == 0:
+            eng.set_params(params2, 8)           # staged, not yet applied
+
+    comps = eng.run([Request(uid=u, prompt=prompts[u // 2],
+                             max_new_tokens=4 + 2 * (u // 2))
+                     for u in range(4)],
+                    group_size=2, on_group=on_group)
+    eng.end_phase()
+    assert seen[0][0] == 0 and seen[0][1] == [0, 1]   # uid-sorted streaming
+    by_uid = {c.uid: c for c in comps}
+    assert by_uid[0].weight_version == 7
+    # the group admitted after the swap carries the new version everywhere
+    assert by_uid[2].weight_version == by_uid[3].weight_version == 8
+    assert all((c.tok_versions == 8).all() for c in (by_uid[2], by_uid[3]))
+    assert eng.stats["weight_swaps"] == 1
+
+
+def test_inflight_row_first_post_swap_token_keeps_old_version():
+    """Per-token accounting across a swap: the chunk dispatched right after
+    the swap samples its first token from logits the OLD params produced."""
+    eng, params, cfg, m = _smoke_engine(decode_chunk=2, batch_size=3,
+                                        max_new=8)
+    eng.begin_phase(params=params, base_key=jax.random.PRNGKey(5),
+                    weight_version=1)
+    prompt = np.arange(3, 9)
+    fired = []
+
+    def on_group(gid, comps):
+        fired.append(gid)
+        if gid == 0:
+            # uid 2 is co-resident and mid-decode (cap 8 > uid0/1's cap 2)
+            eng.set_params(jax.tree.map(lambda x: x * 1.01, params), 2)
+
+    comps = eng.run([Request(uid=0, prompt=prompt, max_new_tokens=2),
+                     Request(uid=1, prompt=prompt, max_new_tokens=2),
+                     Request(uid=2, prompt=np.arange(10, 16),
+                             max_new_tokens=8)],
+                    group_size=2, on_group=on_group)
+    eng.end_phase()
+    long = {c.uid: c for c in comps}[2]
+    tv = long.tok_versions
+    assert long.weight_version == 1        # co-admitted with group 0
+    assert tv[0] == 1
+    assert (tv == 2).any()                 # swap landed while it decoded
+    first_new = int(np.argmax(tv == 2))
+    # the chunk dispatched right after the swap samples its first token
+    # from logits the OLD params produced — boundary token stays v1
+    assert first_new >= 3                  # 2 pre-swap + 1 boundary token
+    assert tv[first_new - 1] == 1
+    assert (tv[first_new:] == 2).all()
+
+
+def test_end_phase_reports_pool_and_queue_telemetry():
+    eng, params, cfg, m = _smoke_engine()
+    eng.begin_phase(params=params, base_key=jax.random.PRNGKey(1))
+    prompt = np.arange(3, 9)
+    eng.run([Request(uid=u, prompt=prompt) for u in range(8)], group_size=4)
+    stats = eng.end_phase()
+    assert stats["staged_peak"] >= 1
+    assert stats["blocks_in_use_peak"] > 0
+    assert 0 < stats["pool_peak_frac"] <= 1.0
+    assert stats["pool_blocks"] == eng.pool_blocks
+    for k in ("admit_wait_p50", "admit_wait_p99", "latency_p50",
+              "latency_p99"):
+        assert k in stats and stats[k] >= 0.0
+    # admission waits are populated (later groups waited for free rows)
+    assert stats["admit_wait_p99"] >= stats["admit_wait_p50"]
+    assert stats["latency_p99"] > 0.0
+
+
+# ---------------------------------------------------------------------------
+# Trainer e2e: lag-0 equivalence, lag>=1 stability
+# ---------------------------------------------------------------------------
+def _mk_trainer(tmp, pipeline="sync", max_lag=1, **kw):
+    cfg = get_config("qwen2.5-14b").smoke()
+    scfg = SparseRLConfig(kv_budget=12, kv_buffer=4, obs_window=2,
+                          num_sinks=1, group_size=4, max_new_tokens=10,
+                          learning_rate=3e-4, kl_coef=0.0)
+    tcfg = TrainConfig(update_batch=16, total_steps=10, warmup_steps=1,
+                       checkpoint_every=kw.pop("checkpoint_every", 0),
+                       checkpoint_dir=str(tmp))
+    opts = TrainerOptions(num_prompts=4, prompt_len=16, max_new_tokens=10,
+                          rollout_backend="continuous",
+                          cache_backend="paged", decode_chunk=2,
+                          pipeline=pipeline, max_lag=max_lag, **kw)
+    return Trainer(cfg, scfg, tcfg, opts)
+
+
+def test_async_lag0_token_logp_and_param_identical_to_sync(tmp_path):
+    """The acceptance bound: pipeline="async", max_lag=0 serializes the
+    actor-learner handoff and must reproduce the sync trainer exactly —
+    per-step rollout tokens and logp_sparse, rewards, and the final
+    params/opt state, bit for bit."""
+    rolls = {"sync": [], "async": []}
+
+    def cap(name):
+        def cb(step, metrics):
+            tr = trainers[name]
+            rolls[name].append((
+                np.asarray(jax.device_get(tr.last_rollout.resp_tokens)),
+                np.asarray(jax.device_get(tr.last_rollout.logp_sparse)),
+                metrics["reward"]))
+        return cb
+
+    trainers = {"sync": _mk_trainer(tmp_path / "s", "sync")}
+    trainers["sync"].train(3, log_every=0, callback=cap("sync"))
+    trainers["async"] = _mk_trainer(tmp_path / "a", "async", max_lag=0)
+    trainers["async"].train(3, log_every=0, callback=cap("async"))
+
+    for (ts, ls, rs), (ta, la, ra) in zip(rolls["sync"], rolls["async"]):
+        np.testing.assert_array_equal(ts, ta)
+        np.testing.assert_array_equal(ls, la)   # bitwise: same sampler pass
+        assert rs == ra
+    for a, b in zip(jax.tree.leaves(trainers["sync"].params),
+                    jax.tree.leaves(trainers["async"].params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(jax.tree.leaves(trainers["sync"].opt_state),
+                    jax.tree.leaves(trainers["async"].opt_state)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert trainers["async"].weight_version == 3
+
+
+def test_async_lag1_trains_stably_and_measures_staleness(tmp_path):
+    """max_lag=1 smoke run: finite metrics every step, the staleness
+    telemetry actually measures lag (> 0 once the pipeline fills), the
+    correction stays active (mean_rho finite, capped), and the page pool
+    drains at every phase end (no leak across overlapped phases)."""
+    tr = _mk_trainer(tmp_path / "l1", "async", max_lag=1)
+    hist = tr.train(4, log_every=0)
+    assert len(hist) == 4
+    for m in hist:
+        for k, v in m.items():
+            assert np.isfinite(v), (k, v)
+    assert max(m["staleness_lag"] for m in hist) > 0
+    assert all(m.get("mean_rho", 1.0) <= tr.scfg.staleness_clip + 1e-6
+               for m in hist)
+    # reward must not degrade over the smoke horizon
+    half = len(hist) // 2
+    first = np.mean([m["reward"] for m in hist[:half]])
+    second = np.mean([m["reward"] for m in hist[half:]])
+    assert second >= first - 0.25
+    # nothing leaks across overlapped phases: the (rkv-compressed) paged
+    # backend shares prefills by state splice — its prefix cache must be
+    # bulk-released at every phase end; a pool allocator, when present,
+    # must have drained
+    assert len(tr.engine.prefix) == 0
+    if tr.engine.allocator is not None:
+        assert tr.engine.allocator.blocks_in_use == 0
+    assert tr.step == 4 and tr.weight_version == 4
+
+
+def test_async_requires_continuous_backend(tmp_path):
+    cfg = get_config("qwen2.5-14b").smoke()
+    scfg = SparseRLConfig(group_size=4, max_new_tokens=10)
+    tcfg = TrainConfig(checkpoint_dir=str(tmp_path / "x"))
+    with pytest.raises(ValueError, match="continuous"):
+        Trainer(cfg, scfg, tcfg,
+                TrainerOptions(num_prompts=4, prompt_len=16,
+                               max_new_tokens=10, pipeline="async"))
+
+
+# ---------------------------------------------------------------------------
+# Checkpointer round-trip: optimizer state + weight-version counter
+# ---------------------------------------------------------------------------
+def test_checkpoint_roundtrip_includes_opt_state_and_weight_version(tmp_path):
+    tr = _mk_trainer(tmp_path / "ck", "sync", checkpoint_every=2)
+    for _ in range(2):
+        tr.train_step()
+    assert tr.weight_version == 2
+    saved_opt = jax.device_get(tr.opt_state)
+    saved_params = jax.device_get(tr.params)
+    del tr
+    tr2 = _mk_trainer(tmp_path / "ck", "sync", checkpoint_every=2)
+    assert tr2.step == 2 and tr2.weight_version == 2
+    for a, b in zip(jax.tree.leaves(saved_params),
+                    jax.tree.leaves(tr2.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(jax.tree.leaves(saved_opt),
+                    jax.tree.leaves(tr2.opt_state)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_async_resume_lands_on_consistent_snapshot(tmp_path):
+    """Kill an async run mid-flight; the restart resumes from the last
+    checkpoint with step == weight_version (a consistent snapshot: the
+    producer's run-ahead rollouts are simply regenerated — phase keys are
+    a pure function of (seed, step)) and training continues."""
+    tr = _mk_trainer(tmp_path / "ar", "async", max_lag=1, checkpoint_every=2)
+    tr.train(3, log_every=0)
+    del tr  # crash after the step-2 checkpoint (step 3 never saved)
+    tr2 = _mk_trainer(tmp_path / "ar", "async", max_lag=1,
+                      checkpoint_every=2)
+    assert tr2.step == 2 and tr2.weight_version == 2
+    hist = tr2.train(2, log_every=0)
+    assert len(hist) == 2 and tr2.step == 4 and tr2.weight_version == 4
+    for m in hist:
+        assert np.isfinite(m["loss"])

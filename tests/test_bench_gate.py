@@ -26,14 +26,24 @@ def _write(d: Path, serving, rollout):
     (d / "BENCH_rollout.json").write_text(json.dumps(rollout))
 
 
-def _full(speedups=(1.2, 1.2, 1.2), identical=True):
+def _arow(speedup=0.9, max_lag=1, nondegrading=True, **kw):
+    """Async-pipeline cell: no lockstep-floor, reward-stability hard bound."""
+    return dict(policy="rkv", max_lag=max_lag, speedup=speedup,
+                reward_nondegrading=nondegrading, **kw)
+
+
+def _full(speedups=(1.2, 1.2, 1.2), identical=True, async_rows=None):
     s_cl, s_pp, s_rp = speedups
     serving = {"continuous_vs_lockstep_smoke": [_row(s_cl)],
                "paged_prefix_smoke": [_row(s_pp)]}
     # the full-scale section rides along unchanged in CI (only the smoke
     # bench re-runs) but its hard bounds are still vetted
     rollout = {"rollout_phase_smoke": [_row(s_rp, identical=identical)],
-               "rollout_phase": [_row(1.4)]}
+               "rollout_phase": [_row(1.4)],
+               "rollout_async_smoke": async_rows if async_rows is not None
+               else [_arow(max_lag=0, identical=True), _arow(max_lag=1)],
+               "rollout_async": [_arow(max_lag=0, identical=True),
+                                 _arow(max_lag=1)]}
     return serving, rollout
 
 
@@ -84,8 +94,7 @@ def test_gate_matches_rows_by_key_not_order(tmp_path):
     serving = {"continuous_vs_lockstep_smoke": [
         _row(2.0, policy="rkv", batch=4), _row(1.1, policy="none", batch=4)],
         "paged_prefix_smoke": [_row(1.2)]}
-    rollout = {"rollout_phase_smoke": [_row(1.2)],
-               "rollout_phase": [_row(1.4)]}
+    rollout = _full()[1]
     _write(tmp_path / "committed", serving, rollout)
     shuffled = {"continuous_vs_lockstep_smoke": [
         _row(1.1, policy="none", batch=4), _row(2.0, policy="rkv", batch=4)],
@@ -112,12 +121,18 @@ def test_gate_ignores_key_fields_unknown_to_old_baselines(tmp_path):
     skipping them."""
     serving = {"continuous_vs_lockstep_smoke": [_row(1.2)],
                "paged_prefix_smoke": [_row(1.2)]}
+    async_rows = _full()[1]["rollout_async_smoke"]
+    async_full = _full()[1]["rollout_async"]
     old_rollout = {"rollout_phase_smoke": [_row(2.0)],       # no plen_dist
-                   "rollout_phase": [_row(1.4)]}
+                   "rollout_phase": [_row(1.4)],
+                   "rollout_async_smoke": async_rows,
+                   "rollout_async": async_full}
     _write(tmp_path / "committed", serving, old_rollout)
     fresh_row = dict(_row(1.0), plen_dist="mixed")           # -50% regression
     new_rollout = {"rollout_phase_smoke": [fresh_row],
-                   "rollout_phase": [dict(_row(1.4), plen_dist="mixed")]}
+                   "rollout_phase": [dict(_row(1.4), plen_dist="mixed")],
+                   "rollout_async_smoke": async_rows,
+                   "rollout_async": async_full}
     _write(tmp_path / "fresh", serving, new_rollout)
     problems = bench_gate.gate(tmp_path / "committed", tmp_path / "fresh",
                                0.35)
@@ -125,7 +140,69 @@ def test_gate_ignores_key_fields_unknown_to_old_baselines(tmp_path):
     # once the baseline itself carries the field, it participates in the key
     new_base = {"rollout_phase_smoke": [dict(_row(2.0), plen_dist="fixed"),
                                         dict(_row(1.1), plen_dist="mixed")],
-                "rollout_phase": [dict(_row(1.4), plen_dist="mixed")]}
+                "rollout_phase": [dict(_row(1.4), plen_dist="mixed")],
+                "rollout_async_smoke": async_rows,
+                "rollout_async": async_full}
     _write(tmp_path / "committed2", serving, new_base)
     assert bench_gate.gate(tmp_path / "committed2", tmp_path / "fresh",
                            0.35) == []
+
+
+def test_gate_async_reward_degradation_is_hard_bound(tmp_path):
+    """An async row with reward_nondegrading=false fails even with no
+    committed baseline: pipeline speed may never cost training stability."""
+    bad = [_arow(max_lag=0, identical=True),
+           _arow(max_lag=1, nondegrading=False,
+                 reward_first_half=0.2, reward_second_half=0.05)]
+    _write(tmp_path / "fresh", *_full(async_rows=bad))
+    problems = bench_gate.gate(tmp_path / "missing", tmp_path / "fresh",
+                               0.35)
+    assert any("reward degraded" in p for p in problems)
+
+
+def test_gate_async_rows_have_no_lockstep_speedup_floor(tmp_path):
+    """speedup < 1.0 is allowed for rollout_async rows (overlap gains are
+    hardware-dependent) — only the rollout_phase sections carry the hard
+    lockstep floor."""
+    slow = [_arow(max_lag=0, speedup=0.8, identical=True),
+            _arow(max_lag=1, speedup=0.85)]
+    _write(tmp_path / "committed", *_full())
+    _write(tmp_path / "fresh", *_full(async_rows=slow))
+    assert bench_gate.gate(tmp_path / "committed", tmp_path / "fresh",
+                           0.35) == []
+
+
+def test_gate_old_baseline_without_async_rows_still_gates(tmp_path):
+    """A committed baseline that predates the async sections must not
+    disable gating: fresh async rows still hit the hard bounds (identity,
+    reward stability) and the other sections still tolerance-band."""
+    serving, rollout = _full()
+    old_rollout = {k: v for k, v in rollout.items()
+                   if not k.startswith("rollout_async")}
+    _write(tmp_path / "committed", serving, old_rollout)
+    bad = [_arow(max_lag=0, identical=False),
+           _arow(max_lag=1, nondegrading=False)]
+    _write(tmp_path / "fresh", *_full(async_rows=bad))
+    problems = bench_gate.gate(tmp_path / "committed", tmp_path / "fresh",
+                               0.35)
+    assert any("token-identical" in p for p in problems)
+    assert any("reward degraded" in p for p in problems)
+    # and a clean fresh run passes against the same old baseline
+    _write(tmp_path / "fresh2", *_full())
+    assert bench_gate.gate(tmp_path / "committed", tmp_path / "fresh2",
+                           0.35) == []
+
+
+def test_gate_async_speedup_tolerance_bands_once_baseline_exists(tmp_path):
+    """Once a committed baseline carries async rows, a steps/s collapse
+    beyond the tolerance band is flagged (matched on (policy, max_lag))."""
+    _write(tmp_path / "committed",
+           *_full(async_rows=[_arow(max_lag=0, speedup=1.0, identical=True),
+                              _arow(max_lag=1, speedup=1.0)]))
+    _write(tmp_path / "fresh",
+           *_full(async_rows=[_arow(max_lag=0, speedup=0.95, identical=True),
+                              _arow(max_lag=1, speedup=0.4)]))
+    problems = bench_gate.gate(tmp_path / "committed", tmp_path / "fresh",
+                               0.35)
+    assert len(problems) == 1 and "regressed" in problems[0] \
+        and "rollout_async" in problems[0]

@@ -171,3 +171,75 @@ def test_min_log_xi_not_clamped_by_masked_fill():
     out2 = sparse_rl_loss(lt, lo, ls2, adv, mask, SparseRLConfig())
     np.testing.assert_allclose(float(out2.metrics["min_log_xi"]), -0.5,
                                rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# staleness-aware behavior correction (async pipeline; DESIGN.md
+# §Async pipeline & staleness correction)
+# ---------------------------------------------------------------------------
+def test_staleness_rho_degenerates_bitwise_at_lag0():
+    """logp_behave == logp_old (lag 0) must reproduce the sync loss
+    EXACTLY: log rho = 0, rho = exp(0) = 1.0, and multiplying by the exact
+    float 1.0 changes no bit."""
+    rng = np.random.default_rng(0)
+    B, T = 4, 6
+    lo = jnp.asarray(rng.normal(-1.0, 0.5, (B, T)), jnp.float32)
+    ls = jnp.asarray(rng.normal(-1.0, 0.5, (B, T)), jnp.float32)
+    lt = lo + 0.03
+    adv = jnp.asarray(rng.normal(size=(B,)), jnp.float32)
+    mask = jnp.ones((B, T), bool)
+    scfg = SparseRLConfig()
+    out_sync = sparse_rl_loss(lt, lo, ls, adv, mask, scfg)
+    out_lag0 = sparse_rl_loss(lt, lo, ls, adv, mask, scfg, logp_behave=lo)
+    np.testing.assert_array_equal(np.asarray(out_sync.loss),
+                                  np.asarray(out_lag0.loss))
+    np.testing.assert_array_equal(np.asarray(out_lag0.metrics["mean_rho"]),
+                                  1.0)
+    np.testing.assert_array_equal(
+        np.asarray(out_lag0.metrics["staleness_kl"]), 0.0)
+    # gradients identical too (rho is stop-gradded and exactly 1)
+    g0 = jax.grad(lambda x: sparse_rl_loss(
+        x, lo, ls, adv, mask, scfg).loss)(lt)
+    g1 = jax.grad(lambda x: sparse_rl_loss(
+        x, lo, ls, adv, mask, scfg, logp_behave=lo).loss)(lt)
+    np.testing.assert_array_equal(np.asarray(g0), np.asarray(g1))
+
+
+def test_staleness_rho_scales_and_caps():
+    """rho = pi_old/pi_behave composes multiplicatively outside the clip
+    and is capped at staleness_clip; xi and the rejection mask pair
+    logp_sparse with the BEHAVIOR policy, not the proximal one."""
+    B, T = 1, 1
+    lo = jnp.zeros((B, T))                       # proximal (learner)
+    lb = jnp.full((B, T), -jnp.log(1.5))         # behavior: rho = 1.5
+    ls = lb                                       # xi = pi_behave/pi_sparse = 1
+    lt = jnp.zeros((B, T))                       # w = pi_theta/pi_old = 1
+    adv = jnp.array([1.0])
+    mask = jnp.ones((B, T), bool)
+    scfg = SparseRLConfig(clip_eps=0.2, staleness_clip=2.0)
+    out = sparse_rl_loss(lt, lo, ls, adv, mask, scfg, logp_behave=lb)
+    np.testing.assert_allclose(out.loss, -1.5, rtol=1e-5)
+    np.testing.assert_allclose(out.metrics["mean_rho"], 1.5, rtol=1e-5)
+    assert float(out.metrics["mean_xi"]) == 1.0   # paired with behavior
+    assert float(out.metrics["rejection_rate"]) == 0.0
+    # far-stale token: rho capped at staleness_clip
+    lb2 = jnp.full((B, T), -jnp.log(100.0))
+    out2 = sparse_rl_loss(lt, lo, lb2, adv, mask, scfg, logp_behave=lb2)
+    np.testing.assert_allclose(out2.loss, -scfg.staleness_clip, rtol=1e-5)
+
+
+def test_staleness_rejection_uses_behavior_policy():
+    """A token whose BEHAVIOR dense policy disagrees with the sparse
+    sampler by more than eps is rejected even if the proximal policy
+    agrees — the veto must compare the policies that actually sampled."""
+    B, T = 1, 2
+    ls = jnp.zeros((B, T))
+    lo = jnp.zeros((B, T))                        # proximal agrees
+    lb = jnp.asarray([[0.0, np.log(1e-5)]])       # behavior: xi_1 = 1e-5
+    adv = jnp.array([1.0])
+    mask = jnp.ones((B, T), bool)
+    scfg = SparseRLConfig(rejection_eps=1e-4)
+    out = sparse_rl_loss(ls, lo, ls, adv, mask, scfg, logp_behave=lb)
+    assert float(out.metrics["rejection_rate"]) == 1.0
+    out_prox = sparse_rl_loss(ls, lo, ls, adv, mask, scfg)
+    assert float(out_prox.metrics["rejection_rate"]) == 0.0

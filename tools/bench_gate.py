@@ -6,13 +6,19 @@ committed baselines and fails (exit 1) when:
 
 1. any fresh row reports ``identical: false`` — the schedulers must stay
    token-identical to their lockstep oracles (a wrong-but-fast engine is a
-   bug, not a speedup);
+   bug, not a speedup); likewise ``reward_nondegrading: false`` — the
+   async actor-learner pipeline's smoke run must not lose reward over its
+   horizon (a fast-but-destabilizing pipeline is a bug, not a speedup);
 2. a ``rollout_phase(_smoke)`` row has ``speedup < 1.0`` — the ISSUE-3
    acceptance bound: the continuous-paged training rollout phase may never
-   be slower than the lockstep phase on the mixed-length group workload;
+   be slower than the lockstep phase on the mixed-length group workload
+   (the ``rollout_async*`` sections are exempt from this floor: overlap
+   gains are hardware-dependent, so their steps/s only tolerance-bands);
 3. a fresh row's ``speedup`` regresses below ``committed * (1 - tolerance)``
    — rows are matched by their identity fields (policy/batch/group_size/...),
-   so reordering sections does not confuse the gate.
+   so reordering sections does not confuse the gate.  A section absent
+   from the committed baseline (e.g. async rows against a pre-async
+   baseline) skips only this banded check; (1) and (2) still gate.
 
 The tolerance band (default 0.35) absorbs shared-CI-runner noise; the hard
 bounds (1) and (2) have no band.  A section missing from the committed
@@ -43,6 +49,13 @@ GATED_SECTIONS = {
         # fresh == committed and the tolerance check is a no-op — but the
         # hard bounds below still vet the committed numbers on every push
         "rollout_phase": ("policy", "group_size", "n_prompts", "plen_dist"),
+        # async actor-learner pipeline cells (steps/s vs the sync trainer;
+        # lag-0 identity + reward stability are hard bounds, the speedup is
+        # tolerance-banded only — overlap gains are hardware-dependent).
+        # Baselines committed before these sections existed simply have no
+        # rows to pair: the hard bounds still gate every fresh row.
+        "rollout_async_smoke": ("policy", "max_lag"),
+        "rollout_async": ("policy", "max_lag"),
     },
 }
 # sections whose rows must meet speedup >= 1.0 regardless of history
@@ -77,6 +90,11 @@ def gate_section(name: str, fresh_rows, committed_rows, key_fields,
         label = f"{name}{[v for v in _row_key(row, key_fields) if v is not None]}"
         if row.get("identical") is False:
             problems.append(f"{label}: outputs not token-identical")
+        if row.get("reward_nondegrading") is False:
+            problems.append(
+                f"{label}: reward degraded over the async smoke horizon "
+                f"({row.get('reward_first_half')} -> "
+                f"{row.get('reward_second_half')})")
         speedup = row.get("speedup")
         if speedup is None:
             problems.append(f"{label}: row has no 'speedup' field")
