@@ -339,6 +339,96 @@ def rollout_async_bench(fast: bool = False, *, arch: str = "qwen2.5-14b",
     return out
 
 
+def _quant_trainer(arch: str, *, kv_quant: str, seed: int, n_prompts: int,
+                   group_size: int, max_new: int):
+    """Smoke-curriculum Trainer on the continuous-paged backend with a
+    ``kv_quant`` pool.  ``compression="none"`` on purpose: the quantized
+    pool is then the ONLY behavior/trainer policy gap, so the xi/rejection
+    correction measured here is pure quantization mismatch."""
+    import shutil
+    from repro.configs import SparseRLConfig, TrainConfig, get_config
+    from repro.runtime import Trainer, TrainerOptions
+
+    cfg = get_config(arch).smoke()
+    scfg = SparseRLConfig(group_size=group_size, max_new_tokens=max_new,
+                          learning_rate=2e-3, kl_coef=0.0,
+                          compression="none")
+    ckpt = f"/tmp/srl_bench_quant_{kv_quant}_{seed}"
+    shutil.rmtree(ckpt, ignore_errors=True)
+    tcfg = TrainConfig(update_batch=64, total_steps=64, warmup_steps=5,
+                       checkpoint_every=0, checkpoint_dir=ckpt, seed=seed)
+    opts = TrainerOptions(num_prompts=n_prompts, prompt_len=12,
+                          max_new_tokens=max_new, level="trivial",
+                          rollout_backend="continuous",
+                          cache_backend="paged", kv_quant=kv_quant,
+                          decode_chunk=2)
+    return Trainer(cfg, scfg, tcfg, opts)
+
+
+def rollout_quant_bench(fast: bool = False, *, arch: str = "qwen2.5-14b",
+                        seed: int = 0) -> List[str]:
+    """Quantized-pool RL rollouts as a corrected sampler policy
+    (DESIGN.md §Quantized paged pool): writes the ``rollout_quant(_smoke)``
+    section of BENCH_rollout.json.
+
+    One short training run per ``kv_quant`` in (none, int8, fp8).  The
+    quantized engine's recorded log-probs become ``logp_sparse`` while the
+    dense rescore supplies pi_old, so the existing xi/rejection/reweighting
+    machinery absorbs the quantization mismatch — the cells record the
+    reward trajectory (non-degradation is a hard gate bound), the masked
+    mismatch-KL it induces, and the pool-capacity payoff (bytes per
+    resident token; int8 >= 1.8x fp is the acceptance bar).  ``speedup``
+    (quant vs fp steps/s) is banded by the gate, not floored: on CPU the
+    dequant work can outweigh the bandwidth it saves."""
+    n_prompts, G = (4, 4) if fast else (8, 8)
+    max_new = 8
+    steps = 16 if fast else 32
+    warmup = 3
+    rows, out, sps_by_q = [], [], {}
+    for kv_quant in ("none", "int8", "fp8"):
+        tr = _quant_trainer(arch, kv_quant=kv_quant, seed=seed,
+                            n_prompts=n_prompts, group_size=G,
+                            max_new=max_new)
+        hist = tr.train(warmup, log_every=0)
+        t0 = time.perf_counter()
+        hist += tr.train(steps, log_every=0)
+        sps = steps / (time.perf_counter() - t0)
+        sps_by_q[kv_quant] = sps
+        rewards = [m["reward"] for m in hist]
+        half = len(rewards) // 2
+        r_first = float(np.mean(rewards[:half]))
+        r_second = float(np.mean(rewards[half:]))
+        # same scale-aware stability bound as the async bench: collapse
+        # from a measurable reward level fails, noise-floor rewards don't
+        slack = max(0.02, 0.5 * r_first)
+        last = hist[-1]
+        rows.append(dict(
+            arch=arch, policy="none", kv_quant=kv_quant,
+            steps=steps + warmup, group_size=G, n_prompts=n_prompts,
+            steps_s=sps, speedup=sps / sps_by_q["none"],
+            kv_bytes_per_token=float(last["rollout_kv_bytes_per_token"]),
+            capacity_ratio=float(last["rollout_kv_capacity_ratio"]),
+            mismatch_kl=float(np.mean([m["mismatch_kl"]
+                                       for m in hist[warmup:]])),
+            rejection_rate=float(np.mean([m["rejection_rate"]
+                                          for m in hist[warmup:]])),
+            reward_first_half=r_first, reward_second_half=r_second,
+            reward_nondegrading=bool(r_second >= r_first - slack)))
+        r = rows[-1]
+        out.append(f"rollout_quant/{kv_quant},{1e6 / r['steps_s']:.0f},"
+                   f"steps_per_s={r['steps_s']:.3f};"
+                   f"speedup={r['speedup']:.2f};"
+                   f"capacity={r['capacity_ratio']:.2f}x;"
+                   f"bytes_per_token={r['kv_bytes_per_token']:.1f};"
+                   f"mismatch_kl={r['mismatch_kl']:.4f};"
+                   f"reward={r['reward_first_half']:.3f}->"
+                   f"{r['reward_second_half']:.3f}")
+        del tr
+    update_bench_json(BENCH_JSON,
+                      "rollout_quant" + ("_smoke" if fast else ""), rows)
+    return out
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
@@ -351,6 +441,9 @@ def main(argv=None) -> int:
                                  seed=args.seed):
         print(r, flush=True)
     for r in rollout_async_bench(fast=args.smoke, arch=args.arch,
+                                 seed=args.seed):
+        print(r, flush=True)
+    for r in rollout_quant_bench(fast=args.smoke, arch=args.arch,
                                  seed=args.seed):
         print(r, flush=True)
     # acceptance bar: the continuous-paged phase must not be slower than the
@@ -375,7 +468,20 @@ def main(argv=None) -> int:
           f"{all(r.get('identical', True) for r in arows)}, reward "
           f"nondegrading={all(r['reward_nondegrading'] for r in arows)} "
           f"({'PASS' if aok else 'FAIL'})")
-    return 0 if (ok and aok) else 1
+    # quant acceptance: int8 pool >= 1.8x effective capacity and reward
+    # nondegrading under quantized rollouts (the ISSUE-6 bounds; the gate
+    # re-enforces both on the committed smoke rows)
+    with open(BENCH_JSON) as f:
+        qrows = json.load(f)["rollout_quant" + ("_smoke" if args.smoke
+                                                else "")]
+    by_q = {r["kv_quant"]: r for r in qrows}
+    qok = (by_q["int8"]["capacity_ratio"] >= 1.8
+           and all(r["reward_nondegrading"] for r in qrows))
+    print(f"quantized rollouts: int8 capacity "
+          f"{by_q['int8']['capacity_ratio']:.2f}x>=1.8x, reward "
+          f"nondegrading={all(r['reward_nondegrading'] for r in qrows)} "
+          f"({'PASS' if qok else 'FAIL'})")
+    return 0 if (ok and aok and qok) else 1
 
 
 if __name__ == "__main__":

@@ -248,6 +248,98 @@ def paged_prefix_bench(fast: bool = False, *, arch: str = "qwen2.5-14b",
     return out
 
 
+def _bench_quant_one(arch: str, kv_quant: str, group_size: int,
+                     n_prompts: int, batch: int, prompt_len: int,
+                     max_new: int, block_size: int, decode_chunk: int,
+                     seed: int):
+    """One quantized-pool cell: fp paged engine vs ``kv_quant`` paged engine
+    on the same group-sampling workload.  Tokens may legitimately diverge —
+    the quantized pool IS a different sampler policy (DESIGN.md §Quantized
+    paged pool) — so there is no ``identical`` bound here; what the cell
+    pins is effective pool capacity (bytes per resident token vs an fp pool
+    at equal block count) and the size of the policy gap (mean |delta
+    logp| over each request pair's shared prefix).  ``kv_quant="none"``
+    doubles as the identity sanity row: same path, logp_mad exactly 0."""
+    from repro.configs import SparseRLConfig, get_config
+    from repro.data import TOKENIZER
+    from repro.launch.serve import make_workload
+    from repro.models import get_model
+    from repro.rollout import ContinuousEngine
+
+    cfg = get_config(arch).smoke()
+    m = get_model(cfg)
+    params = m.init_params(cfg, jax.random.PRNGKey(seed))
+    scfg = SparseRLConfig(compression="none")   # the pool backend is dense
+    reqs, _, _ = make_workload(n_prompts, prompt_len, max_new, rate=0.0,
+                               resp_dist="mixed", seed=seed,
+                               group_size=group_size)
+    kw = dict(batch_size=batch, prompt_len=prompt_len,
+              max_new_tokens=max_new, eos_id=TOKENIZER.eos_id,
+              decode_chunk=decode_chunk, seed=seed, cache_backend="paged",
+              block_size=block_size)
+    base = ContinuousEngine(params, cfg, m, scfg, **kw)
+    eng = ContinuousEngine(params, cfg, m, scfg, kv_quant=kv_quant, **kw)
+    fp, qt = base.run(reqs), eng.run(reqs)
+    # sampler-policy gap: |logp_fp - logp_quant| over each pair's shared
+    # prefix (identical per-request key chains, so positions align until
+    # the first token the policies disagree on)
+    diffs = []
+    for a, b in zip(fp, qt):
+        n = min(len(a.logps), len(b.logps))
+        if n:
+            diffs.append(np.abs(np.asarray(a.logps[:n], np.float64)
+                                - np.asarray(b.logps[:n], np.float64)))
+    logp_mad = float(np.mean(np.concatenate(diffs))) if diffs else 0.0
+    hit_rate = eng.prefix_hit_rate
+    ps = eng.kv_pool_stats()
+    t_fp = t_q = float("inf")
+    for _ in range(3):
+        base.reset_clock()
+        t0 = time.perf_counter()
+        fp = base.run(reqs)
+        t_fp = min(t_fp, time.perf_counter() - t0)
+        eng.reset_clock()
+        t0 = time.perf_counter()
+        qt = eng.run(reqs)
+        t_q = min(t_q, time.perf_counter() - t0)
+    toks = sum(len(c.tokens) for c in qt)
+    return dict(arch=arch, kv_quant=kv_quant, group_size=group_size,
+                n_prompts=n_prompts, batch=batch, block_size=block_size,
+                tokens=toks, fp_s=t_fp, quant_s=t_q,
+                fp_tps=sum(len(c.tokens) for c in fp) / t_fp,
+                quant_tps=toks / t_q, speedup=t_fp / t_q,
+                logp_mad=logp_mad, prefix_hit_rate=hit_rate,
+                target_hit_rate=(group_size - 1) / group_size,
+                kv_pool_bytes_per_layer=ps["kv_pool_bytes_per_layer"],
+                kv_bytes_per_token=ps["kv_bytes_per_token"],
+                capacity_ratio=ps["kv_capacity_ratio"])
+
+
+def paged_quant_bench(fast: bool = False, *, arch: str = "qwen2.5-14b",
+                      seed: int = 0) -> List[str]:
+    """Quantized paged pool vs fp paged pool; writes the ``paged_quant``
+    section of BENCH_serving.json.  Acceptance (re-enforced by
+    tools/bench_gate.py on the committed smoke rows): int8 capacity ratio
+    >= 1.8x, and the ``none`` row's logp_mad identically 0."""
+    group_size, n_prompts = (4, 2) if fast else (4, 3)
+    max_new = 16 if fast else 48
+    rows, out = [], []
+    for kv_quant in ("none", "int8", "fp8"):
+        r = _bench_quant_one(arch, kv_quant, group_size, n_prompts, batch=4,
+                             prompt_len=16, max_new=max_new, block_size=16,
+                             decode_chunk=4, seed=seed)
+        rows.append(r)
+        out.append(f"serving/paged_quant/{kv_quant},{r['quant_s']*1e6:.0f},"
+                   f"toks_per_s={r['quant_tps']:.1f};"
+                   f"speedup={r['speedup']:.2f};"
+                   f"capacity={r['capacity_ratio']:.2f}x;"
+                   f"bytes_per_token={r['kv_bytes_per_token']:.1f};"
+                   f"logp_mad={r['logp_mad']:.4f};"
+                   f"prefix_hit_rate={r['prefix_hit_rate']:.2f}")
+    update_bench_json("paged_quant" + ("_smoke" if fast else ""), rows)
+    return out
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
@@ -267,6 +359,8 @@ def main(argv=None) -> int:
                          batches=batches, seed=args.seed)
     rows += paged_prefix_bench(fast=args.smoke, arch=args.arch,
                                seed=args.seed)
+    rows += paged_quant_bench(fast=args.smoke, arch=args.arch,
+                              seed=args.seed)
     for r in rows:
         print(r, flush=True)
     # acceptance bar 1: continuous must not serve slower than lockstep
@@ -289,7 +383,19 @@ def main(argv=None) -> int:
           ",".join(f"{r['prefix_hit_rate']:.2f}>={r['target_hit_rate']:.2f}"
                    for r in paged) +
           f" ({'PASS' if ok2 else 'FAIL'}) -> {BENCH_JSON}")
-    return 0 if ok and ok2 else 1
+    # acceptance bar 3: int8 pool capacity >= 1.8x fp at equal block count,
+    # and the kv_quant="none" cell must be the exact fp path (logp_mad 0)
+    with open(BENCH_JSON) as f:
+        quant = json.load(f)["paged_quant" + ("_smoke" if args.smoke
+                                              else "")]
+    by_q = {r["kv_quant"]: r for r in quant}
+    ok3 = (by_q["int8"]["capacity_ratio"] >= 1.8
+           and by_q["none"]["logp_mad"] == 0.0)
+    print(f"paged_quant: int8 capacity "
+          f"{by_q['int8']['capacity_ratio']:.2f}x>=1.8x, none logp_mad="
+          f"{by_q['none']['logp_mad']:.4f} "
+          f"({'PASS' if ok3 else 'FAIL'})")
+    return 0 if ok and ok2 and ok3 else 1
 
 
 if __name__ == "__main__":

@@ -39,12 +39,20 @@ def flash_decode(q, k, v, pos, *, block_s: int = 512):
     return _flash_decode(q, k, v, pos, block_s=block_s, interpret=_interpret())
 
 
-def paged_flash_decode(q, k_pool, v_pool, pos_pool, block_tables, fill):
+def paged_flash_decode(q, k_pool, v_pool, pos_pool, block_tables, fill,
+                       k_scale=None, v_scale=None):
+    """``k_scale``/``v_scale`` (N, Hkv) switch on the dequantizing path for
+    int8/fp8 pools (kvcache/paged.py quantized storage)."""
     if not _STATE["enabled"]:
+        if k_scale is not None:
+            return ref.paged_decode_quant_ref(q, k_pool, v_pool, k_scale,
+                                              v_scale, pos_pool,
+                                              block_tables, fill)
         return ref.paged_decode_ref(q, k_pool, v_pool, pos_pool,
                                     block_tables, fill)
     return _paged_flash_decode(q, k_pool, v_pool, pos_pool, block_tables,
-                               fill, interpret=_interpret())
+                               fill, k_scale, v_scale,
+                               interpret=_interpret())
 
 
 def flash_attention(q, k, v, q_positions, kv_positions, *, causal=True,

@@ -34,7 +34,14 @@ TPU mapping:
     per step; Dh = 128 aligns the MXU contraction, bs is a multiple of the
     sublane count (>= 8) for dense tiling.
 
-Oracle: `kernels.ref.paged_decode_ref` (gather + masked softmax), tested
+Quantized pools (`kvcache/paged.py` ``quant="int8"|"fp8"``) stream their
+per-(page, kv-head) float32 scales through the same clamped block-table
+index maps as the pages themselves — one (1, 1) scale tile per K and V —
+and dequantize in-register at the top of the softmax update, so the pool
+crosses HBM at quantized width and the arithmetic stays f32.
+
+Oracle: `kernels.ref.paged_decode_ref` (gather + masked softmax) and
+`kernels.ref.paged_decode_quant_ref` (dequantize, then gather), tested
 with assert_allclose; `kernels.ops.paged_flash_decode` is the dispatching
 wrapper (interpret mode on CPU, Mosaic on TPU, jnp fallback switchable).
 """
@@ -51,7 +58,13 @@ NEG = -1e30
 
 
 def _kernel(bt_ref, fill_ref, npages_ref, q_ref, k_ref, v_ref, pos_ref,
-            o_ref, acc, m_s, l_s, *, scale: float, bs: int, nb: int):
+            *refs, scale: float, bs: int, nb: int, quantized: bool):
+    # quantized pools add two (1, 1) per-(page, head) scale operands right
+    # after pos; the trailing refs are always (out, 3 scratch)
+    if quantized:
+        ks_ref, vs_ref, o_ref, acc, m_s, l_s = refs
+    else:
+        o_ref, acc, m_s, l_s = refs
     b = pl.program_id(0)
     j = pl.program_id(2)
 
@@ -69,6 +82,11 @@ def _kernel(bt_ref, fill_ref, npages_ref, q_ref, k_ref, v_ref, pos_ref,
         q = q_ref[0, 0].astype(jnp.float32)             # (G, Dh)
         k = k_ref[0, 0].astype(jnp.float32)             # (bs, Dh)
         v = v_ref[0, 0].astype(jnp.float32)
+        if quantized:
+            # in-register dequant: the page's int8/fp8 codes scale by its
+            # per-(page, head) factor before entering the softmax math
+            k = k * ks_ref[0, 0]
+            v = v * vs_ref[0, 0]
         slot = j * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
         mapped = bt_ref[b, j] >= 0
         valid = (pos_ref[...] >= 0) & (slot < fill_ref[b]) & mapped  # (1, bs)
@@ -95,15 +113,25 @@ def _kernel(bt_ref, fill_ref, npages_ref, q_ref, k_ref, v_ref, pos_ref,
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def paged_flash_decode(q: jnp.ndarray, k_pool: jnp.ndarray,
                        v_pool: jnp.ndarray, pos_pool: jnp.ndarray,
-                       block_tables: jnp.ndarray, fill: jnp.ndarray, *,
+                       block_tables: jnp.ndarray, fill: jnp.ndarray,
+                       k_scale: jnp.ndarray = None,
+                       v_scale: jnp.ndarray = None, *,
                        interpret: bool = False) -> jnp.ndarray:
     """q: (B, Hq, Dh); k_pool/v_pool: (N, Hkv, bs, Dh); pos_pool: (N, bs);
     block_tables: (B, nb) int32 (-1 = unmapped); fill: (B,) int32.
-    Returns out (B, Hq, Dh)."""
+    Returns out (B, Hq, Dh).
+
+    ``k_scale``/``v_scale`` (N, Hkv) float32 switch on the dequantizing
+    path for int8/fp8 pools: each page's scale rides the same clamped
+    scalar-prefetch block table as the page itself, lands next to the K/V
+    tile, and the codes dequantize in-register inside the softmax update —
+    the quantized pool never touches HBM in fp width.  Oracle:
+    `kernels.ref.paged_decode_quant_ref`."""
     B, Hq, Dh = q.shape
     N, Hkv, bs, _ = k_pool.shape
     nb = block_tables.shape[1]
     G = Hq // Hkv
+    quantized = k_scale is not None
     qf = q.reshape(B, Hkv, G, Dh)
     # live pages per row: everything past ceil(fill / bs) is unwritten
     # head-room whose slots the fill mask rejects anyway — skip it wholesale
@@ -120,16 +148,27 @@ def paged_flash_decode(q: jnp.ndarray, k_pool: jnp.ndarray,
         jc = jnp.maximum(jnp.minimum(j, npg[b] - 1), 0)
         return (jnp.maximum(bt[b, jc], 0), 0)
 
+    def scale_map(b, h, j, bt, fl, npg):
+        jc = jnp.maximum(jnp.minimum(j, npg[b] - 1), 0)
+        return (jnp.maximum(bt[b, jc], 0), h)
+
+    in_specs = [
+        pl.BlockSpec((1, 1, G, Dh),
+                     lambda b, h, j, bt, fl, npg: (b, h, 0, 0)),
+        pl.BlockSpec((1, 1, bs, Dh), k_map),
+        pl.BlockSpec((1, 1, bs, Dh), k_map),
+        pl.BlockSpec((1, bs), pos_map),
+    ]
+    operands = [block_tables, fill, num_pages, qf, k_pool, v_pool, pos_pool]
+    if quantized:
+        in_specs += [pl.BlockSpec((1, 1), scale_map),
+                     pl.BlockSpec((1, 1), scale_map)]
+        operands += [k_scale.astype(jnp.float32),
+                     v_scale.astype(jnp.float32)]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
         grid=(B, Hkv, nb),
-        in_specs=[
-            pl.BlockSpec((1, 1, G, Dh),
-                         lambda b, h, j, bt, fl, npg: (b, h, 0, 0)),
-            pl.BlockSpec((1, 1, bs, Dh), k_map),
-            pl.BlockSpec((1, 1, bs, Dh), k_map),
-            pl.BlockSpec((1, bs), pos_map),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, G, Dh),
                                lambda b, h, j, bt, fl, npg: (b, h, 0, 0)),
         scratch_shapes=[
@@ -139,9 +178,10 @@ def paged_flash_decode(q: jnp.ndarray, k_pool: jnp.ndarray,
         ],
     )
     out = pl.pallas_call(
-        functools.partial(_kernel, scale=1.0 / (Dh ** 0.5), bs=bs, nb=nb),
+        functools.partial(_kernel, scale=1.0 / (Dh ** 0.5), bs=bs, nb=nb,
+                          quantized=quantized),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, Hkv, G, Dh), q.dtype),
         interpret=interpret,
-    )(block_tables, fill, num_pages, qf, k_pool, v_pool, pos_pool)
+    )(*operands)
     return out.reshape(B, Hq, Dh)

@@ -50,6 +50,17 @@ def paged_decode_ref(q, k_pool, v_pool, pos_pool, block_tables, fill):
     return out
 
 
+def paged_decode_quant_ref(q, k_pool, v_pool, k_scale, v_scale, pos_pool,
+                           block_tables, fill):
+    """Oracle for the dequantizing kernels.paged_decode path: per-(page,
+    kv-head) scales (N, Hkv) expand over each page tile, the int8/fp8 pools
+    dequantize to float32, then the plain paged oracle runs — exactly the
+    in-register dequant the kernel performs, in gather form."""
+    kf = k_pool.astype(jnp.float32) * k_scale[:, :, None, None]
+    vf = v_pool.astype(jnp.float32) * v_scale[:, :, None, None]
+    return paged_decode_ref(q, kf, vf, pos_pool, block_tables, fill)
+
+
 def flash_attention_ref(q, k, v, q_positions, kv_positions, causal=True):
     """Oracle for kernels.flash_attention_fwd.  (B,S,H,D) layouts."""
     B, Sq, Hq, Dh = q.shape

@@ -35,11 +35,27 @@ Device-side invariants (DESIGN.md §Paged cache & prefix sharing):
   paged decode is token-identical to the contiguous path (the equivalence
   tests enforce this; the Pallas `kernels/paged_decode.py` gather kernel is
   the TPU fast path with its own allclose oracle).
+* **Quantized storage (``quant="int8"|"fp8"``).**  The pool optionally
+  holds K/V quantized with one float32 scale per (page, kv head) —
+  ``k_scale``/``v_scale`` (N, Hkv) — cutting pool bytes per resident token
+  ~2x (int8 vs bf16) to ~4x (int8 vs f32).  Writes quantize
+  (`write_prompt`: fresh per-page amax scale; `paged_append`: the page
+  scale grows monotonically and the resident page requantizes under the
+  new scale — an exact identity when the scale is unchanged), reads
+  dequantize (`materialize` returns float32; the Pallas kernel dequantizes
+  in-register from the prefetched scales).  Quantized decode is a
+  *different sampler policy* than the dense cache: the engine records its
+  log-probs as ``logp_sparse`` and the trainer's dense rescore supplies
+  ``pi_old``, so Sparse-RL's xi/rejection/reweighting machinery absorbs
+  the quantization mismatch unchanged (DESIGN.md §Quantized paged pool).
+  ``quant="none"`` keeps every code path — and every bit — of the fp pool.
 
 Host-side, `BlockAllocator` (free list + refcounts, double-free checked)
 and `PrefixCache` (prompt-hash -> pinned page chain + last-token logits,
 LRU-evicted under pool pressure) implement the sharing policy; the
 continuous-batching engine drives both (`rollout/continuous.py`).
+Quantization is invisible to the host side: pages, refcounts and prefix
+entries track *page identities*, never their byte contents.
 """
 from __future__ import annotations
 
@@ -56,18 +72,86 @@ from repro.kvcache.cache import POS_EMPTY
 
 
 # ---------------------------------------------------------------------------
+# Quantized storage: per-(page, kv-head) symmetric scales
+# ---------------------------------------------------------------------------
+# quant mode -> (pool dtype, qmax: the largest magnitude the quantized code
+# can represent, so scale = amax / qmax maps the page's amax onto it)
+_QUANT_SPECS = {
+    "int8": (jnp.int8, 127.0),
+    "fp8": (jnp.float8_e4m3fn, 448.0),
+}
+QUANT_MODES = ("none",) + tuple(_QUANT_SPECS)
+
+
+def quant_spec(quant: str):
+    """(pool dtype, qmax) for a quant mode; raises on unknown modes."""
+    if quant not in _QUANT_SPECS:
+        raise ValueError(f"unknown quant mode {quant!r} "
+                         f"(choose from {QUANT_MODES})")
+    return _QUANT_SPECS[quant]
+
+
+def page_scale(x: jnp.ndarray, quant: str) -> jnp.ndarray:
+    """Symmetric per-page scale: amax over the trailing (slots, Dh) axes
+    of ``x`` (..., bs, Dh) divided by qmax -> (...) float32.  An all-zero
+    page gets scale 0 and round-trips to exact zeros."""
+    _, qmax = quant_spec(quant)
+    return jnp.max(jnp.abs(x.astype(jnp.float32)), axis=(-2, -1)) / qmax
+
+
+def quantize_kv(x: jnp.ndarray, scale: jnp.ndarray, quant: str
+                ) -> jnp.ndarray:
+    """Quantize fp values under a given scale (``scale`` broadcasts against
+    ``x``).  int8 rounds-to-nearest and clips; fp8 casts (values are within
+    +-qmax by construction of the scale)."""
+    qdtype, qmax = quant_spec(quant)
+    safe = jnp.where(scale > 0.0, scale, 1.0)
+    y = x.astype(jnp.float32) / safe
+    if quant == "int8":
+        y = jnp.clip(jnp.round(y), -qmax, qmax)
+    return y.astype(qdtype)
+
+
+def dequantize_kv(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    """Dequantize to float32 (``scale`` broadcasts against ``q``)."""
+    return q.astype(jnp.float32) * scale
+
+
+def _rescale_page(q_page: jnp.ndarray, old_scale: jnp.ndarray,
+                  new_scale: jnp.ndarray, quant: str) -> jnp.ndarray:
+    """Requantize a resident page under a grown (>= old) scale.
+
+    ``factor = old/new <= 1`` shrinks the stored codes in fp32; when the
+    scale did not grow (factor == 1) this is an exact identity — int8:
+    round of ``int * 1.0``; fp8: every fp8 value round-trips f32 exactly —
+    so unchanged pages stay bit-identical append after append."""
+    qdtype, qmax = quant_spec(quant)
+    safe = jnp.where(new_scale > 0.0, new_scale, 1.0)
+    factor = jnp.where(new_scale > 0.0, old_scale / safe, 1.0)
+    x = q_page.astype(jnp.float32) * factor[..., None, None]
+    if quant == "int8":
+        x = jnp.clip(jnp.round(x), -qmax, qmax)
+    return x.astype(qdtype)
+
+
+# ---------------------------------------------------------------------------
 # Device side: the paged cache pytree + pure functions on it
 # ---------------------------------------------------------------------------
 @jax.tree_util.register_pytree_node_class
 @dataclass(frozen=True)
 class PagedKVCache:
     """One layer's paged cache (callers may stack a leading layer dim on
-    every array leaf; ``seq_len`` is static aux data and survives stacking).
+    every array leaf; ``seq_len``/``quant`` are static aux data and survive
+    stacking).
 
     ``seq_len`` is the contiguous-equivalent slot count S the row geometry
     was sized for (``rollout_slots``): `materialize` slices the gathered
     page chain to exactly S so attention sees the same shape as the
     contiguous backend (the token-identity requirement).
+
+    ``quant`` selects the pool storage: ``"none"`` (fp pools, scales absent
+    as ``None`` — the historical layout, bit-for-bit) or ``"int8"``/
+    ``"fp8"`` (quantized pools + per-(page, head) float32 scales).
     """
 
     k_pool: jnp.ndarray       # (N, Hkv, bs, Dh)
@@ -75,15 +159,19 @@ class PagedKVCache:
     pos_pool: jnp.ndarray     # (N, bs) int32
     block_tables: jnp.ndarray  # (B, nb) int32, -1 = unmapped
     fill: jnp.ndarray         # (B,) int32
+    k_scale: Optional[jnp.ndarray] = None   # (N, Hkv) f32, quantized only
+    v_scale: Optional[jnp.ndarray] = None   # (N, Hkv) f32, quantized only
     seq_len: int = dataclasses.field(metadata={"static": True}, default=0)
+    quant: str = dataclasses.field(metadata={"static": True}, default="none")
 
     def tree_flatten(self):
         return ((self.k_pool, self.v_pool, self.pos_pool,
-                 self.block_tables, self.fill), self.seq_len)
+                 self.block_tables, self.fill, self.k_scale, self.v_scale),
+                (self.seq_len, self.quant))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        return cls(*children, seq_len=aux)
+        return cls(*children, seq_len=aux[0], quant=aux[1])
 
     @property
     def block_size(self) -> int:
@@ -103,15 +191,29 @@ GARBAGE_BLOCK = 0
 
 def init_paged(batch: int, kv_heads: int, num_blocks: int, block_size: int,
                head_dim: int, blocks_per_row: int, seq_len: int,
-               dtype=jnp.bfloat16) -> PagedKVCache:
-    """All-empty pool: no pages mapped, nothing written."""
+               dtype=jnp.bfloat16, quant: str = "none") -> PagedKVCache:
+    """All-empty pool: no pages mapped, nothing written.  ``quant`` other
+    than "none" stores the pools in the quantized dtype (``dtype`` then only
+    names the fp dtype quantization is judged against) plus zeroed
+    per-(page, head) scales — a zero scale dequantizes unwritten garbage
+    pages to exact zeros."""
+    pool_dtype, k_scale, v_scale = dtype, None, None
+    if quant != "none":
+        pool_dtype = quant_spec(quant)[0]
+        k_scale = jnp.zeros((num_blocks, kv_heads), jnp.float32)
+        v_scale = jnp.zeros((num_blocks, kv_heads), jnp.float32)
     return PagedKVCache(
-        k_pool=jnp.zeros((num_blocks, kv_heads, block_size, head_dim), dtype),
-        v_pool=jnp.zeros((num_blocks, kv_heads, block_size, head_dim), dtype),
+        k_pool=jnp.zeros((num_blocks, kv_heads, block_size, head_dim),
+                         pool_dtype),
+        v_pool=jnp.zeros((num_blocks, kv_heads, block_size, head_dim),
+                         pool_dtype),
         pos_pool=jnp.full((num_blocks, block_size), POS_EMPTY, jnp.int32),
         block_tables=jnp.full((batch, blocks_per_row), -1, jnp.int32),
         fill=jnp.zeros((batch,), jnp.int32),
+        k_scale=k_scale,
+        v_scale=v_scale,
         seq_len=seq_len,
+        quant=quant,
     )
 
 
@@ -124,6 +226,12 @@ def paged_append(cache: PagedKVCache, k_new: jnp.ndarray, v_new: jnp.ndarray,
     clamp to the garbage page; their junk is never attended because nothing
     maps page 0.  The allocator guarantees the addressed page of an *active*
     row is exclusively owned, so no cross-row write conflict exists.
+
+    Quantized pools: the page scale grows to cover the incoming token
+    (``new_scale = max(old_scale, amax_token / qmax)``) and the resident
+    page requantizes under it — exactly a no-op when the scale is unchanged
+    (see `_rescale_page`), so earlier tokens only lose precision when a
+    genuinely larger-magnitude token arrives on their page.
     """
     B, Hkv, _ = k_new.shape
     bs = cache.block_size
@@ -136,12 +244,43 @@ def paged_append(cache: PagedKVCache, k_new: jnp.ndarray, v_new: jnp.ndarray,
     bi = blk[:, None]
     hi = jnp.arange(Hkv)[None, :]
     oi = off[:, None]
+    pos_pool = cache.pos_pool.at[blk, off].set(new_pos.astype(jnp.int32))
+    fill = jnp.minimum(cache.fill + 1, cap)
+    if cache.quant == "none":
+        return dataclasses.replace(
+            cache,
+            k_pool=cache.k_pool.at[bi, hi, oi].set(
+                k_new.astype(cache.k_pool.dtype)),
+            v_pool=cache.v_pool.at[bi, hi, oi].set(
+                v_new.astype(cache.v_pool.dtype)),
+            pos_pool=pos_pool,
+            fill=fill,
+        )
+    _, qmax = quant_spec(cache.quant)
+    k32 = k_new.astype(jnp.float32)
+    v32 = v_new.astype(jnp.float32)
+    old_sk, old_sv = cache.k_scale[blk], cache.v_scale[blk]      # (B, Hkv)
+    new_sk = jnp.maximum(old_sk, jnp.max(jnp.abs(k32), axis=-1) / qmax)
+    new_sv = jnp.maximum(old_sv, jnp.max(jnp.abs(v32), axis=-1) / qmax)
+    # gather each row's write page, requantize it under the grown scale,
+    # insert the new token, scatter it back (exclusive ownership makes the
+    # row-wise gather/scatter race-free; garbage-clamped rows all hit page
+    # 0, where any write order is fine — nothing ever attends it)
+    pk = _rescale_page(cache.k_pool[blk], old_sk, new_sk, cache.quant)
+    pv = _rescale_page(cache.v_pool[blk], old_sv, new_sv, cache.quant)
+    ri = jnp.arange(B)[:, None]
+    pk = pk.at[ri, hi, oi].set(quantize_kv(k32, new_sk[..., None],
+                                           cache.quant))
+    pv = pv.at[ri, hi, oi].set(quantize_kv(v32, new_sv[..., None],
+                                           cache.quant))
     return dataclasses.replace(
         cache,
-        k_pool=cache.k_pool.at[bi, hi, oi].set(k_new.astype(cache.k_pool.dtype)),
-        v_pool=cache.v_pool.at[bi, hi, oi].set(v_new.astype(cache.v_pool.dtype)),
-        pos_pool=cache.pos_pool.at[blk, off].set(new_pos.astype(jnp.int32)),
-        fill=jnp.minimum(cache.fill + 1, cap),
+        k_pool=cache.k_pool.at[blk].set(pk),
+        v_pool=cache.v_pool.at[blk].set(pv),
+        k_scale=cache.k_scale.at[blk].set(new_sk),
+        v_scale=cache.v_scale.at[blk].set(new_sv),
+        pos_pool=pos_pool,
+        fill=fill,
     )
 
 
@@ -154,19 +293,36 @@ def materialize(cache: PagedKVCache
     token stream: written slots carry the pooled values, everything beyond
     ``fill`` is zero K/V with POS_EMPTY (so the downstream attention math is
     identical, not merely close).
+
+    Quantized pools dequantize here (per-page scales expand over the page
+    tile) and return float32 K/V; a quantized cache missing its scales — or
+    a raw int8 pool claiming ``quant="none"`` — raises instead of silently
+    reading quantized bytes as floats.
     """
     B, nb = cache.block_tables.shape
     _, Hkv, bs, Dh = cache.k_pool.shape
     S = cache.seq_len
     assert 0 < S <= nb * bs, (S, nb, bs)
+    k_pool, v_pool = cache.k_pool, cache.v_pool
+    if cache.quant != "none":
+        if cache.k_scale is None or cache.v_scale is None:
+            raise ValueError(
+                f"quant={cache.quant!r} paged cache has no k_scale/v_scale "
+                f"— build it with init_paged(..., quant=...)")
+        k_pool = dequantize_kv(k_pool, cache.k_scale[:, :, None, None])
+        v_pool = dequantize_kv(v_pool, cache.v_scale[:, :, None, None])
+    elif k_pool.dtype == jnp.int8:
+        raise ValueError(
+            "paged cache holds an int8 pool but quant='none' — cannot read "
+            "quantized bytes as floats (set quant='int8' with scales)")
     bt = jnp.maximum(cache.block_tables, GARBAGE_BLOCK)          # (B, nb)
     def gather(pool):                                            # (B,nb,Hkv,bs,Dh)
         g = pool[bt]
         g = jnp.moveaxis(g, 2, 1)                                # (B,Hkv,nb,bs,..)
         return g.reshape((B, Hkv, nb * bs) + g.shape[4:])[:, :, :S]
     written = jnp.arange(S)[None, :] < cache.fill[:, None]       # (B, S)
-    k = jnp.where(written[:, None, :, None], gather(cache.k_pool), 0)
-    v = jnp.where(written[:, None, :, None], gather(cache.v_pool), 0)
+    k = jnp.where(written[:, None, :, None], gather(k_pool), 0)
+    v = jnp.where(written[:, None, :, None], gather(v_pool), 0)
     pos = cache.pos_pool[bt].reshape(B, nb * bs)[:, :S]
     pos = jnp.where(written, pos, POS_EMPTY)
     pos = jnp.broadcast_to(pos[:, None, :], (B, Hkv, S))
@@ -178,9 +334,11 @@ def paged_attend(q: jnp.ndarray, cache: PagedKVCache) -> jnp.ndarray:
 
     q: (B, Hq, Dh) roped single-token queries -> out (B, Hq, Dh).  Gathers
     the page chains to the contiguous layout and applies the exact attention
-    math of `kvcache.attend` — the token-identity anchor.  The streaming
-    Pallas kernel (`kernels/paged_decode.py`) is the TPU path that avoids
-    this materialization entirely.
+    math of `kvcache.attend` — the token-identity anchor.  Quantized pools
+    dequantize inside `materialize` (so this path never reads raw int8/fp8
+    bytes as floats).  The streaming Pallas kernel
+    (`kernels/paged_decode.py`) is the TPU path that avoids this
+    materialization entirely and dequantizes in-register.
     """
     k, v, pos = materialize(cache)
     out, _ = attend_arrays(q, k, v, pos)
@@ -226,9 +384,29 @@ def write_prompt(cache: PagedKVCache, k_prompt: jnp.ndarray,
             return jnp.moveaxis(x.reshape(Hkv, npb, bs, Dh), 1, 0)
         return x.reshape(npb, bs)
 
-    kb = paginate(k_prompt.astype(cache.k_pool.dtype), 0)
-    vb = paginate(v_prompt.astype(cache.v_pool.dtype), 0)
     pb = paginate(pos_prompt.astype(jnp.int32), POS_EMPTY)
+    k_scale, v_scale = cache.k_scale, cache.v_scale
+    if cache.quant == "none":
+        kb = paginate(k_prompt.astype(cache.k_pool.dtype), 0)
+        vb = paginate(v_prompt.astype(cache.v_pool.dtype), 0)
+    else:
+        # quantize page-at-a-time: each freshly written page gets its own
+        # amax scale (the pad region is zero-filled, so it never inflates
+        # the scale); the duplicated tail copies the tail page's scale too
+        kb32 = paginate(k_prompt.astype(jnp.float32), 0)
+        vb32 = paginate(v_prompt.astype(jnp.float32), 0)
+        ks = page_scale(kb32, cache.quant)                       # (npb, Hkv)
+        vs = page_scale(vb32, cache.quant)
+        kb = quantize_kv(kb32, ks[..., None, None], cache.quant)
+        vb = quantize_kv(vb32, vs[..., None, None], cache.quant)
+        k_scale = k_scale.at[written].set(ks)
+        v_scale = v_scale.at[written].set(vs)
+        if skip_pages:
+            k_scale = k_scale.at[blocks[:skip_pages]].set(0.0)
+            v_scale = v_scale.at[blocks[:skip_pages]].set(0.0)
+        if duplicate_tail:
+            k_scale = k_scale.at[tail_dst].set(ks[-1])
+            v_scale = v_scale.at[tail_dst].set(vs[-1])
     k_pool = cache.k_pool.at[written].set(kb)
     v_pool = cache.v_pool.at[written].set(vb)
     pos_pool = cache.pos_pool.at[written].set(pb)
@@ -239,14 +417,26 @@ def write_prompt(cache: PagedKVCache, k_prompt: jnp.ndarray,
         v_pool = v_pool.at[tail_dst].set(vb[-1])
         pos_pool = pos_pool.at[tail_dst].set(pb[-1])
     return dataclasses.replace(cache, k_pool=k_pool, v_pool=v_pool,
-                               pos_pool=pos_pool)
+                               pos_pool=pos_pool, k_scale=k_scale,
+                               v_scale=v_scale)
 
 
 def copy_block(cache: PagedKVCache, src: jnp.ndarray, dst: jnp.ndarray
                ) -> PagedKVCache:
     """Copy one page ``src`` -> ``dst`` (the admission-time copy-on-write of
     a shared partial tail page).  Works on stacked caches too: the page axis
-    is indexed from the right, so a leading layer dim copies every layer."""
+    is indexed from the right, so a leading layer dim copies every layer.
+    Quantized pools copy the page's scales along with its codes — the pair
+    is the page's value; copying one without the other would silently
+    rescale the copied tokens."""
+    extra = {}
+    if cache.k_scale is not None:
+        extra = dict(
+            k_scale=cache.k_scale.at[..., dst, :].set(
+                cache.k_scale[..., src, :]),
+            v_scale=cache.v_scale.at[..., dst, :].set(
+                cache.v_scale[..., src, :]),
+        )
     return dataclasses.replace(
         cache,
         k_pool=cache.k_pool.at[..., dst, :, :, :].set(
@@ -255,6 +445,7 @@ def copy_block(cache: PagedKVCache, src: jnp.ndarray, dst: jnp.ndarray
             cache.v_pool[..., src, :, :, :]),
         pos_pool=cache.pos_pool.at[..., dst, :].set(
             cache.pos_pool[..., src, :]),
+        **extra,
     )
 
 

@@ -125,6 +125,11 @@ def main(argv=None):
                          "(DESIGN.md §Paged cache & prefix sharing)")
     ap.add_argument("--block-size", type=int, default=16,
                     help="paged backend: tokens per pool page")
+    ap.add_argument("--kv-quant", default="none",
+                    choices=["none", "int8", "fp8"],
+                    help="paged backend: quantized KV pool storage with "
+                         "per-(page, kv-head) scales (DESIGN.md "
+                         "§Quantized paged pool)")
     ap.add_argument("--group-size", type=int, default=1,
                     help="repeat each prompt G times (GRPO group sampling; "
                          "total requests = num-requests * G)")
@@ -201,7 +206,8 @@ def main(argv=None):
             prompt_len=args.prompt_len, max_new_tokens=args.max_new,
             eos_id=TOKENIZER.eos_id, decode_chunk=args.decode_chunk,
             seed=args.seed, cache_backend=args.cache_backend,
-            block_size=args.block_size, prefill_chunk=args.prefill_chunk,
+            block_size=args.block_size, kv_quant=args.kv_quant,
+            prefill_chunk=args.prefill_chunk,
             overlap_harvest=args.overlap_harvest)
         if args.warmup:
             eng.run(reqs)
@@ -233,6 +239,11 @@ def main(argv=None):
                   f"{st['prefills']:.0f} prefills for "
                   f"{st['admissions']:.0f} admissions, hit rate "
                   f"{eng.prefix_hit_rate:.0%}{extra}")
+            ps = eng.kv_pool_stats()
+            print(f"[continuous] kv pool ({args.kv_quant}): "
+                  f"{ps['kv_pool_bytes_per_layer'] / 2**20:.2f} MiB/layer, "
+                  f"{ps['kv_bytes_per_token']:.1f} B/token, "
+                  f"{ps['kv_capacity_ratio']:.2f}x fp capacity")
         results["continuous"] = completions
     if args.engine in ("lockstep", "both"):
         srv = LockstepServer(

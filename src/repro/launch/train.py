@@ -41,6 +41,13 @@ def main(argv=None):
                     choices=["contiguous", "paged"],
                     help="continuous backend only: paged = prompt pages "
                          "prefilled once per group, refcount-shared")
+    ap.add_argument("--kv-quant", default="none",
+                    choices=["none", "int8", "fp8"],
+                    help="paged backend only: quantized KV pool storage; "
+                         "the quantized engine is the behavior policy "
+                         "(logp_sparse) and the dense rescore supplies "
+                         "pi_old, so the sparse-RL correction absorbs the "
+                         "mismatch (DESIGN.md §Quantized paged pool)")
     ap.add_argument("--decode-batch", type=int, default=0,
                     help="continuous backend: engine row slots "
                          "(0 = half the phase's requests)")
@@ -118,6 +125,7 @@ def main(argv=None):
                           prompt_len=24, max_new_tokens=scfg.max_new_tokens,
                           rollout_backend=args.rollout_backend,
                           cache_backend=args.cache_backend,
+                          kv_quant=args.kv_quant,
                           decode_batch=args.decode_batch,
                           decode_chunk=args.decode_chunk,
                           prefill_chunk=args.prefill_chunk,

@@ -260,6 +260,15 @@ class ContinuousEngine:
     ``stats["prefills"]`` / ``stats["prefix_hits"]`` /
     ``stats["blocks_in_use_peak"]`` and :attr:`prefix_hit_rate` report the
     sharing behaviour.
+
+    ``kv_quant="int8"|"fp8"`` (pool backend only) stores the page pool
+    quantized with per-(page, head) scales — ~2-4x effective KV capacity
+    per HBM byte (`kv_pool_stats` / ``end_phase`` report the bytes).  The
+    quantized cache is a *different sampler policy*: recorded per-token
+    log-probs (``logp_sparse`` downstream) come from quantized attention,
+    and the trainer's dense rescore supplies pi_old, so Sparse-RL's
+    xi/rejection/reweighting absorbs the mismatch (DESIGN.md §Quantized
+    paged pool).
     """
 
     def __init__(self, params, cfg: ModelConfig, mfns: ModelFns,
@@ -269,11 +278,14 @@ class ContinuousEngine:
                  cache_backend: str = "contiguous", block_size: int = 16,
                  pool_blocks: Optional[int] = None, prefix_entries: int = 32,
                  prefill_chunk: Optional[int] = None,
-                 overlap_harvest: bool = False):
+                 overlap_harvest: bool = False, kv_quant: str = "none"):
         if decode_chunk < 1:
             raise ValueError("decode_chunk must be >= 1")
         if cache_backend not in ("contiguous", "paged"):
             raise ValueError(f"unknown cache_backend {cache_backend!r}")
+        if kv_quant not in ("none", "int8", "fp8"):
+            raise ValueError(f"unknown kv_quant {kv_quant!r} "
+                             f"(choose none | int8 | fp8)")
         if prefill_chunk is None:
             # enough budget to keep admission latency low (a couple of
             # full-width prompts per decode chunk) without ever letting one
@@ -313,6 +325,17 @@ class ContinuousEngine:
         self._pool_paged = (self._share_prefix
                             and scfg.compression == "none"
                             and cfg.family in (DENSE, MOE, VLM))
+        # quantized KV storage lives in the block pool: the contiguous
+        # backend (and the splice-sharing families) has no per-page scale
+        # home, so quantization without the pool is a loud config error,
+        # not a silent fp fallback
+        self.kv_quant = kv_quant
+        if kv_quant != "none" and not self._pool_paged:
+            raise ValueError(
+                f"kv_quant={kv_quant!r} requires the paged pool backend "
+                f"(cache_backend='paged', compression='none', dense family)"
+                f" — got cache_backend={cache_backend!r}, "
+                f"compression={scfg.compression!r}, family={cfg.family!r}")
         self.allocator: Optional[BlockAllocator] = None
         self.prefix: Optional[PrefixCache] = None
         if self._pool_paged:
@@ -493,7 +516,8 @@ class ContinuousEngine:
             one = init_paged(
                 self.batch_size, self.cfg.num_kv_heads, self.pool_blocks,
                 self.block_size, self.cfg.head_dim, self.blocks_per_row,
-                self.slots, dtype_of(self.cfg.compute_dtype))
+                self.slots, dtype_of(self.cfg.compute_dtype),
+                quant=self.kv_quant)
             caches = jax.tree.map(
                 lambda x: jnp.stack([x] * self.cfg.num_layers), one)
             return DecodeState(
@@ -778,6 +802,7 @@ class ContinuousEngine:
             stats["pool_blocks"] = self.pool_blocks
             stats["pool_peak_frac"] = (self.stats["blocks_in_use_peak"]
                                        / max(self.pool_blocks, 1))
+            stats.update(self.kv_pool_stats())
         if self._phase_waits:
             w = np.asarray(self._phase_waits)
             stats["admit_wait_p50"] = float(np.percentile(w, 50))
@@ -795,6 +820,26 @@ class ContinuousEngine:
         (G-1)/G — the group-sampling win the paged backend exists for."""
         adm = self.stats["admissions"]
         return self.stats["prefix_hits"] / adm if adm else 0.0
+
+    def kv_pool_stats(self) -> Dict[str, float]:
+        """Effective pool size under the configured ``kv_quant``:
+        K/V payload bytes per layer (codes + per-page scales), bytes per
+        resident pool token, and the capacity ratio vs an fp pool of the
+        same block count (>= 1.8 for int8 is the quantization acceptance
+        bar — the bytes-per-token attack on the rollout memory wall)."""
+        assert self._pool_paged
+        caches = self.state.caches          # leading stacked layer dim
+        L = self.cfg.num_layers
+        payload = (caches.k_pool.nbytes + caches.v_pool.nbytes) / L
+        if caches.k_scale is not None:
+            payload += (caches.k_scale.nbytes + caches.v_scale.nbytes) / L
+        tokens = self.pool_blocks * self.block_size
+        fp_payload = (2 * self.pool_blocks * self.cfg.num_kv_heads
+                      * self.block_size * self.cfg.head_dim
+                      * jnp.dtype(dtype_of(self.cfg.compute_dtype)).itemsize)
+        return dict(kv_pool_bytes_per_layer=float(payload),
+                    kv_bytes_per_token=float(payload / tokens),
+                    kv_capacity_ratio=float(fp_payload / payload))
 
     # ------------------------------------------------------------------
     def _alloc_blocks(self, n: int) -> List[int]:

@@ -84,6 +84,14 @@ class TrainerOptions:
                                    # half the phase's requests, >= G)
     decode_chunk: int = 4          # continuous: steps between host harvests
     block_size: int = 16           # paged pool: tokens per page
+    kv_quant: str = "none"         # paged pool storage: "none"|"int8"|"fp8"
+                                   # — quantized rollouts are a corrected
+                                   # sampler policy: logp_sparse records the
+                                   # quantized-cache log-probs, the dense
+                                   # rescore supplies pi_old, and the
+                                   # existing xi/rejection machinery absorbs
+                                   # the mismatch
+                                   # (DESIGN.md §Quantized paged pool)
     prefill_chunk: Optional[int] = None  # continuous: prompt-token budget
                                    # per admission sweep (None = auto)
     overlap_harvest: bool = False  # continuous: async double-buffered
@@ -167,7 +175,8 @@ class Trainer:
                   decode_chunk=opts.decode_chunk, seed=self.tcfg.seed,
                   cache_backend=opts.cache_backend,
                   prefill_chunk=opts.prefill_chunk,
-                  overlap_harvest=opts.overlap_harvest)
+                  overlap_harvest=opts.overlap_harvest,
+                  kv_quant=opts.kv_quant)
         if opts.cache_backend == "paged":
             # pool sizing: every resident row's chain + one pinned prompt
             # chain per distinct prompt in the phase + COW/tail headroom
@@ -406,6 +415,8 @@ class Trainer:
         )
         for src, dst in (("pool_peak_frac", "rollout_pool_peak_frac"),
                          ("blocks_in_use_peak", "rollout_pool_peak_blocks"),
+                         ("kv_bytes_per_token", "rollout_kv_bytes_per_token"),
+                         ("kv_capacity_ratio", "rollout_kv_capacity_ratio"),
                          ("admit_wait_p50", "rollout_admit_wait_p50"),
                          ("admit_wait_p99", "rollout_admit_wait_p99"),
                          ("latency_p50", "rollout_latency_p50"),

@@ -32,10 +32,26 @@ def _arow(speedup=0.9, max_lag=1, nondegrading=True, **kw):
                 reward_nondegrading=nondegrading, **kw)
 
 
-def _full(speedups=(1.2, 1.2, 1.2), identical=True, async_rows=None):
+def _qrow(kv_quant="int8", speedup=0.9, capacity_ratio=3.9,
+          nondegrading=True, **kw):
+    """Quantized-pool cell: no identity bound, no lockstep floor (default
+    speedup < 1 encodes that), capacity_ratio >= 1.8 hard bound."""
+    return dict(kv_quant=kv_quant, group_size=4, speedup=speedup,
+                capacity_ratio=capacity_ratio,
+                reward_nondegrading=nondegrading, **kw)
+
+
+def _quant_rows():
+    return [_qrow("none", capacity_ratio=1.0), _qrow("int8"), _qrow("fp8")]
+
+
+def _full(speedups=(1.2, 1.2, 1.2), identical=True, async_rows=None,
+          quant_rows=None):
     s_cl, s_pp, s_rp = speedups
+    qr = quant_rows if quant_rows is not None else _quant_rows()
     serving = {"continuous_vs_lockstep_smoke": [_row(s_cl)],
-               "paged_prefix_smoke": [_row(s_pp)]}
+               "paged_prefix_smoke": [_row(s_pp)],
+               "paged_quant_smoke": qr}
     # the full-scale section rides along unchanged in CI (only the smoke
     # bench re-runs) but its hard bounds are still vetted
     rollout = {"rollout_phase_smoke": [_row(s_rp, identical=identical)],
@@ -43,7 +59,9 @@ def _full(speedups=(1.2, 1.2, 1.2), identical=True, async_rows=None):
                "rollout_async_smoke": async_rows if async_rows is not None
                else [_arow(max_lag=0, identical=True), _arow(max_lag=1)],
                "rollout_async": [_arow(max_lag=0, identical=True),
-                                 _arow(max_lag=1)]}
+                                 _arow(max_lag=1)],
+               "rollout_quant_smoke": qr,
+               "rollout_quant": _quant_rows()}
     return serving, rollout
 
 
@@ -93,12 +111,14 @@ def test_gate_matches_rows_by_key_not_order(tmp_path):
     fields, so a section shuffle cannot hide (or fake) a regression."""
     serving = {"continuous_vs_lockstep_smoke": [
         _row(2.0, policy="rkv", batch=4), _row(1.1, policy="none", batch=4)],
-        "paged_prefix_smoke": [_row(1.2)]}
+        "paged_prefix_smoke": [_row(1.2)],
+        "paged_quant_smoke": _quant_rows()}
     rollout = _full()[1]
     _write(tmp_path / "committed", serving, rollout)
     shuffled = {"continuous_vs_lockstep_smoke": [
         _row(1.1, policy="none", batch=4), _row(2.0, policy="rkv", batch=4)],
-        "paged_prefix_smoke": [_row(1.2)]}
+        "paged_prefix_smoke": [_row(1.2)],
+        "paged_quant_smoke": _quant_rows()}
     _write(tmp_path / "fresh", shuffled, rollout)
     assert bench_gate.gate(tmp_path / "committed", tmp_path / "fresh",
                            0.35) == []
@@ -120,19 +140,22 @@ def test_gate_ignores_key_fields_unknown_to_old_baselines(tmp_path):
     knows, so the regression check still pairs the rows instead of silently
     skipping them."""
     serving = {"continuous_vs_lockstep_smoke": [_row(1.2)],
-               "paged_prefix_smoke": [_row(1.2)]}
+               "paged_prefix_smoke": [_row(1.2)],
+               "paged_quant_smoke": _quant_rows()}
     async_rows = _full()[1]["rollout_async_smoke"]
     async_full = _full()[1]["rollout_async"]
+    quant = dict((k, _quant_rows()) for k in ("rollout_quant_smoke",
+                                              "rollout_quant"))
     old_rollout = {"rollout_phase_smoke": [_row(2.0)],       # no plen_dist
                    "rollout_phase": [_row(1.4)],
                    "rollout_async_smoke": async_rows,
-                   "rollout_async": async_full}
+                   "rollout_async": async_full, **quant}
     _write(tmp_path / "committed", serving, old_rollout)
     fresh_row = dict(_row(1.0), plen_dist="mixed")           # -50% regression
     new_rollout = {"rollout_phase_smoke": [fresh_row],
                    "rollout_phase": [dict(_row(1.4), plen_dist="mixed")],
                    "rollout_async_smoke": async_rows,
-                   "rollout_async": async_full}
+                   "rollout_async": async_full, **quant}
     _write(tmp_path / "fresh", serving, new_rollout)
     problems = bench_gate.gate(tmp_path / "committed", tmp_path / "fresh",
                                0.35)
@@ -142,7 +165,7 @@ def test_gate_ignores_key_fields_unknown_to_old_baselines(tmp_path):
                                         dict(_row(1.1), plen_dist="mixed")],
                 "rollout_phase": [dict(_row(1.4), plen_dist="mixed")],
                 "rollout_async_smoke": async_rows,
-                "rollout_async": async_full}
+                "rollout_async": async_full, **quant}
     _write(tmp_path / "committed2", serving, new_base)
     assert bench_gate.gate(tmp_path / "committed2", tmp_path / "fresh",
                            0.35) == []
@@ -191,6 +214,92 @@ def test_gate_old_baseline_without_async_rows_still_gates(tmp_path):
     _write(tmp_path / "fresh2", *_full())
     assert bench_gate.gate(tmp_path / "committed", tmp_path / "fresh2",
                            0.35) == []
+
+
+def test_gate_quant_capacity_floor_is_hard_bound(tmp_path):
+    """A quantized row below the 1.8x effective-capacity bound fails even
+    with no committed baseline — a quantization scheme that doesn't buy
+    capacity is pure policy mismatch for nothing."""
+    bad = [_qrow("none", capacity_ratio=1.0),
+           _qrow("int8", capacity_ratio=1.5), _qrow("fp8")]
+    _write(tmp_path / "fresh", *_full(quant_rows=bad))
+    problems = bench_gate.gate(tmp_path / "missing", tmp_path / "fresh",
+                               0.35)
+    assert any("effective-KV-capacity" in p for p in problems)
+    # the int8 row fails in BOTH files' quant sections, nothing else does
+    assert all("capacity" in p for p in problems)
+
+
+def test_gate_quant_none_row_exempt_from_capacity_floor(tmp_path):
+    """The kv_quant="none" sanity row reports capacity_ratio 1.0 by
+    construction (it IS the fp pool) — the floor only binds quantized
+    rows, and quant rows carry no lockstep speedup floor or identity
+    bound (default _qrow speedup is < 1.0, and it has no 'identical')."""
+    _write(tmp_path / "fresh", *_full())
+    assert bench_gate.gate(tmp_path / "missing", tmp_path / "fresh",
+                           0.35) == []
+
+
+def test_gate_quant_row_missing_capacity_field_flagged(tmp_path):
+    rows = [_qrow("none", capacity_ratio=1.0), _qrow("fp8")]
+    broken = dict(_qrow("int8"))
+    del broken["capacity_ratio"]
+    _write(tmp_path / "fresh", *_full(quant_rows=rows + [broken]))
+    problems = bench_gate.gate(tmp_path / "missing", tmp_path / "fresh",
+                               0.35)
+    assert any("no 'capacity_ratio'" in p for p in problems)
+
+
+def test_gate_quant_reward_degradation_is_hard_bound(tmp_path):
+    """Quantized rollouts that lose reward over the smoke horizon fail
+    regardless of history: the corrected-sampler-policy claim is exactly
+    that training stays stable under the quantization mismatch."""
+    bad = [_qrow("none", capacity_ratio=1.0),
+           _qrow("int8", nondegrading=False,
+                 reward_first_half=0.3, reward_second_half=0.05),
+           _qrow("fp8")]
+    _write(tmp_path / "fresh", *_full(quant_rows=bad))
+    problems = bench_gate.gate(tmp_path / "missing", tmp_path / "fresh",
+                               0.35)
+    assert any("reward degraded" in p for p in problems)
+
+
+def test_gate_old_baseline_without_quant_rows_still_gates(tmp_path):
+    """A committed baseline that predates the quant sections must not
+    disable gating: fresh quant rows still hit the hard bounds, and a
+    clean fresh run passes against the same old baseline."""
+    serving, rollout = _full()
+    old_serving = {k: v for k, v in serving.items()
+                   if not k.startswith("paged_quant")}
+    old_rollout = {k: v for k, v in rollout.items()
+                   if not k.startswith("rollout_quant")}
+    _write(tmp_path / "committed", old_serving, old_rollout)
+    bad = [_qrow("none", capacity_ratio=1.0),
+           _qrow("int8", capacity_ratio=1.2), _qrow("fp8")]
+    _write(tmp_path / "fresh", *_full(quant_rows=bad))
+    problems = bench_gate.gate(tmp_path / "committed", tmp_path / "fresh",
+                               0.35)
+    assert any("effective-KV-capacity" in p for p in problems)
+    _write(tmp_path / "fresh2", *_full())
+    assert bench_gate.gate(tmp_path / "committed", tmp_path / "fresh2",
+                           0.35) == []
+
+
+def test_gate_quant_speedup_tolerance_bands_once_baseline_exists(tmp_path):
+    """Quant rows tolerance-band their speedup against a baseline that has
+    quant rows (matched on (kv_quant, group_size))."""
+    _write(tmp_path / "committed",
+           *_full(quant_rows=[_qrow("none", capacity_ratio=1.0),
+                              _qrow("int8", speedup=1.0), _qrow("fp8")]))
+    _write(tmp_path / "fresh",
+           *_full(quant_rows=[_qrow("none", capacity_ratio=1.0),
+                              _qrow("int8", speedup=0.4), _qrow("fp8")]))
+    problems = bench_gate.gate(tmp_path / "committed", tmp_path / "fresh",
+                               0.35)
+    # the int8 collapse is flagged in both the serving and rollout sections
+    assert problems and all("regressed" in p for p in problems)
+    assert any("paged_quant" in p for p in problems)
+    assert any("rollout_quant" in p for p in problems)
 
 
 def test_gate_async_speedup_tolerance_bands_once_baseline_exists(tmp_path):

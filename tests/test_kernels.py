@@ -165,6 +165,153 @@ def test_ops_paged_decode_fallback():
     np.testing.assert_allclose(o_k, o_ref, **TOL32)
 
 
+def _mk_quant_pool(rng, N, Hkv, bs, Dh, quant):
+    """A random quantized pool + per-(page, head) scales: int8 draws raw
+    codes, fp8 casts normals (both exactly representable states a real
+    write would produce)."""
+    if quant == "int8":
+        pool = jnp.asarray(rng.integers(-127, 128, (N, Hkv, bs, Dh)),
+                           jnp.int8)
+    else:
+        pool = jnp.asarray(rng.normal(0, 8.0, (N, Hkv, bs, Dh)),
+                           jnp.float8_e4m3fn)
+    scale = jnp.asarray(rng.uniform(1e-3, 0.1, (N, Hkv)), jnp.float32)
+    return pool, scale
+
+
+@pytest.mark.parametrize("quant", ["int8", "fp8"])
+@pytest.mark.parametrize("bs,nb", [(8, 2), (16, 4)])
+def test_paged_decode_quant_sweep(quant, bs, nb):
+    """Dequantizing kernel path vs `paged_decode_quant_ref`: the scales ride
+    the same clamped block-table prefetch as the pages, so shared pages,
+    partial fills and unmapped (-1) tails must all dequantize identically.
+    Both paths do the same f32 math after dequant -> f32-tight tolerance."""
+    B, Hq, Hkv, Dh = 3, 4, 2, 16
+    N = B * nb + 2
+    rng = np.random.default_rng(bs * nb + 17)
+    q = _mk(rng, (B, Hq, Dh), jnp.float32)
+    k_pool, k_scale = _mk_quant_pool(rng, N, Hkv, bs, Dh, quant)
+    v_pool, v_scale = _mk_quant_pool(rng, N, Hkv, bs, Dh, quant)
+    pos_pool = jnp.asarray(rng.integers(-1, 99, (N, bs)), jnp.int32)
+    pos_pool = pos_pool.at[:, 0].set(0)
+    bt = np.asarray(rng.permutation(np.arange(1, N))[:B * nb],
+                    np.int32).reshape(B, nb)
+    bt[0, 0] = bt[1, 0]                    # rows 0/1 share a prompt page
+    bt[2, nb - 1] = -1                     # short row: unmapped tail
+    fill = jnp.asarray([nb * bs, nb * bs - bs // 2, (nb - 1) * bs],
+                       jnp.int32)
+    o = paged_flash_decode(q, k_pool, v_pool, pos_pool, jnp.asarray(bt),
+                           fill, k_scale, v_scale, interpret=True)
+    o_ref = ref.paged_decode_quant_ref(q, k_pool, v_pool, k_scale, v_scale,
+                                       pos_pool, jnp.asarray(bt), fill)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref), **TOL32)
+
+
+@pytest.mark.parametrize("quant", ["int8", "fp8"])
+def test_paged_decode_quant_ragged_fills(quant):
+    """Quant path under the fill-aware early exit: one live page, partial
+    pages, full chains, and an empty unmapped row (exact zeros) — the
+    clamped scale index map must skip exactly the pages the K/V maps skip."""
+    B, Hq, Hkv, Dh, bs, nb = 5, 4, 2, 16, 8, 4
+    N = B * nb + 1
+    rng = np.random.default_rng(bs + nb + 29)
+    q = _mk(rng, (B, Hq, Dh), jnp.float32)
+    k_pool, k_scale = _mk_quant_pool(rng, N, Hkv, bs, Dh, quant)
+    v_pool, v_scale = _mk_quant_pool(rng, N, Hkv, bs, Dh, quant)
+    pos_pool = jnp.asarray(rng.integers(0, 99, (N, bs)), jnp.int32)
+    bt = np.arange(1, B * nb + 1, dtype=np.int32).reshape(B, nb)
+    bt[4, :] = -1                          # empty row: nothing mapped
+    fill = jnp.asarray([bs, bs // 2, (nb - 1) * bs + 1, nb * bs, 0],
+                       jnp.int32)
+    o = paged_flash_decode(q, k_pool, v_pool, pos_pool, jnp.asarray(bt),
+                           fill, k_scale, v_scale, interpret=True)
+    o_ref = ref.paged_decode_quant_ref(q, k_pool, v_pool, k_scale, v_scale,
+                                       pos_pool, jnp.asarray(bt), fill)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref), **TOL32)
+    assert not np.asarray(o_ref[4]).any()
+    np.testing.assert_array_equal(np.asarray(o[4]), 0.0)
+
+
+@pytest.mark.parametrize("quant", ["int8", "fp8"])
+def test_paged_decode_quant_matches_paged_attend(quant):
+    """Kernel contract == production jnp quantized decode: a pool built the
+    way the engine builds it — `write_prompt` (partial tail page), COW tail
+    duplication via `copy_block`, then `paged_append` steps — must stream
+    through the dequantizing kernel exactly as `paged_attend` dequantizes
+    it via materialize."""
+    from repro.kvcache.paged import (
+        copy_block,
+        init_paged,
+        paged_append,
+        paged_attend,
+        write_prompt,
+    )
+    import dataclasses
+
+    B, Hkv, Dh, bs, nb, W = 2, 2, 16, 8, 3, 13    # 13 = full page + tail 5
+    rng = np.random.default_rng(7)
+    c = init_paged(B, Hkv, num_blocks=2 * nb + 2, block_size=bs,
+                   head_dim=Dh, blocks_per_row=nb, seq_len=nb * bs,
+                   quant=quant)
+    kp = jnp.asarray(rng.normal(size=(Hkv, W, Dh)), jnp.float32)
+    vp = jnp.asarray(rng.normal(size=(Hkv, W, Dh)), jnp.float32)
+    c = write_prompt(c, kp, vp, jnp.arange(W), blocks=jnp.asarray([1, 2]),
+                     tail_dst=jnp.asarray(3), duplicate_tail=True)
+    # row 0 owns the original tail, row 1 a COW copy of it (copy_block is
+    # the group-member admission path: codes AND scales must travel)
+    c = copy_block(c, jnp.asarray(3), jnp.asarray(4))
+    tables = jnp.asarray([[1, 2, 5], [1, 4, 6]], jnp.int32)
+    c = dataclasses.replace(c, block_tables=tables,
+                            fill=jnp.full((B,), W, jnp.int32))
+    for t in range(W, W + 7):                      # crosses into page 3
+        kx = jnp.asarray(rng.normal(size=(B, Hkv, Dh)), jnp.float32)
+        c = paged_append(c, kx, kx * 0.5, jnp.full((B,), t, jnp.int32))
+    q = jnp.asarray(rng.normal(size=(B, 4, Dh)), jnp.float32)
+    o_prod = paged_attend(q, c)
+    o_kern = paged_flash_decode(q, c.k_pool, c.v_pool, c.pos_pool,
+                                c.block_tables, c.fill, c.k_scale,
+                                c.v_scale, interpret=True)
+    np.testing.assert_allclose(np.asarray(o_prod), np.asarray(o_kern),
+                               **TOL32)
+
+
+def test_paged_decode_quant_none_is_bitwise_unchanged():
+    """Passing no scales must leave the fp kernel path untouched — same
+    operands, same specs, bitwise-identical output to the historical call."""
+    B, Hq, Hkv, Dh, bs, nb, N = 2, 4, 2, 16, 8, 2, 6
+    rng = np.random.default_rng(11)
+    q = _mk(rng, (B, Hq, Dh), jnp.float32)
+    kp = _mk(rng, (N, Hkv, bs, Dh), jnp.float32)
+    vp = _mk(rng, (N, Hkv, bs, Dh), jnp.float32)
+    posp = jnp.asarray(rng.integers(0, 20, (N, bs)), jnp.int32)
+    bt = jnp.asarray([[1, 2], [3, 4]], jnp.int32)
+    fill = jnp.asarray([12, 9], jnp.int32)
+    o_old = paged_flash_decode(q, kp, vp, posp, bt, fill, interpret=True)
+    o_new = paged_flash_decode(q, kp, vp, posp, bt, fill, None, None,
+                               interpret=True)
+    np.testing.assert_array_equal(np.asarray(o_old), np.asarray(o_new))
+
+
+def test_ops_paged_decode_quant_fallback():
+    """use_kernels(False) routes the quantized call to its dequant oracle;
+    kernel and oracle paths agree."""
+    B, Hq, Hkv, Dh, bs, nb, N = 2, 4, 2, 16, 8, 2, 6
+    rng = np.random.default_rng(13)
+    q = _mk(rng, (B, Hq, Dh), jnp.float32)
+    kp, ks = _mk_quant_pool(rng, N, Hkv, bs, Dh, "int8")
+    vp, vs = _mk_quant_pool(rng, N, Hkv, bs, Dh, "int8")
+    posp = jnp.asarray(rng.integers(0, 20, (N, bs)), jnp.int32)
+    bt = jnp.asarray([[1, 2], [3, 4]], jnp.int32)
+    fill = jnp.asarray([12, 9], jnp.int32)
+    try:
+        ops.use_kernels(False)
+        o_ref = ops.paged_flash_decode(q, kp, vp, posp, bt, fill, ks, vs)
+    finally:
+        ops.use_kernels(True)
+    o_k = ops.paged_flash_decode(q, kp, vp, posp, bt, fill, ks, vs)
+    np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_ref), **TOL32)
+
+
 @pytest.mark.parametrize("Sq,Sk,bq,bk,causal", [
     (16, 16, 8, 8, True),
     (24, 24, 8, 16, True),      # ragged vs blocks

@@ -188,7 +188,7 @@ def _group_requests(n_prompts, group_size, caps, seed=1):
 
 
 def _run_pair(arch, compression, *, group=2, n_prompts=2, caps=(4, 6, 5, 3),
-              max_new=6, chunk=1, seed=7, block_size=12):
+              max_new=6, chunk=1, seed=7, block_size=12, kv_quant="none"):
     cfg = get_config(arch).smoke()
     m = get_model(cfg)
     params = m.init_params(cfg, jax.random.PRNGKey(0))
@@ -199,7 +199,7 @@ def _run_pair(arch, compression, *, group=2, n_prompts=2, caps=(4, 6, 5, 3),
               eos_id=TOKENIZER.eos_id, decode_chunk=chunk, seed=seed)
     cont = ContinuousEngine(params, cfg, m, scfg, **kw).run(reqs)
     eng = ContinuousEngine(params, cfg, m, scfg, cache_backend="paged",
-                           block_size=block_size, **kw)
+                           block_size=block_size, kv_quant=kv_quant, **kw)
     paged = eng.run(reqs)
     return eng, cont, paged
 
@@ -447,3 +447,51 @@ def test_pool_bucketed_prefill_short_prompts_identical():
     for c, p in zip(cont, paged):
         np.testing.assert_array_equal(c.tokens, p.tokens)
         np.testing.assert_allclose(c.logps, p.logps, atol=0)
+
+
+# ---------------------------------------------------------------------------
+# Quantized pool: the host-side sharing machinery is storage-agnostic
+# (DESIGN.md §Quantized paged pool)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("kv_quant", ["int8", "fp8"])
+def test_quant_pool_prefix_hit_rate_and_phase_drain(kv_quant):
+    """G same-prompt rollouts against a quantized pool: one model prefill,
+    cold hit rate (G-1)/G, genuinely diverged group members, full drain —
+    exactly the fp-pool invariants.  The quantized entries share *codes +
+    scales* via the same pinned page chains, so the allocator/prefix
+    accounting must not notice the storage dtype."""
+    G = 4
+    eng, _, paged = _run_pair("qwen2.5-14b", "none", group=G, n_prompts=1,
+                              caps=(3, 6, 4, 5), kv_quant=kv_quant)
+    assert eng.kv_quant == kv_quant
+    assert eng.state.caches.k_scale is not None   # scales really resident
+    assert eng.stats["admissions"] == G
+    assert eng.stats["prefills"] == 1
+    assert eng.prefix_hit_rate == pytest.approx((G - 1) / G)
+    assert len({p.tokens.tobytes() for p in paged}) > 1
+    # drained: rows retired, only the prefix-cache pins remain
+    assert all(r is None for r in eng.rows)
+    assert eng.allocator.blocks_in_use == len(eng.prefix) * eng._npb
+    # end_phase's leak check passes and reports the shrunken pool
+    stats = eng.end_phase()
+    assert eng.allocator.blocks_in_use == 0
+    assert stats["kv_capacity_ratio"] >= (1.8 if kv_quant == "int8" else 1.0)
+    assert stats["kv_bytes_per_token"] > 0
+
+
+def test_quant_pool_end_phase_flags_leaks_and_double_free():
+    """The phase-end leak check stays armed under quantization: a page
+    still referenced after the prefix-cache clear raises, releasing it
+    clears the phase, and a second release of the same page is the
+    double-free the allocator refuses."""
+    eng, _, _ = _run_pair("qwen2.5-14b", "none", group=2, n_prompts=1,
+                          caps=(3, 5), kv_quant="int8")
+    [leak] = eng.allocator.alloc(1)
+    with pytest.raises(RuntimeError, match="leak"):
+        eng.end_phase()
+    assert eng.allocator.release(leak) is True
+    with pytest.raises(ValueError):
+        eng.allocator.release(leak)               # double free refused
+    stats = eng.end_phase()                       # now clean
+    assert eng.allocator.blocks_in_use == 0
+    assert stats["kv_capacity_ratio"] >= 1.8

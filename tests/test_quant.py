@@ -1,10 +1,28 @@
-"""int8 serving-weight quantization (§Perf C1 feature)."""
+"""Quantization batteries: int8 serving weights (§Perf C1) and the
+quantized paged KV pool (int8/fp8 storage with per-(page, kv-head) scales —
+DESIGN.md §Quantized paged pool)."""
+import dataclasses
+from dataclasses import replace
+
 import jax
 import jax.numpy as jnp
 import numpy as np
-from dataclasses import replace
+import pytest
 
 from repro.configs import SparseRLConfig, get_config
+from repro.kvcache.cache import POS_EMPTY
+from repro.kvcache.paged import (
+    GARBAGE_BLOCK,
+    QUANT_MODES,
+    dequantize_kv,
+    init_paged,
+    materialize,
+    page_scale,
+    paged_append,
+    quant_spec,
+    quantize_kv,
+    write_prompt,
+)
 from repro.models import get_model
 from repro.models.common import quantize_int8
 
@@ -67,3 +85,297 @@ def test_int8_decode_and_rollout():
                   max_new_tokens=6, eos_id=TOKENIZER.eos_id)
     lp = rescore(p8, cfg8, m8, ro)
     assert bool(jnp.isfinite(lp).all())
+
+
+# ---------------------------------------------------------------------------
+# Quantized paged KV pool: round-trip battery
+# ---------------------------------------------------------------------------
+def _roundtrip_bound(x: np.ndarray, scale: np.ndarray, quant: str
+                     ) -> np.ndarray:
+    """Worst-case |dequant(quant(x)) - x| per element; ``scale`` must
+    already broadcast against ``x``.
+
+    int8 rounds to nearest under a per-page scale: half an LSB.  fp8 e4m3
+    has a 3-bit mantissa: relative half-ULP 2^-4 for normals, plus the
+    subnormal absolute floor (half the smallest subnormal, 2^-10) times the
+    page scale."""
+    if quant == "int8":
+        return 0.5 * scale + 1e-6 + np.zeros_like(x)
+    return np.abs(x) * 2.0 ** -4 + scale * 2.0 ** -10 + 1e-6
+
+
+def _check_roundtrip(x: np.ndarray, quant: str):
+    """Quantize a batch of pages under their own amax scales and assert the
+    per-mode error bound element-wise."""
+    xj = jnp.asarray(x, jnp.float32)
+    scale = page_scale(xj, quant)
+    q = quantize_kv(xj, scale[..., None, None], quant)
+    assert q.dtype == quant_spec(quant)[0]
+    deq = np.asarray(dequantize_kv(q, np.asarray(scale)[..., None, None]))
+    err = np.abs(deq - x)
+    bound = _roundtrip_bound(x, np.asarray(scale)[..., None, None], quant)
+    assert (err <= bound).all(), (quant, float((err - bound).max()))
+
+
+@pytest.mark.parametrize("quant", ["int8", "fp8"])
+def test_kv_page_roundtrip_error_bound(quant):
+    rng = np.random.default_rng(0)
+    # pages spanning magnitudes (normal kv-activation scale to outliers)
+    for sigma in (1e-3, 0.05, 1.0, 30.0):
+        x = rng.normal(0.0, sigma, (5, 2, 8, 16)).astype(np.float32)
+        _check_roundtrip(x, quant)
+
+
+@pytest.mark.parametrize("quant", ["int8", "fp8"])
+def test_kv_all_zero_page_roundtrips_exactly(quant):
+    """An all-zero (or never-written) page has scale 0 and must dequantize
+    to exact zeros — this is what keeps unwritten pool garbage inert."""
+    x = jnp.zeros((3, 2, 8, 16), jnp.float32)
+    scale = page_scale(x, quant)
+    assert not np.asarray(scale).any()
+    q = quantize_kv(x, scale[..., None, None], quant)
+    deq = np.asarray(dequantize_kv(q, scale[..., None, None]))
+    assert (deq == 0.0).all()
+
+
+@pytest.mark.parametrize("quant", ["int8", "fp8"])
+def test_kv_scale_is_per_page_per_head(quant):
+    """One outlier page/head must not degrade any other page or head: the
+    scale layout is (page, kv-head), not pool-global."""
+    rng = np.random.default_rng(1)
+    x = rng.normal(0.0, 0.05, (4, 2, 8, 16)).astype(np.float32)
+    x[2, 1] *= 1000.0                       # outlier page 2, head 1 only
+    scale = np.asarray(page_scale(jnp.asarray(x), quant))
+    assert scale.shape == (4, 2)
+    clean = np.ones((4, 2), bool)
+    clean[2, 1] = False
+    assert scale[2, 1] > 100.0 * scale[clean].max()
+    _check_roundtrip(x, quant)              # bound holds pointwise anyway
+
+
+def test_kv_quant_unknown_mode_raises():
+    with pytest.raises(ValueError, match="unknown quant mode"):
+        quant_spec("int4")
+    with pytest.raises(ValueError, match="unknown quant mode"):
+        init_paged(2, 2, 4, 8, 16, 2, 16, quant="int4")
+    assert QUANT_MODES == ("none", "int8", "fp8")
+
+
+def _alloc_rows(cache, tables):
+    """Map each row's page chain (list of lists, -1 = unmapped tail)."""
+    bt = np.full(cache.block_tables.shape, -1, np.int32)
+    for b, chain in enumerate(tables):
+        bt[b, :len(chain)] = chain
+    return dataclasses.replace(cache, block_tables=jnp.asarray(bt))
+
+
+@pytest.mark.parametrize("quant", ["int8", "fp8"])
+def test_kv_write_prompt_quantizes_with_fresh_page_scales(quant):
+    """`write_prompt` on a quantized pool: materialized values within the
+    round-trip bound of the fp pool's, tail duplication copies codes AND
+    scales bit-for-bit, and skip_pages wipes the skipped pages' scales."""
+    Hkv, bs, Dh, W = 2, 8, 16, 13         # partial tail page (13 = 8 + 5)
+    rng = np.random.default_rng(2)
+    k = jnp.asarray(rng.normal(0, 0.5, (Hkv, W, Dh)), jnp.float32)
+    v = jnp.asarray(rng.normal(0, 0.5, (Hkv, W, Dh)), jnp.float32)
+    pos = jnp.arange(W)
+    kw = dict(blocks=jnp.asarray([1, 2]), tail_dst=jnp.asarray(3),
+              duplicate_tail=True)
+    cq = write_prompt(init_paged(2, Hkv, 5, bs, Dh, 2, 16, quant=quant),
+                      k, v, pos, **kw)
+    cf = write_prompt(init_paged(2, Hkv, 5, bs, Dh, 2, 16,
+                                 dtype=jnp.float32),
+                      k, v, pos, **kw)
+    # tail page 2 duplicated into 3: same codes, same scales
+    assert np.array_equal(np.asarray(cq.k_pool[2]), np.asarray(cq.k_pool[3]))
+    assert np.array_equal(np.asarray(cq.k_scale[2]), np.asarray(cq.k_scale[3]))
+    assert np.array_equal(np.asarray(cq.v_scale[2]), np.asarray(cq.v_scale[3]))
+    # materialize through each row's chain and compare to the fp pool
+    rows = [[1, 2], [1, 3]]
+    mq = _alloc_rows(dataclasses.replace(cq, fill=jnp.full((2,), W)), rows)
+    mf = _alloc_rows(dataclasses.replace(cf, fill=jnp.full((2,), W)), rows)
+    kq, vq, pq = materialize(mq)
+    kf, vf, pf = materialize(mf)
+    assert np.array_equal(np.asarray(pq), np.asarray(pf))
+    S = 16
+    page_of_slot = np.asarray(rows)[:, np.arange(S) // bs]    # (B, S)
+    for got, ref, sc in ((kq, kf, cq.k_scale), (vq, vf, cq.v_scale)):
+        s = np.asarray(sc)[page_of_slot]                      # (B, S, Hkv)
+        s = np.moveaxis(s, 2, 1)[..., None]                   # (B,Hkv,S,1)
+        err = np.abs(np.asarray(got) - np.asarray(ref))
+        bound = _roundtrip_bound(np.asarray(ref), s, quant)
+        assert (err <= bound).all()
+    # skip_pages: a short-bucketed prompt wipes the skipped pages' scales
+    c2 = write_prompt(init_paged(2, Hkv, 5, bs, Dh, 2, 16, quant=quant),
+                      k[:, bs:], v[:, bs:], pos[bs:],
+                      blocks=jnp.asarray([4, 1]), tail_dst=jnp.asarray(2),
+                      duplicate_tail=True, skip_pages=1)
+    assert not np.asarray(c2.k_scale[4]).any()
+    assert np.asarray(c2.pos_pool[4] == POS_EMPTY).all()
+
+
+@pytest.mark.parametrize("quant", ["int8", "fp8"])
+def test_kv_append_single_token_tail(quant):
+    """One appended token on a fresh page: the page scale is the token's
+    own amax, the slot round-trips within bound, every other slot of the
+    page stays exactly zero after materialize."""
+    B, Hkv, bs, Dh = 2, 2, 4, 8
+    cache = init_paged(B, Hkv, 6, bs, Dh, 2, 8, quant=quant)
+    cache = _alloc_rows(cache, [[1, 2], [3, 4]])
+    rng = np.random.default_rng(3)
+    k1 = jnp.asarray(rng.normal(0, 0.5, (B, Hkv, Dh)), jnp.float32)
+    v1 = jnp.asarray(rng.normal(0, 0.5, (B, Hkv, Dh)), jnp.float32)
+    cache = paged_append(cache, k1, v1, jnp.zeros((B,), jnp.int32))
+    _, qmax = quant_spec(quant)
+    np.testing.assert_allclose(
+        np.asarray(cache.k_scale[jnp.asarray([1, 3])]),
+        np.asarray(jnp.max(jnp.abs(k1), axis=-1) / qmax), rtol=1e-6)
+    k, v, pos = materialize(cache)
+    err = np.abs(np.asarray(k[:, :, 0]) - np.asarray(k1))       # (B,Hkv,Dh)
+    scale = np.asarray(cache.k_scale[jnp.asarray([1, 3])])       # (B, Hkv)
+    bound = _roundtrip_bound(np.asarray(k1), scale[..., None], quant)
+    assert (err <= bound).all()
+    assert not np.asarray(k[:, :, 1:]).any()          # tail slots exact 0
+    assert np.asarray(pos[:, :, 0] == 0).all()
+    assert np.asarray(pos[:, :, 1:] == POS_EMPTY).all()
+
+
+@pytest.mark.parametrize("quant", ["int8", "fp8"])
+def test_kv_append_monotone_scale_and_exact_requant(quant):
+    """Page scales only grow; appends that do not grow the scale leave the
+    resident codes bit-identical (`_rescale_page` is an exact identity at
+    factor 1), and a genuinely larger token re-bounds earlier tokens under
+    the new, larger scale."""
+    B, Hkv, bs, Dh = 1, 2, 4, 8
+    cache = init_paged(B, Hkv, 3, bs, Dh, 1, 4, quant=quant)
+    cache = _alloc_rows(cache, [[1]])
+    rng = np.random.default_rng(4)
+    small = jnp.asarray(rng.normal(0, 0.05, (B, Hkv, Dh)), jnp.float32)
+    small2 = jnp.asarray(rng.normal(0, 0.05, (B, Hkv, Dh)), jnp.float32)
+    big = jnp.asarray(rng.normal(0, 5.0, (B, Hkv, Dh)), jnp.float32)
+    cache = paged_append(cache, small, small, jnp.asarray([0]))
+    s0 = np.asarray(cache.k_scale[1]).copy()
+    codes0 = np.asarray(cache.k_pool[1]).copy()
+    # same-magnitude append: scale unchanged -> resident codes unchanged
+    cache = paged_append(cache, small2, small2, jnp.asarray([1]))
+    scale_after_small = np.asarray(cache.k_scale[1])
+    assert (scale_after_small >= s0 - 1e-12).all()
+    same = scale_after_small <= s0 + 1e-12
+    assert np.array_equal(
+        np.asarray(cache.k_pool[1])[same][:, 0],
+        codes0[same][:, 0]), "unchanged-scale requant must be bit-exact"
+    # larger-magnitude append: scale grows, earlier token re-bounds
+    cache = paged_append(cache, big, big, jnp.asarray([2]))
+    s2 = np.asarray(cache.k_scale[1])
+    assert (s2 >= scale_after_small - 1e-12).all()
+    assert (s2 > scale_after_small).any()
+    k, _, _ = materialize(cache)
+    err0 = np.abs(np.asarray(k[0, :, 0]) - np.asarray(small[0]))  # (Hkv,Dh)
+    bound = _roundtrip_bound(np.asarray(small[0]), s2[:, None], quant)
+    assert (err0 <= bound).all()
+
+
+@pytest.mark.parametrize("quant", ["int8", "fp8"])
+def test_kv_append_unmapped_rows_hit_garbage_sink_only(quant):
+    """Retired rows (table all -1, fill 0 — `paged_reset_rows`) keep
+    appending for static shapes: their writes clamp to page 0 and may
+    scribble its scale, but no mapped page — codes or scales — moves, and
+    the retired row materializes to exact zeros/POS_EMPTY regardless of
+    what landed in the garbage sink."""
+    from repro.kvcache.paged import paged_reset_rows
+
+    B, Hkv, bs, Dh = 2, 2, 4, 8
+    cache = init_paged(B, Hkv, 4, bs, Dh, 1, 4, quant=quant)
+    cache = _alloc_rows(cache, [[1], [2]])
+    rng = np.random.default_rng(5)
+    k1 = jnp.asarray(rng.normal(0, 0.5, (B, Hkv, Dh)), jnp.float32)
+    cache = paged_append(cache, k1, k1, jnp.zeros((B,), jnp.int32))
+    cache = paged_reset_rows(cache, jnp.asarray([1]))    # retire row 1
+    # freshly retired: materializes to exact zeros / POS_EMPTY (its old
+    # page 2 content is unreachable junk the allocator will recycle)
+    k, _, pos = materialize(cache)
+    assert not np.asarray(k[1]).any()
+    assert np.asarray(pos[1] == POS_EMPTY).all()
+    live_k = np.asarray(cache.k_pool[1]).copy()
+    live_s = np.asarray(cache.k_scale[1]).copy()
+    junk = jnp.asarray(rng.normal(0, 50.0, (B, Hkv, Dh)), jnp.float32)
+    junk = junk.at[0].set(jnp.asarray(
+        rng.normal(0, 0.05, (Hkv, Dh)), jnp.float32))   # row 0 stays tame
+    cache = paged_append(cache, junk, junk, jnp.ones((B,), jnp.int32))
+    # row 0's page untouched by row 1's garbage write (slot 0 bits intact)
+    assert np.array_equal(np.asarray(cache.k_pool[1])[:, 0], live_k[:, 0])
+    # ...though its own append may have grown the scale monotonically
+    assert (np.asarray(cache.k_scale[1]) >= live_s - 1e-12).all()
+    # the junk landed where it should: page 0's scale grew, page 2 (row
+    # 1's old, now-unmapped page) did not move a bit
+    assert np.asarray(cache.k_scale[GARBAGE_BLOCK]).max() > 0.1
+
+
+def test_kv_quant_none_keeps_fp_pool_bitwise():
+    """quant="none" must be the historical fp pool exactly: no scales ever
+    appear, dtypes are untouched, and the quant branch of append/write is
+    never taken (bit-for-bit storage of the incoming values)."""
+    B, Hkv, bs, Dh = 2, 2, 4, 8
+    cache = init_paged(B, Hkv, 4, bs, Dh, 1, 4, dtype=jnp.float32)
+    assert cache.k_scale is None and cache.v_scale is None
+    cache = _alloc_rows(cache, [[1], [2]])
+    rng = np.random.default_rng(6)
+    k1 = jnp.asarray(rng.normal(0, 0.5, (B, Hkv, Dh)), jnp.float32)
+    cache = paged_append(cache, k1, k1, jnp.zeros((B,), jnp.int32))
+    assert cache.k_scale is None
+    assert np.array_equal(np.asarray(cache.k_pool[jnp.asarray([1, 2]),
+                                                  :, 0]), np.asarray(k1))
+    # stacking layers (the engine's layout) keeps the None leaves None
+    stacked = jax.tree.map(lambda x: jnp.stack([x, x]), cache)
+    assert stacked.k_scale is None and stacked.quant == "none"
+
+
+def test_kv_materialize_refuses_scale_confusion():
+    """A quantized cache missing its scales, or an int8 pool claiming
+    quant='none', must raise — never silently read codes as floats."""
+    cache = init_paged(2, 2, 4, 8, 16, 2, 16, quant="int8")
+    broken = dataclasses.replace(cache, k_scale=None, v_scale=None)
+    with pytest.raises(ValueError, match="no k_scale"):
+        materialize(broken)
+    lying = dataclasses.replace(cache, quant="none", k_scale=None,
+                                v_scale=None)
+    with pytest.raises(ValueError, match="quantized bytes"):
+        materialize(lying)
+
+
+def test_kv_quant_pool_bytes_shrink():
+    """The point of the exercise: int8 pool payload (codes + scales) is
+    < 0.3x the f32 pool at equal block count (>= 1.8x capacity is the
+    engine-level acceptance bar; at f32 it is ~3.9x)."""
+    kw = dict(batch=2, kv_heads=2, num_blocks=32, block_size=16,
+              head_dim=64, blocks_per_row=4, seq_len=64)
+    fp = init_paged(*kw.values(), dtype=jnp.float32)
+    q8 = init_paged(*kw.values(), quant="int8")
+    nbytes = lambda c: (c.k_pool.nbytes + c.v_pool.nbytes
+                        + (c.k_scale.nbytes + c.v_scale.nbytes
+                           if c.k_scale is not None else 0))
+    assert nbytes(q8) < 0.3 * nbytes(fp)
+    assert nbytes(fp) / nbytes(q8) >= 1.8
+
+
+def test_kv_roundtrip_property_fuzz():
+    """Hypothesis fuzz over page contents: magnitudes spanning 2^-8..2^8,
+    random zero fractions (all-zero pages included), both quant modes —
+    the round-trip bound must hold pointwise."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    @settings(max_examples=30, deadline=None)
+    @given(seed=st.integers(0, 2 ** 31 - 1),
+           quant=st.sampled_from(("int8", "fp8")),
+           log_sigma=st.integers(-8, 8),
+           zero_frac=st.floats(0.0, 1.0))
+    def check(seed, quant, log_sigma, zero_frac):
+        rng = np.random.default_rng(seed)
+        x = rng.normal(0.0, 2.0 ** log_sigma, (3, 2, 8, 8)).astype(
+            np.float32)
+        x[rng.random(x.shape) < zero_frac] = 0.0
+        _check_roundtrip(x, quant)
+
+    check()

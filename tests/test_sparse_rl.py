@@ -243,3 +243,109 @@ def test_staleness_rejection_uses_behavior_policy():
     assert float(out.metrics["rejection_rate"]) == 1.0
     out_prox = sparse_rl_loss(ls, lo, ls, adv, mask, scfg)
     assert float(out_prox.metrics["rejection_rate"]) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: the quantized paged pool is a *corrected sampler policy* —
+# the engine records logp_sparse under the int8/fp8 cache, the dense
+# rescore supplies pi_old, and the Eq. 5-7 machinery absorbs the mismatch
+# (DESIGN.md §Quantized paged pool).
+# ---------------------------------------------------------------------------
+def _quant_phase(kv_quant, *, group=2, n_prompts=2, max_new=8, seed=3):
+    """One paged rollout phase + dense rescore under ``kv_quant``.
+
+    ``kv_quant=None`` omits the kwarg entirely (the historical call shape)
+    so the "none" mode can be pinned bitwise against it."""
+    from repro.configs import get_config
+    from repro.data import TOKENIZER, encode_prompts, make_problems
+    from repro.models import get_model
+    from repro.rollout import (
+        ContinuousEngine,
+        Request,
+        build_train_rollout,
+        rescore,
+    )
+    P = 16
+    cfg = get_config("qwen2.5-14b").smoke()
+    m = get_model(cfg)
+    params = m.init_params(cfg, jax.random.PRNGKey(0))
+    scfg = SparseRLConfig(group_size=group, compression="none")
+    problems = make_problems(n_prompts, seed, "easy")
+    ids, pmask, _ = encode_prompts(problems, P)
+    np_tokens = np.repeat(np.asarray(ids, np.int32), group, axis=0)
+    np_mask = np.repeat(np.asarray(pmask, bool), group, axis=0)
+    kw = dict(batch_size=2, prompt_len=P, max_new_tokens=max_new,
+              eos_id=TOKENIZER.eos_id, decode_chunk=2, seed=seed,
+              cache_backend="paged", block_size=12)
+    if kv_quant is not None:
+        kw["kv_quant"] = kv_quant
+    eng = ContinuousEngine(params, cfg, m, scfg, **kw)
+    reqs = [Request(uid=u, prompt=np_tokens[u][np_mask[u]])
+            for u in range(np_tokens.shape[0])]
+    comps = eng.run(reqs, group_size=group)
+    tr = build_train_rollout(comps, np_tokens, np_mask,
+                             max_new_tokens=max_new, pad_id=eng.pad_id,
+                             stats=eng.end_phase())
+    logp_old = rescore(params, cfg, m, tr.rollout)
+    return tr, logp_old, params, scfg
+
+
+def test_quant_pool_mismatch_absorbed_by_correction():
+    """int8 KV rollouts: the recorded logp_sparse genuinely differs from
+    the dense rescore on sampled tokens, the mismatch KL is finite and
+    pad-tail masked, and xi / the rejection veto activate on exactly that
+    gap — quantization rides the existing correction, no new loss code."""
+    from repro.rollout import mismatch_kl_estimate
+    tr, logp_old, _, scfg = _quant_phase("int8")
+    ro = tr.rollout
+    mask = np.asarray(ro.resp_mask)
+    gap = np.abs(np.asarray(ro.logp_sparse) - np.asarray(logp_old)) * mask
+    assert mask.any()
+    # the quantized cache is a different policy: the sampler's recorded
+    # log-probs disagree with the dense teacher-forced rescore
+    assert float(gap.max()) > 1e-6
+    # mismatch KL (paper Fig. 3): finite, and the padded tail of
+    # early-exited rows is masked out — a full-width mask with ``lengths``
+    # must agree bitwise with the engine's own resp_mask
+    kl = mismatch_kl_estimate(logp_old, ro.logp_sparse, ro.resp_mask,
+                              lengths=ro.lengths)
+    ones = jnp.ones_like(ro.resp_mask, bool)
+    kl_len = mismatch_kl_estimate(logp_old, ro.logp_sparse, ones,
+                                  lengths=ro.lengths)
+    assert np.isfinite(float(kl))
+    np.testing.assert_array_equal(np.asarray(kl), np.asarray(kl_len))
+    # Eq. 5: xi = pi_old/pi_sparse deviates from 1 on the sampled tokens
+    out = sparse_rl_loss(logp_old, logp_old, ro.logp_sparse,
+                         jnp.ones((mask.shape[0],)), ro.resp_mask, scfg)
+    assert np.isfinite(float(out.loss))
+    assert abs(float(out.metrics["mean_xi"]) - 1.0) > 1e-6
+    assert np.isfinite(float(out.metrics["mismatch_kl"]))
+    assert 0.0 <= float(out.metrics["rejection_rate"]) <= 1.0
+    # Eq. 6: the veto fires on the quantization gap once eps tightens to
+    # sit inside it (any token with pi_old < eps * pi_sparse rejects) —
+    # the machinery is live, its default eps just tolerates benign noise
+    m_tight = rejection_mask(logp_old, ro.logp_sparse, ro.resp_mask,
+                             eps=1.0 - 1e-9)
+    assert float(np.asarray(m_tight).min()) == 0.0
+
+
+def test_quant_none_is_bitwise_identical_to_paged_path():
+    """kv_quant="none" must be a no-op: tokens, recorded logp_sparse, the
+    dense rescore and the resulting Eq. 7 loss are bit-identical to the
+    historical paged engine call that never mentions kv_quant."""
+    tr_a, lo_a, _, scfg = _quant_phase(None)
+    tr_b, lo_b, _, _ = _quant_phase("none")
+    np.testing.assert_array_equal(np.asarray(tr_a.rollout.resp_tokens),
+                                  np.asarray(tr_b.rollout.resp_tokens))
+    np.testing.assert_array_equal(np.asarray(tr_a.rollout.logp_sparse),
+                                  np.asarray(tr_b.rollout.logp_sparse))
+    np.testing.assert_array_equal(np.asarray(tr_a.rollout.resp_mask),
+                                  np.asarray(tr_b.rollout.resp_mask))
+    np.testing.assert_array_equal(np.asarray(lo_a), np.asarray(lo_b))
+    adv = jnp.ones((tr_a.keep.shape[0],))
+    out_a = sparse_rl_loss(lo_a, lo_a, tr_a.rollout.logp_sparse, adv,
+                           tr_a.rollout.resp_mask, scfg)
+    out_b = sparse_rl_loss(lo_b, lo_b, tr_b.rollout.logp_sparse, adv,
+                           tr_b.rollout.resp_mask, scfg)
+    np.testing.assert_array_equal(np.asarray(out_a.loss),
+                                  np.asarray(out_b.loss))

@@ -19,6 +19,18 @@ committed baselines and fails (exit 1) when:
    so reordering sections does not confuse the gate.  A section absent
    from the committed baseline (e.g. async rows against a pre-async
    baseline) skips only this banded check; (1) and (2) still gate.
+4. a quantized-pool row (``kv_quant`` other than "none") reports
+   ``capacity_ratio < 1.8`` — the ISSUE-6 acceptance bound: int8/fp8 pools
+   must actually buy >= 1.8x effective KV capacity per HBM byte at equal
+   block count.  Quant rows carry no ``identical`` bound (the quantized
+   cache is a *corrected sampler policy* — tokens legitimately diverge and
+   the xi/rejection machinery absorbs the mismatch; DESIGN.md §Quantized
+   paged pool) but their ``reward_nondegrading`` is hard-gated like the
+   async rows, and their speedup is tolerance-banded, not floored (CPU
+   dequant can cost more than the bandwidth it saves).  Baselines
+   committed before the quant sections existed still gate: the hard
+   bounds apply to every fresh row, pairing just starts at the next
+   baseline regeneration.
 
 The tolerance band (default 0.35) absorbs shared-CI-runner noise; the hard
 bounds (1) and (2) have no band.  A section missing from the committed
@@ -41,6 +53,9 @@ GATED_SECTIONS = {
     "BENCH_serving.json": {
         "continuous_vs_lockstep_smoke": ("policy", "batch", "plen_dist"),
         "paged_prefix_smoke": ("group_size", "n_prompts"),
+        # quantized paged pool vs the fp paged pool (one row per kv_quant);
+        # capacity_ratio >= 1.8 hard-gates every quantized row
+        "paged_quant_smoke": ("kv_quant", "group_size"),
     },
     "BENCH_rollout.json": {
         "rollout_phase_smoke": ("policy", "group_size", "n_prompts",
@@ -56,10 +71,17 @@ GATED_SECTIONS = {
         # rows to pair: the hard bounds still gate every fresh row.
         "rollout_async_smoke": ("policy", "max_lag"),
         "rollout_async": ("policy", "max_lag"),
+        # quantized-pool RL rollouts (reward trajectory + pool capacity);
+        # reward_nondegrading and capacity_ratio >= 1.8 are hard bounds
+        "rollout_quant_smoke": ("kv_quant", "group_size"),
+        "rollout_quant": ("kv_quant", "group_size"),
     },
 }
 # sections whose rows must meet speedup >= 1.0 regardless of history
 HARD_FLOOR_SECTIONS = ("rollout_phase", "rollout_phase_smoke")
+# quantized rows (kv_quant other than "none") must report at least this
+# effective-capacity multiple over the fp pool at equal block count
+QUANT_CAPACITY_FLOOR = 1.8
 
 
 def _row_key(row: dict, fields) -> tuple:
@@ -95,6 +117,16 @@ def gate_section(name: str, fresh_rows, committed_rows, key_fields,
                 f"{label}: reward degraded over the async smoke horizon "
                 f"({row.get('reward_first_half')} -> "
                 f"{row.get('reward_second_half')})")
+        if row.get("kv_quant") not in (None, "none"):
+            cap = row.get("capacity_ratio")
+            if cap is None:
+                problems.append(f"{label}: quantized row has no "
+                                f"'capacity_ratio' field")
+            elif cap < QUANT_CAPACITY_FLOOR:
+                problems.append(
+                    f"{label}: capacity_ratio {cap:.2f} < "
+                    f"{QUANT_CAPACITY_FLOOR} — quantized pool fails the "
+                    f"effective-KV-capacity bound")
         speedup = row.get("speedup")
         if speedup is None:
             problems.append(f"{label}: row has no 'speedup' field")
