@@ -78,7 +78,11 @@ def _bench_phase(arch: str, policy: str, group_size: int, n_prompts: int,
                  batch: int, prompt_len: int, max_new: int, block_size: int,
                  decode_chunk: int, seed: int, plen_dist: str = "fixed"):
     """One phase cell: lockstep full-width batch vs continuous-paged engine
-    on the identical request set.  Returns the measured row dict."""
+    on the identical request set.  Returns the measured row dict.
+
+    ``policy`` is a registry sampler-policy name (rollout.policies); the
+    legacy compression spelling "none" still aliases to "dense" so the
+    historical ``rollout_phase`` cells keep their committed row identity."""
     from repro.configs import SparseRLConfig, get_config
     from repro.data import TOKENIZER
     from repro.models import get_model
@@ -88,16 +92,20 @@ def _bench_phase(arch: str, policy: str, group_size: int, n_prompts: int,
         build_train_rollout,
         mismatch_kl_estimate,
         rescore,
+        resolve_policy,
     )
     from dataclasses import replace
 
     cfg = get_config(arch).smoke()
     m = get_model(cfg)
     params = m.init_params(cfg, jax.random.PRNGKey(seed))
-    scfg = SparseRLConfig(compression=policy)
-    if policy != "none":
+    pol = resolve_policy("dense" if policy == "none" else policy)
+    scfg = pol.apply(SparseRLConfig())
+    if not pol.is_dense:
         scfg = replace(scfg, kv_budget=16, kv_buffer=8, obs_window=4,
-                       num_sinks=2)
+                       num_sinks=2, reasoning_head_frac=0.5,
+                       adaptive_min_frac=0.3,
+                       adaptive_decay_tokens=max(max_new // 2, 8))
     total = n_prompts * group_size
     reqs = _phase_requests(n_prompts, group_size, prompt_len, max_new, seed,
                            plen_dist)
@@ -111,7 +119,7 @@ def _bench_phase(arch: str, policy: str, group_size: int, n_prompts: int,
                            prompt_len=prompt_len, max_new_tokens=max_new,
                            eos_id=TOKENIZER.eos_id, decode_chunk=decode_chunk,
                            seed=seed, cache_backend="paged",
-                           block_size=block_size)
+                           block_size=block_size, kv_quant=pol.kv_quant)
     # cold run compiles both + measures the sharing behaviour.  The engine
     # runs the phase under LPT admission ("longest"): per-request caps are
     # known up front in an RL phase, so long-cap members start first and
@@ -136,7 +144,7 @@ def _bench_phase(arch: str, policy: str, group_size: int, n_prompts: int,
         t_last = time.perf_counter() - t0
         t_cont = min(t_cont, t_last)
         run_stats = dict(eng.stats)        # per-run counters (clock reset)
-        eng.end_phase()
+        phase_stats = eng.end_phase()
 
     # trainer-ready assembly + the masked mismatch-KL statistic
     ids = np.zeros((total, prompt_len), np.int32)
@@ -152,12 +160,18 @@ def _bench_phase(arch: str, policy: str, group_size: int, n_prompts: int,
                                     tr.rollout.resp_mask,
                                     lengths=tr.rollout.lengths))
     toks = int(np.sum(np.asarray(tr.rollout.lengths)))
+    # quant rows legitimately diverge from the fp lockstep oracle (the
+    # quantized cache IS the policy gap) — they carry the pool-capacity
+    # bound instead of an ``identical`` pin
+    extra = (dict(identical=identical) if pol.kv_quant == "none" else
+             dict(kv_quant=pol.kv_quant,
+                  capacity_ratio=float(phase_stats["kv_capacity_ratio"])))
     return dict(arch=arch, policy=policy, group_size=group_size,
                 n_prompts=n_prompts, batch=batch, max_new=max_new,
                 plen_dist=plen_dist, tokens=toks,
                 lockstep_s=t_lock, continuous_s=t_cont,
                 lockstep_tps=toks / t_lock, continuous_tps=toks / t_cont,
-                speedup=t_lock / t_cont, identical=identical,
+                speedup=t_lock / t_cont, **extra,
                 prefix_hit_rate=hit_rate,
                 target_hit_rate=(group_size - 1) / group_size,
                 prefills=prefills, admissions=int(eng.stats["admissions"]),
@@ -227,6 +241,103 @@ def rollout_train_bench(fast: bool = False, *, arch: str = "qwen2.5-14b",
         json.dump(rows, f, indent=1)
     update_bench_json(BENCH_JSON,
                       "rollout_phase" + ("_smoke" if fast else ""), rows)
+    return out
+
+
+def rollout_matrix_bench(fast: bool = False, *, arch: str = "qwen2.5-14b",
+                         seed: int = 0) -> List[str]:
+    """Sampler-policy matrix cells (DESIGN.md §Sampler policy registry):
+    writes the ``rollout_matrix(_smoke)`` section of BENCH_rollout.json.
+
+    Phase cells run the NEW registry policies (per_head, adaptive, and the
+    quantized pool) through the same lockstep-vs-continuous phase harness as
+    ``rollout_phase`` across both prompt-length dists; non-quant rows keep
+    the ``identical`` scheduler pin, quant rows carry ``capacity_ratio``
+    instead.  Trainer cells then run a short smoke-curriculum Trainer per
+    sparse policy via ``TrainerOptions.sampler_policy`` — the registry path
+    the CLIs use — recording the reward trajectory; ``reward_nondegrading``
+    is a hard gate bound (the paper's stability claim, matrix-scale).
+    ``speedup`` on trainer rows is steps/s vs the rkv trainer (banded, not
+    floored: the per-head fused kernel and the adaptive re-ranking both
+    trade FLOPs for memory)."""
+    import shutil
+    from repro.configs import SparseRLConfig, TrainConfig, get_config
+    from repro.runtime import Trainer, TrainerOptions
+
+    group_size, n_prompts = (4, 4) if fast else (8, 4)
+    max_new = 32 if fast else 64
+    rows, out = [], []
+    cells = [("per_head", "fixed"), ("per_head", "mixed"),
+             ("adaptive", "fixed"), ("adaptive", "mixed"),
+             ("quant-int8", "mixed")]
+    for policy, plen_dist in cells:
+        r = _bench_phase(arch, policy, group_size, n_prompts,
+                         batch=n_prompts * group_size // 2, prompt_len=16,
+                         max_new=max_new, block_size=8,
+                         decode_chunk=8 if fast else 16, seed=seed,
+                         plen_dist=plen_dist)
+        rows.append(r)
+        out.append(f"rollout_matrix/{policy}/{plen_dist},"
+                   f"{r['continuous_s']*1e6:.0f},"
+                   f"toks_per_s={r['continuous_tps']:.1f};"
+                   f"speedup={r['speedup']:.2f};"
+                   + (f"identical={r['identical']};" if "identical" in r
+                      else f"capacity={r['capacity_ratio']:.2f}x;")
+                   + f"mismatch_kl={r['mismatch_kl']:.4f}")
+
+    # trainer stability cells: one short run per sparse policy
+    steps = 12 if fast else 24
+    warmup = 3
+    sps_by_p = {}
+    for policy in ("rkv", "per_head", "adaptive"):
+        cfg = get_config(arch).smoke()
+        scfg = SparseRLConfig(kv_budget=8, kv_buffer=4, obs_window=4,
+                              num_sinks=2, group_size=4,
+                              max_new_tokens=8, learning_rate=2e-3,
+                              kl_coef=0.0, reasoning_head_frac=0.5,
+                              adaptive_min_frac=0.3,
+                              adaptive_decay_tokens=8)
+        ckpt = f"/tmp/srl_bench_matrix_{policy}_{seed}"
+        shutil.rmtree(ckpt, ignore_errors=True)
+        tcfg = TrainConfig(update_batch=16, total_steps=steps + warmup,
+                           warmup_steps=2, checkpoint_every=0,
+                           checkpoint_dir=ckpt, seed=seed)
+        opts = TrainerOptions(num_prompts=4, prompt_len=12,
+                              max_new_tokens=8, level="trivial",
+                              rollout_backend="continuous",
+                              cache_backend="paged", decode_chunk=2,
+                              sampler_policy=policy)
+        tr = Trainer(cfg, scfg, tcfg, opts)
+        hist = tr.train(warmup, log_every=0)
+        t0 = time.perf_counter()
+        hist += tr.train(steps, log_every=0)
+        sps = steps / (time.perf_counter() - t0)
+        sps_by_p[policy] = sps
+        rewards = [m["reward"] for m in hist]
+        half = len(rewards) // 2
+        r_first = float(np.mean(rewards[:half]))
+        r_second = float(np.mean(rewards[half:]))
+        slack = max(0.02, 0.5 * r_first)   # scale-aware stability bound
+        rows.append(dict(
+            arch=arch, policy=policy, plen_dist="train",
+            group_size=4, n_prompts=4, steps=steps + warmup,
+            steps_s=sps, speedup=sps / sps_by_p["rkv"],
+            mismatch_kl=float(np.mean([m["mismatch_kl"]
+                                       for m in hist[warmup:]])),
+            rejection_rate=float(np.mean([m["rejection_rate"]
+                                          for m in hist[warmup:]])),
+            reward_first_half=r_first, reward_second_half=r_second,
+            reward_nondegrading=bool(r_second >= r_first - slack)))
+        r = rows[-1]
+        out.append(f"rollout_matrix/{policy}/train,{1e6 / r['steps_s']:.0f},"
+                   f"steps_per_s={r['steps_s']:.3f};"
+                   f"speedup={r['speedup']:.2f};"
+                   f"mismatch_kl={r['mismatch_kl']:.4f};"
+                   f"reward={r['reward_first_half']:.3f}->"
+                   f"{r['reward_second_half']:.3f}")
+        del tr
+    update_bench_json(BENCH_JSON,
+                      "rollout_matrix" + ("_smoke" if fast else ""), rows)
     return out
 
 
@@ -446,6 +557,9 @@ def main(argv=None) -> int:
     for r in rollout_quant_bench(fast=args.smoke, arch=args.arch,
                                  seed=args.seed):
         print(r, flush=True)
+    for r in rollout_matrix_bench(fast=args.smoke, arch=args.arch,
+                                  seed=args.seed):
+        print(r, flush=True)
     # acceptance bar: the continuous-paged phase must not be slower than the
     # lockstep phase, token-identically (the ISSUE-3 bound; the CI smoke
     # gate re-checks the committed JSON so it cannot silently regress)
@@ -481,7 +595,19 @@ def main(argv=None) -> int:
           f"{by_q['int8']['capacity_ratio']:.2f}x>=1.8x, reward "
           f"nondegrading={all(r['reward_nondegrading'] for r in qrows)} "
           f"({'PASS' if qok else 'FAIL'})")
-    return 0 if (ok and aok and qok) else 1
+    # matrix acceptance: non-quant phase cells keep the scheduler identity
+    # pin, quant cells the capacity bound, trainer cells reward stability
+    with open(BENCH_JSON) as f:
+        mrows = json.load(f)["rollout_matrix" + ("_smoke" if args.smoke
+                                                 else "")]
+    mok = (all(r.get("identical", True) for r in mrows)
+           and all(r.get("capacity_ratio", 1.8) >= 1.8 for r in mrows)
+           and all(r.get("reward_nondegrading", True) for r in mrows))
+    print(f"sampler-policy matrix: identical="
+          f"{all(r.get('identical', True) for r in mrows)}, reward "
+          f"nondegrading={all(r.get('reward_nondegrading', True) for r in mrows)} "
+          f"({'PASS' if mok else 'FAIL'})")
+    return 0 if (ok and aok and qok and mok) else 1
 
 
 if __name__ == "__main__":

@@ -249,7 +249,20 @@ class SparseRLConfig:
     obs_window: int = 8           # alpha: most recent tokens always retained
     rkv_lambda: float = 0.1       # R-KV importance/redundancy trade-off
     num_sinks: int = 4            # StreamingLLM attention sinks
-    compression: str = "rkv"      # rkv | snapkv | h2o | streaming | none(dense)
+    compression: str = "rkv"      # rkv | snapkv | h2o | streaming | per_head
+                                  # | adaptive | none(dense) — resolve through
+                                  # rollout.policies (registry owns geometry)
+
+    # Per-head budget policy ("per_head"; RL-guided head-importance line of
+    # work): the leading ceil(frac * Hkv) kv heads — the "reasoning" heads —
+    # keep dense caches; the rest are hard-capped at kv_budget.
+    reasoning_head_frac: float = 0.5
+
+    # Step-scheduled adaptive budget ("adaptive"; Sparrow-style): effective
+    # budget decays linearly from cache_slots to min_frac * cache_slots over
+    # the first decay_tokens decode positions, then stays flat.
+    adaptive_min_frac: float = 0.25
+    adaptive_decay_tokens: int = 256
 
     # GRPO (§5.1)
     group_size: int = 8           # G rollouts per prompt

@@ -8,6 +8,7 @@ from repro.core.grpo import (
 from repro.core.sparse_rl import (
     SparseRLOut,
     rejection_mask,
+    resolved_policy,
     sparse_rl_loss,
     sparsity_consistency_ratio,
 )
@@ -21,5 +22,6 @@ __all__ = [
     "sparse_rl_loss",
     "sparsity_consistency_ratio",
     "rejection_mask",
+    "resolved_policy",
     "SparseRLOut",
 ]

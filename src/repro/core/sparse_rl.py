@@ -64,6 +64,22 @@ def rejection_mask(logp_old: jnp.ndarray, logp_sparse: jnp.ndarray,
     return 1.0 - jnp.any(anomalous, axis=-1).astype(jnp.float32)
 
 
+def resolved_policy(scfg: SparseRLConfig, kv_quant: str = "none"):
+    """The registry entry behind a resolved config (rollout.policies).
+
+    The loss itself is policy-agnostic — pi_sparse is whatever the sampler
+    recorded — but callers (trainer telemetry, the matrix harness) need the
+    policy's *identity class*: ``resolved_policy(...).is_dense`` says whether
+    logp_sparse is structurally equal to logp_old, i.e. xi == 1, the
+    rejection mask never fires and mismatch_kl is numerical noise.  Lazy
+    import keeps the core loss layer free of a rollout dependency at import
+    time.
+    """
+    from repro.rollout.policies import policy_for_scfg
+
+    return policy_for_scfg(scfg, kv_quant)
+
+
 class SparseRLOut(NamedTuple):
     loss: jnp.ndarray
     metrics: Dict[str, jnp.ndarray]

@@ -79,13 +79,18 @@ def eviction_scores(cache: KVCache, scfg: SparseRLConfig,
                   importance = normalized cumulative attention and
                   diversity = 1 - cos-sim(key, incoming key) (redundant
                   tokens — similar to what is being written — go first).
+      per_head  : cumulative attention (h2o-style).  The per-head budget
+                  itself is applied by :func:`enforce_budget` (this ranking
+                  only decides slot reuse if a dense-sized cache ever fills).
+      adaptive  : rkv scoring; the step-scheduled budget is applied by
+                  :func:`enforce_budget` after every decode step.
     """
     valid = cache.valid_mask()
     if scfg.compression == "streaming":
         s = cache.pos.astype(jnp.float32)
-    elif scfg.compression in ("h2o", "snapkv"):
+    elif scfg.compression in ("h2o", "snapkv", "per_head"):
         s = cache.score
-    elif scfg.compression == "rkv":
+    elif scfg.compression in ("rkv", "adaptive"):
         imp = cache.score
         denom = jnp.max(jnp.where(valid, imp, 0.0), axis=-1, keepdims=True) + 1e-6
         imp = imp / denom
@@ -138,10 +143,96 @@ def append(cache: KVCache, k_new: jnp.ndarray, v_new: jnp.ndarray,
 def update_scores(cache: KVCache, probs_pooled: jnp.ndarray,
                   scfg: SparseRLConfig) -> KVCache:
     """Accumulate attention mass (B, Hkv, S) into the policy score."""
-    if scfg.compression in ("h2o", "snapkv", "rkv"):
+    if scfg.compression in ("h2o", "snapkv", "rkv", "per_head", "adaptive"):
         score = cache.score + jnp.where(cache.valid_mask(), probs_pooled, 0.0)
         return cache._replace(score=score)
     return cache
+
+
+# ---------------------------------------------------------------------------
+# Scheduled / per-head budgets (registry policies "per_head" and "adaptive")
+# ---------------------------------------------------------------------------
+def reasoning_heads(scfg: SparseRLConfig, kv_heads: int) -> int:
+    """How many leading kv heads keep dense caches under ``per_head``."""
+    frac = min(max(scfg.reasoning_head_frac, 0.0), 1.0)
+    return max(1, min(kv_heads, int(-(-kv_heads * frac // 1))))
+
+
+def head_budget_split(scfg: SparseRLConfig) -> tuple:
+    """(reasoning-head budget, compressed-head budget) for ``per_head``.
+
+    Reasoning heads are unbounded (the dense-sized geometry never fills);
+    the rest are hard-capped at ``kv_budget`` — no buffer slack — but never
+    below the always-protected sinks + observation window.
+    """
+    hard = max(scfg.kv_budget, scfg.num_sinks + scfg.obs_window)
+    return (1 << 30), hard
+
+
+def adaptive_budget(scfg: SparseRLConfig, pos):
+    """Sparrow-style step schedule: effective live-slot budget at decode
+    position ``pos`` (int or traced array; returns same shape, int32).
+
+    Decays linearly from ``cache_slots`` to ``adaptive_min_frac *
+    cache_slots`` over the first ``adaptive_decay_tokens`` positions, then
+    stays flat; floored at sinks + obs window (the protected set).  Monotone
+    non-increasing in ``pos`` — the registry conformance test pins this.
+    """
+    S = scfg.cache_slots
+    floor = scfg.num_sinks + scfg.obs_window
+    p = jnp.asarray(pos, jnp.float32)
+    frac = 1.0 - (1.0 - scfg.adaptive_min_frac) * jnp.minimum(
+        p / max(scfg.adaptive_decay_tokens, 1), 1.0)
+    return jnp.maximum(jnp.ceil(S * frac).astype(jnp.int32), floor)
+
+
+def decode_budgets(scfg: SparseRLConfig, kv_heads: int, slots: int,
+                   cur_pos: jnp.ndarray) -> jnp.ndarray:
+    """Per-(row, kv head) live-slot budget at the current decode position.
+
+    cur_pos: (B,) absolute positions.  Returns (B, Hkv) int32, clipped to
+    the physical slot count (a budget >= S is a no-op).
+    """
+    B = cur_pos.shape[0]
+    if scfg.compression == "per_head":
+        n_r = reasoning_heads(scfg, kv_heads)
+        _, hard = head_budget_split(scfg)
+        per_head = jnp.where(jnp.arange(kv_heads) < n_r, slots, min(hard, slots))
+        return jnp.broadcast_to(per_head[None, :].astype(jnp.int32), (B, kv_heads))
+    if scfg.compression == "adaptive":
+        b = jnp.minimum(adaptive_budget(scfg, cur_pos), slots)  # (B,)
+        return jnp.broadcast_to(b[:, None], (B, kv_heads))
+    return jnp.full((B, kv_heads), slots, jnp.int32)
+
+
+def enforce_budget(cache: KVCache, scfg: SparseRLConfig,
+                   cur_pos: jnp.ndarray) -> KVCache:
+    """Invalidate every live slot past the policy's current budget.
+
+    The per-head ("per_head") and step-scheduled ("adaptive") budgets cannot
+    be expressed by append-time eviction alone: one (B, Hkv, S, Dh) array
+    holds every head, so heads with different budgets keep the dense slot
+    count physically and apply their cap *logically* — the lowest-ranked
+    surplus slots get ``pos = POS_EMPTY`` (attention masks them) and a zeroed
+    score (no stale importance).  k/v bytes and ``fill`` are untouched:
+    invalidated slots rank as preferred eviction targets (NEG) so a full
+    cache reuses them first.  No-op for every other policy.
+    """
+    if scfg.compression not in ("per_head", "adaptive"):
+        return cache
+    B, H, S, _ = cache.k.shape
+    budgets = decode_budgets(scfg, H, S, cur_pos)               # (B, H)
+    s = eviction_scores(cache, scfg, cur_pos=cur_pos[:, None, None])
+    # rank descending (0 = most retained); break score ties toward newer
+    # tokens so the ordering is deterministic.  +inf (protected) slots rank
+    # first, NEG (empty) last; the tiny recency term never reorders distinct
+    # scores (score gaps are >> S * 1e-6 or the slots tie anyway).
+    tie = jnp.where(jnp.isinf(s), 0.0, cache.pos.astype(jnp.float32) * 1e-6)
+    rank = jnp.argsort(jnp.argsort(-(s + tie), axis=-1), axis=-1)
+    keep = rank < budgets[..., None]
+    pos = jnp.where(keep, cache.pos, POS_EMPTY)
+    score = jnp.where(keep, cache.score, 0.0)
+    return cache._replace(pos=pos, score=score)
 
 
 # ---------------------------------------------------------------------------

@@ -117,7 +117,15 @@ def main(argv=None):
                     help="decode batch size (row slots)")
     ap.add_argument("--prompt-len", type=int, default=24)
     ap.add_argument("--max-new", type=int, default=64)
-    ap.add_argument("--compression", default="rkv")
+    ap.add_argument("--sampler-policy", default=None,
+                    help="registry sampler policy (rollout.policies): dense, "
+                         "rkv, snapkv, h2o, streaming, per_head, adaptive, "
+                         "quant-int8, quant-fp8.  Supersedes the legacy "
+                         "--compression/--kv-quant pair (DESIGN.md "
+                         "§Sampler policy registry)")
+    ap.add_argument("--compression", default=None,
+                    help="DEPRECATED alias: use --sampler-policy (maps "
+                         "through the registry bitwise-identically)")
     ap.add_argument("--kv-budget", type=int, default=None)
     ap.add_argument("--cache-backend", default="contiguous",
                     choices=["contiguous", "paged"],
@@ -125,10 +133,11 @@ def main(argv=None):
                          "(DESIGN.md §Paged cache & prefix sharing)")
     ap.add_argument("--block-size", type=int, default=16,
                     help="paged backend: tokens per pool page")
-    ap.add_argument("--kv-quant", default="none",
+    ap.add_argument("--kv-quant", default=None,
                     choices=["none", "int8", "fp8"],
-                    help="paged backend: quantized KV pool storage with "
-                         "per-(page, kv-head) scales (DESIGN.md "
+                    help="DEPRECATED alias: use --sampler-policy quant-int8/"
+                         "quant-fp8.  Paged backend: quantized KV pool "
+                         "storage with per-(page, kv-head) scales (DESIGN.md "
                          "§Quantized paged pool)")
     ap.add_argument("--group-size", type=int, default=1,
                     help="repeat each prompt G times (GRPO group sampling; "
@@ -168,11 +177,14 @@ def main(argv=None):
     from repro.models import get_model
     from repro.rewards import binary_rewards, decode_responses
     from repro.rollout import ContinuousEngine, LockstepServer, rollout_slots
+    from repro.rollout.policies import resolve_cli_policy
 
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = cfg.smoke()
-    scfg = SparseRLConfig(compression=args.compression)
+    policy = resolve_cli_policy(args.sampler_policy, args.compression,
+                                args.kv_quant, default_compression="rkv")
+    scfg = policy.apply(SparseRLConfig())
     if args.smoke:
         scfg = replace(scfg, kv_budget=args.kv_budget or 24, kv_buffer=8,
                        obs_window=4, num_sinks=2)
@@ -192,7 +204,7 @@ def main(argv=None):
         plen_dist=args.plen_dist)
     slots = rollout_slots(scfg, args.prompt_len, args.max_new)
     print(f"arch={args.arch}{' (smoke)' if args.smoke else ''} "
-          f"compression={args.compression} cache slots/seq/layer: {slots} | "
+          f"policy={policy.name} cache slots/seq/layer: {slots} | "
           f"backend={args.cache_backend} | "
           f"{len(reqs)} requests"
           f"{f' ({args.num_requests} prompts x G={args.group_size})' if args.group_size > 1 else ''}, "
@@ -206,7 +218,7 @@ def main(argv=None):
             prompt_len=args.prompt_len, max_new_tokens=args.max_new,
             eos_id=TOKENIZER.eos_id, decode_chunk=args.decode_chunk,
             seed=args.seed, cache_backend=args.cache_backend,
-            block_size=args.block_size, kv_quant=args.kv_quant,
+            block_size=args.block_size, kv_quant=policy.kv_quant,
             prefill_chunk=args.prefill_chunk,
             overlap_harvest=args.overlap_harvest)
         if args.warmup:
@@ -240,7 +252,7 @@ def main(argv=None):
                   f"{st['admissions']:.0f} admissions, hit rate "
                   f"{eng.prefix_hit_rate:.0%}{extra}")
             ps = eng.kv_pool_stats()
-            print(f"[continuous] kv pool ({args.kv_quant}): "
+            print(f"[continuous] kv pool ({policy.kv_quant}): "
                   f"{ps['kv_pool_bytes_per_layer'] / 2**20:.2f} MiB/layer, "
                   f"{ps['kv_bytes_per_token']:.1f} B/token, "
                   f"{ps['kv_capacity_ratio']:.2f}x fp capacity")

@@ -25,8 +25,19 @@ def main(argv=None):
     ap.add_argument("--smoke", action="store_true",
                     help="reduced same-family config (CPU-runnable)")
     ap.add_argument("--steps", type=int, default=100)
-    ap.add_argument("--compression", default="rkv",
-                    choices=["rkv", "snapkv", "h2o", "streaming", "none"])
+    ap.add_argument("--sampler-policy", default=None,
+                    help="registry sampler policy (rollout.policies): dense, "
+                         "rkv, snapkv, h2o, streaming, per_head, adaptive, "
+                         "quant-int8, quant-fp8.  Resolves compression + "
+                         "kv-quant in one shot; supersedes the legacy "
+                         "--compression/--kv-quant pair (DESIGN.md "
+                         "§Sampler policy registry)")
+    ap.add_argument("--compression", default=None,
+                    choices=["rkv", "snapkv", "h2o", "streaming", "per_head",
+                             "adaptive", "none"],
+                    help="DEPRECATED alias: use --sampler-policy.  Maps "
+                         "through the registry bitwise-identically "
+                         "(none -> dense)")
     ap.add_argument("--no-reject", action="store_true")
     ap.add_argument("--no-reweight", action="store_true")
     ap.add_argument("--kv-budget", type=int, default=None)
@@ -41,13 +52,15 @@ def main(argv=None):
                     choices=["contiguous", "paged"],
                     help="continuous backend only: paged = prompt pages "
                          "prefilled once per group, refcount-shared")
-    ap.add_argument("--kv-quant", default="none",
+    ap.add_argument("--kv-quant", default=None,
                     choices=["none", "int8", "fp8"],
-                    help="paged backend only: quantized KV pool storage; "
-                         "the quantized engine is the behavior policy "
-                         "(logp_sparse) and the dense rescore supplies "
-                         "pi_old, so the sparse-RL correction absorbs the "
-                         "mismatch (DESIGN.md §Quantized paged pool)")
+                    help="DEPRECATED alias: use --sampler-policy quant-int8/"
+                         "quant-fp8.  Paged backend only: quantized KV pool "
+                         "storage; the quantized engine is the behavior "
+                         "policy (logp_sparse) and the dense rescore "
+                         "supplies pi_old, so the sparse-RL correction "
+                         "absorbs the mismatch (DESIGN.md "
+                         "§Quantized paged pool)")
     ap.add_argument("--decode-batch", type=int, default=0,
                     help="continuous backend: engine row slots "
                          "(0 = half the phase's requests)")
@@ -96,18 +109,20 @@ def main(argv=None):
     from dataclasses import replace
 
     from repro.configs import SparseRLConfig, TrainConfig, get_config
+    from repro.rollout.policies import resolve_cli_policy
     from repro.runtime import Trainer, TrainerOptions
 
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = cfg.smoke()
     smoke_scale = args.smoke or cfg.n_params() < 5e7
-    scfg = SparseRLConfig(
-        compression=args.compression,
+    policy = resolve_cli_policy(args.sampler_policy, args.compression,
+                                args.kv_quant, default_compression="rkv")
+    scfg = policy.apply(SparseRLConfig(
         reject=not args.no_reject,
         reweight=not args.no_reweight,
         group_size=args.group_size,
-    )
+    ))
     if smoke_scale:
         scfg = replace(scfg, kv_budget=args.kv_budget or 24, kv_buffer=8,
                        obs_window=4, num_sinks=2, max_new_tokens=20,
@@ -125,7 +140,7 @@ def main(argv=None):
                           prompt_len=24, max_new_tokens=scfg.max_new_tokens,
                           rollout_backend=args.rollout_backend,
                           cache_backend=args.cache_backend,
-                          kv_quant=args.kv_quant,
+                          kv_quant=policy.kv_quant,
                           decode_batch=args.decode_batch,
                           decode_chunk=args.decode_chunk,
                           prefill_chunk=args.prefill_chunk,

@@ -8,7 +8,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, SparseRLConfig, dtype_of
 from repro.distributed.sharding import lsc
-from repro.kvcache import KVCache, append, attend, update_scores
+from repro.kvcache import KVCache, append, attend, enforce_budget, update_scores
 from repro.kvcache.paged import PagedKVCache, paged_append, paged_attend
 from repro.models.common import apply_dense, apply_rope, dense_init
 
@@ -132,8 +132,13 @@ def decode_attention(p, x_tok, cfg: ModelConfig, cache: KVCache,
     """One-token decode.  x_tok: (B, D) hidden; cur_pos: (B,) absolute pos.
 
     Contiguous cache: evict-if-full -> append -> attend (incl. new token) ->
-    score update.  Paged cache (block-table pool, dense only — no eviction,
-    no score update): append through the block table -> attend the
+    score update -> budget enforcement (a no-op except for the "per_head" /
+    "adaptive" registry policies, whose budgets are applied by slot
+    invalidation — DESIGN.md §Sampler policy registry).  The per_head policy
+    attends through the fused budget-attention kernel (`ops.budget_attention`
+    — one pass produces both the output and the pooled per-slot mass its
+    score update consumes).  Paged cache (block-table pool, dense only — no
+    eviction, no score update): append through the block table -> attend the
     materialized page chains (identical math; DESIGN.md §Paged cache &
     prefix sharing).
     """
@@ -148,8 +153,15 @@ def decode_attention(p, x_tok, cfg: ModelConfig, cache: KVCache,
         out = paged_attend(q1, cache)
     else:
         cache = append(cache, k1, v1, cur_pos, scfg)
-        out, probs_pooled = attend(q1, cache)
+        if scfg.compression == "per_head":
+            from repro.kernels import ops
+
+            out, probs_pooled = ops.budget_attention(
+                q1, cache.k, cache.v, cache.pos)
+        else:
+            out, probs_pooled = attend(q1, cache)
         cache = update_scores(cache, probs_pooled, scfg)
+        cache = enforce_budget(cache, scfg, cur_pos)
     out = out.reshape(B, cfg.num_heads * cfg.head_dim)
     y = apply_dense(p["wo"], out, x_tok.dtype)
     return y, cache

@@ -21,6 +21,15 @@ from repro.rollout.continuous import (
     Request,
     serve_lockstep,
 )
+from repro.rollout.policies import (
+    POLICIES,
+    SamplerPolicy,
+    legacy_policy_name,
+    policy_for_scfg,
+    policy_names,
+    resolve_policy,
+    validate_engine_config,
+)
 from repro.rollout.engine import (
     RolloutBatch,
     TrainRollout,
@@ -45,4 +54,6 @@ __all__ = [
     "mismatch_kl_estimate",
     "ContinuousEngine", "LockstepServer", "Request", "Completion",
     "serve_lockstep",
+    "POLICIES", "SamplerPolicy", "resolve_policy", "policy_names",
+    "policy_for_scfg", "legacy_policy_name", "validate_engine_config",
 ]

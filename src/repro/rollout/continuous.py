@@ -94,6 +94,7 @@ from repro.kvcache.paged import (
     write_prompt,
 )
 from repro.models import ModelFns
+from repro.rollout.policies import validate_engine_config
 from repro.rollout.engine import (
     decode_sample_step,
     paged_rollout_geometry,
@@ -281,11 +282,12 @@ class ContinuousEngine:
                  overlap_harvest: bool = False, kv_quant: str = "none"):
         if decode_chunk < 1:
             raise ValueError("decode_chunk must be >= 1")
-        if cache_backend not in ("contiguous", "paged"):
-            raise ValueError(f"unknown cache_backend {cache_backend!r}")
-        if kv_quant not in ("none", "int8", "fp8"):
-            raise ValueError(f"unknown kv_quant {kv_quant!r} "
-                             f"(choose none | int8 | fp8)")
+        # one registry-level validator owns every engine-config legality rule
+        # (unknown compression/kv_quant/backend, quant-without-pool); raises
+        # ValueError on any illegal combination (DESIGN.md
+        # §Sampler policy registry)
+        validate_engine_config(scfg, kv_quant=kv_quant,
+                               cache_backend=cache_backend, family=cfg.family)
         if prefill_chunk is None:
             # enough budget to keep admission latency low (a couple of
             # full-width prompts per decode chunk) without ever letting one
@@ -327,15 +329,10 @@ class ContinuousEngine:
                             and cfg.family in (DENSE, MOE, VLM))
         # quantized KV storage lives in the block pool: the contiguous
         # backend (and the splice-sharing families) has no per-page scale
-        # home, so quantization without the pool is a loud config error,
-        # not a silent fp fallback
+        # home — validate_engine_config above already rejected quantization
+        # without the pool (loud config error, not a silent fp fallback)
         self.kv_quant = kv_quant
-        if kv_quant != "none" and not self._pool_paged:
-            raise ValueError(
-                f"kv_quant={kv_quant!r} requires the paged pool backend "
-                f"(cache_backend='paged', compression='none', dense family)"
-                f" — got cache_backend={cache_backend!r}, "
-                f"compression={scfg.compression!r}, family={cfg.family!r}")
+        assert not (kv_quant != "none" and not self._pool_paged)
         self.allocator: Optional[BlockAllocator] = None
         self.prefix: Optional[PrefixCache] = None
         if self._pool_paged:

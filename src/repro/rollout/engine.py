@@ -207,12 +207,15 @@ def decode_sample_step(params, cfg: ModelConfig, mfns: ModelFns,
 
 def rollout_slots(scfg: SparseRLConfig, prompt_len: int, max_new_tokens: int,
                   prefix_len: int = 0) -> int:
-    """Cache slots per (layer, row): the fixed sparse budget, or — for the
-    dense baseline — enough for prompt + any multimodal prefix + all new
-    tokens (+ headroom so the degenerate recency eviction never triggers)."""
-    if scfg.compression != "none":
-        return scfg.cache_slots
-    return prompt_len + prefix_len + max_new_tokens + 8
+    """Cache slots per (layer, row), owned by the sampler policy's geometry
+    hook (rollout.policies): the fixed sparse budget for budget policies;
+    prompt + any multimodal prefix + all new tokens (+ headroom so the
+    degenerate recency eviction never triggers) for dense-sized ones
+    (dense, per_head, quant-*)."""
+    from repro.rollout.policies import policy_for_scfg
+
+    return policy_for_scfg(scfg).geometry(scfg, prompt_len, max_new_tokens,
+                                          prefix_len)
 
 
 def paged_rollout_geometry(scfg: SparseRLConfig, prompt_len: int,

@@ -1,0 +1,255 @@
+"""Sampler-policy registry: every way the rollout sampler may deviate from
+the dense policy, as a first-class named object.
+
+Sparse-RL's claim (paper §4) is policy-agnostic: *any* compression-induced
+sampler policy pi_sparse — eviction, quantization, per-head budgets, step
+schedules — is stabilized by the same xi/rejection/reweighting correction.
+Historically the policy was an ad-hoc pair of strings threaded through the
+engine (``scfg.compression`` + the quantized-pool ``kv_quant`` flag).  This
+module names each combination, owns its cache geometry, declares whether it
+is the identity policy (token-identical to the dense oracle, so the matrix
+harness knows which cells to pin bitwise), exposes its budget schedule, and
+centralizes the engine-config validation that used to live inline in
+``ContinuousEngine.__init__`` (DESIGN.md §Sampler policy registry).
+
+A policy is *pure configuration*: resolving one rewrites ``scfg.compression``
+/ ``kv_quant`` to the exact values the pre-registry code paths consumed, so
+legacy ``--compression``/``--kv-quant`` flags alias bit-for-bit through
+:func:`legacy_policy_name`.  The mechanisms stay where they always lived
+(``kvcache/cache.py`` eviction + budget enforcement, ``kvcache/paged.py``
+quantized pool, ``models/attention.py`` decode hooks) keyed off those same
+fields — the registry adds no second dispatch path to drift from.
+
+Registered policies:
+
+  dense       compression="none"                   identity (the oracle itself)
+  rkv         compression="rkv"                    R-KV importance+diversity
+  snapkv      compression="snapkv"                 obs-window selection
+  h2o         compression="h2o"                    cumulative attention mass
+  streaming   compression="streaming"              sinks + recency
+  per_head    compression="per_head"               reasoning heads stay dense
+                                                   (kernels/budget_attention.py
+                                                   fused decode), other heads
+                                                   compress hard to kv_budget
+  adaptive    compression="adaptive"               Sparrow-style step schedule:
+                                                   budget tightens over decode
+  quant-int8  compression="none", kv_quant="int8"  quantized paged pool
+  quant-fp8   compression="none", kv_quant="fp8"   quantized paged pool
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Callable, Dict, Tuple
+
+from repro.configs.base import DENSE, MOE, VLM, SparseRLConfig
+from repro.kvcache.cache import adaptive_budget, head_budget_split
+
+COMPRESSIONS = ("none", "rkv", "snapkv", "h2o", "streaming", "per_head",
+                "adaptive")
+KV_QUANTS = ("none", "int8", "fp8")
+CACHE_BACKENDS = ("contiguous", "paged")
+# families whose KV lives in the shared block pool (paged prefix sharing +
+# quantized storage); ssm/hybrid/audio splice whole decode states instead
+POOL_FAMILIES = (DENSE, MOE, VLM)
+
+
+def _dense_geometry(scfg: SparseRLConfig, prompt_len: int,
+                    max_new_tokens: int, prefix_len: int = 0) -> int:
+    """Dense sizing: prompt + multimodal prefix + every new token, plus
+    headroom so the degenerate recency eviction never triggers."""
+    return prompt_len + prefix_len + max_new_tokens + 8
+
+
+def _budget_geometry(scfg: SparseRLConfig, prompt_len: int,
+                     max_new_tokens: int, prefix_len: int = 0) -> int:
+    """Fixed sparse budget: S = B_budget + B_buffer, workload-independent."""
+    return scfg.cache_slots
+
+
+def _flat_schedule(scfg: SparseRLConfig, pos):
+    """Budget constant in the decode position (fixed-budget policies)."""
+    return scfg.cache_slots
+
+
+def _dense_schedule(scfg: SparseRLConfig, pos):
+    """No budget: the dense cache retains everything (reported as the slot
+    count the geometry would allocate for a budget-sized workload)."""
+    return scfg.cache_slots
+
+
+def _per_head_schedule(scfg: SparseRLConfig, pos):
+    """Worst-case (compressed-head) budget; reasoning heads are unbounded."""
+    return head_budget_split(scfg)[1]
+
+
+@dataclass(frozen=True)
+class SamplerPolicy:
+    """One named sampler policy (protocol + registry entry in one).
+
+    ``geometry``       cache slots per (layer, row) for a workload — the hook
+                       ``rollout_slots`` / ``paged_rollout_geometry`` route
+                       through (no magic constants at call sites).
+    ``budget_schedule`` effective live-slot budget at decode position ``pos``
+                       (jnp-traceable; monotone non-increasing for adaptive).
+    ``is_dense``       identity flag: rollouts are token-identical to the
+                       dense lockstep oracle (matrix cells with this set are
+                       pinned bitwise; all others assert the correction
+                       invariants instead).
+    """
+    name: str
+    compression: str
+    kv_quant: str = "none"
+    is_dense: bool = False
+    geometry: Callable[..., int] = _budget_geometry
+    budget_schedule: Callable = _flat_schedule
+    description: str = ""
+
+    def apply(self, scfg: SparseRLConfig) -> SparseRLConfig:
+        """Resolve onto a config: rewrite ``compression`` to this policy's
+        value (all other knobs — budgets, sinks, corrections — stay)."""
+        return replace(scfg, compression=self.compression)
+
+    def validate(self, *, cache_backend: str = "contiguous",
+                 family: str = DENSE) -> None:
+        validate_engine_config(self.apply(SparseRLConfig()),
+                               kv_quant=self.kv_quant,
+                               cache_backend=cache_backend, family=family)
+
+
+POLICIES: Dict[str, SamplerPolicy] = {}
+
+
+def register(policy: SamplerPolicy) -> SamplerPolicy:
+    if policy.name in POLICIES:
+        raise ValueError(f"duplicate sampler policy {policy.name!r}")
+    POLICIES[policy.name] = policy
+    return policy
+
+
+def resolve_policy(name: str) -> SamplerPolicy:
+    if name not in POLICIES:
+        raise KeyError(
+            f"unknown sampler policy {name!r}; registered: {sorted(POLICIES)}")
+    return POLICIES[name]
+
+
+def policy_names() -> Tuple[str, ...]:
+    return tuple(POLICIES)
+
+
+register(SamplerPolicy(
+    "dense", compression="none", is_dense=True, geometry=_dense_geometry,
+    budget_schedule=_dense_schedule,
+    description="uncompressed cache; the oracle pi_old itself"))
+register(SamplerPolicy(
+    "rkv", compression="rkv",
+    description="R-KV: lambda*importance + (1-lambda)*diversity eviction"))
+register(SamplerPolicy(
+    "snapkv", compression="snapkv",
+    description="SnapKV: obs-window pooled-attention selection"))
+register(SamplerPolicy(
+    "h2o", compression="h2o",
+    description="H2O: cumulative attention mass (heavy hitters)"))
+register(SamplerPolicy(
+    "streaming", compression="streaming",
+    description="StreamingLLM: attention sinks + recency"))
+register(SamplerPolicy(
+    "per_head", compression="per_head", geometry=_dense_geometry,
+    budget_schedule=_per_head_schedule,
+    description=("reasoning heads keep dense caches (fused "
+                 "budget-attention decode), others hard-capped at kv_budget")))
+register(SamplerPolicy(
+    "adaptive", compression="adaptive", budget_schedule=adaptive_budget,
+    description=("Sparrow-style schedule: budget decays from cache_slots "
+                 "toward adaptive_min_frac over adaptive_decay_tokens")))
+register(SamplerPolicy(
+    "quant-int8", compression="none", kv_quant="int8",
+    geometry=_dense_geometry, budget_schedule=_dense_schedule,
+    description="dense geometry, int8-symmetric quantized paged pool"))
+register(SamplerPolicy(
+    "quant-fp8", compression="none", kv_quant="fp8",
+    geometry=_dense_geometry, budget_schedule=_dense_schedule,
+    description="dense geometry, fp8-e4m3 quantized paged pool"))
+
+
+def policy_for_scfg(scfg: SparseRLConfig, kv_quant: str = "none"
+                    ) -> SamplerPolicy:
+    """Reverse-map resolved config fields to their registry entry (the hook
+    legacy call sites — ``rollout_slots`` — route geometry through)."""
+    return resolve_policy(legacy_policy_name(scfg.compression, kv_quant))
+
+
+def legacy_policy_name(compression: str, kv_quant: str = "none") -> str:
+    """Deprecation shim: the pre-registry ``--compression``/``--kv-quant``
+    flag pair, mapped to the policy that resolves to *exactly* those values
+    (pinned bitwise-identical by tests/matrix/test_registry.py)."""
+    if kv_quant not in KV_QUANTS:
+        raise ValueError(f"unknown kv_quant {kv_quant!r}; choose from {KV_QUANTS}")
+    if kv_quant != "none":
+        if compression != "none":
+            raise ValueError(
+                f"kv_quant={kv_quant!r} composes only with compression='none' "
+                f"(the quantized pool is the sole policy gap) — got "
+                f"compression={compression!r}")
+        return f"quant-{kv_quant}"
+    if compression == "none":
+        return "dense"
+    if compression not in COMPRESSIONS:
+        raise ValueError(
+            f"unknown compression {compression!r}; choose from {COMPRESSIONS}")
+    return compression
+
+
+def resolve_cli_policy(sampler_policy, compression, kv_quant, *,
+                       default_compression: str) -> SamplerPolicy:
+    """CLI deprecation shim shared by the train/serve launchers.
+
+    ``--sampler-policy`` wins when given (mixing it with a legacy flag is a
+    config error — silent precedence would mask a typo).  Otherwise the
+    legacy ``--compression``/``--kv-quant`` pair (None = flag not passed,
+    falling back to its historical default) aliases through
+    :func:`legacy_policy_name` — the resolved policy rewrites the config to
+    the exact same field values, so legacy invocations stay
+    bitwise-identical (pinned by tests/matrix/test_registry.py).
+    """
+    if sampler_policy is not None:
+        if compression is not None or kv_quant is not None:
+            raise ValueError(
+                "--sampler-policy cannot be combined with the legacy "
+                "--compression/--kv-quant flags")
+        return resolve_policy(sampler_policy)
+    if compression is not None or kv_quant is not None:
+        import sys
+
+        print("[deprecated] --compression/--kv-quant: prefer "
+              "--sampler-policy <name> (same behavior, registry-resolved)",
+              file=sys.stderr)
+    return resolve_policy(legacy_policy_name(
+        compression if compression is not None else default_compression,
+        kv_quant if kv_quant is not None else "none"))
+
+
+def validate_engine_config(scfg: SparseRLConfig, *, kv_quant: str = "none",
+                           cache_backend: str = "contiguous",
+                           family: str = DENSE) -> SamplerPolicy:
+    """THE engine-config validator (deduplicates the checks that used to be
+    scattered through ``ContinuousEngine.__init__``).  Raises ValueError on
+    every illegal combination; returns the resolved policy otherwise."""
+    if cache_backend not in CACHE_BACKENDS:
+        raise ValueError(
+            f"unknown cache_backend {cache_backend!r}; choose from {CACHE_BACKENDS}")
+    if kv_quant not in KV_QUANTS:
+        raise ValueError(
+            f"unknown kv_quant {kv_quant!r}; choose from {KV_QUANTS}")
+    if scfg.compression not in COMPRESSIONS:
+        raise ValueError(
+            f"unknown compression {scfg.compression!r}; choose from {COMPRESSIONS}")
+    if kv_quant != "none" and not (cache_backend == "paged"
+                                   and scfg.compression == "none"
+                                   and family in POOL_FAMILIES):
+        raise ValueError(
+            f"kv_quant={kv_quant!r} requires the paged pool backend "
+            f"(cache_backend='paged', compression='none', dense family)"
+            f" — got cache_backend={cache_backend!r}, "
+            f"compression={scfg.compression!r}, family={family!r}")
+    return policy_for_scfg(scfg, kv_quant)

@@ -41,6 +41,7 @@ sync trainer.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 from dataclasses import dataclass
 from functools import partial
@@ -64,6 +65,8 @@ from repro.rollout import (
     generate,
     paged_rollout_geometry,
     rescore,
+    resolve_policy,
+    validate_engine_config,
 )
 from repro.rewards import binary_rewards
 
@@ -80,6 +83,14 @@ class TrainerOptions:
     # -- rollout backend (DESIGN.md §Training on the continuous engine) --
     rollout_backend: str = "lockstep"   # "lockstep" | "continuous"
     cache_backend: str = "contiguous"   # continuous only: "contiguous"|"paged"
+    sampler_policy: Optional[str] = None  # registry name (rollout.policies):
+                                   # resolves scfg.compression + kv_quant in
+                                   # one shot ("dense", "rkv", "per_head",
+                                   # "adaptive", "quant-int8", ...).  None
+                                   # keeps the legacy compression/kv_quant
+                                   # pair (aliased through the same registry
+                                   # — bitwise-identical, pinned by
+                                   # tests/matrix/test_registry.py)
     decode_batch: int = 0          # continuous: engine row slots (0 = auto:
                                    # half the phase's requests, >= G)
     decode_chunk: int = 4          # continuous: steps between host harvests
@@ -116,6 +127,21 @@ class Trainer:
     def __init__(self, cfg: ModelConfig, scfg: SparseRLConfig,
                  tcfg: TrainConfig, opts: TrainerOptions,
                  rng: Optional[jax.Array] = None):
+        if opts.sampler_policy is not None:
+            # the registry entry owns the (compression, kv_quant) pair; any
+            # explicit legacy kv_quant option is superseded
+            pol = resolve_policy(opts.sampler_policy)
+            scfg = pol.apply(scfg)
+            opts = dataclasses.replace(opts, kv_quant=pol.kv_quant)
+        # registry-level validation (one home for every illegal combination;
+        # DESIGN.md §Sampler policy registry).  Lockstep/contiguous runs
+        # validate against their actual backend too.
+        validate_engine_config(
+            scfg, kv_quant=opts.kv_quant,
+            cache_backend=(opts.cache_backend
+                           if opts.rollout_backend == "continuous"
+                           else "contiguous"),
+            family=cfg.family)
         self.cfg, self.scfg, self.tcfg, self.opts = cfg, scfg, tcfg, opts
         self.m = get_model(cfg)
         self.tok = TOKENIZER

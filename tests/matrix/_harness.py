@@ -1,0 +1,165 @@
+"""Scenario-matrix conformance harness: sampler policy x arch x length-dist.
+
+Every cell pushes one RL rollout phase through the continuous engine (paged
+backend, so the allocator leak check is armed at ``end_phase``) and asserts
+that cell's contract (tests/matrix/test_matrix.py):
+
+  * identity-class cells — ``policy.is_dense``, or an SSM family whose
+    recurrent state has no KV cache to compress — are pinned token-identical
+    to the dense lockstep oracle, with mismatch KL at numerical noise;
+  * sparse cells assert the Sparse-RL correction invariants instead: finite
+    length-masked mismatch KL, a genuinely nonzero policy gap, the rejection
+    mask firing under a tight eps, and a finite loss;
+  * quantized-pool cells additionally check the capacity payoff.
+
+Cells share compiled programs aggressively: model params are cached per
+arch, engine + lockstep server per (arch, policy), and the phase run per
+(arch, policy, plen_dist) — the two length-dist cells of a policy reuse one
+engine.  Per-cell results are collected and written to
+``reports/matrix_cells.json`` at session end (the CI artifact).
+"""
+from __future__ import annotations
+
+import os
+from dataclasses import replace
+
+import jax
+import numpy as np
+
+REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", ".."))
+
+# matrix axes -----------------------------------------------------------
+ARCHS = {"transformer": "qwen2.5-14b",   # dense family, paged pool applies
+         "hybrid": "zamba2-1.2b",        # attn every 2 layers + ssm blocks
+         "ssm": "mamba2-370m"}           # no KV cache: compression == noop
+MAIN_POLICIES = ("dense", "rkv", "per_head", "adaptive")
+QUANT_POLICIES = ("quant-int8", "quant-fp8")   # pool families only
+PLEN_DISTS = ("fixed", "mixed")
+
+# workload: small enough for CPU CI, large enough that the sparse budget
+# (cache_slots = 8 + 4 = 12 < prompt 12 + new 6) genuinely evicts
+N_PROMPTS, GROUP, PROMPT_LEN, MAX_NEW = 2, 2, 12, 6
+BATCH, DECODE_CHUNK, BLOCK_SIZE = 2, 2, 4
+TOTAL = N_PROMPTS * GROUP
+
+
+def base_scfg():
+    from repro.configs import SparseRLConfig
+
+    return SparseRLConfig(kv_budget=8, kv_buffer=4, obs_window=4,
+                          num_sinks=2, group_size=GROUP,
+                          max_new_tokens=MAX_NEW,
+                          reasoning_head_frac=0.5,
+                          adaptive_min_frac=0.3, adaptive_decay_tokens=8)
+
+
+_CTX, _SRV, _RUNS = {}, {}, {}
+
+
+def arch_ctx(arch_key: str):
+    """(cfg, mfns, params) per arch — params init is the slow part."""
+    if arch_key not in _CTX:
+        from repro.configs import get_config
+        from repro.models import get_model
+
+        cfg = get_config(ARCHS[arch_key]).smoke()
+        m = get_model(cfg)
+        params = m.init_params(cfg, jax.random.PRNGKey(0))
+        _CTX[arch_key] = (cfg, m, params)
+    return _CTX[arch_key]
+
+
+def phase_requests(plen_dist: str, seed: int = 7):
+    """Group-major phase workload; "mixed" spreads prompt lengths exactly
+    like the serve CLI / rollout bench (full / half / quarter)."""
+    from repro.data import encode_prompts, make_problems
+    from repro.launch.serve import mix_prompt_lengths
+    from repro.rollout import Request
+
+    problems = make_problems(N_PROMPTS, seed, "easy")
+    ids, mask, _ = encode_prompts(problems, PROMPT_LEN)
+    prompts = mix_prompt_lengths(
+        [ids[i][mask[i]] for i in range(N_PROMPTS)], seed, plen_dist)
+    rng = np.random.default_rng(seed + 1)
+    caps = rng.choice([2, MAX_NEW // 2, MAX_NEW], size=TOTAL, p=[0.3, 0.3, 0.4])
+    return [Request(uid=u, prompt=prompts[u // GROUP],
+                    max_new_tokens=int(caps[u]))
+            for u in range(TOTAL)]
+
+
+def cell_policy(name: str):
+    from repro.rollout import resolve_policy
+
+    return resolve_policy(name)
+
+
+def run_cell(arch_key: str, policy_name: str, plen_dist: str):
+    """One matrix cell: continuous-paged phase + same-scfg lockstep oracle +
+    dense rescore.  Cached per (arch, policy, plen_dist); the engine and the
+    lockstep server are reused across the two length-dist cells."""
+    key = (arch_key, policy_name, plen_dist)
+    if key in _RUNS:
+        return _RUNS[key]
+    from repro.data import TOKENIZER
+    from repro.rollout import (
+        ContinuousEngine,
+        LockstepServer,
+        build_train_rollout,
+        mismatch_kl_estimate,
+        rescore,
+    )
+
+    cfg, m, params = arch_ctx(arch_key)
+    pol = cell_policy(policy_name)
+    scfg = pol.apply(base_scfg())
+    skey = (arch_key, policy_name)
+    if skey not in _SRV:
+        eng = ContinuousEngine(params, cfg, m, scfg, batch_size=BATCH,
+                               prompt_len=PROMPT_LEN, max_new_tokens=MAX_NEW,
+                               eos_id=TOKENIZER.eos_id,
+                               decode_chunk=DECODE_CHUNK, seed=11,
+                               cache_backend="paged", block_size=BLOCK_SIZE,
+                               kv_quant=pol.kv_quant)
+        lock = (None if pol.kv_quant != "none" else
+                LockstepServer(params, cfg, m, scfg, batch_size=TOTAL,
+                               prompt_len=PROMPT_LEN, max_new_tokens=MAX_NEW,
+                               eos_id=TOKENIZER.eos_id, seed=11))
+        _SRV[skey] = (eng, lock)
+    eng, srv = _SRV[skey]
+
+    reqs = phase_requests(plen_dist)
+    eng.begin_phase()
+    cont = eng.run(reqs, group_size=GROUP)
+    stats = eng.end_phase()            # leak check armed in every cell
+    lock = srv.run(reqs) if srv is not None else None
+
+    ids = np.zeros((TOTAL, PROMPT_LEN), np.int32)
+    pmask = np.zeros((TOTAL, PROMPT_LEN), bool)
+    for r in reqs:
+        p = np.asarray(r.prompt, np.int32)
+        ids[r.uid, PROMPT_LEN - len(p):] = p
+        pmask[r.uid, PROMPT_LEN - len(p):] = True
+    tr = build_train_rollout(cont, ids, pmask, max_new_tokens=MAX_NEW,
+                             pad_id=eng.pad_id, stats=stats)
+    logp_old = rescore(params, cfg, m, tr.rollout)
+    kl = float(mismatch_kl_estimate(logp_old, tr.rollout.logp_sparse,
+                                    tr.rollout.resp_mask,
+                                    lengths=tr.rollout.lengths))
+    out = dict(cfg=cfg, params=params, mfns=m, scfg=scfg, policy=pol,
+               cont=cont, lock=lock, tr=tr, logp_old=np.asarray(logp_old),
+               stats=stats, mismatch_kl=kl)
+    _RUNS[key] = out
+    return out
+
+
+def identity_class(policy, cfg) -> bool:
+    """True when the cell must be token-identical to the dense oracle:
+    the dense/quant-geometry identity policies, or an SSM family whose
+    decode state is recurrent (no KV cache for any policy to touch)."""
+    from repro.configs.base import SSM
+
+    return bool(policy.is_dense) or cfg.family == SSM
+
+
+def tight_scfg(scfg, eps: float = 0.999):
+    return replace(scfg, rejection_eps=eps, reject=True)

@@ -1,0 +1,31 @@
+"""Fixtures for the scenario-matrix harness (cell table -> CI artifact).
+
+The heavy lifting (per-arch contexts, cached cell runs, contracts) lives in
+tests/matrix/_harness.py; this conftest only collects per-cell result rows
+and writes ``reports/matrix_cells.json`` at session end so CI can upload a
+machine-readable table of every cell that ran.
+"""
+import json
+import os
+
+import pytest
+
+from _harness import REPO
+
+_CELLS = []
+
+
+@pytest.fixture
+def record_cell():
+    def _rec(**row):
+        _CELLS.append(row)
+    return _rec
+
+
+def pytest_sessionfinish(session, exitstatus):
+    if not _CELLS:
+        return
+    path = os.path.join(REPO, "reports", "matrix_cells.json")
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(_CELLS, f, indent=1)

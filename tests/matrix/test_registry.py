@@ -1,0 +1,226 @@
+"""Sampler-policy registry contracts: resolution, geometry round-trips,
+legacy-flag bitwise identity, schedules, and the single engine-config
+validator (every illegal combination raises)."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import SparseRLConfig, get_config
+from repro.configs.base import DENSE, HYBRID, SSM
+from repro.rollout import (
+    POLICIES,
+    SamplerPolicy,
+    legacy_policy_name,
+    policy_for_scfg,
+    resolve_policy,
+    validate_engine_config,
+)
+from repro.rollout.engine import paged_rollout_geometry, rollout_slots
+from repro.rollout.policies import policy_names, register, resolve_cli_policy
+
+from _harness import base_scfg
+
+P, T = 12, 6
+
+
+# -- resolution ---------------------------------------------------------
+def test_registry_resolves_at_least_six_policies():
+    names = policy_names()
+    assert len(names) >= 6
+    for expect in ("dense", "rkv", "snapkv", "h2o", "streaming", "per_head",
+                   "adaptive", "quant-int8", "quant-fp8"):
+        assert expect in names
+        assert resolve_policy(expect) is POLICIES[expect]
+
+
+def test_unknown_policy_and_duplicate_register_raise():
+    with pytest.raises(KeyError, match="unknown sampler policy"):
+        resolve_policy("nope")
+    with pytest.raises(ValueError, match="duplicate"):
+        register(SamplerPolicy("dense", compression="none"))
+
+
+def test_identity_flags():
+    assert resolve_policy("dense").is_dense
+    for name in policy_names():
+        if name != "dense":
+            assert not resolve_policy(name).is_dense
+
+
+# -- geometry round-trip (satellite: no magic slot constants) -----------
+@pytest.mark.parametrize("name", sorted(policy_names()))
+def test_geometry_roundtrips_through_rollout_slots(name):
+    pol = resolve_policy(name)
+    scfg = pol.apply(base_scfg())
+    slots = rollout_slots(scfg, P, T)
+    assert slots == pol.geometry(scfg, P, T, 0)
+    if pol.kv_quant == "none":      # reverse map needs the kv_quant hint
+        assert policy_for_scfg(scfg).geometry is pol.geometry
+    seq, blocks = paged_rollout_geometry(scfg, P, T, block_size=4)
+    assert seq == slots and blocks == -(-slots // 4)
+    if name in ("dense", "per_head", "quant-int8", "quant-fp8"):
+        # dense-sized: prompt + new + headroom, workload-dependent
+        assert slots == P + T + 8
+        assert rollout_slots(scfg, P, T, prefix_len=5) == slots + 5
+    else:
+        # budget-sized: workload-independent fixed budget
+        assert slots == scfg.cache_slots
+        assert rollout_slots(scfg, 2 * P, 2 * T) == slots
+
+
+# -- budget schedules ---------------------------------------------------
+def test_adaptive_schedule_monotone_and_floored():
+    pol = resolve_policy("adaptive")
+    scfg = base_scfg()      # decay_tokens=8, min_frac=0.3, floor=2+4
+    budgets = [int(pol.budget_schedule(scfg, p)) for p in range(0, 24)]
+    assert budgets[0] == scfg.cache_slots
+    assert all(a >= b for a, b in zip(budgets, budgets[1:]))
+    floor = scfg.num_sinks + scfg.obs_window
+    assert budgets[-1] >= floor
+    assert budgets[-1] < budgets[0]
+    # past the decay horizon the schedule is flat at its terminal value
+    assert budgets[scfg.adaptive_decay_tokens] == budgets[-1]
+
+
+def test_flat_and_per_head_schedules():
+    scfg = base_scfg()
+    assert resolve_policy("rkv").budget_schedule(scfg, 0) == scfg.cache_slots
+    assert (resolve_policy("rkv").budget_schedule(scfg, 10 ** 6)
+            == scfg.cache_slots)
+    # per_head reports the compressed-head (worst-case) budget
+    ph = resolve_policy("per_head").budget_schedule(scfg, 0)
+    assert ph == max(scfg.kv_budget, scfg.num_sinks + scfg.obs_window)
+
+
+# -- legacy-flag deprecation shim --------------------------------------
+def test_legacy_policy_name_mapping():
+    assert legacy_policy_name("none") == "dense"
+    assert legacy_policy_name("rkv") == "rkv"
+    assert legacy_policy_name("per_head") == "per_head"
+    assert legacy_policy_name("none", "int8") == "quant-int8"
+    assert legacy_policy_name("none", "fp8") == "quant-fp8"
+    with pytest.raises(ValueError, match="unknown compression"):
+        legacy_policy_name("zip")
+    with pytest.raises(ValueError, match="unknown kv_quant"):
+        legacy_policy_name("none", "int4")
+    with pytest.raises(ValueError, match="composes only"):
+        legacy_policy_name("rkv", "int8")
+
+
+def test_resolve_cli_policy_shim(capsys):
+    # --sampler-policy wins; mixing with legacy flags is a config error
+    assert resolve_cli_policy("per_head", None, None,
+                              default_compression="rkv").name == "per_head"
+    with pytest.raises(ValueError, match="cannot be combined"):
+        resolve_cli_policy("dense", "rkv", None, default_compression="rkv")
+    with pytest.raises(ValueError, match="cannot be combined"):
+        resolve_cli_policy("dense", None, "int8", default_compression="rkv")
+    # no flags at all -> the launcher's historical default, no warning
+    assert resolve_cli_policy(None, None, None,
+                              default_compression="rkv").name == "rkv"
+    assert "deprecated" not in capsys.readouterr().err
+    # legacy flags alias through the registry, with a deprecation note
+    assert resolve_cli_policy(None, "none", None,
+                              default_compression="rkv").name == "dense"
+    assert resolve_cli_policy(None, None, "int8",
+                              default_compression="none"
+                              ).name == "quant-int8"
+    assert "deprecated" in capsys.readouterr().err
+
+
+def test_legacy_flags_bitwise_identical_rollouts():
+    """The pin the deprecation shim advertises: a legacy
+    ``compression=...`` config and the registry policy it aliases to must
+    produce the SAME rollout, token for token and logp-bit for logp-bit."""
+    from repro.data import TOKENIZER, encode_prompts, make_problems
+    from repro.rollout import ContinuousEngine, Request
+
+    cfg = get_config("qwen2.5-14b").smoke()
+    from repro.models import get_model
+
+    m = get_model(cfg)
+    params = m.init_params(cfg, jax.random.PRNGKey(0))
+    problems = make_problems(3, 5, "easy")
+    ids, mask, _ = encode_prompts(problems, P)
+    reqs = [Request(uid=i, prompt=ids[i][mask[i]], max_new_tokens=T)
+            for i in range(3)]
+
+    for compression, kv_quant in (("rkv", "none"), ("none", "int8")):
+        legacy_scfg = dataclasses.replace(base_scfg(),
+                                          compression=compression)
+        pol = resolve_policy(legacy_policy_name(compression, kv_quant))
+        pol_scfg = pol.apply(base_scfg())
+        assert pol_scfg == legacy_scfg          # identical resolved fields
+        assert pol.kv_quant == kv_quant
+        outs = []
+        for scfg, q in ((legacy_scfg, kv_quant), (pol_scfg, pol.kv_quant)):
+            eng = ContinuousEngine(params, cfg, m, scfg, batch_size=3,
+                                   prompt_len=P, max_new_tokens=T,
+                                   eos_id=TOKENIZER.eos_id, decode_chunk=2,
+                                   seed=9, cache_backend="paged",
+                                   block_size=4, kv_quant=q)
+            outs.append(eng.run(reqs))
+            eng.end_phase()
+        for a, b in zip(*outs):
+            np.testing.assert_array_equal(a.tokens, b.tokens)
+            np.testing.assert_array_equal(np.asarray(a.logps),
+                                          np.asarray(b.logps))   # bitwise
+
+
+# -- the single engine-config validator (satellite: dedup) --------------
+def test_validate_accepts_every_registered_policy_somewhere():
+    for name in policy_names():
+        pol = resolve_policy(name)
+        pol.validate(cache_backend="paged",
+                     family=DENSE)              # must not raise
+
+
+ILLEGAL = [
+    # (scfg-compression, kv_quant, backend, family, match)
+    ("zip", "none", "contiguous", DENSE, "unknown compression"),
+    ("none", "int4", "paged", DENSE, "unknown kv_quant"),
+    ("none", "none", "ring", DENSE, "unknown cache_backend"),
+    ("rkv", "int8", "paged", DENSE, "requires the paged pool"),
+    ("none", "int8", "contiguous", DENSE, "requires the paged pool"),
+    ("none", "fp8", "paged", SSM, "requires the paged pool"),
+    ("none", "int8", "paged", HYBRID, "requires the paged pool"),
+]
+
+
+@pytest.mark.parametrize("compression,kv_quant,backend,family,match",
+                         ILLEGAL)
+def test_validate_rejects_illegal_combination(compression, kv_quant,
+                                              backend, family, match):
+    scfg = dataclasses.replace(SparseRLConfig(), compression=compression)
+    with pytest.raises(ValueError, match=match):
+        validate_engine_config(scfg, kv_quant=kv_quant,
+                               cache_backend=backend, family=family)
+
+
+def test_engine_and_trainer_reject_through_the_same_validator():
+    """ContinuousEngine.__init__ and Trainer.__init__ both route through
+    validate_engine_config — the same message for the same illegal combo."""
+    from repro.data import TOKENIZER
+    from repro.models import get_model
+
+    cfg = get_config("qwen2.5-14b").smoke()
+    m = get_model(cfg)
+    params = m.init_params(cfg, jax.random.PRNGKey(0))
+    scfg = SparseRLConfig(compression="rkv")
+    from repro.rollout import ContinuousEngine
+
+    with pytest.raises(ValueError, match="requires the paged pool"):
+        ContinuousEngine(params, cfg, m, scfg, batch_size=2, prompt_len=P,
+                         max_new_tokens=T, eos_id=TOKENIZER.eos_id,
+                         cache_backend="paged", kv_quant="int8")
+
+    from repro.configs import TrainConfig
+    from repro.runtime import Trainer, TrainerOptions
+
+    with pytest.raises(ValueError, match="requires the paged pool"):
+        Trainer(cfg, scfg, TrainConfig(checkpoint_every=0),
+                TrainerOptions(rollout_backend="continuous",
+                               cache_backend="contiguous",
+                               kv_quant="int8"))

@@ -45,10 +45,31 @@ def _quant_rows():
     return [_qrow("none", capacity_ratio=1.0), _qrow("int8"), _qrow("fp8")]
 
 
+def _mrow(policy="per_head", plen_dist="fixed", speedup=0.9, **kw):
+    """Sampler-matrix cell: sparse cells carry NO 'identical' field (their
+    tokens legitimately diverge from the dense oracle) and no lockstep
+    speedup floor (default speedup < 1 encodes both)."""
+    return dict(policy=policy, arch="qwen2.5-14b", plen_dist=plen_dist,
+                group_size=4, speedup=speedup, **kw)
+
+
+def _matrix_rows():
+    return [_mrow("per_head", "fixed", identical=True),
+            _mrow("per_head", "mixed", identical=True),
+            _mrow("adaptive", "fixed", identical=True),
+            _mrow("adaptive", "mixed", identical=True),
+            _mrow("quant-int8", "mixed", kv_quant="int8",
+                  capacity_ratio=3.9),
+            _mrow("rkv", "train", reward_nondegrading=True),
+            _mrow("per_head", "train", reward_nondegrading=True),
+            _mrow("adaptive", "train", reward_nondegrading=True)]
+
+
 def _full(speedups=(1.2, 1.2, 1.2), identical=True, async_rows=None,
-          quant_rows=None):
+          quant_rows=None, matrix_rows=None):
     s_cl, s_pp, s_rp = speedups
     qr = quant_rows if quant_rows is not None else _quant_rows()
+    mr = matrix_rows if matrix_rows is not None else _matrix_rows()
     serving = {"continuous_vs_lockstep_smoke": [_row(s_cl)],
                "paged_prefix_smoke": [_row(s_pp)],
                "paged_quant_smoke": qr}
@@ -61,7 +82,9 @@ def _full(speedups=(1.2, 1.2, 1.2), identical=True, async_rows=None,
                "rollout_async": [_arow(max_lag=0, identical=True),
                                  _arow(max_lag=1)],
                "rollout_quant_smoke": qr,
-               "rollout_quant": _quant_rows()}
+               "rollout_quant": _quant_rows(),
+               "rollout_matrix_smoke": mr,
+               "rollout_matrix": _matrix_rows()}
     return serving, rollout
 
 
@@ -146,16 +169,18 @@ def test_gate_ignores_key_fields_unknown_to_old_baselines(tmp_path):
     async_full = _full()[1]["rollout_async"]
     quant = dict((k, _quant_rows()) for k in ("rollout_quant_smoke",
                                               "rollout_quant"))
+    matrix = dict((k, _matrix_rows()) for k in ("rollout_matrix_smoke",
+                                                "rollout_matrix"))
     old_rollout = {"rollout_phase_smoke": [_row(2.0)],       # no plen_dist
                    "rollout_phase": [_row(1.4)],
                    "rollout_async_smoke": async_rows,
-                   "rollout_async": async_full, **quant}
+                   "rollout_async": async_full, **quant, **matrix}
     _write(tmp_path / "committed", serving, old_rollout)
     fresh_row = dict(_row(1.0), plen_dist="mixed")           # -50% regression
     new_rollout = {"rollout_phase_smoke": [fresh_row],
                    "rollout_phase": [dict(_row(1.4), plen_dist="mixed")],
                    "rollout_async_smoke": async_rows,
-                   "rollout_async": async_full, **quant}
+                   "rollout_async": async_full, **quant, **matrix}
     _write(tmp_path / "fresh", serving, new_rollout)
     problems = bench_gate.gate(tmp_path / "committed", tmp_path / "fresh",
                                0.35)
@@ -165,7 +190,7 @@ def test_gate_ignores_key_fields_unknown_to_old_baselines(tmp_path):
                                         dict(_row(1.1), plen_dist="mixed")],
                 "rollout_phase": [dict(_row(1.4), plen_dist="mixed")],
                 "rollout_async_smoke": async_rows,
-                "rollout_async": async_full, **quant}
+                "rollout_async": async_full, **quant, **matrix}
     _write(tmp_path / "committed2", serving, new_base)
     assert bench_gate.gate(tmp_path / "committed2", tmp_path / "fresh",
                            0.35) == []
@@ -315,3 +340,87 @@ def test_gate_async_speedup_tolerance_bands_once_baseline_exists(tmp_path):
                                0.35)
     assert len(problems) == 1 and "regressed" in problems[0] \
         and "rollout_async" in problems[0]
+
+
+def test_gate_matrix_sparse_cells_carry_no_identity_bound(tmp_path):
+    """Sparse matrix cells (per_head/adaptive, the quant cell) carry no
+    'identical' field and speedup < 1.0 — neither may trip the gate: the
+    hard identity bound only bites where a row opts in, and matrix cells
+    have no lockstep floor (they trade FLOPs for memory by design)."""
+    rows = [_mrow("per_head", "fixed", speedup=0.7),
+            _mrow("adaptive", "mixed", speedup=0.6),
+            _mrow("quant-int8", "mixed", kv_quant="int8",
+                  capacity_ratio=3.9, speedup=0.5),
+            _mrow("per_head", "train", reward_nondegrading=True)]
+    _write(tmp_path / "fresh", *_full(matrix_rows=rows))
+    assert bench_gate.gate(tmp_path / "missing", tmp_path / "fresh",
+                           0.35) == []
+
+
+def test_gate_matrix_reward_degradation_is_hard_bound(tmp_path):
+    """A matrix trainer cell with reward_nondegrading=false fails even with
+    no committed baseline — a sparse sampler policy that destabilizes
+    training is a bug regardless of its memory win."""
+    rows = _matrix_rows()[:-1] + [
+        _mrow("adaptive", "train", reward_nondegrading=False,
+              reward_first_half=0.3, reward_second_half=0.02)]
+    _write(tmp_path / "fresh", *_full(matrix_rows=rows))
+    problems = bench_gate.gate(tmp_path / "missing", tmp_path / "fresh",
+                               0.35)
+    assert any("reward degraded" in p and "rollout_matrix" in p
+               for p in problems)
+
+
+def test_gate_matrix_identity_cells_still_pin(tmp_path):
+    """A matrix cell that DOES declare identical (the scheduler contract on
+    non-quant cells) is hard-gated like every other identity row."""
+    rows = [_mrow("per_head", "fixed", identical=False)] + _matrix_rows()[1:]
+    _write(tmp_path / "fresh", *_full(matrix_rows=rows))
+    problems = bench_gate.gate(tmp_path / "missing", tmp_path / "fresh",
+                               0.35)
+    assert any("token-identical" in p and "rollout_matrix" in p
+               for p in problems)
+
+
+def test_gate_matrix_quant_cell_capacity_floor(tmp_path):
+    rows = _matrix_rows()
+    rows[4] = _mrow("quant-int8", "mixed", kv_quant="int8",
+                    capacity_ratio=1.2)
+    _write(tmp_path / "fresh", *_full(matrix_rows=rows))
+    problems = bench_gate.gate(tmp_path / "missing", tmp_path / "fresh",
+                               0.35)
+    assert any("effective-KV-capacity" in p and "rollout_matrix" in p
+               for p in problems)
+
+
+def test_gate_matrix_speedup_tolerance_bands_once_baseline_exists(tmp_path):
+    """Matrix cells pair on (policy, arch, plen_dist); a steps/s collapse
+    beyond the band is flagged once a baseline carries the rows."""
+    base = _matrix_rows()
+    _write(tmp_path / "committed", *_full(matrix_rows=base))
+    fresh = [dict(r) for r in base]
+    fresh[0] = dict(base[0], speedup=base[0]["speedup"] * 0.4)
+    _write(tmp_path / "fresh", *_full(matrix_rows=fresh))
+    problems = bench_gate.gate(tmp_path / "committed", tmp_path / "fresh",
+                               0.35)
+    assert len(problems) == 1 and "regressed" in problems[0] \
+        and "rollout_matrix" in problems[0]
+
+
+def test_gate_old_baseline_without_matrix_rows_still_gates(tmp_path):
+    """A committed baseline predating the matrix sections must not disable
+    gating: bad fresh matrix rows still hit the hard bounds, and a clean
+    fresh run passes against the same old baseline."""
+    serving, rollout = _full()
+    old_rollout = {k: v for k, v in rollout.items()
+                   if not k.startswith("rollout_matrix")}
+    _write(tmp_path / "committed", serving, old_rollout)
+    bad = _matrix_rows()[:-1] + [
+        _mrow("adaptive", "train", reward_nondegrading=False)]
+    _write(tmp_path / "fresh", *_full(matrix_rows=bad))
+    problems = bench_gate.gate(tmp_path / "committed", tmp_path / "fresh",
+                               0.35)
+    assert any("reward degraded" in p for p in problems)
+    _write(tmp_path / "fresh2", *_full())
+    assert bench_gate.gate(tmp_path / "committed", tmp_path / "fresh2",
+                           0.35) == []

@@ -402,3 +402,80 @@ def test_budget_attention_matches_cache_attend():
                                       interpret=True)
     np.testing.assert_allclose(o_prod, o_kern, **TOL32)
     np.testing.assert_allclose(p_prod, p_kern, **TOL32)
+
+
+@pytest.mark.parametrize("Dh", [4, 8, 32, 128])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_budget_attention_head_dim_sweep(Dh, dtype):
+    """head_dim axis of the sweep: tiny (4) through flash-width (128) lanes
+    must all match the oracle — the VMEM tile is (S, Dh) so odd widths
+    exercise the non-128 padding path."""
+    B, Hq, Hkv, S = 2, 4, 2, 24
+    rng = np.random.default_rng(Dh)
+    q = _mk(rng, (B, Hq, Dh), dtype)
+    k = _mk(rng, (B, Hkv, S, Dh), dtype)
+    v = _mk(rng, (B, Hkv, S, Dh), dtype)
+    pos = jnp.asarray(rng.integers(-1, 50, (B, Hkv, S)), jnp.int32)
+    pos = pos.at[:, :, 0].set(0)
+    o, p = budget_attention(q, k, v, pos, interpret=True)
+    o_ref, p_ref = ref.budget_attention_ref(q, k, v, pos)
+    tol = TOL if dtype == jnp.bfloat16 else TOL32
+    np.testing.assert_allclose(np.asarray(o, jnp.float32),
+                               np.asarray(o_ref, jnp.float32), **tol)
+    np.testing.assert_allclose(p, p_ref, **tol)
+
+
+@pytest.mark.parametrize("budgets", [(1, 24), (3, 7), (24, 24), (1, 1)])
+def test_budget_attention_ragged_per_head_budgets(budgets):
+    """Per-kv-head budget raggedness (the per_head policy's live regime):
+    head 0 keeps ``budgets[0]`` valid slots, head 1 keeps ``budgets[1]`` —
+    down to a single survivor.  Invalid (pos < 0) slots must contribute
+    exactly zero attention mass and zero pooled probability."""
+    B, Hq, Hkv, S, Dh = 2, 4, 2, 24, 16
+    rng = np.random.default_rng(sum(budgets))
+    q = _mk(rng, (B, Hq, Dh), jnp.float32)
+    k = _mk(rng, (B, Hkv, S, Dh), jnp.float32)
+    v = _mk(rng, (B, Hkv, S, Dh), jnp.float32)
+    pos = jnp.asarray(rng.integers(0, 50, (B, Hkv, S)), jnp.int32)
+    for h, budget in enumerate(budgets):
+        pos = pos.at[:, h, budget:].set(-1)      # slots past the budget die
+    o, p = budget_attention(q, k, v, pos, interpret=True)
+    o_ref, p_ref = ref.budget_attention_ref(q, k, v, pos)
+    np.testing.assert_allclose(o, o_ref, **TOL32)
+    np.testing.assert_allclose(p, p_ref, **TOL32)
+    p = np.asarray(p)
+    for h, budget in enumerate(budgets):
+        assert np.all(p[:, h, budget:] == 0.0)          # no mass on dead slots
+        np.testing.assert_allclose(p[:, h, :budget].sum(-1),
+                                   np.full(B, float(Hq // Hkv)), **TOL32)
+
+
+def test_budget_attention_after_enforce_budget():
+    """End-to-end with the budget-enforcement pass (per_head policy): the
+    kernel on an ``enforce_budget``-invalidated cache must equal the oracle
+    on the same cache, and compressed heads must only draw mass from their
+    surviving slots."""
+    from repro.configs import SparseRLConfig
+    from repro.kvcache import append, decode_budgets, enforce_budget, init_cache
+
+    scfg = SparseRLConfig(kv_budget=4, kv_buffer=2, obs_window=2,
+                          num_sinks=1, compression="per_head",
+                          reasoning_head_frac=0.5)
+    B, H, D = 2, 4, 16
+    rng = np.random.default_rng(9)
+    cache = init_cache(B, H, 24, D, jnp.float32)
+    for t in range(20):
+        kx = jnp.asarray(rng.normal(size=(B, H, D)), jnp.float32)
+        cache = append(cache, kx, kx * 0.5, jnp.full((B,), t, jnp.int32),
+                       scfg)
+    cache = enforce_budget(cache, scfg, jnp.full((B,), 20, jnp.int32))
+    budgets = np.asarray(decode_budgets(scfg, H, 24,
+                                        jnp.full((B,), 20, jnp.int32)))
+    valid = (np.asarray(cache.pos) >= 0).sum(-1)         # (B, H) live slots
+    np.testing.assert_array_equal(valid, np.minimum(budgets, valid.max()))
+    q = jnp.asarray(rng.normal(size=(B, 4, D)), jnp.float32)
+    o, p = budget_attention(q, cache.k, cache.v, cache.pos, interpret=True)
+    o_ref, p_ref = ref.budget_attention_ref(q, cache.k, cache.v, cache.pos)
+    np.testing.assert_allclose(o, o_ref, **TOL32)
+    np.testing.assert_allclose(p, p_ref, **TOL32)
+    assert np.all(np.asarray(p)[np.asarray(cache.pos) < 0] == 0.0)

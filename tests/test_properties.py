@@ -157,3 +157,109 @@ def test_masked_mean_bounds(data):
     mm = masked_mean(x, mask)
     sel = np.asarray(x)[np.asarray(mask)]
     assert sel.min() - 1e-5 <= float(mm) <= sel.max() + 1e-5
+
+
+@settings(max_examples=30, deadline=None)
+@given(data=st.data())
+def test_property_lag0_reduces_to_sync_for_every_policy(data):
+    """At staleness lag 0 (logp_behave == logp_old bitwise) the async loss
+    must reduce to the sync objective EXACTLY — rho = exp(0) = 1.0 and
+    multiplying by the float 1.0 is exact in IEEE arithmetic — for every
+    registered sampler policy's resolved config (the loss is
+    policy-agnostic; this pins that no policy's config knobs break it)."""
+    from repro.rollout import policy_names, resolve_policy
+
+    name = data.draw(st.sampled_from(sorted(policy_names())))
+    scfg = resolve_policy(name).apply(SparseRLConfig())
+    B, T = 3, 5
+    rng = np.random.default_rng(data.draw(st.integers(0, 10**6)))
+    lt = jnp.asarray(rng.normal(-2, 3, (B, T)), jnp.float32)
+    lo = jnp.asarray(rng.normal(-2, 3, (B, T)), jnp.float32)
+    ls = jnp.asarray(rng.normal(-2, 3, (B, T)), jnp.float32)
+    adv = jnp.asarray(rng.normal(0, 2, (B,)), jnp.float32)
+    mask = jnp.asarray(rng.uniform(size=(B, T)) > 0.3)
+    sync = sparse_rl_loss(lt, lo, ls, adv, mask, scfg)
+    lag0 = sparse_rl_loss(lt, lo, ls, adv, mask, scfg, logp_behave=lo)
+    assert float(sync.loss) == float(lag0.loss)          # bitwise
+    g_sync = jax.grad(lambda x: sparse_rl_loss(
+        x, lo, ls, adv, mask, scfg).loss)(lt)
+    g_lag0 = jax.grad(lambda x: sparse_rl_loss(
+        x, lo, ls, adv, mask, scfg, logp_behave=lo).loss)(lt)
+    np.testing.assert_array_equal(np.asarray(g_sync), np.asarray(g_lag0))
+    assert float(lag0.metrics["mean_rho"]) == 1.0
+    assert float(lag0.metrics["staleness_kl"]) == 0.0
+
+
+@settings(max_examples=30, deadline=None)
+@given(data=st.data())
+def test_property_rho_clip_never_breaks_gradients(data):
+    """Staleness correction under arbitrary drift: rho is capped at
+    staleness_clip, so neither the loss nor its gradient may ever go
+    non-finite, no matter how far logp_behave drifts from logp_old."""
+    B, T = 2, 6
+    rng = np.random.default_rng(data.draw(st.integers(0, 10**6)))
+    scale = data.draw(st.floats(0.1, 50.0))
+    clip = data.draw(st.floats(1.001, 10.0))
+    lt = jnp.asarray(rng.normal(-2, scale, (B, T)), jnp.float32)
+    lo = jnp.asarray(rng.normal(-2, scale, (B, T)), jnp.float32)
+    ls = jnp.asarray(rng.normal(-2, scale, (B, T)), jnp.float32)
+    lb = jnp.asarray(rng.normal(-2, scale, (B, T)), jnp.float32)
+    adv = jnp.asarray(rng.normal(0, 2, (B,)), jnp.float32)
+    mask = jnp.asarray(rng.uniform(size=(B, T)) > 0.3)
+    scfg = SparseRLConfig(staleness_clip=clip)
+    out = sparse_rl_loss(lt, lo, ls, adv, mask, scfg, logp_behave=lb)
+    assert bool(jnp.isfinite(out.loss))
+    assert float(out.metrics["mean_rho"]) <= clip * (1 + 1e-5)
+    g = jax.grad(lambda x: sparse_rl_loss(
+        x, lo, ls, adv, mask, scfg, logp_behave=lb).loss)(lt)
+    assert bool(jnp.isfinite(g).all())
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    slots=st.integers(4, 12),
+    steps=st.integers(1, 40),
+    policy=st.sampled_from(["per_head", "adaptive"]),
+)
+def test_property_enforce_budget_invariants(policy, slots, steps):
+    """The scheduled/per-head budget pass, fuzzed: after ``enforce_budget``
+    every kv-head's live slots respect its ``decode_budgets`` bound,
+    survivors are a subset of the pre-enforcement entries, the protected
+    slots (sinks + newest) survive, k/v payloads and fill are untouched,
+    and the pass is idempotent."""
+    from repro.kvcache import decode_budgets, enforce_budget
+
+    S = 2 * slots            # dense-ish geometry, budget << slots
+    scfg = SparseRLConfig(kv_budget=slots, kv_buffer=0, obs_window=2,
+                          num_sinks=1, compression=policy,
+                          reasoning_head_frac=0.5,
+                          adaptive_min_frac=0.3, adaptive_decay_tokens=16)
+    B, H, D = 1, 2, 4
+    cache = init_cache(B, H, S, D, jnp.float32)
+    rng = np.random.default_rng(slots * 101 + steps)
+    for t in range(steps):
+        k = jnp.asarray(rng.normal(size=(B, H, D)), jnp.float32)
+        cache = append(cache, k, k, jnp.full((B,), t, jnp.int32), scfg)
+    before = np.asarray(cache.pos)
+    cur = jnp.full((B,), steps, jnp.int32)
+    out = enforce_budget(cache, scfg, cur)
+    pos = np.asarray(out.pos)
+    budgets = np.asarray(decode_budgets(scfg, H, S, cur))
+    for b in range(B):
+        for h in range(H):
+            live = pos[b, h][pos[b, h] >= 0]
+            assert len(live) <= budgets[b, h]
+            # survivors existed before; no entry was invented
+            assert set(live.tolist()) <= set(
+                before[b, h][before[b, h] >= 0].tolist())
+            if len(live):
+                assert (pos[b, h] == steps - 1).any()    # newest protected
+                if steps > scfg.num_sinks:
+                    assert (live < scfg.num_sinks).sum() == min(
+                        scfg.num_sinks, len(live))       # sinks protected
+    np.testing.assert_array_equal(np.asarray(out.k), np.asarray(cache.k))
+    np.testing.assert_array_equal(np.asarray(out.v), np.asarray(cache.v))
+    np.testing.assert_array_equal(np.asarray(out.fill),
+                                  np.asarray(cache.fill))
+    again = enforce_budget(out, scfg, cur)
+    np.testing.assert_array_equal(np.asarray(again.pos), pos)  # idempotent

@@ -75,6 +75,16 @@ GATED_SECTIONS = {
         # reward_nondegrading and capacity_ratio >= 1.8 are hard bounds
         "rollout_quant_smoke": ("kv_quant", "group_size"),
         "rollout_quant": ("kv_quant", "group_size"),
+        # sampler-policy matrix cells (policy x arch x length-dist,
+        # DESIGN.md §Sampler policy registry).  Sparse/quant cells carry NO
+        # ``identical`` field (their tokens legitimately diverge from the
+        # dense oracle — the correction absorbs the gap), so the identity
+        # hard bound only bites where the row opts in; trainer cells'
+        # reward_nondegrading and quant cells' capacity_ratio hard-gate,
+        # speedups tolerance-band (never floored — these cells trade FLOPs
+        # for memory by design)
+        "rollout_matrix_smoke": ("policy", "arch", "plen_dist"),
+        "rollout_matrix": ("policy", "arch", "plen_dist"),
     },
 }
 # sections whose rows must meet speedup >= 1.0 regardless of history
