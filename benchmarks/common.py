@@ -97,6 +97,15 @@ def toks_saving(history: List[Dict], budget_slots: int) -> float:
     return float(1.0 - sparse / dense)
 
 
+def config_source() -> str:
+    """Kernel-config provenance ("tuned" when any kernel resolved an
+    autotuned entry, else "default") — recorded as ``config_source`` on
+    every BENCH row so tools/bench_gate.py pairs rows of like provenance
+    (PERFORMANCE.md §Benchmark attribution)."""
+    from repro.kernels import ops
+    return ops.config_provenance()
+
+
 def timeit(fn, *args, warmup: int = 1, iters: int = 3) -> float:
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))

@@ -40,7 +40,7 @@ from typing import List
 import jax
 import numpy as np
 
-from benchmarks.common import REPO_ROOT, update_bench_json
+from benchmarks.common import REPO_ROOT, config_source, update_bench_json
 
 OUT = "reports/benchmarks"
 BENCH_JSON = os.path.join(REPO_ROOT, "BENCH_rollout.json")
@@ -168,7 +168,8 @@ def _bench_phase(arch: str, policy: str, group_size: int, n_prompts: int,
                   capacity_ratio=float(phase_stats["kv_capacity_ratio"])))
     return dict(arch=arch, policy=policy, group_size=group_size,
                 n_prompts=n_prompts, batch=batch, max_new=max_new,
-                plen_dist=plen_dist, tokens=toks,
+                plen_dist=plen_dist, config_source=config_source(),
+                tokens=toks,
                 lockstep_s=t_lock, continuous_s=t_cont,
                 lockstep_tps=toks / t_lock, continuous_tps=toks / t_cont,
                 speedup=t_lock / t_cont, **extra,
@@ -320,6 +321,7 @@ def rollout_matrix_bench(fast: bool = False, *, arch: str = "qwen2.5-14b",
         slack = max(0.02, 0.5 * r_first)   # scale-aware stability bound
         rows.append(dict(
             arch=arch, policy=policy, plen_dist="train",
+            config_source=config_source(),
             group_size=4, n_prompts=4, steps=steps + warmup,
             steps_s=sps, speedup=sps / sps_by_p["rkv"],
             mismatch_kl=float(np.mean([m["mismatch_kl"]
@@ -417,11 +419,13 @@ def rollout_async_bench(fast: bool = False, *, arch: str = "qwen2.5-14b",
     rows = [
         dict(arch=arch, policy="rkv", max_lag=0, steps=steps + warmup,
              group_size=G, n_prompts=n_prompts,
+             config_source=config_source(),
              sync_steps_s=sync_sps, async_steps_s=lag0_sps,
              speedup=lag0_sps / sync_sps, identical=identical,
              reward_nondegrading=True),
         dict(arch=arch, policy="rkv", max_lag=1, steps=steps + warmup,
              group_size=G, n_prompts=n_prompts,
+             config_source=config_source(),
              sync_steps_s=sync_sps, async_steps_s=lag1_sps,
              speedup=lag1_sps / sync_sps,
              reward_first_half=r_first, reward_second_half=r_second,
@@ -515,6 +519,7 @@ def rollout_quant_bench(fast: bool = False, *, arch: str = "qwen2.5-14b",
         last = hist[-1]
         rows.append(dict(
             arch=arch, policy="none", kv_quant=kv_quant,
+            config_source=config_source(),
             steps=steps + warmup, group_size=G, n_prompts=n_prompts,
             steps_s=sps, speedup=sps / sps_by_q["none"],
             kv_bytes_per_token=float(last["rollout_kv_bytes_per_token"]),

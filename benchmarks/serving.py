@@ -33,7 +33,7 @@ from typing import List, Optional
 import jax
 import numpy as np
 
-from benchmarks.common import REPO_ROOT
+from benchmarks.common import REPO_ROOT, config_source
 from benchmarks.common import update_bench_json as _update_json
 
 OUT = "reports/benchmarks"
@@ -113,7 +113,8 @@ def _bench_one(arch: str, policy: str, batch: int, n_requests: int,
     identical = all(np.array_equal(a.tokens, b.tokens)
                     for a, b in zip(cont, lock))
     return dict(policy=policy, batch=batch, n_requests=n_requests,
-                max_new=max_new, plen_dist=plen_dist, tokens=toks_cont,
+                max_new=max_new, plen_dist=plen_dist,
+                config_source=config_source(), tokens=toks_cont,
                 lockstep_s=t_lock, continuous_s=t_cont,
                 lockstep_tps=toks_lock / t_lock,
                 continuous_tps=toks_cont / t_cont,
@@ -210,7 +211,8 @@ def _bench_paged_one(arch: str, group_size: int, n_prompts: int, batch: int,
         t_paged = min(t_paged, time.perf_counter() - t0)
     toks = sum(len(c.tokens) for c in paged)
     return dict(arch=arch, group_size=group_size, n_prompts=n_prompts,
-                batch=batch, block_size=block_size, tokens=toks,
+                batch=batch, block_size=block_size,
+                config_source=config_source(), tokens=toks,
                 contiguous_s=t_base, paged_s=t_paged,
                 contiguous_tps=sum(len(c.tokens) for c in cont) / t_base,
                 paged_tps=toks / t_paged,
@@ -305,6 +307,7 @@ def _bench_quant_one(arch: str, kv_quant: str, group_size: int,
     toks = sum(len(c.tokens) for c in qt)
     return dict(arch=arch, kv_quant=kv_quant, group_size=group_size,
                 n_prompts=n_prompts, batch=batch, block_size=block_size,
+                config_source=config_source(),
                 tokens=toks, fp_s=t_fp, quant_s=t_q,
                 fp_tps=sum(len(c.tokens) for c in fp) / t_fp,
                 quant_tps=toks / t_q, speedup=t_fp / t_q,

@@ -1,11 +1,21 @@
+from repro.kernels.autotune import (
+    TunedConfigError,
+    get_tuned_config,
+    tune_key,
+)
 from repro.kernels.ops import (
     budget_attention,
+    config_provenance,
+    config_sources,
     flash_attention,
     flash_decode,
     paged_flash_decode,
+    reset_config_sources,
     rkv_scores,
     use_kernels,
 )
 
 __all__ = ["budget_attention", "flash_decode", "flash_attention",
-           "paged_flash_decode", "rkv_scores", "use_kernels"]
+           "paged_flash_decode", "rkv_scores", "use_kernels",
+           "get_tuned_config", "tune_key", "TunedConfigError",
+           "config_provenance", "config_sources", "reset_config_sources"]

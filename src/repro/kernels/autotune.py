@@ -1,0 +1,593 @@
+"""Pallas kernel autotuner + tuned-config registry.
+
+The three hot-path kernels (`kernels/paged_decode.py`,
+`kernels/flash_attention.py`, `kernels/budget_attention.py`, plus the dense
+long-context `kernels/flash_decode.py`) expose a small set of tunable
+parameters — block sizes, grid tiling, chunk widths — whose best values are
+device-dependent.  This module owns both halves of the story
+(PERFORMANCE.md is the written-down performance model; DESIGN.md §Kernel
+autotuning is the design rationale):
+
+1. **Lookup** (`get_tuned_config`): kernels resolve their parameters at
+   trace time through `kernels.ops`.  Resolution order is tuned file ->
+   hand-picked default: a checked-in ``kernels/tuned/<device_kind>.json``
+   maps sweep keys ``kernel/arch/hd<head_dim>/ps<page_size>`` to winning
+   configs; a missing file or missing entry falls back to the historical
+   hand-picked constants (bitwise-unchanged default path, pinned by
+   tests/test_autotune.py).  A *malformed or stale* tuned file is a loud
+   `TunedConfigError`, never a silent fallback — a typo'd schema silently
+   reverting every kernel to defaults would be an invisible perf
+   regression.  On CPU the device kind is ``interpret`` and the shipped
+   ``tuned/interpret.json`` pins the defaults explicitly, so CI is
+   deterministic.
+
+2. **Sweep** (`sweep`, driven by ``tools/autotune.py``): per sweep key,
+   benchmark every legal candidate config (warm-up + median-of-k timing on
+   synthetic operands shaped like the production workload), verify each
+   winner against the pure-jnp ``kernels/ref.py`` oracle BEFORE it can be
+   persisted, and sanity-check its timing against the analytic roofline
+   bound (`launch/roofline.py::kernel_bound_s`) — a "winner" beating the
+   bound is a measurement bug, not a win, and is rejected.  Winners land in
+   the tuned JSON via `persist` and a per-candidate report row lands in
+   ``reports/autotune.json``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import statistics
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+SCHEMA_VERSION = 1
+TUNED_DIR_ENV = "SPARSE_RL_TUNED_DIR"
+
+KERNELS = ("paged_decode", "flash_attention", "budget_attention",
+           "flash_decode")
+# the exact tunable-parameter names per kernel; a tuned entry whose config
+# carries anything else is stale (written against a different kernel
+# signature) and fails validation loudly
+TUNABLES: Dict[str, Tuple[str, ...]] = {
+    "paged_decode": ("page_tile",),
+    "flash_attention": ("block_q", "block_k"),
+    "budget_attention": ("bh_tile",),
+    "flash_decode": ("block_s",),
+}
+
+SUBLANES = 8                       # f32 tile: (8, 128); sublane-aligned tiles
+VMEM_BYTES = 16 * 1024 * 1024      # per-core VMEM (TPU v4/v5 class)
+VMEM_BUDGET = VMEM_BYTES // 2      # headroom for Mosaic's double buffering
+_SOURCES = ("default", "tuned")
+
+
+class TunedConfigError(ValueError):
+    """Malformed or stale tuned-config JSON (loud, never a silent fallback)."""
+
+
+# ---------------------------------------------------------------- keys ----
+
+@dataclasses.dataclass(frozen=True)
+class TuneKey:
+    """One sweep cell: (kernel, arch family, head_dim, page_size); the
+    device kind is the file the entry lives in, not part of the key."""
+    kernel: str
+    arch: str = "any"
+    head_dim: int = 128
+    page_size: int = 0             # 0 = not paged (non-pool kernels)
+
+    @property
+    def s(self) -> str:
+        return (f"{self.kernel}/{self.arch}/hd{self.head_dim}"
+                f"/ps{self.page_size}")
+
+
+def tune_key(kernel: str, *, head_dim: int, page_size: int = 0,
+             arch: str = "any") -> TuneKey:
+    if kernel not in KERNELS:
+        raise TunedConfigError(f"unknown kernel {kernel!r} "
+                               f"(known: {', '.join(KERNELS)})")
+    return TuneKey(kernel, arch, int(head_dim), int(page_size))
+
+
+def parse_key(s: str) -> TuneKey:
+    """Inverse of ``TuneKey.s`` (validates tuned-file entry keys)."""
+    parts = s.split("/")
+    try:
+        kernel, arch, hd, ps = parts
+        if not (hd.startswith("hd") and ps.startswith("ps")):
+            raise ValueError(s)
+        return tune_key(kernel, arch=arch, head_dim=int(hd[2:]),
+                        page_size=int(ps[2:]))
+    except (ValueError, TypeError) as e:
+        raise TunedConfigError(f"unparseable tuned-config key {s!r} "
+                               f"(want kernel/arch/hd<D>/ps<P>)") from e
+
+
+def default_config(key: TuneKey) -> Dict[str, int]:
+    """Today's hand-picked constants — the fallback when no tuned entry
+    exists, and the exact values every pre-autotune benchmark ran under."""
+    if key.kernel == "paged_decode":
+        # one pool page per sequential grid step (page_tile == page_size)
+        return {"page_tile": key.page_size}
+    if key.kernel == "flash_attention":
+        return {"block_q": 512, "block_k": 512}
+    if key.kernel == "budget_attention":
+        return {"bh_tile": 1}      # one (row, kv-head) program per grid step
+    if key.kernel == "flash_decode":
+        return {"block_s": 512}
+    raise TunedConfigError(f"unknown kernel {key.kernel!r}")
+
+
+# ----------------------------------------------------------- resolution ----
+
+def device_kind() -> str:
+    """Normalized device kind naming the tuned file: ``tpu_v5e``-style on
+    TPU, ``interpret`` everywhere else (the kernels execute in Pallas
+    interpret mode off-TPU, so CPU timings never masquerade as a device)."""
+    if jax.default_backend() != "tpu":
+        return "interpret"
+    kind = jax.devices()[0].device_kind
+    return "".join(c if c.isalnum() else "_" for c in kind.lower())
+
+
+def tuned_dir() -> str:
+    return os.environ.get(TUNED_DIR_ENV) or os.path.join(
+        os.path.dirname(os.path.abspath(__file__)), "tuned")
+
+
+_CACHE: Dict[Tuple[str, str], Dict[str, dict]] = {}
+
+
+def reset_cache() -> None:
+    """Drop memoized tuned files (tests repoint ``SPARSE_RL_TUNED_DIR``)."""
+    _CACHE.clear()
+
+
+def validate_tuned(data, *, kind: Optional[str] = None) -> Dict[str, dict]:
+    """Schema-check one tuned-config document; returns its entries.
+
+    Raises `TunedConfigError` on anything malformed or stale: wrong schema
+    version, a key that does not parse, a config whose parameter names do
+    not exactly match the kernel's tunables, a non-positive value, a
+    ``page_tile`` that no longer divides the key's page_size, or a
+    ``tuned``-sourced entry missing its oracle/roofline check bits."""
+    if not isinstance(data, dict):
+        raise TunedConfigError("tuned config must be a JSON object")
+    if data.get("schema") != SCHEMA_VERSION:
+        raise TunedConfigError(
+            f"tuned config schema {data.get('schema')!r} != "
+            f"{SCHEMA_VERSION} — regenerate with tools/autotune.py")
+    if kind is not None and data.get("device_kind") != kind:
+        raise TunedConfigError(
+            f"tuned config device_kind {data.get('device_kind')!r} does not "
+            f"match its file ({kind!r})")
+    entries = data.get("entries")
+    if not isinstance(entries, dict):
+        raise TunedConfigError("tuned config has no 'entries' object")
+    for key_s, e in entries.items():
+        key = parse_key(key_s)
+        cfg = e.get("config") if isinstance(e, dict) else None
+        if not isinstance(cfg, dict):
+            raise TunedConfigError(f"{key_s}: entry has no 'config' object")
+        want = TUNABLES[key.kernel]
+        if tuple(sorted(cfg)) != tuple(sorted(want)):
+            raise TunedConfigError(
+                f"{key_s}: stale config parameters {sorted(cfg)} != "
+                f"{sorted(want)} for kernel {key.kernel!r}")
+        for name, v in cfg.items():
+            if not isinstance(v, int) or v <= 0:
+                raise TunedConfigError(f"{key_s}: {name}={v!r} must be a "
+                                       f"positive integer")
+        if key.kernel == "paged_decode":
+            if key.page_size <= 0:
+                raise TunedConfigError(f"{key_s}: paged_decode entries need "
+                                       f"a real page_size (ps > 0)")
+            if key.page_size % cfg["page_tile"]:
+                raise TunedConfigError(
+                    f"{key_s}: stale page_tile {cfg['page_tile']} does not "
+                    f"divide page_size {key.page_size}")
+        if e.get("source") not in _SOURCES:
+            raise TunedConfigError(f"{key_s}: source {e.get('source')!r} "
+                                   f"not in {_SOURCES}")
+        if e["source"] == "tuned":
+            if not isinstance(e.get("us"), (int, float)):
+                raise TunedConfigError(f"{key_s}: tuned entry has no "
+                                       f"measured 'us'")
+            if not (e.get("oracle_ok") is True
+                    and e.get("roofline_ok") is True):
+                raise TunedConfigError(
+                    f"{key_s}: tuned entry persisted without passing the "
+                    f"ref-oracle + roofline checks")
+    return entries
+
+
+def load_tuned(kind: Optional[str] = None) -> Dict[str, dict]:
+    """Entries of ``<tuned_dir>/<kind>.json`` (validated, memoized).
+    A missing file is the empty registry (pure-default resolution); a
+    present-but-broken file raises."""
+    kind = kind or device_kind()
+    ck = (tuned_dir(), kind)
+    if ck not in _CACHE:
+        path = os.path.join(*ck) + ".json"
+        if not os.path.exists(path):
+            _CACHE[ck] = {}
+        else:
+            try:
+                with open(path) as f:
+                    data = json.load(f)
+            except json.JSONDecodeError as e:
+                raise TunedConfigError(f"{path}: invalid JSON: {e}") from e
+            try:
+                _CACHE[ck] = validate_tuned(data, kind=kind)
+            except TunedConfigError as e:
+                raise TunedConfigError(f"{path}: {e}") from e
+    return _CACHE[ck]
+
+
+def get_tuned_config(kernel: str, key) -> Tuple[Dict[str, int], str]:
+    """Trace-time lookup: (config, source) for a kernel's sweep key.
+
+    ``key`` is a `TuneKey` (or its string form).  Returns the tuned file's
+    entry when one exists for the current device kind, else the hand-picked
+    defaults; ``source`` is the entry's provenance (``"tuned"`` only for
+    configs that passed the oracle + roofline checks at persist time) and
+    flows into BENCH_* rows via `kernels.ops.config_provenance`."""
+    if isinstance(key, str):
+        key = parse_key(key)
+    if key.kernel != kernel:
+        raise TunedConfigError(f"key {key.s!r} is not a {kernel!r} key")
+    entry = load_tuned().get(key.s)
+    if entry is None:
+        return default_config(key), "default"
+    return dict(entry["config"]), entry["source"]
+
+
+# ------------------------------------------------------ candidate spaces ----
+
+def _pow2s(lo: int, hi: int) -> List[int]:
+    out, v = [], lo
+    while v <= hi:
+        out.append(v)
+        v *= 2
+    return out
+
+
+def vmem_bytes(key: TuneKey, config: Dict[str, int], *,
+               slots: int = 640) -> int:
+    """f32 VMEM residency estimate of one grid step under ``config`` —
+    blocks + scratch, the quantity the candidate pruner holds under
+    `VMEM_BUDGET` (PERFORMANCE.md derives these per kernel)."""
+    Dh = key.head_dim
+    if key.kernel == "paged_decode":
+        pt = config["page_tile"]
+        g = 8                                  # GQA group upper bound
+        return 4 * (2 * pt * Dh + g * Dh + g * Dh + 2 * g)
+    if key.kernel == "flash_attention":
+        bq, bk = config["block_q"], config["block_k"]
+        return 4 * (bq * Dh + 2 * bk * Dh + bq * Dh + 2 * bq)
+    if key.kernel == "budget_attention":
+        r, g = config["bh_tile"], 8
+        return 4 * r * (g * Dh + 2 * slots * Dh + slots + g * slots)
+    if key.kernel == "flash_decode":
+        bs = config["block_s"]
+        g = 8
+        return 4 * (2 * bs * Dh + 2 * g * Dh + 2 * g)
+    raise TunedConfigError(key.kernel)
+
+
+def candidate_space(key: TuneKey) -> List[Dict[str, int]]:
+    """Legal candidate configs for one sweep key, VMEM-pruned.  The
+    hand-picked default is always a member, so a sweep can never do worse
+    than today's constants."""
+    if key.kernel == "paged_decode":
+        ps = key.page_size
+        if ps <= 0:
+            raise TunedConfigError("paged_decode sweeps need page_size > 0")
+        # sublane-aligned divisors of the page: DMA granularity candidates
+        tiles = [t for t in range(SUBLANES, ps, SUBLANES) if ps % t == 0]
+        cands = [{"page_tile": t} for t in tiles + [ps]]
+    elif key.kernel == "flash_attention":
+        cands = [{"block_q": bq, "block_k": bk}
+                 for bq in _pow2s(128, 1024) for bk in _pow2s(128, 1024)]
+        if default_config(key) not in cands:       # pragma: no cover
+            cands.append(default_config(key))
+    elif key.kernel == "budget_attention":
+        cands = [{"bh_tile": r} for r in (1, 2, 4, 8)]
+    elif key.kernel == "flash_decode":
+        cands = [{"block_s": s} for s in _pow2s(128, 2048)]
+    else:
+        raise TunedConfigError(f"unknown kernel {key.kernel!r}")
+    pruned = [c for c in cands if vmem_bytes(key, c) <= VMEM_BUDGET]
+    return pruned or [default_config(key)]
+
+
+# ------------------------------------------------------------ bench cases ----
+
+@dataclasses.dataclass(frozen=True)
+class Workload:
+    """Synthetic operand shape for one sweep cell (decode-batch rows,
+    GQA heads, sequence/slot extent)."""
+    B: int
+    Hq: int
+    Hkv: int
+    S: int
+
+
+def default_workload(key: TuneKey, scale: str = "full") -> Workload:
+    smoke = scale == "smoke"
+    if key.kernel == "paged_decode":
+        nb = 4 if smoke else 16
+        return Workload(B=4 if smoke else 16, Hq=8, Hkv=2,
+                        S=nb * key.page_size)
+    if key.kernel == "flash_attention":
+        return Workload(B=2, Hq=4, Hkv=2, S=64 if smoke else 2048)
+    if key.kernel == "budget_attention":
+        return Workload(B=4 if smoke else 16, Hq=8, Hkv=2,
+                        S=64 if smoke else 640)
+    if key.kernel == "flash_decode":
+        return Workload(B=2, Hq=8, Hkv=2, S=256 if smoke else 8192)
+    raise TunedConfigError(key.kernel)
+
+
+@dataclasses.dataclass
+class KernelCase:
+    """One benchable cell: operands, a config->output runner, the oracle
+    output it must match, and the roofline terms of the workload."""
+    key: TuneKey
+    workload: Workload
+    run: Callable[[Dict[str, int]], object]
+    oracle_out: object
+    flops: float
+    hbm_bytes: float
+
+
+def _rand(rng, shape, dtype=jnp.float32):
+    return jnp.asarray(rng.normal(size=shape), jnp.float32).astype(dtype)
+
+
+def make_case(key: TuneKey, *, workload: Optional[Workload] = None,
+              seed: int = 0, interpret: Optional[bool] = None) -> KernelCase:
+    """Build the synthetic cell for ``key``: operands shaped like the
+    production workload (ragged fills for the paged kernel, left-padding
+    for prefill), the kernel runner, and its `kernels/ref.py` oracle."""
+    from repro.kernels import ref
+    from repro.kernels.budget_attention import budget_attention
+    from repro.kernels.flash_attention import flash_attention_fwd
+    from repro.kernels.flash_decode import flash_decode
+    from repro.kernels.paged_decode import paged_flash_decode
+
+    w = workload or default_workload(key)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    rng = np.random.default_rng(seed)
+    Dh = key.head_dim
+    if key.kernel == "paged_decode":
+        bs = key.page_size
+        nb = w.S // bs
+        N = w.B * nb + 2
+        q = _rand(rng, (w.B, w.Hq, Dh))
+        k_pool = _rand(rng, (N, w.Hkv, bs, Dh))
+        v_pool = _rand(rng, (N, w.Hkv, bs, Dh))
+        pos_pool = jnp.asarray(rng.integers(0, 999, (N, bs)), jnp.int32)
+        bt = jnp.asarray(
+            rng.permutation(np.arange(1, N))[:w.B * nb].reshape(w.B, nb),
+            jnp.int32)
+        # ragged fills — the serving state the fill-aware exit lives in
+        fill = jnp.asarray([(b % nb) * bs + bs // 2 + 1
+                            for b in range(w.B)], jnp.int32)
+
+        def run(config):
+            return paged_flash_decode(q, k_pool, v_pool, pos_pool, bt, fill,
+                                      page_tile=config["page_tile"],
+                                      interpret=interpret)
+
+        oracle = ref.paged_decode_ref(q, k_pool, v_pool, pos_pool, bt, fill)
+        live = float(jnp.sum(fill))
+        flops = 4.0 * w.Hq * live * Dh
+        hbm = 4.0 * (2 * w.Hkv * live * Dh + 2 * w.B * w.Hq * Dh)
+    elif key.kernel == "flash_attention":
+        q = _rand(rng, (w.B, w.S, w.Hq, Dh))
+        k = _rand(rng, (w.B, w.S, w.Hkv, Dh))
+        v = _rand(rng, (w.B, w.S, w.Hkv, Dh))
+        pos = jnp.broadcast_to(jnp.arange(w.S)[None], (w.B, w.S)
+                               ).astype(jnp.int32)
+
+        def run(config):
+            return flash_attention_fwd(q, k, v, pos, pos,
+                                       block_q=config["block_q"],
+                                       block_k=config["block_k"],
+                                       interpret=interpret)
+
+        oracle = ref.flash_attention_ref(q, k, v, pos, pos)
+        flops = 2.0 * w.B * w.Hq * w.S * w.S * Dh          # causal half
+        hbm = 4.0 * w.B * w.S * Dh * (2 * w.Hq + 2 * w.Hkv)
+    elif key.kernel == "budget_attention":
+        q = _rand(rng, (w.B, w.Hq, Dh))
+        k = _rand(rng, (w.B, w.Hkv, w.S, Dh))
+        v = _rand(rng, (w.B, w.Hkv, w.S, Dh))
+        pos = jnp.asarray(rng.integers(-1, 99, (w.B, w.Hkv, w.S)), jnp.int32)
+        pos = pos.at[:, :, 0].set(0)
+
+        def run(config):
+            return budget_attention(q, k, v, pos,
+                                    bh_tile=config["bh_tile"],
+                                    interpret=interpret)
+
+        oracle = ref.budget_attention_ref(q, k, v, pos)
+        flops = 4.0 * w.B * w.Hq * w.S * Dh
+        hbm = 4.0 * w.B * (2 * w.Hkv * w.S * Dh + 2 * w.Hq * Dh
+                           + w.Hkv * w.S)
+    elif key.kernel == "flash_decode":
+        q = _rand(rng, (w.B, w.Hq, Dh))
+        k = _rand(rng, (w.B, w.Hkv, w.S, Dh))
+        v = _rand(rng, (w.B, w.Hkv, w.S, Dh))
+        pos = jnp.asarray(rng.integers(0, 999, (w.B, w.Hkv, w.S)), jnp.int32)
+
+        def run(config):
+            return flash_decode(q, k, v, pos, block_s=config["block_s"],
+                                interpret=interpret)
+
+        oracle = ref.flash_decode_ref(q, k, v, pos)
+        flops = 4.0 * w.B * w.Hq * w.S * Dh
+        hbm = 4.0 * w.B * (2 * w.Hkv * w.S * Dh + 2 * w.Hq * Dh)
+    else:
+        raise TunedConfigError(f"unknown kernel {key.kernel!r}")
+    return KernelCase(key=key, workload=w, run=run, oracle_out=oracle,
+                      flops=flops, hbm_bytes=hbm)
+
+
+# ------------------------------------------------------------- the sweep ----
+
+@dataclasses.dataclass
+class Candidate:
+    config: Dict[str, int]
+    us: Optional[float] = None
+    bound_us: Optional[float] = None
+    oracle_ok: Optional[bool] = None
+    accepted: bool = False
+    reject_reason: Optional[str] = None
+
+
+def _oracle_ok(out, oracle_out, rtol=2e-5, atol=2e-5) -> bool:
+    outs = out if isinstance(out, (tuple, list)) else (out,)
+    oracles = (oracle_out if isinstance(oracle_out, (tuple, list))
+               else (oracle_out,))
+    return all(np.allclose(np.asarray(a, np.float32),
+                           np.asarray(b, np.float32), rtol=rtol, atol=atol)
+               for a, b in zip(outs, oracles))
+
+
+def median_us(thunk: Callable[[], object], *, warmup: int = 1,
+              repeats: int = 5) -> float:
+    """Warm-up (compile) then median-of-k wall-clock, block_until_ready."""
+    for _ in range(max(warmup, 1)):
+        jax.block_until_ready(thunk())
+    times = []
+    for _ in range(max(repeats, 1)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(thunk())
+        times.append(time.perf_counter() - t0)
+    return statistics.median(times) * 1e6
+
+
+def evaluate_candidate(case: KernelCase, config: Dict[str, int], *,
+                       kind: Optional[str] = None, repeats: int = 5,
+                       warmup: int = 1,
+                       runner: Optional[Callable] = None,
+                       timer: Optional[Callable] = None) -> Candidate:
+    """Correctness gate -> timing -> roofline sanity for one config.
+
+    ``runner(config)`` and ``timer(thunk, warmup=..., repeats=...)`` are
+    injectable so tests can simulate a wrong kernel or an impossible
+    timing; production uses the real kernel and `median_us`."""
+    from repro.launch.roofline import kernel_bound_s
+
+    kind = kind or device_kind()
+    runner = runner or case.run
+    timer = timer or median_us
+    cand = Candidate(config=dict(config))
+    cand.bound_us = kernel_bound_s(case.flops, case.hbm_bytes, kind) * 1e6
+    try:
+        out = runner(config)
+    except Exception as e:                          # illegal config at trace
+        cand.oracle_ok = False
+        cand.reject_reason = f"failed to run: {e}"
+        return cand
+    cand.oracle_ok = _oracle_ok(out, case.oracle_out)
+    if not cand.oracle_ok:
+        cand.reject_reason = "output disagrees with the ref oracle"
+        return cand
+    cand.us = float(timer(lambda: runner(config), warmup=warmup,
+                          repeats=repeats))
+    if cand.us < cand.bound_us:
+        cand.reject_reason = (
+            f"measured {cand.us:.2f}us beats the roofline bound "
+            f"{cand.bound_us:.2f}us — a measurement bug, not a win")
+        return cand
+    cand.accepted = True
+    return cand
+
+
+@dataclasses.dataclass
+class SweepResult:
+    key: TuneKey
+    kind: str
+    workload: Workload
+    candidates: List[Candidate]
+    winner: Optional[Candidate]
+    default_us: Optional[float]
+
+    def report_rows(self) -> List[dict]:
+        rows = []
+        for c in self.candidates:
+            rows.append(dict(
+                kernel=self.key.kernel, key=self.key.s,
+                device_kind=self.kind, config=c.config, us=c.us,
+                roofline_bound_us=c.bound_us, oracle_ok=c.oracle_ok,
+                accepted=c.accepted, reject_reason=c.reject_reason,
+                winner=(self.winner is not None
+                        and c.config == self.winner.config),
+                default_us=self.default_us,
+                speedup_vs_default=(
+                    self.default_us / c.us
+                    if c.us and self.default_us else None)))
+        return rows
+
+
+def sweep(key: TuneKey, *, kind: Optional[str] = None,
+          workload: Optional[Workload] = None, seed: int = 0,
+          repeats: int = 5, warmup: int = 1,
+          runner_factory: Optional[Callable] = None,
+          timer: Optional[Callable] = None) -> SweepResult:
+    """Sweep one key's candidate space; the winner is the fastest candidate
+    that passed BOTH the ref-oracle check and the roofline sanity bound."""
+    kind = kind or device_kind()
+    case = make_case(key, workload=workload, seed=seed)
+    runner = runner_factory(case) if runner_factory else None
+    cands = [evaluate_candidate(case, cfg, kind=kind, repeats=repeats,
+                                warmup=warmup, runner=runner, timer=timer)
+             for cfg in candidate_space(key)]
+    accepted = [c for c in cands if c.accepted]
+    winner = min(accepted, key=lambda c: c.us) if accepted else None
+    dflt = default_config(key)
+    default_us = next((c.us for c in cands if c.config == dflt and c.us),
+                      None)
+    return SweepResult(key=key, kind=kind,
+                       workload=workload or default_workload(key),
+                       candidates=cands, winner=winner,
+                       default_us=default_us)
+
+
+def persist(results: Sequence[SweepResult], *, kind: Optional[str] = None,
+            directory: Optional[str] = None) -> str:
+    """Merge sweep winners into ``<dir>/<kind>.json`` (schema-validated on
+    read AND write).  Only accepted winners — configs that passed the
+    oracle and roofline checks — are ever written; sweeps with no winner
+    are skipped."""
+    kind = kind or device_kind()
+    directory = directory or tuned_dir()
+    path = os.path.join(directory, f"{kind}.json")
+    entries: Dict[str, dict] = {}
+    if os.path.exists(path):
+        with open(path) as f:
+            entries = dict(validate_tuned(json.load(f), kind=kind))
+    for r in results:
+        if r.winner is None:
+            continue
+        entries[r.key.s] = dict(config=r.winner.config, source="tuned",
+                                us=round(r.winner.us, 3), oracle_ok=True,
+                                roofline_ok=True)
+    data = dict(schema=SCHEMA_VERSION, device_kind=kind,
+                entries=dict(sorted(entries.items())))
+    validate_tuned(data, kind=kind)
+    os.makedirs(directory, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(data, f, indent=1)
+        f.write("\n")
+    reset_cache()
+    return path

@@ -16,6 +16,20 @@ TPU mapping:
     the MXU contraction; G is zero-padded to the sublane count by Mosaic.
   * logits/softmax in f32 (MXU accumulates bf16 x bf16 -> f32), output cast
     back to the cache dtype.
+
+Tunables (kernels/autotune.py; performance model in PERFORMANCE.md):
+  * ``bh_tile`` — how many (row, kv-head) programs one grid step batches.
+    The default 1 is the historical one-program-per-(row, head) kernel,
+    bit-for-bit (it takes the original kernel body, not a degenerate tiled
+    one); larger tiles amortize per-step overhead into batched
+    ``dot_general`` contractions at the cost of an R x larger VMEM working
+    set.  ``B * Hkv`` is zero-padded to a multiple of the tile with
+    ``pos = -1`` rows, whose fully-masked softmax yields exactly zero
+    output and pooled mass.  Resolved at trace time via
+    `kernels.autotune.get_tuned_config`.
+
+Oracle: `kernels.ref.budget_attention_ref` (masked softmax + group-pooled
+probabilities); `kernels.ops.budget_attention` is the dispatching wrapper.
 """
 from __future__ import annotations
 
@@ -47,38 +61,99 @@ def _kernel(q_ref, k_ref, v_ref, pos_ref, o_ref, p_ref, *, scale: float):
     p_ref[0] = jnp.sum(pn, axis=0)                      # pooled over the group
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+def _kernel_tiled(q_ref, k_ref, v_ref, pos_ref, o_ref, p_ref, *,
+                  scale: float):
+    # bh_tile > 1: R (row, kv-head) programs batched into one grid step via
+    # batched dot_general; padded rows (pos all -1) mask to zero exactly
+    q = q_ref[...].astype(jnp.float32)                  # (R, G, Dh)
+    k = k_ref[...].astype(jnp.float32)                  # (R, S, Dh)
+    v = v_ref[...].astype(jnp.float32)
+    valid = pos_ref[...] >= 0                           # (R, S)
+    s = jax.lax.dot_general(q, k, (((2,), (2,)), ((0,), (0,))),
+                            preferred_element_type=jnp.float32) * scale
+    s = jnp.where(valid[:, None, :], s, NEG)            # (R, G, S)
+    m = jnp.max(s, axis=2, keepdims=True)
+    p = jnp.exp(s - m)
+    p = jnp.where(valid[:, None, :], p, 0.0)
+    l = jnp.sum(p, axis=2, keepdims=True)
+    pn = p / jnp.maximum(l, 1e-30)
+    o = jax.lax.dot_general(pn, v, (((2,), (1,)), ((0,), (0,))),
+                            preferred_element_type=jnp.float32)
+    o_ref[...] = o.astype(o_ref.dtype)
+    p_ref[...] = jnp.sum(pn, axis=1)                    # (R, S) group-pooled
+
+
+@functools.partial(jax.jit, static_argnames=("bh_tile", "interpret"))
 def budget_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
-                     pos: jnp.ndarray, *, interpret: bool = False):
+                     pos: jnp.ndarray, *, bh_tile: int = None,
+                     interpret: bool = False):
     """q: (B, Hq, Dh); k/v: (B, Hkv, S, Dh); pos: (B, Hkv, S) (-1 = empty).
 
     Returns (out (B, Hq, Dh) in q.dtype, probs_pooled (B, Hkv, S) f32).
+
+    ``bh_tile`` (autotuned; default 1) batches that many (row, kv-head)
+    programs per grid step; 1 runs the historical per-program kernel body
+    unchanged (bitwise-identical default path).
     """
     B, Hq, Dh = q.shape
     _, Hkv, S, _ = k.shape
     G = Hq // Hkv
     BH = B * Hkv
+    R = 1 if bh_tile is None else int(bh_tile)
+    if R <= 0:
+        raise ValueError(f"bh_tile {R} must be a positive integer")
     qf = q.reshape(BH, G, Dh)
     kf = k.reshape(BH, S, Dh)
     vf = v.reshape(BH, S, Dh)
     posf = pos.reshape(BH, S)
+    if R == 1:
+        out, pooled = pl.pallas_call(
+            functools.partial(_kernel, scale=1.0 / (Dh ** 0.5)),
+            grid=(BH,),
+            in_specs=[
+                pl.BlockSpec((1, G, Dh), lambda i: (i, 0, 0)),
+                pl.BlockSpec((1, S, Dh), lambda i: (i, 0, 0)),
+                pl.BlockSpec((1, S, Dh), lambda i: (i, 0, 0)),
+                pl.BlockSpec((1, S), lambda i: (i, 0)),
+            ],
+            out_specs=[
+                pl.BlockSpec((1, G, Dh), lambda i: (i, 0, 0)),
+                pl.BlockSpec((1, S), lambda i: (i, 0)),
+            ],
+            out_shape=[
+                jax.ShapeDtypeStruct((BH, G, Dh), q.dtype),
+                jax.ShapeDtypeStruct((BH, S), jnp.float32),
+            ],
+            interpret=interpret,
+        )(qf, kf, vf, posf)
+        return out.reshape(B, Hq, Dh), pooled.reshape(B, Hkv, S)
+    # pad BH up to a multiple of the tile with empty (pos = -1) rows — their
+    # fully-masked softmax contributes exactly zero output and pooled mass
+    BHp = -(-BH // R) * R
+    pad = BHp - BH
+    if pad:
+        qf = jnp.pad(qf, ((0, pad), (0, 0), (0, 0)))
+        kf = jnp.pad(kf, ((0, pad), (0, 0), (0, 0)))
+        vf = jnp.pad(vf, ((0, pad), (0, 0), (0, 0)))
+        posf = jnp.pad(posf, ((0, pad), (0, 0)), constant_values=-1)
     out, pooled = pl.pallas_call(
-        functools.partial(_kernel, scale=1.0 / (Dh ** 0.5)),
-        grid=(BH,),
+        functools.partial(_kernel_tiled, scale=1.0 / (Dh ** 0.5)),
+        grid=(BHp // R,),
         in_specs=[
-            pl.BlockSpec((1, G, Dh), lambda i: (i, 0, 0)),
-            pl.BlockSpec((1, S, Dh), lambda i: (i, 0, 0)),
-            pl.BlockSpec((1, S, Dh), lambda i: (i, 0, 0)),
-            pl.BlockSpec((1, S), lambda i: (i, 0)),
+            pl.BlockSpec((R, G, Dh), lambda i: (i, 0, 0)),
+            pl.BlockSpec((R, S, Dh), lambda i: (i, 0, 0)),
+            pl.BlockSpec((R, S, Dh), lambda i: (i, 0, 0)),
+            pl.BlockSpec((R, S), lambda i: (i, 0)),
         ],
         out_specs=[
-            pl.BlockSpec((1, G, Dh), lambda i: (i, 0, 0)),
-            pl.BlockSpec((1, S), lambda i: (i, 0)),
+            pl.BlockSpec((R, G, Dh), lambda i: (i, 0, 0)),
+            pl.BlockSpec((R, S), lambda i: (i, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((BH, G, Dh), q.dtype),
-            jax.ShapeDtypeStruct((BH, S), jnp.float32),
+            jax.ShapeDtypeStruct((BHp, G, Dh), q.dtype),
+            jax.ShapeDtypeStruct((BHp, S), jnp.float32),
         ],
         interpret=interpret,
     )(qf, kf, vf, posf)
-    return out.reshape(B, Hq, Dh), pooled.reshape(B, Hkv, S)
+    return (out[:BH].reshape(B, Hq, Dh),
+            pooled[:BH].reshape(B, Hkv, S))

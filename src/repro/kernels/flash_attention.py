@@ -11,6 +11,18 @@ TPU mapping:
   BlockSpec index map (no K/V duplication in HBM).  Causal masking compares
   absolute position tiles, so left-padded prompts mask correctly; tiles
   enter VMEM at (block, 128)-aligned shapes for the MXU.
+
+Tunables (kernels/autotune.py; performance model in PERFORMANCE.md):
+  * ``block_q`` / ``block_k`` — the resident query tile and streamed KV
+    tile heights.  Bigger tiles cut grid-step overhead and revisits of the
+    q tile; smaller tiles cut the VMEM footprint (q + 2 KV tiles + f32
+    scratch must fit under the double-buffering budget).  The hand-picked
+    512/512 default is the fallback when no tuned entry exists; the ops
+    wrapper resolves both at trace time via
+    `kernels.autotune.get_tuned_config`.
+
+Oracle: `kernels.ref.flash_attention_ref` (masked dense softmax);
+`kernels.ops.flash_attention` is the dispatching wrapper.
 """
 from __future__ import annotations
 

@@ -4,11 +4,22 @@
 body executes in interpret mode — bit-accurate semantics, Python speed; on
 TPU it compiles to Mosaic.  ``use_kernels(False)`` flips every wrapper to its
 pure-jnp oracle (the production fallback / A-B testing switch).
+
+Tunable kernel parameters resolve here, at trace time: when a caller does
+not pin them explicitly, each wrapper asks `kernels.autotune` for the
+(kernel, arch, head_dim, page_size) entry of the current device kind's
+tuned file, falling back to the hand-picked defaults when none exists —
+the bitwise-unchanged path CI pins (tests/test_autotune.py).  Every
+resolution records its provenance; `config_provenance()` collapses the
+record to ``"tuned"``/``"default"`` and flows into BENCH_* rows so
+benchmark numbers stay attributable to the configs they ran under
+(DESIGN.md §Kernel autotuning, PERFORMANCE.md).
 """
 from __future__ import annotations
 
 import jax
 
+from repro.kernels import autotune as _at
 from repro.kernels import ref
 from repro.kernels.budget_attention import budget_attention as _budget_attention
 from repro.kernels.flash_attention import flash_attention_fwd as _flash_attention_fwd
@@ -17,6 +28,9 @@ from repro.kernels.paged_decode import paged_flash_decode as _paged_flash_decode
 from repro.kernels.rkv_scores import rkv_scores as _rkv_scores
 
 _STATE = {"enabled": True}
+# last resolution source per kernel ("tuned" | "default"); explicit caller
+# overrides bypass resolution and leave no record
+_SOURCES: dict = {}
 
 
 def use_kernels(enabled: bool):
@@ -27,20 +41,49 @@ def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def budget_attention(q, k, v, pos):
+def _resolve(kernel: str, *, head_dim: int, page_size: int = 0) -> dict:
+    cfg, src = _at.get_tuned_config(
+        kernel, _at.tune_key(kernel, head_dim=head_dim, page_size=page_size))
+    _SOURCES[kernel] = src
+    return cfg
+
+
+def config_sources() -> dict:
+    """Per-kernel provenance of the configs resolved so far."""
+    return dict(_SOURCES)
+
+
+def config_provenance() -> str:
+    """``"tuned"`` if any kernel resolved a tuned entry, else ``"default"``
+    — the value BENCH_* rows carry as ``config_source``."""
+    return "tuned" if "tuned" in _SOURCES.values() else "default"
+
+
+def reset_config_sources():
+    """Clear the provenance record (benchmarks call this per phase)."""
+    _SOURCES.clear()
+
+
+def budget_attention(q, k, v, pos, *, bh_tile: int = None):
     if not _STATE["enabled"]:
         return ref.budget_attention_ref(q, k, v, pos)
-    return _budget_attention(q, k, v, pos, interpret=_interpret())
+    if bh_tile is None:
+        bh_tile = _resolve("budget_attention",
+                           head_dim=q.shape[-1])["bh_tile"]
+    return _budget_attention(q, k, v, pos, bh_tile=bh_tile,
+                             interpret=_interpret())
 
 
-def flash_decode(q, k, v, pos, *, block_s: int = 512):
+def flash_decode(q, k, v, pos, *, block_s: int = None):
     if not _STATE["enabled"]:
         return ref.flash_decode_ref(q, k, v, pos)
+    if block_s is None:
+        block_s = _resolve("flash_decode", head_dim=q.shape[-1])["block_s"]
     return _flash_decode(q, k, v, pos, block_s=block_s, interpret=_interpret())
 
 
 def paged_flash_decode(q, k_pool, v_pool, pos_pool, block_tables, fill,
-                       k_scale=None, v_scale=None):
+                       k_scale=None, v_scale=None, *, page_tile: int = None):
     """``k_scale``/``v_scale`` (N, Hkv) switch on the dequantizing path for
     int8/fp8 pools (kvcache/paged.py quantized storage)."""
     if not _STATE["enabled"]:
@@ -50,16 +93,23 @@ def paged_flash_decode(q, k_pool, v_pool, pos_pool, block_tables, fill,
                                               block_tables, fill)
         return ref.paged_decode_ref(q, k_pool, v_pool, pos_pool,
                                     block_tables, fill)
+    if page_tile is None:
+        page_tile = _resolve("paged_decode", head_dim=q.shape[-1],
+                             page_size=k_pool.shape[2])["page_tile"]
     return _paged_flash_decode(q, k_pool, v_pool, pos_pool, block_tables,
-                               fill, k_scale, v_scale,
+                               fill, k_scale, v_scale, page_tile=page_tile,
                                interpret=_interpret())
 
 
 def flash_attention(q, k, v, q_positions, kv_positions, *, causal=True,
-                    block_q: int = 512, block_k: int = 512):
+                    block_q: int = None, block_k: int = None):
     if not _STATE["enabled"]:
         return ref.flash_attention_ref(q, k, v, q_positions, kv_positions,
                                        causal=causal)
+    if block_q is None or block_k is None:
+        cfg = _resolve("flash_attention", head_dim=q.shape[-1])
+        block_q = cfg["block_q"] if block_q is None else block_q
+        block_k = cfg["block_k"] if block_k is None else block_k
     return _flash_attention_fwd(q, k, v, q_positions, kv_positions,
                                 block_q=block_q, block_k=block_k,
                                 causal=causal, interpret=_interpret())

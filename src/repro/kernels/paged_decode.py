@@ -40,6 +40,16 @@ index maps as the pages themselves — one (1, 1) scale tile per K and V —
 and dequantize in-register at the top of the softmax update, so the pool
 crosses HBM at quantized width and the arithmetic stays f32.
 
+Tunables (kernels/autotune.py; performance model in PERFORMANCE.md):
+  * ``page_tile`` — the K/V tile width per sequential grid step, a
+    sublane-aligned divisor of the page size.  ``page_tile == page_size``
+    (the default) is today's one-page-per-step kernel, bit-for-bit; smaller
+    tiles trade more grid steps for a finer fill-aware exit (a row whose
+    fill ends mid-page stops DMAing at the tile holding its last token,
+    not the page end) and a smaller VMEM working set.  Resolved at trace
+    time via `kernels.autotune.get_tuned_config`, falling back to the
+    hand-picked default when no tuned entry exists for this device kind.
+
 Oracle: `kernels.ref.paged_decode_ref` (gather + masked softmax) and
 `kernels.ref.paged_decode_quant_ref` (dequantize, then gather), tested
 with assert_allclose; `kernels.ops.paged_flash_decode` is the dispatching
@@ -57,8 +67,8 @@ from jax.experimental.pallas import tpu as pltpu
 NEG = -1e30
 
 
-def _kernel(bt_ref, fill_ref, npages_ref, q_ref, k_ref, v_ref, pos_ref,
-            *refs, scale: float, bs: int, nb: int, quantized: bool):
+def _kernel(bt_ref, fill_ref, ntiles_ref, q_ref, k_ref, v_ref, pos_ref,
+            *refs, scale: float, pt: int, tpp: int, nt: int, quantized: bool):
     # quantized pools add two (1, 1) per-(page, head) scale operands right
     # after pos; the trailing refs are always (out, 3 scratch)
     if quantized:
@@ -66,33 +76,33 @@ def _kernel(bt_ref, fill_ref, npages_ref, q_ref, k_ref, v_ref, pos_ref,
     else:
         o_ref, acc, m_s, l_s = refs
     b = pl.program_id(0)
-    j = pl.program_id(2)
+    t = pl.program_id(2)
 
-    @pl.when(j == 0)
+    @pl.when(t == 0)
     def _init():
         acc[...] = jnp.zeros_like(acc)
         m_s[...] = jnp.full_like(m_s, NEG)
         l_s[...] = jnp.zeros_like(l_s)
 
-    # fill-aware skip: pages at/past the row's live count contribute nothing
+    # fill-aware skip: tiles at/past the row's live count contribute nothing
     # (their slots are all >= fill), so the whole update is predicated out —
-    # the index maps already re-addressed the resident page, eliding the DMA
-    @pl.when(j < npages_ref[b])
+    # the index maps already re-addressed the resident tile, eliding the DMA
+    @pl.when(t < ntiles_ref[b])
     def _update():
         q = q_ref[0, 0].astype(jnp.float32)             # (G, Dh)
-        k = k_ref[0, 0].astype(jnp.float32)             # (bs, Dh)
+        k = k_ref[0, 0].astype(jnp.float32)             # (pt, Dh)
         v = v_ref[0, 0].astype(jnp.float32)
         if quantized:
             # in-register dequant: the page's int8/fp8 codes scale by its
             # per-(page, head) factor before entering the softmax math
             k = k * ks_ref[0, 0]
             v = v * vs_ref[0, 0]
-        slot = j * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
-        mapped = bt_ref[b, j] >= 0
-        valid = (pos_ref[...] >= 0) & (slot < fill_ref[b]) & mapped  # (1, bs)
+        slot = t * pt + jax.lax.broadcasted_iota(jnp.int32, (1, pt), 1)
+        mapped = bt_ref[b, t // tpp] >= 0
+        valid = (pos_ref[...] >= 0) & (slot < fill_ref[b]) & mapped  # (1, pt)
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32) * scale
-        s = jnp.where(valid, s, NEG)                    # (G, bs) via broadcast
+        s = jnp.where(valid, s, NEG)                    # (G, pt) via broadcast
         m_prev = m_s[...]                               # (G, 1)
         m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
         p = jnp.exp(s - m_new)
@@ -104,18 +114,19 @@ def _kernel(bt_ref, fill_ref, npages_ref, q_ref, k_ref, v_ref, pos_ref,
             preferred_element_type=jnp.float32)
         m_s[...] = m_new
 
-    @pl.when(j == nb - 1)
+    @pl.when(t == nt - 1)
     def _finish():
         o_ref[0, 0] = (acc[...] / jnp.maximum(l_s[...], 1e-30)
                        ).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit, static_argnames=("page_tile", "interpret"))
 def paged_flash_decode(q: jnp.ndarray, k_pool: jnp.ndarray,
                        v_pool: jnp.ndarray, pos_pool: jnp.ndarray,
                        block_tables: jnp.ndarray, fill: jnp.ndarray,
                        k_scale: jnp.ndarray = None,
                        v_scale: jnp.ndarray = None, *,
+                       page_tile: int = None,
                        interpret: bool = False) -> jnp.ndarray:
     """q: (B, Hq, Dh); k_pool/v_pool: (N, Hkv, bs, Dh); pos_pool: (N, bs);
     block_tables: (B, nb) int32 (-1 = unmapped); fill: (B,) int32.
@@ -126,40 +137,54 @@ def paged_flash_decode(q: jnp.ndarray, k_pool: jnp.ndarray,
     scalar-prefetch block table as the page itself, lands next to the K/V
     tile, and the codes dequantize in-register inside the softmax update —
     the quantized pool never touches HBM in fp width.  Oracle:
-    `kernels.ref.paged_decode_quant_ref`."""
+    `kernels.ref.paged_decode_quant_ref`.
+
+    ``page_tile`` (autotuned; default = page size) splits each page into
+    ``bs // page_tile`` sequential sub-tiles: the grid's inner axis becomes
+    tiles rather than pages, the fill-aware exit truncates at tile (not
+    page) granularity, and ``page_tile == bs`` reproduces the historical
+    kernel exactly (same grid, same index arithmetic, same float op
+    order)."""
     B, Hq, Dh = q.shape
     N, Hkv, bs, _ = k_pool.shape
     nb = block_tables.shape[1]
     G = Hq // Hkv
     quantized = k_scale is not None
+    pt = bs if page_tile is None else int(page_tile)
+    if pt <= 0 or bs % pt:
+        raise ValueError(f"page_tile {pt} must be a positive divisor of the "
+                         f"page size {bs}")
+    tpp = bs // pt                 # tiles per page
+    nt = nb * tpp                  # inner (sequential) grid extent
     qf = q.reshape(B, Hkv, G, Dh)
-    # live pages per row: everything past ceil(fill / bs) is unwritten
+    # live tiles per row: everything past ceil(fill / pt) is unwritten
     # head-room whose slots the fill mask rejects anyway — skip it wholesale
-    num_pages = jnp.minimum(-(-fill // bs), nb).astype(jnp.int32)  # (B,)
+    num_tiles = jnp.minimum(-(-fill // pt), nt).astype(jnp.int32)  # (B,)
 
-    # index maps receive (grid indices..., *scalar-prefetch refs); the page
-    # index is clamped to the row's last live page so skipped steps
-    # re-address the resident block (same index -> the DMA is elided)
-    def k_map(b, h, j, bt, fl, npg):
-        jc = jnp.maximum(jnp.minimum(j, npg[b] - 1), 0)
-        return (jnp.maximum(bt[b, jc], 0), h, 0, 0)
+    # index maps receive (grid indices..., *scalar-prefetch refs); the tile
+    # index is clamped to the row's last live tile so skipped steps
+    # re-address the resident block (same index -> the DMA is elided).
+    # tile t lives at sub-tile t % tpp of page bt[b, t // tpp].
+    def k_map(b, h, t, bt, fl, ntl):
+        tc = jnp.maximum(jnp.minimum(t, ntl[b] - 1), 0)
+        return (jnp.maximum(bt[b, tc // tpp], 0), h, tc % tpp, 0)
 
-    def pos_map(b, h, j, bt, fl, npg):
-        jc = jnp.maximum(jnp.minimum(j, npg[b] - 1), 0)
-        return (jnp.maximum(bt[b, jc], 0), 0)
+    def pos_map(b, h, t, bt, fl, ntl):
+        tc = jnp.maximum(jnp.minimum(t, ntl[b] - 1), 0)
+        return (jnp.maximum(bt[b, tc // tpp], 0), tc % tpp)
 
-    def scale_map(b, h, j, bt, fl, npg):
-        jc = jnp.maximum(jnp.minimum(j, npg[b] - 1), 0)
-        return (jnp.maximum(bt[b, jc], 0), h)
+    def scale_map(b, h, t, bt, fl, ntl):
+        tc = jnp.maximum(jnp.minimum(t, ntl[b] - 1), 0)
+        return (jnp.maximum(bt[b, tc // tpp], 0), h)
 
     in_specs = [
         pl.BlockSpec((1, 1, G, Dh),
-                     lambda b, h, j, bt, fl, npg: (b, h, 0, 0)),
-        pl.BlockSpec((1, 1, bs, Dh), k_map),
-        pl.BlockSpec((1, 1, bs, Dh), k_map),
-        pl.BlockSpec((1, bs), pos_map),
+                     lambda b, h, t, bt, fl, ntl: (b, h, 0, 0)),
+        pl.BlockSpec((1, 1, pt, Dh), k_map),
+        pl.BlockSpec((1, 1, pt, Dh), k_map),
+        pl.BlockSpec((1, pt), pos_map),
     ]
-    operands = [block_tables, fill, num_pages, qf, k_pool, v_pool, pos_pool]
+    operands = [block_tables, fill, num_tiles, qf, k_pool, v_pool, pos_pool]
     if quantized:
         in_specs += [pl.BlockSpec((1, 1), scale_map),
                      pl.BlockSpec((1, 1), scale_map)]
@@ -167,10 +192,10 @@ def paged_flash_decode(q: jnp.ndarray, k_pool: jnp.ndarray,
                      v_scale.astype(jnp.float32)]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
-        grid=(B, Hkv, nb),
+        grid=(B, Hkv, nt),
         in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, G, Dh),
-                               lambda b, h, j, bt, fl, npg: (b, h, 0, 0)),
+                               lambda b, h, t, bt, fl, ntl: (b, h, 0, 0)),
         scratch_shapes=[
             pltpu.VMEM((G, Dh), jnp.float32),
             pltpu.VMEM((G, 1), jnp.float32),
@@ -178,8 +203,8 @@ def paged_flash_decode(q: jnp.ndarray, k_pool: jnp.ndarray,
         ],
     )
     out = pl.pallas_call(
-        functools.partial(_kernel, scale=1.0 / (Dh ** 0.5), bs=bs, nb=nb,
-                          quantized=quantized),
+        functools.partial(_kernel, scale=1.0 / (Dh ** 0.5), pt=pt, tpp=tpp,
+                          nt=nt, quantized=quantized),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, Hkv, G, Dh), q.dtype),
         interpret=interpret,

@@ -329,17 +329,41 @@ def materialize(cache: PagedKVCache
     return k, v, pos
 
 
-def paged_attend(q: jnp.ndarray, cache: PagedKVCache) -> jnp.ndarray:
-    """Decode-step attention over the paged cache (jnp model path).
+# paged_attend backend: "auto" routes to the streaming Pallas kernel on TPU
+# and the materializing jnp path elsewhere; "kernel"/"materialize" force one
+# (tests force "kernel" to drive the interpret-mode kernel through the
+# engine, with tuned page_tile resolution live)
+_ATTEND_BACKEND = {"mode": "auto"}
 
-    q: (B, Hq, Dh) roped single-token queries -> out (B, Hq, Dh).  Gathers
-    the page chains to the contiguous layout and applies the exact attention
-    math of `kvcache.attend` — the token-identity anchor.  Quantized pools
-    dequantize inside `materialize` (so this path never reads raw int8/fp8
-    bytes as floats).  The streaming Pallas kernel
-    (`kernels/paged_decode.py`) is the TPU path that avoids this
-    materialization entirely and dequantizes in-register.
+
+def set_attend_backend(mode: str) -> None:
+    if mode not in ("auto", "kernel", "materialize"):
+        raise ValueError(f"unknown paged_attend backend {mode!r}")
+    _ATTEND_BACKEND["mode"] = mode
+
+
+def paged_attend(q: jnp.ndarray, cache: PagedKVCache) -> jnp.ndarray:
+    """Decode-step attention over the paged cache.
+
+    q: (B, Hq, Dh) roped single-token queries -> out (B, Hq, Dh).  The
+    materializing path gathers the page chains to the contiguous layout and
+    applies the exact attention math of `kvcache.attend` — the
+    token-identity anchor; quantized pools dequantize inside `materialize`
+    (so it never reads raw int8/fp8 bytes as floats).  The streaming Pallas
+    kernel (`kernels/paged_decode.py`, via `kernels.ops` so tuned
+    ``page_tile`` configs resolve) avoids the materialization entirely and
+    dequantizes in-register — it is the TPU fast path, selected by
+    `set_attend_backend` ("auto" keeps CPU on the materializing anchor).
     """
+    mode = _ATTEND_BACKEND["mode"]
+    if mode == "auto":
+        mode = "kernel" if jax.default_backend() == "tpu" else "materialize"
+    if mode == "kernel":
+        from repro.kernels import ops
+        return ops.paged_flash_decode(q, cache.k_pool, cache.v_pool,
+                                      cache.pos_pool, cache.block_tables,
+                                      cache.fill, cache.k_scale,
+                                      cache.v_scale)
     k, v, pos = materialize(cache)
     out, _ = attend_arrays(q, k, v, pos)
     return out

@@ -17,6 +17,30 @@ from repro.launch.costs import MeshShape, cell_cost
 HW_NOTE = ("TPU v5e-class: 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link "
            "ICI per chip")
 
+# Per-device peaks backing the *kernel-level* roofline sanity bound the
+# autotuner applies to sweep winners (kernels/autotune.py; methodology in
+# PERFORMANCE.md).  Values are (peak FLOP/s, peak HBM bytes/s).  The
+# ``interpret`` row covers every non-TPU host: deliberately generous
+# optimistic peaks, so the bound stays a true lower bound — interpret-mode
+# timings sit orders of magnitude above it, and any measurement that lands
+# *below* it is a benchmarking bug (caching, a dropped block_until_ready),
+# not a fast kernel.
+KERNEL_PEAKS = {
+    "tpu_v4": (275e12, 1228e9),
+    "tpu_v5e": (197e12, 819e9),
+    "tpu_v5p": (459e12, 2765e9),
+    "interpret": (1e12, 400e9),
+}
+
+
+def kernel_bound_s(flops: float, hbm_bytes: float, device_kind: str) -> float:
+    """Analytic lower bound on one kernel launch: the slower of the compute
+    term (flops / peak FLOP/s) and the memory term (bytes / peak HBM B/s).
+    No launch-overhead term — omitting it keeps this a strict lower bound,
+    which is what the autotuner's too-fast-winner rejection needs."""
+    peak_f, peak_b = KERNEL_PEAKS.get(device_kind, KERNEL_PEAKS["interpret"])
+    return max(flops / peak_f, hbm_bytes / peak_b)
+
 
 def _mesh_of(tag: str) -> MeshShape:
     return MeshShape(pod=2, data=16, model=16) if tag == "pod2x16x16" \

@@ -1,0 +1,304 @@
+"""Autotune config resolution + sweep harness (kernels/autotune.py).
+
+Covers the ISSUE-8 contract: tuned-entry hit, fallback-to-default that is
+bitwise-identical to the historical kernels, malformed/stale tuned JSON as
+a loud TunedConfigError (never a silent fallback), ref-oracle rejection of
+wrong winners, the roofline sanity bound rejecting impossible timings, the
+persist round-trip, and the tools/autotune.py dry-run CLI.
+"""
+import importlib.util
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import autotune as at
+from repro.kernels import ops, ref
+from repro.kernels.budget_attention import budget_attention
+from repro.kernels.flash_attention import flash_attention_fwd
+from repro.kernels.paged_decode import paged_flash_decode
+
+
+@pytest.fixture
+def tuned_dir(tmp_path, monkeypatch):
+    """Point the registry at an isolated temp dir (empty = pure defaults)."""
+    monkeypatch.setenv(at.TUNED_DIR_ENV, str(tmp_path))
+    at.reset_cache()
+    yield tmp_path
+    at.reset_cache()
+
+
+def _write_tuned(path, kind, entries, schema=at.SCHEMA_VERSION):
+    with open(os.path.join(str(path), f"{kind}.json"), "w") as f:
+        json.dump(dict(schema=schema, device_kind=kind, entries=entries), f)
+
+
+def _tuned_entry(config, us=123.0):
+    return dict(config=config, source="tuned", us=us, oracle_ok=True,
+                roofline_ok=True)
+
+
+def _paged_operands(seed=0, B=2, Hq=4, Hkv=2, Dh=16, bs=8, nb=2):
+    rng = np.random.default_rng(seed)
+    N = B * nb + 2
+    q = jnp.asarray(rng.normal(size=(B, Hq, Dh)), jnp.float32)
+    k_pool = jnp.asarray(rng.normal(size=(N, Hkv, bs, Dh)), jnp.float32)
+    v_pool = jnp.asarray(rng.normal(size=(N, Hkv, bs, Dh)), jnp.float32)
+    pos_pool = jnp.asarray(rng.integers(0, 99, (N, bs)), jnp.int32)
+    bt = jnp.asarray(
+        rng.permutation(np.arange(1, N))[:B * nb].reshape(B, nb), jnp.int32)
+    fill = jnp.asarray([bs + 3, bs // 2], jnp.int32)
+    return q, k_pool, v_pool, pos_pool, bt, fill
+
+
+# ------------------------------------------------------------- resolution --
+
+def test_tuned_entry_hit(tuned_dir):
+    key = at.tune_key("budget_attention", head_dim=16)
+    _write_tuned(tuned_dir, at.device_kind(),
+                 {key.s: _tuned_entry({"bh_tile": 2})})
+    cfg, src = at.get_tuned_config("budget_attention", key)
+    assert cfg == {"bh_tile": 2}
+    assert src == "tuned"
+
+
+def test_missing_entry_falls_back_to_default(tuned_dir):
+    key = at.tune_key("paged_decode", head_dim=16, page_size=8)
+    cfg, src = at.get_tuned_config("paged_decode", key)
+    assert cfg == {"page_tile": 8}
+    assert src == "default"
+    cfg, src = at.get_tuned_config(
+        "flash_attention", at.tune_key("flash_attention", head_dim=16))
+    assert (cfg, src) == ({"block_q": 512, "block_k": 512}, "default")
+
+
+def test_default_fallback_is_bitwise_identical(tuned_dir):
+    """With no tuned entry, the ops wrappers must produce bit-for-bit the
+    outputs of the historical hand-picked constants — the acceptance pin."""
+    operands = _paged_operands()
+    ops.reset_config_sources()
+    via_ops = ops.paged_flash_decode(*operands)
+    direct = paged_flash_decode(*operands, page_tile=8, interpret=True)
+    assert np.array_equal(np.asarray(via_ops), np.asarray(direct))
+    assert ops.config_provenance() == "default"
+
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(rng.normal(size=(2, 4, 16)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(2, 2, 24, 16)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(2, 2, 24, 16)), jnp.float32)
+    pos = jnp.asarray(rng.integers(-1, 50, (2, 2, 24)), jnp.int32)
+    pos = pos.at[:, :, 0].set(0)
+    o1, p1 = ops.budget_attention(q, k, v, pos)
+    o2, p2 = budget_attention(q, k, v, pos, bh_tile=1, interpret=True)
+    assert np.array_equal(np.asarray(o1), np.asarray(o2))
+    assert np.array_equal(np.asarray(p1), np.asarray(p2))
+
+    qa = jnp.asarray(rng.normal(size=(1, 24, 4, 16)), jnp.float32)
+    ka = jnp.asarray(rng.normal(size=(1, 24, 2, 16)), jnp.float32)
+    va = jnp.asarray(rng.normal(size=(1, 24, 2, 16)), jnp.float32)
+    posa = jnp.broadcast_to(jnp.arange(24)[None], (1, 24)).astype(jnp.int32)
+    f1 = ops.flash_attention(qa, ka, va, posa, posa)
+    f2 = flash_attention_fwd(qa, ka, va, posa, posa, block_q=512,
+                             block_k=512, interpret=True)
+    assert np.array_equal(np.asarray(f1), np.asarray(f2))
+
+
+def test_tuned_entry_drives_kernel_and_provenance(tuned_dir):
+    key = at.tune_key("paged_decode", head_dim=16, page_size=8)
+    _write_tuned(tuned_dir, at.device_kind(),
+                 {key.s: _tuned_entry({"page_tile": 8})})
+    operands = _paged_operands()
+    ops.reset_config_sources()
+    out = ops.paged_flash_decode(*operands)
+    assert ops.config_sources()["paged_decode"] == "tuned"
+    assert ops.config_provenance() == "tuned"
+    oracle = ref.paged_decode_ref(*operands)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(oracle),
+                               rtol=2e-5, atol=2e-5)
+    ops.reset_config_sources()
+    assert ops.config_provenance() == "default"
+
+
+# --------------------------------------------------- loud schema failures --
+
+@pytest.mark.parametrize("mutate,match", [
+    (lambda d: d.update(schema=99), "schema"),
+    (lambda d: d["entries"].update({"nonsense": {"config": {"x": 1},
+                                                 "source": "default"}}),
+     "unparseable"),
+    (lambda d: d["entries"]["budget_attention/any/hd16/ps0"].update(
+        config={"old_param": 4}), "stale"),
+    (lambda d: d["entries"]["budget_attention/any/hd16/ps0"].update(
+        config={"bh_tile": -2}), "positive"),
+    (lambda d: d["entries"]["budget_attention/any/hd16/ps0"].update(
+        source="guessed"), "source"),
+    (lambda d: d["entries"]["budget_attention/any/hd16/ps0"].update(
+        source="tuned"), "us"),
+])
+def test_malformed_tuned_json_is_loud(tuned_dir, mutate, match):
+    """A broken tuned file must raise, never silently fall back to the
+    defaults (an invisible perf regression)."""
+    key = at.tune_key("budget_attention", head_dim=16)
+    doc = dict(schema=at.SCHEMA_VERSION, device_kind=at.device_kind(),
+               entries={key.s: dict(config={"bh_tile": 1},
+                                    source="default")})
+    mutate(doc)
+    with open(os.path.join(str(tuned_dir),
+                           f"{at.device_kind()}.json"), "w") as f:
+        json.dump(doc, f)
+    with pytest.raises(at.TunedConfigError, match=match):
+        at.get_tuned_config("budget_attention", key)
+
+
+def test_stale_page_tile_not_dividing_page_size_is_loud(tuned_dir):
+    key = at.tune_key("paged_decode", head_dim=16, page_size=8)
+    _write_tuned(tuned_dir, at.device_kind(),
+                 {key.s: _tuned_entry({"page_tile": 3})})
+    with pytest.raises(at.TunedConfigError, match="divide"):
+        at.get_tuned_config("paged_decode", key)
+
+
+def test_invalid_json_text_is_loud(tuned_dir):
+    with open(os.path.join(str(tuned_dir),
+                           f"{at.device_kind()}.json"), "w") as f:
+        f.write("{not json")
+    with pytest.raises(at.TunedConfigError, match="invalid JSON"):
+        at.load_tuned()
+
+
+def test_device_kind_mismatch_is_loud(tuned_dir):
+    _write_tuned(tuned_dir, at.device_kind(), {})
+    path = os.path.join(str(tuned_dir), f"{at.device_kind()}.json")
+    with open(path) as f:
+        doc = json.load(f)
+    doc["device_kind"] = "tpu_v5e"
+    with open(path, "w") as f:
+        json.dump(doc, f)
+    with pytest.raises(at.TunedConfigError, match="device_kind"):
+        at.load_tuned()
+
+
+# -------------------------------------------------- sweep winner checking --
+
+def _smoke_case():
+    key = at.tune_key("budget_attention", head_dim=16)
+    return key, at.make_case(key, workload=at.Workload(B=2, Hq=4, Hkv=2,
+                                                       S=16))
+
+
+def test_winner_rejected_on_oracle_failure():
+    key, case = _smoke_case()
+
+    def wrong_runner(config):
+        o, p = case.run(config)
+        return o + 1.0, p           # subtly wrong kernel output
+
+    cand = at.evaluate_candidate(case, {"bh_tile": 1}, kind="interpret",
+                                 runner=wrong_runner)
+    assert cand.oracle_ok is False
+    assert not cand.accepted
+    assert "oracle" in cand.reject_reason
+    # the wrong config can never be persisted: a sweep built from it has no
+    # winner, so persist() writes nothing for the key
+    res = at.SweepResult(key=key, kind="interpret", workload=case.workload,
+                         candidates=[cand], winner=None, default_us=None)
+    assert all(not c.accepted for c in res.candidates)
+
+
+def test_roofline_rejects_too_fast_timing():
+    _, case = _smoke_case()
+
+    def impossible_timer(thunk, *, warmup, repeats):
+        return 1e-6                 # "measured" 1 picosecond: a bug
+
+    cand = at.evaluate_candidate(case, {"bh_tile": 1}, kind="interpret",
+                                 timer=impossible_timer)
+    assert cand.oracle_ok is True
+    assert not cand.accepted
+    assert "roofline" in cand.reject_reason
+    assert cand.us < cand.bound_us
+
+
+def test_accepted_candidate_passes_both_gates():
+    _, case = _smoke_case()
+
+    def slow_timer(thunk, *, warmup, repeats):
+        return 1e6                  # one second: far above any bound
+
+    cand = at.evaluate_candidate(case, {"bh_tile": 2}, kind="interpret",
+                                 timer=slow_timer)
+    assert cand.accepted
+    assert cand.oracle_ok is True
+    assert cand.us >= cand.bound_us
+
+
+def test_persist_round_trip(tuned_dir):
+    key, _ = _smoke_case()
+
+    def slow_timer(thunk, *, warmup, repeats):
+        return 1e6
+
+    res = at.sweep(key, kind=at.device_kind(),
+                   workload=at.Workload(B=2, Hq=4, Hkv=2, S=16),
+                   timer=slow_timer)
+    assert res.winner is not None
+    path = at.persist([res], kind=at.device_kind(),
+                      directory=str(tuned_dir))
+    with open(path) as f:
+        entries = at.validate_tuned(json.load(f), kind=at.device_kind())
+    assert key.s in entries
+    assert entries[key.s]["source"] == "tuned"
+    cfg, src = at.get_tuned_config("budget_attention", key)
+    assert src == "tuned"
+    assert cfg == res.winner.config
+    rows = res.report_rows()
+    assert any(r["winner"] for r in rows)
+    assert all(r["roofline_bound_us"] is not None for r in rows)
+
+
+def test_candidate_space_contains_default():
+    for kernel in at.KERNELS:
+        key = at.tune_key(kernel, head_dim=128,
+                          page_size=32 if kernel == "paged_decode" else 0)
+        assert at.default_config(key) in at.candidate_space(key)
+
+
+# ---------------------------------------------------------------- the CLI --
+
+def _load_cli():
+    path = os.path.join(os.path.dirname(__file__), os.pardir, "tools",
+                        "autotune.py")
+    spec = importlib.util.spec_from_file_location("autotune_cli", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_cli_dry_run_validates_grids_and_schemas(tmp_path):
+    cli = _load_cli()
+    out = tmp_path / "autotune.json"
+    assert cli.main(["--dry-run", "--all", "--out", str(out)]) == 0
+    report = json.loads(out.read_text())
+    assert report["mode"] == "dry_run"
+    kernels = {r["kernel"] for r in report["rows"]}
+    assert kernels == set(at.KERNELS)
+    for row in report["rows"]:
+        assert row["default"] in row["candidates"]
+    # the checked-in interpret.json schema-validated as part of the dry run
+    assert any(t["kind"] == "interpret" for t in report["tuned_files"])
+
+
+def test_cli_refuses_interpret_persist_without_force(tmp_path, monkeypatch):
+    cli = _load_cli()
+    monkeypatch.setenv(at.TUNED_DIR_ENV, str(tmp_path))
+    at.reset_cache()
+    out = tmp_path / "autotune.json"
+    assert cli.main(["--kernel", "budget_attention", "--smoke",
+                     "--repeats", "1", "--out", str(out)]) == 0
+    # no tuned file written for the interpret device kind without --force
+    assert not (tmp_path / "interpret.json").exists()
+    report = json.loads(out.read_text())
+    assert report["mode"] == "sweep" and report["rows"]
+    at.reset_cache()

@@ -407,6 +407,56 @@ def test_gate_matrix_speedup_tolerance_bands_once_baseline_exists(tmp_path):
         and "rollout_matrix" in problems[0]
 
 
+def test_gate_pairs_rows_by_config_provenance(tmp_path):
+    """A tuned fresh row must not band-compare against a default baseline
+    (its tuned-config speedup would mask a regression) and vice versa: the
+    pairing key includes config_source, so rows of unlike provenance simply
+    have no baseline and only the hard bounds apply."""
+    committed = _full((2.0, 1.2, 1.2))   # fast default-config baseline
+    _write(tmp_path / "committed", *committed)
+    # fresh row ran under a tuned config and is slower than the committed
+    # default row by more than the band — but it pairs with nothing, so
+    # only the hard bounds gate it
+    serving, rollout = _full((1.0, 1.2, 1.2))
+    serving["continuous_vs_lockstep_smoke"][0]["config_source"] = "tuned"
+    _write(tmp_path / "fresh", serving, rollout)
+    assert bench_gate.gate(tmp_path / "committed", tmp_path / "fresh",
+                           0.35) == []
+    # same-provenance rows DO band: a tuned baseline catches the tuned
+    # fresh row's collapse
+    serving_c, rollout_c = _full((2.0, 1.2, 1.2))
+    serving_c["continuous_vs_lockstep_smoke"][0]["config_source"] = "tuned"
+    _write(tmp_path / "committed2", serving_c, rollout_c)
+    problems = bench_gate.gate(tmp_path / "committed2", tmp_path / "fresh",
+                               0.35)
+    assert len(problems) == 1 and "regressed" in problems[0]
+
+
+def test_gate_missing_config_source_counts_as_default(tmp_path):
+    """Baselines committed before autotuning existed carry no config_source:
+    they pair with fresh default rows (explicit "default" or absent field),
+    so the regression band keeps gating across the transition."""
+    _write(tmp_path / "committed", *_full((2.0, 1.2, 1.2)))  # no field
+    serving, rollout = _full((1.0, 1.2, 1.2))                # -50% > band
+    serving["continuous_vs_lockstep_smoke"][0]["config_source"] = "default"
+    _write(tmp_path / "fresh", serving, rollout)
+    problems = bench_gate.gate(tmp_path / "committed", tmp_path / "fresh",
+                               0.35)
+    assert len(problems) == 1 and "regressed" in problems[0]
+
+
+def test_gate_tuned_rows_still_hit_hard_bounds(tmp_path):
+    """Provenance pairing never relaxes the hard bounds: a tuned row that
+    loses token identity fails even with no tuned baseline to pair with."""
+    serving, rollout = _full()
+    row = dict(_row(1.2, identical=False), config_source="tuned")
+    rollout["rollout_phase_smoke"] = [row]
+    _write(tmp_path / "fresh", serving, rollout)
+    problems = bench_gate.gate(tmp_path / "missing", tmp_path / "fresh",
+                               0.35)
+    assert any("token-identical" in p for p in problems)
+
+
 def test_gate_old_baseline_without_matrix_rows_still_gates(tmp_path):
     """A committed baseline predating the matrix sections must not disable
     gating: bad fresh matrix rows still hit the hard bounds, and a clean

@@ -1,0 +1,136 @@
+"""Autotune CLI: sweep the Pallas kernels' tunable configs and persist
+winners (`kernels/autotune.py` does the work; PERFORMANCE.md documents the
+model; DESIGN.md §Kernel autotuning the design).
+
+  PYTHONPATH=src python -m tools.autotune --dry-run --all
+      print every sweep cell's candidate grid and schema-validate all
+      checked-in kernels/tuned/*.json files — no timing, CI-safe.
+  PYTHONPATH=src python -m tools.autotune --all [--smoke]
+      sweep every kernel on this device; report rows land in
+      reports/autotune.json, winners merge into
+      kernels/tuned/<device_kind>.json.  Off-TPU the device kind is
+      ``interpret`` and persisting needs --force: interpret-mode timings
+      measure the Python interpreter, not a device, so they must never be
+      mistaken for tuned configs (CI pins the defaults instead).
+  PYTHONPATH=src python -m tools.autotune --kernel paged_decode
+      sweep a single kernel.
+
+Winners are only ever persisted after passing the kernels/ref.py oracle
+check and the launch/roofline.py sanity bound (a measured time below the
+analytic lower bound is a measurement bug, not a win).
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+from repro.kernels import autotune as at
+
+# canonical sweep cells per kernel: the production geometry (hd128) plus
+# the smoke-model geometry CI runs (hd16); paged cells carry the page size
+DEFAULT_CELLS = {
+    "paged_decode": [(16, 8), (128, 8), (128, 32)],
+    "flash_attention": [(16, 0), (128, 0)],
+    "budget_attention": [(16, 0), (128, 0)],
+    "flash_decode": [(16, 0), (128, 0)],
+}
+
+
+def keys_for(kernels):
+    out = []
+    for kernel in kernels:
+        for hd, ps in DEFAULT_CELLS[kernel]:
+            out.append(at.tune_key(kernel, head_dim=hd, page_size=ps))
+    return out
+
+
+def validate_all_tuned(directory: str) -> list:
+    """Round-trip schema validation of every checked-in tuned file."""
+    checked = []
+    for path in sorted(glob.glob(os.path.join(directory, "*.json"))):
+        kind = os.path.splitext(os.path.basename(path))[0]
+        with open(path) as f:
+            entries = at.validate_tuned(json.load(f), kind=kind)
+        checked.append(dict(file=os.path.relpath(path), kind=kind,
+                            entries=len(entries)))
+        print(f"  tuned schema ok: {path} ({len(entries)} entries)")
+    return checked
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--all", action="store_true",
+                    help="sweep every kernel")
+    ap.add_argument("--kernel", action="append", choices=at.KERNELS,
+                    default=[], help="sweep one kernel (repeatable)")
+    ap.add_argument("--dry-run", action="store_true",
+                    help="print candidate grids + validate tuned JSON "
+                         "schemas, no timing")
+    ap.add_argument("--smoke", action="store_true",
+                    help="small synthetic workloads (fast, CI-sized)")
+    ap.add_argument("--repeats", type=int, default=5,
+                    help="timing repeats per candidate (median taken)")
+    ap.add_argument("--out", default=os.path.join("reports", "autotune.json"))
+    ap.add_argument("--force", action="store_true",
+                    help="allow persisting winners for the 'interpret' "
+                         "device kind (normally refused: interpret timings "
+                         "measure the Python interpreter, not a device)")
+    args = ap.parse_args(argv)
+
+    kernels = tuple(dict.fromkeys(args.kernel)) or (at.KERNELS if args.all
+                                                    else ())
+    if not kernels:
+        ap.error("pick --all or at least one --kernel")
+    kind = at.device_kind()
+    keys = keys_for(kernels)
+    report = dict(schema=at.SCHEMA_VERSION, device_kind=kind,
+                  mode="dry_run" if args.dry_run else "sweep", rows=[])
+
+    if args.dry_run:
+        print(f"device_kind={kind} (dry run: no timing)")
+        for key in keys:
+            cands = at.candidate_space(key)
+            dflt = at.default_config(key)
+            print(f"{key.s}: {len(cands)} candidates "
+                  f"(default {dflt}): {cands}")
+            report["rows"].append(dict(
+                kernel=key.kernel, key=key.s, device_kind=kind,
+                candidates=cands, default=dflt,
+                vmem_bytes=[at.vmem_bytes(key, c) for c in cands]))
+        report["tuned_files"] = validate_all_tuned(at.tuned_dir())
+    else:
+        scale = "smoke" if args.smoke else "full"
+        results = []
+        for key in keys:
+            print(f"sweeping {key.s} on {kind} ...")
+            r = at.sweep(key, kind=kind,
+                         workload=at.default_workload(key, scale),
+                         repeats=args.repeats)
+            for row in r.report_rows():
+                flag = ("WINNER" if row["winner"] else
+                        "ok" if row["accepted"] else
+                        f"REJECTED ({row['reject_reason']})")
+                us = f"{row['us']:.1f}us" if row["us"] else "-"
+                print(f"  {row['config']}: {us}  {flag}")
+            report["rows"].extend(r.report_rows())
+            results.append(r)
+        if kind == "interpret" and not args.force:
+            print("not persisting: device_kind is 'interpret' "
+                  "(pass --force to override)")
+        else:
+            path = at.persist(results, kind=kind)
+            print(f"tuned configs -> {path}")
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=1)
+        f.write("\n")
+    print(f"report -> {args.out} ({len(report['rows'])} rows)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -35,7 +35,17 @@ committed baselines and fails (exit 1) when:
 The tolerance band (default 0.35) absorbs shared-CI-runner noise; the hard
 bounds (1) and (2) have no band.  A section missing from the committed
 baseline is skipped for (3) — first landing of a new bench — but its hard
-bounds still apply.  Usage (the ci.yml bench job):
+bounds still apply.
+
+Rows additionally pair by **config provenance**: every bench row records
+``config_source`` ("tuned" when any kernel resolved an autotuned config,
+"default" otherwise — `kernels.ops.config_provenance`; PERFORMANCE.md), and
+the banded comparison (3) only matches fresh rows against committed rows of
+the *same* provenance.  A tuned-row regression must not hide behind a slower
+default baseline, and a default row must not be judged against a tuned
+baseline's faster numbers.  Rows with no ``config_source`` field (baselines
+committed before autotuning existed) count as "default".  Usage (the ci.yml
+bench job):
 
   cp BENCH_serving.json BENCH_rollout.json /tmp/bench_committed/
   python -m benchmarks.serving --smoke && python -m benchmarks.rollout --smoke
@@ -98,6 +108,12 @@ def _row_key(row: dict, fields) -> tuple:
     return tuple(row.get(f) for f in fields)
 
 
+def _provenance(row: dict) -> str:
+    """Config provenance of a bench row; rows predating autotuning (no
+    ``config_source`` field) ran under the hand-picked defaults."""
+    return row.get("config_source") or "default"
+
+
 def _known_fields(key_fields, committed_rows) -> tuple:
     """Identity fields the committed baseline actually knows about.
 
@@ -115,10 +131,13 @@ def gate_section(name: str, fresh_rows, committed_rows, key_fields,
     """Pure comparison for one section; returns a list of problem strings."""
     problems = []
     match_fields = _known_fields(key_fields, committed_rows or [])
-    committed_by_key = {_row_key(r, match_fields): r
-                       for r in (committed_rows or [])}
+    # pairing key = (identity fields, config provenance): tuned rows only
+    # band-compare against tuned baselines and default rows against default
+    # baselines (hard bounds below apply to every fresh row regardless)
+    committed_by_key = {(_row_key(r, match_fields), _provenance(r)): r
+                        for r in (committed_rows or [])}
     for row in fresh_rows:
-        key = _row_key(row, match_fields)
+        key = (_row_key(row, match_fields), _provenance(row))
         label = f"{name}{[v for v in _row_key(row, key_fields) if v is not None]}"
         if row.get("identical") is False:
             problems.append(f"{label}: outputs not token-identical")
