@@ -46,6 +46,24 @@ OUT = "reports/benchmarks"
 BENCH_JSON = os.path.join(REPO_ROOT, "BENCH_rollout.json")
 
 
+def _resilience_fields(hist) -> dict:
+    """Resilience telemetry stamped onto every trainer bench row (DESIGN.md
+    §Fault tolerance & degraded modes): the mean anomaly-guard skip
+    fraction over the run — bench_gate hard-bounds it, a bench that trained
+    on non-finite updates is not a valid perf sample — plus the cumulative
+    recovery counters (restarts / storm rerolls / checkpoint rollbacks),
+    all expected to be 0 in a healthy bench environment."""
+    return dict(
+        skipped_update_frac=float(np.mean(
+            [m.get("skipped_update_frac", 0.0) for m in hist])),
+        producer_restarts=float(max(
+            (m.get("producer_restarts", 0.0) for m in hist), default=0.0)),
+        storm_rerolls=float(hist[-1].get("resilience_storm_rerolls", 0.0)),
+        checkpoint_rollbacks=float(
+            hist[-1].get("checkpoint_rollbacks", 0.0)),
+    )
+
+
 def _phase_requests(n_prompts: int, group_size: int, prompt_len: int,
                     max_new: int, seed: int, plen_dist: str = "fixed"):
     """Group-major phase workload with mixed-length caps: prompt p's group
@@ -329,7 +347,8 @@ def rollout_matrix_bench(fast: bool = False, *, arch: str = "qwen2.5-14b",
             rejection_rate=float(np.mean([m["rejection_rate"]
                                           for m in hist[warmup:]])),
             reward_first_half=r_first, reward_second_half=r_second,
-            reward_nondegrading=bool(r_second >= r_first - slack)))
+            reward_nondegrading=bool(r_second >= r_first - slack),
+            **_resilience_fields(hist)))
         r = rows[-1]
         out.append(f"rollout_matrix/{policy}/train,{1e6 / r['steps_s']:.0f},"
                    f"steps_per_s={r['steps_s']:.3f};"
@@ -422,7 +441,7 @@ def rollout_async_bench(fast: bool = False, *, arch: str = "qwen2.5-14b",
              config_source=config_source(),
              sync_steps_s=sync_sps, async_steps_s=lag0_sps,
              speedup=lag0_sps / sync_sps, identical=identical,
-             reward_nondegrading=True),
+             reward_nondegrading=True, **_resilience_fields(h_lag0)),
         dict(arch=arch, policy="rkv", max_lag=1, steps=steps + warmup,
              group_size=G, n_prompts=n_prompts,
              config_source=config_source(),
@@ -433,7 +452,8 @@ def rollout_async_bench(fast: bool = False, *, arch: str = "qwen2.5-14b",
              staleness_lag_mean=float(np.mean(
                  [m["staleness_lag"] for m in h_lag1])),
              weight_swaps=int(sum(
-                 m["rollout_weight_swaps"] for m in h_lag1))),
+                 m["rollout_weight_swaps"] for m in h_lag1)),
+             **_resilience_fields(h_lag1)),
     ]
     del tr1
     update_bench_json(BENCH_JSON,
@@ -529,7 +549,8 @@ def rollout_quant_bench(fast: bool = False, *, arch: str = "qwen2.5-14b",
             rejection_rate=float(np.mean([m["rejection_rate"]
                                           for m in hist[warmup:]])),
             reward_first_half=r_first, reward_second_half=r_second,
-            reward_nondegrading=bool(r_second >= r_first - slack)))
+            reward_nondegrading=bool(r_second >= r_first - slack),
+            **_resilience_fields(hist)))
         r = rows[-1]
         out.append(f"rollout_quant/{kv_quant},{1e6 / r['steps_s']:.0f},"
                    f"steps_per_s={r['steps_s']:.3f};"

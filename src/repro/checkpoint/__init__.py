@@ -1,3 +1,10 @@
-from repro.checkpoint.checkpointer import latest_step, restore, save
+from repro.checkpoint.checkpointer import (
+    latest_step,
+    latest_verifiable_step,
+    restore,
+    save,
+    verify_checkpoint,
+)
 
-__all__ = ["save", "restore", "latest_step"]
+__all__ = ["save", "restore", "latest_step", "latest_verifiable_step",
+           "verify_checkpoint"]

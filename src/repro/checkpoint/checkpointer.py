@@ -1,4 +1,5 @@
-"""Sharding-agnostic checkpointing with atomic writes and auto-resume.
+"""Sharding-agnostic checkpointing with atomic writes, content integrity
+and auto-resume.
 
 Arrays are host-gathered and stored by flattened tree path in a single
 ``.npz`` per step, with a JSON manifest.  Restore re-shards onto whatever
@@ -7,13 +8,24 @@ pod restarts on the smaller mesh and `restore` device_puts every leaf with
 the new sharding.  Writes go to ``<dir>/tmp.<step>`` then ``os.rename`` to
 ``<dir>/step_<N>`` (atomic on POSIX), so a crash mid-write never corrupts
 the resume point.  Keeps the newest ``keep`` checkpoints.
+
+Integrity (DESIGN.md §Fault tolerance & degraded modes): ``save`` records
+the sha256 of ``arrays.npz`` in the manifest; ``verify_checkpoint`` re-hashes
+at read time, and ``restore(step=None)`` walks newest-to-oldest, skipping —
+with a loud warning — any snapshot whose payload no longer matches its hash
+(torn write survived the rename, silent media corruption, an operator's
+stray truncate).  Pruning (``_gc``) never deletes the newest *verifiable*
+snapshot, even when it has aged past ``keep``: a run whose recent saves are
+all corrupt must still have somewhere to roll back to.
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import shutil
-from typing import Any, Optional, Tuple
+import warnings
+from typing import Any, List, Optional, Tuple
 
 import jax
 import numpy as np
@@ -32,6 +44,14 @@ def _flatten(tree) -> dict:
     return flat
 
 
+def _sha256_file(path: str) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for chunk in iter(lambda: f.read(1 << 20), b""):
+            h.update(chunk)
+    return h.hexdigest()
+
+
 def save(ckpt_dir: str, step: int, tree, *, keep: int = 3,
          extra: Optional[dict] = None) -> str:
     os.makedirs(ckpt_dir, exist_ok=True)
@@ -42,7 +62,8 @@ def save(ckpt_dir: str, step: int, tree, *, keep: int = 3,
     os.makedirs(tmp)
     flat = _flatten(tree)
     np.savez(os.path.join(tmp, "arrays.npz"), **flat)
-    meta = {"step": step, "keys": sorted(flat), "extra": extra or {}}
+    meta = {"step": step, "keys": sorted(flat), "extra": extra or {},
+            "sha256": _sha256_file(os.path.join(tmp, "arrays.npz"))}
     with open(os.path.join(tmp, "meta.json"), "w") as f:
         json.dump(meta, f)
     if os.path.exists(final):
@@ -52,30 +73,101 @@ def save(ckpt_dir: str, step: int, tree, *, keep: int = 3,
     return final
 
 
+def verify_checkpoint(ckpt_path: str) -> bool:
+    """True iff the snapshot directory's payload matches its manifest.
+
+    Hash-bearing manifests (everything ``save`` writes now) get a full
+    sha256 re-hash; legacy manifests without a hash fall back to a load
+    check (npz opens, key set matches) so pre-integrity checkpoints keep
+    restoring.  Any I/O or parse error is a verification failure, never an
+    exception — callers use this to *choose* a resume point.
+    """
+    try:
+        with open(os.path.join(ckpt_path, "meta.json")) as f:
+            meta = json.load(f)
+        arrays_path = os.path.join(ckpt_path, "arrays.npz")
+        digest = meta.get("sha256")
+        if digest is not None:
+            return _sha256_file(arrays_path) == digest
+        with np.load(arrays_path) as arrays:
+            return sorted(arrays.files) == list(meta["keys"])
+    except Exception:                                    # noqa: BLE001
+        return False
+
+
+def _step_dirs(ckpt_dir: str) -> List[str]:
+    if not os.path.isdir(ckpt_dir):
+        return []
+    return sorted(d for d in os.listdir(ckpt_dir) if d.startswith("step_"))
+
+
 def _gc(ckpt_dir: str, keep: int):
-    steps = sorted(d for d in os.listdir(ckpt_dir) if d.startswith("step_"))
-    for d in steps[:-keep] if keep > 0 else []:
+    steps = _step_dirs(ckpt_dir)
+    if keep <= 0 or len(steps) <= keep:
+        return
+    doomed, kept = steps[:-keep], steps[-keep:]
+    if not any(verify_checkpoint(os.path.join(ckpt_dir, d))
+               for d in reversed(kept)):
+        # every retained snapshot is corrupt: spare the newest verifiable
+        # one among the doomed — deleting it would leave nothing to roll
+        # back to (DESIGN.md §Fault tolerance & degraded modes)
+        for d in reversed(doomed):
+            if verify_checkpoint(os.path.join(ckpt_dir, d)):
+                doomed = [x for x in doomed if x != d]
+                break
+    for d in doomed:
         shutil.rmtree(os.path.join(ckpt_dir, d), ignore_errors=True)
 
 
 def latest_step(ckpt_dir: str) -> Optional[int]:
-    if not os.path.isdir(ckpt_dir):
-        return None
-    steps = sorted(d for d in os.listdir(ckpt_dir) if d.startswith("step_"))
+    steps = _step_dirs(ckpt_dir)
     return int(steps[-1].split("_")[1]) if steps else None
+
+
+def latest_verifiable_step(ckpt_dir: str) -> Optional[int]:
+    """Newest step whose snapshot passes :func:`verify_checkpoint`."""
+    for d in reversed(_step_dirs(ckpt_dir)):
+        if verify_checkpoint(os.path.join(ckpt_dir, d)):
+            return int(d.split("_")[1])
+    return None
 
 
 def restore(ckpt_dir: str, target_tree, *, step: Optional[int] = None,
             shardings=None) -> Tuple[Any, int, dict]:
     """Restore into the structure of ``target_tree`` (shapes must match).
 
+    ``step=None`` resumes from the newest *verifiable* checkpoint: corrupt
+    snapshots are skipped newest-first, each with a ``UserWarning`` naming
+    the rollback (automatic recovery — the caller needs no retry loop).
+    An explicit ``step`` is an exact request: a corrupt target raises.
+
     ``shardings``: optional pytree (same structure) of NamedSharding — each
     leaf is device_put with its sharding (reshard-on-load for elastic
     restarts).  Returns (tree, step, extra).
     """
-    step = latest_step(ckpt_dir) if step is None else step
     if step is None:
-        raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
+        candidates = [int(d.split("_")[1]) for d in _step_dirs(ckpt_dir)]
+        if not candidates:
+            raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
+        step = None
+        for s in reversed(candidates):
+            if verify_checkpoint(os.path.join(ckpt_dir, f"step_{s:08d}")):
+                step = s
+                break
+            warnings.warn(
+                f"checkpoint step_{s:08d} under {ckpt_dir} failed integrity "
+                f"verification; rolling back to the previous snapshot",
+                stacklevel=2)
+        if step is None:
+            raise FileNotFoundError(
+                f"no verifiable checkpoint under {ckpt_dir} "
+                f"({len(candidates)} corrupt snapshot(s) skipped)")
+    else:
+        d = os.path.join(ckpt_dir, f"step_{step:08d}")
+        if not verify_checkpoint(d):
+            raise ValueError(
+                f"checkpoint {d} failed integrity verification "
+                f"(explicitly requested step — not rolling back)")
     d = os.path.join(ckpt_dir, f"step_{step:08d}")
     with open(os.path.join(d, "meta.json")) as f:
         meta = json.load(f)

@@ -7,6 +7,7 @@ from repro.core.grpo import (
 )
 from repro.core.sparse_rl import (
     SparseRLOut,
+    mismatch_metrics,
     rejection_mask,
     resolved_policy,
     sparse_rl_loss,
@@ -23,5 +24,6 @@ __all__ = [
     "sparsity_consistency_ratio",
     "rejection_mask",
     "resolved_policy",
+    "mismatch_metrics",
     "SparseRLOut",
 ]

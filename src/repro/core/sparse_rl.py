@@ -40,6 +40,7 @@ from typing import Dict, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import SparseRLConfig
 from repro.core.grpo import k3_kl, masked_mean, ppo_clip_term
@@ -185,3 +186,35 @@ def sparse_rl_loss(logp_theta: jnp.ndarray,
         loss = loss + scfg.kl_coef * kl
         metrics["ref_kl"] = kl
     return SparseRLOut(loss=loss, metrics=metrics)
+
+
+def mismatch_metrics(logp_old, logp_sparse, token_mask,
+                     row_mask=None, xi_clip_max: float = 10.0
+                     ) -> Dict[str, float]:
+    """Host-side dense-vs-sparse mismatch telemetry over selected rows.
+
+    The jitted loss aggregates ``min_log_xi``/``mismatch_kl``/``mean_xi``
+    over its whole minibatch — correct when every row came from the sparse
+    sampler, but poisoned under the rejection-storm degraded mode
+    (DESIGN.md §Fault tolerance & degraded modes): rerolled dense-fallback
+    rows carry ``logp_sparse == logp_old`` bitwise (xi == 1 exactly, the
+    identity-class contract), so mixing them in dilutes the mismatch the
+    metrics exist to watch.  This helper recomputes the three metrics over
+    ``row_mask`` (the genuinely-sparse rows) only; with no sparse row left
+    it returns ``min_log_xi = +inf`` / ``mismatch_kl = 0`` — "no sparse
+    evidence this phase", not "zero mismatch".
+    """
+    lo = np.asarray(jax.device_get(logp_old), np.float32)
+    ls = np.asarray(jax.device_get(logp_sparse), np.float32)
+    mask = np.asarray(jax.device_get(token_mask), bool)
+    if row_mask is not None:
+        rows = np.asarray(row_mask, bool)
+        lo, ls, mask = lo[rows], ls[rows], mask[rows]
+    if not mask.any():
+        return {"min_log_xi": float("inf"), "mismatch_kl": 0.0,
+                "mean_xi": 1.0}
+    log_xi = (lo - ls)[mask]
+    return {"min_log_xi": float(log_xi.min()),
+            "mismatch_kl": float((ls - lo)[mask].mean()),
+            "mean_xi": float(np.exp(
+                np.minimum(log_xi, np.log(xi_clip_max))).mean())}

@@ -92,6 +92,26 @@ def main(argv=None):
     ap.add_argument("--stage-groups", type=int, default=0,
                     help="async pipeline: staging-queue capacity in groups "
                          "(0 = auto: two phases' worth)")
+    ap.add_argument("--watchdog-timeout", type=float, default=60.0,
+                    help="async pipeline: producer heartbeat staleness "
+                         "bound in seconds before a watchdog restart "
+                         "(DESIGN.md §Fault tolerance & degraded modes)")
+    ap.add_argument("--max-producer-restarts", type=int, default=2,
+                    help="async pipeline: watchdog restart budget before "
+                         "escalating")
+    ap.add_argument("--storm-threshold", type=float, default=0.9,
+                    help="rejection-storm degraded mode: phase veto rate "
+                         "above which vetoed groups re-roll through the "
+                         "dense fallback policy (1.0 disables)")
+    ap.add_argument("--anomaly-max-skips", type=int, default=3,
+                    help="consecutive non-finite updates tolerated "
+                         "(skipped, params untouched) before raising")
+    ap.add_argument("--fault-plan", default=None,
+                    help="arm deterministic fault injection, e.g. "
+                         "'producer_crash@phase=3 nan_grads@step=7' "
+                         "(recovery drills; unarmed = bitwise no-op)")
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="seed for injected-fault payloads")
     ap.add_argument("--lr", type=float, default=None)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt-dir", default="/tmp/srl_train")
@@ -110,7 +130,7 @@ def main(argv=None):
 
     from repro.configs import SparseRLConfig, TrainConfig, get_config
     from repro.rollout.policies import resolve_cli_policy
-    from repro.runtime import Trainer, TrainerOptions
+    from repro.runtime import FaultPlan, Trainer, TrainerOptions
 
     cfg = get_config(args.arch)
     if args.smoke:
@@ -147,7 +167,14 @@ def main(argv=None):
                           overlap_harvest=args.overlap_harvest,
                           group_slack=args.group_slack,
                           pipeline=args.pipeline, max_lag=args.max_lag,
-                          stage_groups=args.stage_groups)
+                          stage_groups=args.stage_groups,
+                          watchdog_timeout=args.watchdog_timeout,
+                          max_producer_restarts=args.max_producer_restarts,
+                          storm_threshold=args.storm_threshold,
+                          anomaly_max_skips=args.anomaly_max_skips,
+                          faults=(FaultPlan.parse(args.fault_plan,
+                                                  seed=args.fault_seed)
+                                  if args.fault_plan else None))
     tr = Trainer(cfg, scfg, tcfg, opts)
     hist = tr.train(args.steps - tr.step, log_every=10)
     tr.save_checkpoint()

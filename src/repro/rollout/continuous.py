@@ -497,7 +497,18 @@ class ContinuousEngine:
             "wasted_row_steps": 0, "prefills": 0, "prefix_hits": 0,
             "blocks_in_use_peak": 0, "cancelled": 0, "prefill_s": 0.0,
             "prefill_dispatches": 0, "prefill_tokens": 0,
-            "weight_swaps": 0, "staged_peak": 0}
+            "weight_swaps": 0, "staged_peak": 0, "pool_retry_sweeps": 0}
+        # ---- fault injection (None = unarmed: zero probes anywhere) -----
+        # (DESIGN.md §Fault tolerance & degraded modes)
+        self._fault_plan = None
+        self._fault_phase = -1
+        # optional liveness hook, called once per run() scheduling-loop
+        # iteration: the async pipeline's producer installs its watchdog
+        # heartbeat here so long in-engine stretches (cold XLA compiles,
+        # pool-retry sweeps, big decode batches) read as progress, not as a
+        # hang — and uses the same hook as a cancellation point (raising
+        # unwinds run() promptly once the producer generation is stale)
+        self.heartbeat = None
 
     # ------------------------------------------------------------------
     def _bootstrap_state(self):
@@ -810,6 +821,35 @@ class ContinuousEngine:
             stats["latency_p99"] = float(np.percentile(lt, 99))
         return stats
 
+    def abort_phase(self) -> None:
+        """Force the engine back to the drained state after its driving
+        thread died mid-phase (watchdog recovery, DESIGN.md §Fault
+        tolerance & degraded modes): drop staged admissions, cancel every
+        resident tenant and release its pages, drop every prefix-cache pin,
+        and park the device state.  Safe on an already-clean engine.  The
+        next ``begin_phase`` then replays the phase from its barrier —
+        token-identical, because per-phase base keys are ``fold_in(root,
+        step)`` and per-request chains are ``fold_in(base, uid)``: nothing
+        about the aborted attempt leaks into the retry's sampling."""
+        self._staged.clear()
+        for row, rs in enumerate(self.rows):
+            if rs is None:
+                continue
+            if rs.blocks and self.allocator is not None:
+                self.allocator.release_many(rs.blocks)
+            rs.done = True
+            self.rows[row] = None
+        self._dirty.clear()
+        if self.prefix is not None:
+            self.prefix.clear()
+        if self.allocator is not None and self.allocator.blocks_in_use:
+            raise RuntimeError(
+                f"paged pool leak across phase abort: "
+                f"{self.allocator.blocks_in_use} page(s) still referenced")
+        self.state, self.active = self._park(self.state, self.active)
+        self._logits_ver[:] = self.weight_version
+        self.reset_clock()
+
     @property
     def prefix_hit_rate(self) -> float:
         """Fraction of admissions served from the prefix cache (0 when
@@ -839,9 +879,24 @@ class ContinuousEngine:
                     kv_capacity_ratio=float(fp_payload / payload))
 
     # ------------------------------------------------------------------
+    def arm_faults(self, plan, phase: int) -> None:
+        """Arm fault injection for the coming phase (``plan=None`` disarms).
+
+        The engine probes the plan only from sites already guarded by
+        ``self._fault_plan is not None``, so an unarmed engine runs the
+        exact pre-fault instruction stream (the bitwise no-op contract of
+        DESIGN.md §Fault tolerance & degraded modes).
+        """
+        self._fault_plan = plan
+        self._fault_phase = int(phase)
+
     def _alloc_blocks(self, n: int) -> List[int]:
         """Allocate pool pages, evicting LRU prefix-cache entries under
         pressure (their pages come back once no active row shares them)."""
+        if self._fault_plan is not None and self._fault_plan.fire(
+                "pool_exhausted_storm", self._fault_phase):
+            raise PoolExhausted(
+                f"injected pool-exhaustion storm @phase={self._fault_phase}")
         while True:
             try:
                 return self.allocator.alloc(n)
@@ -896,7 +951,12 @@ class ContinuousEngine:
         deferred-retire marker, and a row left active with a table mapping
         released pages would append into the next tenant's pages) and the
         exception propagates — exactly the single-request unwind contract,
-        extended to a batch."""
+        extended to a batch.  The unwound ``Request`` objects ride out on
+        the exception (``e.unadmitted``, staging order) so `run` can
+        re-queue them for a later sweep instead of losing them — pool
+        exhaustion under load is transient, not fatal (DESIGN.md
+        §Fault tolerance & degraded modes); their wait-telemetry entries
+        are retracted and re-recorded when they actually admit."""
         if not self._staged:
             return
         t0 = time.perf_counter()
@@ -907,13 +967,17 @@ class ContinuousEngine:
                 self._flush_shared(staged, admitted)
             else:
                 self._flush_plain(staged, admitted)
-        except PoolExhausted:
+        except PoolExhausted as e:
+            unadmitted = []
             for req, row in staged:
                 if req.uid not in admitted:
                     self.rows[row] = None
                     self._dirty.discard(row)
                     self.state, self.active = self._retire(
                         self.state, self.active, row)
+                    self._phase_waits.remove(self.now - req.arrival_time)
+                    unadmitted.append(req)
+            e.unadmitted = unadmitted
             raise
         finally:
             self.stats["prefill_s"] += time.perf_counter() - t0
@@ -1288,6 +1352,8 @@ class ContinuousEngine:
         inflight: deque = deque()
         depth = 1 if self.overlap_harvest else 0
 
+        fruitless_sweeps = 0
+
         def admit_sweep() -> None:
             """FIFO admission of arrived requests into free rows, capped at
             ``prefill_chunk`` prompt tokens per sweep (budget overflow waits
@@ -1297,7 +1363,18 @@ class ContinuousEngine:
             next dispatch so they stop appending into recycled pages.  Any
             staged weight hot-swap applies first, so this sweep's
             admissions prefill — and are version-tagged — under the new
-            snapshot."""
+            snapshot.
+
+            ``PoolExhausted`` from the flush is self-healing, not fatal:
+            the unwound requests go back to the FRONT of the queue (their
+            original order — per-request key chains make the delayed retry
+            token-identical) and re-stage on a later sweep once resident
+            rows drain and free their pages.  Only sustained exhaustion
+            with *nothing* in flight — no row decoding, no chunk pending,
+            so no page can ever come back — escalates to the caller after
+            a bounded number of fruitless sweeps (a genuinely undersized
+            pool, DESIGN.md §Fault tolerance & degraded modes)."""
+            nonlocal fruitless_sweeps
             self._apply_pending_swap()
             spent, staged_keys = 0, set()
             for row in self._free_rows():
@@ -1308,7 +1385,20 @@ class ContinuousEngine:
                     break
                 spent += cost
                 self._stage_admit(pending.popleft(), row)
-            self._flush_admissions()
+            try:
+                self._flush_admissions()
+            except PoolExhausted as e:
+                for r in reversed(getattr(e, "unadmitted", [])):
+                    pending.appendleft(r)
+                self.stats["pool_retry_sweeps"] += 1
+                if self._num_active() or inflight:
+                    fruitless_sweeps = 0      # draining rows will free pages
+                else:
+                    fruitless_sweeps += 1
+                    if fruitless_sweeps > 64:
+                        raise
+            else:
+                fruitless_sweeps = 0
             for row in sorted(self._dirty):
                 self.state, self.active = self._retire(
                     self.state, self.active, row)
@@ -1362,6 +1452,8 @@ class ContinuousEngine:
                 on_finished(out[-1])
 
         while pending or self._num_active() or inflight:
+            if self.heartbeat is not None:
+                self.heartbeat()
             t0 = time.perf_counter()
             admit_sweep()
             dispatched = False

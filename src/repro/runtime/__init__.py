@@ -1,4 +1,6 @@
 from repro.runtime.async_pipeline import AsyncPipeline, WeightStore
+from repro.runtime.faults import FaultPlan, InjectedCrash, InjectedFault
 from repro.runtime.trainer import Trainer, TrainerOptions
 
-__all__ = ["Trainer", "TrainerOptions", "AsyncPipeline", "WeightStore"]
+__all__ = ["Trainer", "TrainerOptions", "AsyncPipeline", "WeightStore",
+           "FaultPlan", "InjectedFault", "InjectedCrash"]

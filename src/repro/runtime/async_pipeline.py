@@ -1,5 +1,6 @@
 """Async actor-learner pipeline: overlapped rollout/update with versioned
-weights and staleness-aware off-policy correction.
+weights, staleness-aware off-policy correction, and a self-healing
+producer watchdog.
 
 The sync Trainer alternates two serial stages — a rollout phase (the actor)
 and a minibatched Sparse-RL update (the learner).  This module overlaps
@@ -36,11 +37,27 @@ weight staleness is absorbed by the loss's clipped per-token behavior
 ratio, fed from the per-token weight versions the engine records across
 hot-swaps.
 
+Watchdog & restart (DESIGN.md §Fault tolerance & degraded modes): the
+producer stamps a heartbeat at every phase barrier, group finish and
+queue-put; the learner polls ``queue.get(timeout=...)`` and, on a dead
+thread (no exit marker — an interpreter-level kill) or a stale heartbeat
+(a hang), restarts the producer from the last phase barrier with bounded
+exponential backoff.  Every queue item carries the producer *generation*:
+a bumped generation invalidates the old thread's puts (its next put raises
+and the thread unwinds), the learner discards stale items (releasing their
+WeightStore pins), aborts the engine's half-rolled phase, and respawns
+from ``_done_step``.  The retry is token-identical because per-phase keys
+are ``fold_in(root, step)`` and per-request chains fold uids — nothing
+about the failed attempt leaks into the retry's sampling.
+
 Thread model: exactly two threads touch trainer state, with a strict
 split — the producer reads the loader/WeightStore and owns the engine; the
 learner owns ``params``/``opt_state``/``step`` and never touches the
 engine beyond the (atomic) ``set_params`` staging.  All crossings go
-through the staging queue or the WeightStore's lock.
+through the staging queue or the WeightStore's lock.  A restart never
+overlaps producers: the learner spawns generation g+1 only after
+generation g's thread is provably dead (join), so engine ownership passes
+cleanly.
 """
 from __future__ import annotations
 
@@ -56,6 +73,7 @@ import numpy as np
 
 from repro.rewards import binary_rewards
 from repro.rollout import Request, build_train_rollout
+from repro.runtime.faults import InjectedCrash
 
 
 class WeightStore:
@@ -134,7 +152,9 @@ class WeightStore:
 
 
 # ---------------------------------------------------------------------------
-# staging-queue items (producer -> learner), strictly phase-ordered
+# staging-queue items (producer -> learner), strictly phase-ordered within a
+# producer generation; `gen` lets the learner drop a dead generation's
+# stragglers after a watchdog restart
 # ---------------------------------------------------------------------------
 @dataclass
 class _PhaseStart:
@@ -143,6 +163,7 @@ class _PhaseStart:
     np_mask: np.ndarray          # (total, P)
     answers_rep: list            # per-uid answers
     n_groups: int
+    gen: int = 0
 
 
 @dataclass
@@ -152,6 +173,7 @@ class _Group:
     comps: list                  # G Completions, uid-ascending
     params_by_ver: dict          # version -> params (store refs held)
     rewards: Optional[np.ndarray] = None   # filled by the learner on arrival
+    gen: int = 0
 
 
 @dataclass
@@ -159,11 +181,13 @@ class _PhaseEnd:
     step: int
     stats: Dict[str, float]
     rollout_s: float
+    gen: int = 0
 
 
 @dataclass
 class _ProducerExit:
     error: Optional[BaseException] = None
+    gen: int = 0
 
 
 @dataclass
@@ -197,73 +221,240 @@ class AsyncPipeline:
         self._cv = threading.Condition()
         self._done_step = trainer.step      # steps whose update completed
         self._stop = False
+        # -- watchdog / restart state --
+        # (DESIGN.md §Fault tolerance & degraded modes)
+        self.faults = trainer.faults
+        self.watchdog_timeout = opts.watchdog_timeout
+        self.max_restarts = opts.max_producer_restarts
+        self.restart_backoff = opts.restart_backoff
+        self.restarts = 0
+        self._gen = 0                       # live producer generation
+        self._heartbeat = time.monotonic()
+        self._producer: Optional[threading.Thread] = None
+        self._final_step = trainer.step
+        self._phases: Dict[int, _PhaseBuf] = {}
 
     # -- producer (background thread) -----------------------------------
-    def _put(self, item) -> None:
-        """queue.put that stays interruptible if the learner died."""
+    def _beat(self) -> None:
+        self._heartbeat = time.monotonic()
+
+    def _put(self, item, gen: int) -> None:
+        """queue.put that stays interruptible if the learner died or this
+        producer generation was superseded by a watchdog restart."""
         while True:
             try:
                 self.queue.put(item, timeout=0.2)
                 return
             except queue.Full:
-                if self._stop:
+                # backpressured, not hung: the learner is mid-update
+                self._beat()
+                if self._stop or gen != self._gen:
                     raise RuntimeError("pipeline stopped")
 
-    def _produce(self, start: int, steps: int) -> None:
+    def _hang(self, gen: int) -> None:
+        """``producer_hang`` injection: stop heartbeating but stay alive
+        (``is_alive()`` keeps returning True), so only the staleness branch
+        of the watchdog can detect it; unwinds once superseded."""
+        while not self._stop and gen == self._gen:
+            time.sleep(0.01)
+
+    def _produce(self, start: int, end: int, gen: int) -> None:
         t = self.t
         opts, scfg = t.opts, t.scfg
         G, slack = scfg.group_size, opts.group_slack
+
+        def _tick() -> None:
+            # engine-side heartbeat (once per scheduling-loop iteration):
+            # without it, any long in-engine stretch with no finished group
+            # — a cold XLA compile, a pool-retry storm, a slow decode batch
+            # — reads as a wedged producer and trips a false watchdog
+            # restart.  Doubles as the cancellation point that lets a
+            # superseded generation unwind out of a half-rolled phase at
+            # the next iteration instead of decoding to phase end.
+            self._beat()
+            if self._stop or gen != self._gen:
+                raise RuntimeError("pipeline stopped")
+
+        t.engine.heartbeat = _tick
         try:
-            for s in range(start, start + steps):
+            for s in range(start, end):
                 with self._cv:
                     # max_lag backpressure: do not run ahead of the learner
                     while s - self._done_step > self.max_lag:
-                        if self._stop:
+                        if self._stop or gen != self._gen:
                             return
+                        self._beat()        # gated by design, not hung
                         self._cv.wait(0.2)
-                    if self._stop:
+                    if self._stop or gen != self._gen:
+                        return
+                self._beat()
+                if self.faults is not None:
+                    if self.faults.fire("producer_crash", s):
+                        raise InjectedCrash(
+                            f"injected producer crash @phase={s}")
+                    if self.faults.fire("producer_hang", s):
+                        self._hang(gen)
                         return
                 np_tokens, np_mask, answers_rep = t.tiled_phase_inputs(s)
                 self._put(_PhaseStart(step=s, np_tokens=np_tokens,
                                       np_mask=np_mask,
                                       answers_rep=answers_rep,
-                                      n_groups=opts.num_prompts))
+                                      n_groups=opts.num_prompts, gen=gen),
+                          gen)
                 t0 = time.time()
                 ver, params_v = self.store.acquire()    # freshest snapshot
-                t.engine.begin_phase(params=params_v, base_key=t.phase_key(s),
-                                     weight_version=ver)
-                reqs = [Request(uid=u, prompt=np_tokens[u][np_mask[u]])
-                        for u in range(np_tokens.shape[0])]
+                try:
+                    if self.faults is not None:
+                        t.engine.arm_faults(self.faults, s)
+                    t.engine.begin_phase(params=params_v,
+                                         base_key=t.phase_key(s),
+                                         weight_version=ver)
+                    reqs = [Request(uid=u, prompt=np_tokens[u][np_mask[u]])
+                            for u in range(np_tokens.shape[0])]
 
-                def on_group(gid: int, comps: list, _s=s) -> None:
-                    # pin every sampler version this group's tokens used
-                    # BEFORE queueing (the learner releases after its
-                    # update); blocking put = engine-wide backpressure
-                    by_ver = {}
-                    for c in comps:
-                        for v in np.unique(c.tok_versions):
-                            v = int(v)
-                            if v not in by_ver:
-                                by_ver[v] = self.store.acquire(v)[1]
-                    self._put(_Group(step=_s, gid=gid, comps=comps,
-                                     params_by_ver=by_ver))
+                    def on_group(gid: int, comps: list, _s=s) -> None:
+                        # pin every sampler version this group's tokens
+                        # used BEFORE queueing (the learner releases after
+                        # its update); blocking put = engine-wide
+                        # backpressure
+                        self._beat()
+                        by_ver = {}
+                        for c in comps:
+                            for v in np.unique(c.tok_versions):
+                                v = int(v)
+                                if v not in by_ver:
+                                    by_ver[v] = self.store.acquire(v)[1]
+                        try:
+                            self._put(_Group(step=_s, gid=gid, comps=comps,
+                                             params_by_ver=by_ver, gen=gen),
+                                      gen)
+                        except BaseException:
+                            for v in by_ver:
+                                self.store.release(v)
+                            raise
 
-                t.engine.run(reqs, group_size=G, group_slack=slack,
-                             on_group=on_group)
-                stats = t.engine.end_phase()
-                self.store.release(ver)
+                    t.engine.run(reqs, group_size=G, group_slack=slack,
+                                 on_group=on_group)
+                    stats = t.engine.end_phase()
+                finally:
+                    self.store.release(ver)
                 self._put(_PhaseEnd(step=s, stats=stats,
-                                    rollout_s=time.time() - t0))
-            self._put(_ProducerExit())
+                                    rollout_s=time.time() - t0, gen=gen),
+                          gen)
+            self._put(_ProducerExit(gen=gen), gen)
+        except InjectedCrash:
+            # simulated interpreter-level kill: die WITHOUT the exit
+            # marker — recovery must come from the learner-side liveness
+            # poll, which is exactly what the fault exists to exercise
+            return
         except BaseException as e:                     # noqa: BLE001
             # surface the failure on the learner thread (a daemon thread's
             # traceback would otherwise vanish)
             try:
-                self._put(_ProducerExit(error=e))
+                self._put(_ProducerExit(error=e, gen=gen), gen)
             except RuntimeError:
                 pass
 
+    def _spawn(self) -> None:
+        """Start the current generation's producer from the last phase
+        barrier (``_done_step``) — token-identical to the phases the dead
+        generation would have produced (per-phase fold_in keys)."""
+        self._beat()
+        self._producer = threading.Thread(
+            target=self._produce,
+            args=(self._done_step, self._final_step, self._gen),
+            name=f"rollout-producer-g{self._gen}", daemon=True)
+        self._producer.start()
+
     # -- learner (caller's thread) ---------------------------------------
+    def _discard_item(self, item) -> None:
+        """Drop a stale-generation queue item, releasing any WeightStore
+        pins a buffered group still holds (a leaked ref would pin its
+        snapshot in the ring forever)."""
+        if isinstance(item, _Group):
+            for v in item.params_by_ver:
+                self.store.release(v)
+
+    def _restart_producer(self, reason: str) -> None:
+        """Bounded producer restart with backoff (the watchdog's recovery
+        arm).  Ordering invariant: bump generation -> drain until the old
+        thread provably exits -> discard its buffered phases (releasing
+        store pins) -> abort the engine's half-rolled phase -> spawn.  The
+        new generation only ever starts on a dead predecessor and a
+        drained engine."""
+        t = self.t
+        if self.restarts >= self.max_restarts:
+            raise RuntimeError(
+                f"rollout producer failed {self.restarts + 1} time(s) "
+                f"(last: {reason}); max_producer_restarts="
+                f"{self.max_restarts} exhausted")
+        self.restarts += 1
+        t.resilience["producer_restarts"] += 1
+        print(f"[async watchdog] {reason}; restarting producer from phase "
+              f"{self._done_step} "
+              f"(restart {self.restarts}/{self.max_restarts})", flush=True)
+        old = self._producer
+        with self._cv:
+            self._gen += 1          # invalidates the old generation's puts
+            self._cv.notify_all()   # wake a lag-gated producer to unwind
+        # unblock + drain: a producer stuck in a full-queue put exits at
+        # its next timeout once its generation is stale, and one busy
+        # inside the engine exits at its next heartbeat tick.  The
+        # deadline is deliberately looser than the watchdog bound — a
+        # stale-but-busy thread may be one cold XLA compile away from its
+        # next cancellation point, and waiting it out is recoverable where
+        # restarting over a live engine consumer is not.
+        join_bound = max(30.0, 2.0 * self.watchdog_timeout)
+        deadline = time.monotonic() + join_bound
+        while old is not None and old.is_alive():
+            try:
+                self._discard_item(self.queue.get(timeout=0.05))
+            except queue.Empty:
+                pass
+            old.join(timeout=0.05)
+            if old.is_alive() and time.monotonic() > deadline:
+                raise RuntimeError(
+                    f"stale rollout producer refused to exit within "
+                    f"{join_bound:.0f}s; engine state cannot be "
+                    f"recovered safely")
+        while True:     # the dead thread can put nothing more: final drain
+            try:
+                self._discard_item(self.queue.get_nowait())
+            except queue.Empty:
+                break
+        for buf in self._phases.values():
+            for g in buf.groups.values():
+                self._discard_item(g)
+        self._phases.clear()
+        t.engine.abort_phase()
+        time.sleep(min(2.0, self.restart_backoff * (2 ** (self.restarts - 1))))
+        self._spawn()
+
+    def _next_item(self):
+        """Watchdog ``queue.get``: poll with a timeout, and on starvation
+        check (a) thread liveness — a producer that died without its exit
+        marker (hard kill) — and (b) heartbeat staleness — a producer that
+        is alive but wedged.  Either triggers a bounded restart.  Stale-
+        generation items are discarded inline."""
+        poll = max(0.05, min(0.5, self.watchdog_timeout / 4.0))
+        while True:
+            try:
+                item = self.queue.get(timeout=poll)
+            except queue.Empty:
+                if not self._producer.is_alive():
+                    self._restart_producer(
+                        "producer thread died without an exit marker")
+                elif (time.monotonic() - self._heartbeat
+                        > self.watchdog_timeout):
+                    self._restart_producer(
+                        f"producer heartbeat stale for > "
+                        f"{self.watchdog_timeout:.1f}s")
+                continue
+            if item.gen != self._gen:
+                self._discard_item(item)
+                continue
+            return item
+
     def _group_rewards(self, meta: _PhaseStart, item: _Group) -> np.ndarray:
         """Verify a group the moment it arrives (overlapped with the
         engine's decode of the rest of the phase)."""
@@ -315,7 +506,13 @@ class AsyncPipeline:
         logp_behave = self._behavior_logps(tr.rollout, tr.tok_versions,
                                            params_by_ver, logp_old)
         agg = t._phase_update(tr.rollout, rewards, logp_behave=logp_behave,
-                              logp_old=logp_old)
+                              logp_old=logp_old,
+                              phase_ctx=dict(
+                                  np_tokens=meta.np_tokens,
+                                  np_mask=meta.np_mask,
+                                  answers_rep=meta.answers_rep,
+                                  keep=tr.keep,
+                                  rng=t.phase_key(meta.step)))
         if logp_behave is not None:
             # staleness telemetry in learner-steps (the "measurable
             # fourth mismatch"): how many updates behind each token's
@@ -338,19 +535,24 @@ class AsyncPipeline:
             return []
         v0 = self.store.publish(t.params)
         assert v0 == t.weight_version, (v0, t.weight_version)
-        producer = threading.Thread(
-            target=self._produce, args=(t.step, steps),
-            name="rollout-producer", daemon=True)
-        producer.start()
+        self._final_step = t.step + steps
+        self._phases = {}
+        self._spawn()
         history: List[Dict[str, float]] = []
-        phases: Dict[int, _PhaseBuf] = {}
+        phases = self._phases
         t_step = time.time()
         try:
             while len(history) < steps:
-                item = self.queue.get()
+                item = self._next_item()
                 if isinstance(item, _ProducerExit):
                     if item.error is not None:
-                        raise item.error
+                        # a producer that crashed but managed to report is
+                        # restartable exactly like one that vanished; the
+                        # restart budget bounds deterministic re-crashes
+                        self._restart_producer(
+                            f"producer raised: {item.error!r}")
+                        phases = self._phases
+                        continue
                     raise RuntimeError(
                         "rollout producer exited before the learner "
                         "finished (max_lag gate out of sync?)")
@@ -368,6 +570,7 @@ class AsyncPipeline:
                     metrics.update(
                         rollout_s=item.rollout_s,
                         step_time_s=time.time() - t_step,
+                        producer_restarts=float(self.restarts),
                         **t._engine_stat_metrics(item.stats))
                     t_step = time.time()
                     # publish + stage the hot-swap so groups the producer
@@ -391,11 +594,27 @@ class AsyncPipeline:
             with self._cv:
                 self._stop = True
                 self._cv.notify_all()
-            # drain so a blocked producer can exit, then join it
-            while producer.is_alive():
+            # drain so a blocked producer can exit, then join it — with a
+            # deadline: a thread that won't die is LOUDLY reported, never
+            # silently leaked (it would keep a dead run's engine pinned)
+            producer = self._producer
+            deadline = time.monotonic() + max(5.0, self.watchdog_timeout)
+            while producer is not None and producer.is_alive():
                 try:
-                    self.queue.get(timeout=0.1)
+                    self._discard_item(self.queue.get(timeout=0.1))
                 except queue.Empty:
                     pass
                 producer.join(timeout=0.1)
+                if producer.is_alive() and time.monotonic() > deadline:
+                    print(f"[async] WARNING: rollout-producer thread "
+                          f"failed to exit within "
+                          f"{max(5.0, self.watchdog_timeout):.0f}s of "
+                          f"stop; leaking a daemon thread", flush=True)
+                    break
+            if producer is None or not producer.is_alive():
+                # producer provably gone: detach its heartbeat hook so any
+                # later direct engine use doesn't trip a stale-generation
+                # cancellation.  A leaked thread keeps the hook — it is the
+                # only thing that can still cancel it mid-phase.
+                self.t.engine.heartbeat = None
         return history

@@ -1,0 +1,185 @@
+"""Deterministic fault-injection plans for the self-healing runtime.
+
+A :class:`FaultPlan` is a seeded, step-addressed schedule of injected
+failures (DESIGN.md §Fault tolerance & degraded modes).  Each spec names a
+fault *kind* and the phase/step index where it fires, e.g.::
+
+    FaultPlan.parse("producer_crash@phase=3 nan_grads@step=7 "
+                    "pool_exhausted_storm@phase=1*4")
+
+The hooks that consume a plan live in ``ContinuousEngine`` (pool-exhaustion
+storms), ``AsyncPipeline`` (producer crash/hang) and ``Trainer`` (NaN
+gradients, checkpoint corruption, rejection storms).  Every hook is guarded
+by ``if <plan> is not None`` — with no plan armed the runtime takes
+*exactly* the pre-fault code path, so rollouts and updates stay
+bitwise-identical to the unarmed build (pinned by ``tests/test_faults.py``).
+
+Addressing is the trainer's own step line: ``phase=s`` and ``step=s`` name
+the same integer (one rollout phase drives one learner step); the two
+spellings exist so a plan reads like the failure it simulates.  ``*N``
+makes a spec fire on its first N matching probes (a storm's width) —
+``pool_exhausted_storm@phase=1*4`` fails the first four page allocations of
+phase 1.
+
+Determinism: firing is a pure function of (plan text, probe sequence), and
+every randomized payload (which rows a storm poisons, which bytes a
+checkpoint corruption flips) derives from ``seed`` + the fault address —
+re-running the same plan on the same config reproduces the same failure,
+which is what makes the recovery matrix a regression test rather than a
+flake generator.
+"""
+from __future__ import annotations
+
+import re
+import threading
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+import numpy as np
+
+#: every injectable kind -> the address axis its spec must use
+FAULT_SITES: Dict[str, str] = {
+    "producer_crash": "phase",        # async producer dies w/o exit marker
+    "producer_hang": "phase",         # async producer stops heartbeating
+    "pool_exhausted_storm": "phase",  # paged-pool alloc failures in-engine
+    "rejection_storm": "phase",       # Eq. 6 vetoes most of the batch
+    "nan_grads": "step",              # non-finite update (poisoned advantage)
+    "corrupt_checkpoint": "step",     # bit-flip the checkpoint just saved
+}
+
+_SPEC_RE = re.compile(
+    r"^(?P<kind>[a-z_]+)@(?P<site>phase|step)=(?P<at>\d+)(?:\*(?P<count>\d+))?$")
+
+
+class InjectedFault(RuntimeError):
+    """Base class for failures raised by an armed :class:`FaultPlan`."""
+
+
+class InjectedCrash(InjectedFault):
+    """Simulated hard kill of the rollout producer: the producer thread
+    swallows this and dies WITHOUT enqueueing its exit marker, so recovery
+    must come from the learner-side liveness poll, not the error channel."""
+
+
+@dataclass(frozen=True)
+class FaultSpec:
+    kind: str
+    at: int          # phase/step index on the trainer's step line
+    count: int = 1   # matching probes that fire before the spec is spent
+
+    def __post_init__(self):
+        if self.kind not in FAULT_SITES:
+            raise ValueError(
+                f"unknown fault kind {self.kind!r}; choose from "
+                f"{sorted(FAULT_SITES)}")
+        if self.at < 0 or self.count < 1:
+            raise ValueError(f"bad fault address {self!r}")
+
+    def __str__(self) -> str:
+        s = f"{self.kind}@{FAULT_SITES[self.kind]}={self.at}"
+        return s if self.count == 1 else f"{s}*{self.count}"
+
+
+class FaultPlan:
+    """A parsed, thread-safe, one-shot-per-count fault schedule.
+
+    ``fire(kind, at)`` is the single probe API: it returns True (and
+    consumes one count) iff an unspent spec of that kind matches ``at``.
+    Probes are cheap (a dict lookup under a lock) and the runtime only
+    probes when a plan is armed at all.  Every firing is appended to
+    ``events`` so the fault matrix can report injected-fault -> outcome.
+    """
+
+    def __init__(self, specs: List[FaultSpec], seed: int = 0):
+        self.specs = list(specs)
+        self.seed = int(seed)
+        self._remaining: Dict[tuple, int] = {}
+        for sp in self.specs:
+            key = (sp.kind, sp.at)
+            self._remaining[key] = self._remaining.get(key, 0) + sp.count
+        self._lock = threading.Lock()
+        self.events: List[dict] = []
+
+    @classmethod
+    def parse(cls, text: str, seed: int = 0) -> "FaultPlan":
+        """Parse ``"kind@site=N"`` / ``"kind@site=N*count"`` tokens
+        (whitespace/comma separated) into a plan."""
+        specs = []
+        for tok in re.split(r"[,\s]+", text.strip()):
+            if not tok:
+                continue
+            m = _SPEC_RE.match(tok)
+            if not m:
+                raise ValueError(
+                    f"malformed fault spec {tok!r} (want kind@phase=N or "
+                    f"kind@step=N, optionally *count)")
+            kind, site = m.group("kind"), m.group("site")
+            if kind not in FAULT_SITES:
+                raise ValueError(
+                    f"unknown fault kind {kind!r}; choose from "
+                    f"{sorted(FAULT_SITES)}")
+            if FAULT_SITES[kind] != site:
+                raise ValueError(
+                    f"fault {kind!r} is addressed by "
+                    f"{FAULT_SITES[kind]!r}, not {site!r}")
+            specs.append(FaultSpec(kind=kind, at=int(m.group("at")),
+                                   count=int(m.group("count") or 1)))
+        if not specs:
+            raise ValueError(f"empty fault plan {text!r}")
+        return cls(specs, seed=seed)
+
+    def fire(self, kind: str, at: int) -> bool:
+        """Probe the plan at (kind, at); True consumes one count."""
+        with self._lock:
+            key = (kind, int(at))
+            left = self._remaining.get(key, 0)
+            if left <= 0:
+                return False
+            self._remaining[key] = left - 1
+            self.events.append({"kind": kind, "at": int(at),
+                                "seq": len(self.events)})
+            return True
+
+    def fired(self, kind: Optional[str] = None) -> int:
+        with self._lock:
+            if kind is None:
+                return len(self.events)
+            return sum(e["kind"] == kind for e in self.events)
+
+    def spent(self) -> bool:
+        """True once every spec has fired its full count."""
+        with self._lock:
+            return all(v <= 0 for v in self._remaining.values())
+
+    def payload_rng(self, at: int) -> np.random.Generator:
+        """Deterministic RNG for a fault's payload (which rows/bytes to
+        poison), derived from (seed, address) only."""
+        return np.random.default_rng((self.seed, int(at)))
+
+    def __str__(self) -> str:
+        return " ".join(str(sp) for sp in self.specs)
+
+
+def corrupt_checkpoint_file(ckpt_path: str, *, at: int = 0,
+                            seed: int = 0) -> None:
+    """Bit-flip a handful of payload bytes of a saved checkpoint's
+    ``arrays.npz`` in place (deterministically, from ``(seed, at)``) —
+    the on-disk damage profile of a torn write or silent media corruption
+    that the save-time content hash exists to catch."""
+    import os
+
+    path = os.path.join(ckpt_path, "arrays.npz")
+    size = os.path.getsize(path)
+    rng = np.random.default_rng((seed, int(at)))
+    # skip the zip header region so np.load still *opens* the file — the
+    # nastier failure mode is a checkpoint that loads but holds garbage
+    offsets = sorted(set(int(o) for o in rng.integers(
+        low=min(256, size - 1), high=size, size=8)))
+    with open(path, "r+b") as f:
+        for off in offsets:
+            f.seek(off)
+            b = f.read(1)
+            if not b:
+                continue
+            f.seek(off)
+            f.write(bytes([b[0] ^ 0xFF]))

@@ -53,10 +53,16 @@ import numpy as np
 
 from repro.checkpoint import latest_step, restore, save
 from repro.configs.base import ModelConfig, SparseRLConfig, TrainConfig
-from repro.core import group_advantages, sparse_rl_loss
+from repro.core import (
+    group_advantages,
+    mismatch_metrics,
+    resolved_policy,
+    sparse_rl_loss,
+)
 from repro.data import TOKENIZER, PromptLoader
 from repro.models import get_model
 from repro.optim import adamw
+from repro.runtime.faults import FaultPlan, corrupt_checkpoint_file
 from repro.rollout import (
     ContinuousEngine,
     Request,
@@ -121,6 +127,27 @@ class TrainerOptions:
                                    # in groups (0 = auto: 2 phases' worth)
     weight_ring: int = 0           # async: WeightStore snapshot-ring
                                    # capacity (0 = auto: max_lag + 2)
+    # -- self-healing runtime (DESIGN.md
+    # §Fault tolerance & degraded modes) --
+    watchdog_timeout: float = 60.0  # async: producer heartbeat staleness
+                                   # bound; must exceed the longest gap
+                                   # between group finishes in a phase
+    max_producer_restarts: int = 2  # async: watchdog restart budget per
+                                   # train() call before escalating
+    restart_backoff: float = 0.1   # async: base backoff (s), doubled per
+                                   # restart (capped at 2s)
+    storm_threshold: float = 0.9   # rejection-storm degraded mode: phase
+                                   # veto-rate above which vetoed groups
+                                   # re-roll through the dense fallback
+                                   # policy (1.0 effectively disables)
+    anomaly_max_skips: int = 3     # anomaly guard: consecutive non-finite
+                                   # updates tolerated (skipped) before
+                                   # raising loudly
+    faults: Optional[FaultPlan] = None  # armed fault-injection plan (None =
+                                   # unarmed: every hook is a no-op and the
+                                   # run is bitwise-identical to a build
+                                   # without the harness, pinned by
+                                   # tests/test_faults.py)
 
 
 class Trainer:
@@ -170,6 +197,14 @@ class Trainer:
             if opts.stage_groups < 0:
                 raise ValueError(
                     f"stage_groups must be >= 0, got {opts.stage_groups}")
+            if opts.watchdog_timeout <= 0:
+                raise ValueError(
+                    f"watchdog_timeout must be > 0, got "
+                    f"{opts.watchdog_timeout}")
+            if opts.max_producer_restarts < 0:
+                raise ValueError(
+                    f"max_producer_restarts must be >= 0, got "
+                    f"{opts.max_producer_restarts}")
             if opts.weight_ring and opts.weight_ring < opts.max_lag + 2:
                 # a ring smaller than max_lag+2 can evict a snapshot that
                 # an in-flight rollout group still needs for its behavior
@@ -178,6 +213,31 @@ class Trainer:
                     f"weight_ring={opts.weight_ring} < max_lag+2="
                     f"{opts.max_lag + 2}: in-flight sampler versions could "
                     f"be evicted (0 = auto)")
+        if not 0.0 < opts.storm_threshold <= 1.0:
+            raise ValueError(
+                f"storm_threshold must be in (0, 1], got "
+                f"{opts.storm_threshold}")
+        if opts.anomaly_max_skips < 1:
+            raise ValueError(
+                f"anomaly_max_skips must be >= 1, got "
+                f"{opts.anomaly_max_skips}")
+        # -- self-healing state --
+        # (DESIGN.md §Fault tolerance & degraded modes): the armed fault plan (None = every hook is a no-op),
+        # cumulative recovery counters surfaced in the phase metrics, and
+        # the anomaly guard's consecutive-skip tally
+        self.faults = opts.faults
+        self.resilience: Dict[str, int] = {
+            "skipped_updates": 0, "producer_restarts": 0,
+            "storm_rerolls": 0, "storm_phases": 0,
+            "checkpoint_rollbacks": 0}
+        self._consec_skips = 0
+        self._dense_fallback_fn = None   # built lazily on first storm
+        # rejection storms only exist where Eq. 6 can fire: rejection on
+        # and a genuinely sparse sampler (an identity-class policy has
+        # xi == 1 structurally, so the veto probe would be dead weight)
+        self._storm_eligible = (
+            scfg.reject
+            and not resolved_policy(scfg, opts.kv_quant).is_dense)
         # monotone weight-version counter: bumped once per completed phase
         # update; tags rollouts for the async staleness correction and is
         # checkpointed so a resumed run keeps a consistent version line
@@ -220,7 +280,12 @@ class Trainer:
         last = latest_step(self.tcfg.checkpoint_dir)
         if last is not None:
             tree = {"params": self.params, "opt": self.opt_state}
+            # restore() verifies content hashes and rolls back past corrupt
+            # snapshots on its own (warning per skip); all we add here is
+            # the rollback counter for the resilience telemetry
             restored, step, extra = restore(self.tcfg.checkpoint_dir, tree)
+            if step != last:
+                self.resilience["checkpoint_rollbacks"] += 1
             self.params = restored["params"]
             self.opt_state = restored["opt"]
             self.step = step
@@ -230,11 +295,16 @@ class Trainer:
                 self.rng = jnp.asarray(np.array(rng_key, dtype=np.uint32))
 
     def save_checkpoint(self):
-        save(self.tcfg.checkpoint_dir, self.step,
-             {"params": self.params, "opt": self.opt_state},
-             keep=self.tcfg.keep_checkpoints,
-             extra={"rng": np.asarray(jax.device_get(self.rng)).tolist(),
-                    "weight_version": int(self.weight_version)})
+        path = save(self.tcfg.checkpoint_dir, self.step,
+                    {"params": self.params, "opt": self.opt_state},
+                    keep=self.tcfg.keep_checkpoints,
+                    extra={"rng": np.asarray(
+                               jax.device_get(self.rng)).tolist(),
+                           "weight_version": int(self.weight_version)})
+        if self.faults is not None and self.faults.fire(
+                "corrupt_checkpoint", self.step):
+            corrupt_checkpoint_file(path, at=self.step,
+                                    seed=self.faults.seed)
 
     # -- jitted inner functions ----------------------------------------------
     def _build_jit(self):
@@ -348,6 +418,8 @@ class Trainer:
         G, slack = scfg.group_size, opts.group_slack
         if opts.rollout_backend == "continuous":
             eng = self.engine
+            if self.faults is not None:
+                eng.arm_faults(self.faults, self.step)
             eng.begin_phase(params=self.params, base_key=rng)
             reqs = [Request(uid=u, prompt=np_tokens[u][np_mask[u]])
                     for u in range(np_tokens.shape[0])]
@@ -368,9 +440,121 @@ class Trainer:
             lambda x: jnp.asarray(np.asarray(jax.device_get(x))[keep]), ro)
         return ro, keep, {}
 
+    # -- rejection-storm degraded mode -----------------------------------------
+    # (DESIGN.md §Fault tolerance & degraded modes)
+    def _dense_fallback_rollout(self, phase_ctx: dict) -> RolloutBatch:
+        """Lockstep dense-policy rollout over the phase's full tiled prompt
+        arrays — the degraded-mode fallback sampler.  Same phase key and
+        per-request (uid-folded) key chains as the sparse rollout, same
+        static shapes (one compile, reused across storms), sampled under
+        the learner's CURRENT params."""
+        if self._dense_fallback_fn is None:
+            cfg, m = self.cfg, self.m
+            scfg_d = resolve_policy("dense").apply(self.scfg)
+
+            @partial(jax.jit, static_argnames=("max_new",))
+            def _dense_roll(params, tokens, mask, rng, max_new):
+                batch = {"tokens": tokens, "valid_mask": mask}
+                row_keys = jax.vmap(
+                    lambda u: jax.random.fold_in(rng, u))(
+                        jnp.arange(tokens.shape[0]))
+                return generate(params, cfg, m, batch, scfg_d, rng,
+                                max_new_tokens=max_new,
+                                eos_id=self.tok.eos_id,
+                                pad_id=self.tok.pad_id,
+                                per_row_keys=row_keys)
+
+            self._dense_fallback_fn = _dense_roll
+        return self._dense_fallback_fn(
+            self.params, jnp.asarray(phase_ctx["np_tokens"]),
+            jnp.asarray(phase_ctx["np_mask"]), phase_ctx["rng"],
+            max_new=self.opts.max_new_tokens)
+
+    def _storm_guard(self, ro: RolloutBatch, rewards: np.ndarray,
+                     logp_old, logp_behave, phase_ctx: Optional[dict]):
+        """Detect a rejection storm (Eq. 6 veto rate over the phase) and,
+        above ``storm_threshold``, re-roll every vetoed group through the
+        dense fallback policy so the update batch is never starved.
+
+        Re-rolled rows are sampled under the current learner weights, so
+        their ``logp_sparse`` is set to ``logp_old`` BITWISE (the
+        identity-class contract: xi == 1 exactly, the veto can never
+        re-fire on them) and, in the async case, their behavior plane is
+        the proximal plane (rho == 1 exactly).  Returns the possibly
+        rebuilt ``(ro, rewards, logp_old, logp_behave, sparse_rows,
+        metrics)`` — ``sparse_rows`` masks the rows still carrying genuine
+        sparse-sampler evidence (None = no reroll happened), which the
+        caller uses to keep the mismatch metrics honest.
+        """
+        scfg, opts = self.scfg, self.opts
+        G = scfg.group_size
+        lo = np.asarray(jax.device_get(logp_old), np.float32)
+        lb = (np.asarray(jax.device_get(logp_behave), np.float32)
+              if logp_behave is not None else lo)
+        ls = np.asarray(jax.device_get(ro.logp_sparse), np.float32)
+        mask = np.asarray(jax.device_get(ro.resp_mask), bool)
+        veto = ((lb - ls < np.log(scfg.rejection_eps)) & mask).any(axis=1)
+        veto_rate = float(veto.mean()) if veto.size else 0.0
+        metrics = {"veto_rate": veto_rate, "storm_rerolls": 0.0}
+        if veto_rate <= opts.storm_threshold or phase_ctx is None:
+            return ro, rewards, logp_old, logp_behave, None, metrics
+        # -- degraded mode: group-granular dense re-roll ------------------
+        gveto = veto.reshape(-1, G).any(axis=1)
+        rows = np.repeat(gveto, G)                 # rerolled kept-batch rows
+        keep = np.asarray(phase_ctx["keep"])
+        dense_ro = self._dense_fallback_rollout(phase_ctx)
+        ro = jax.tree.map(
+            lambda a, b: jnp.asarray(np.where(
+                rows.reshape((-1,) + (1,) * (np.ndim(a) - 1)),
+                np.asarray(jax.device_get(b))[keep],
+                np.asarray(jax.device_get(a)))),
+            ro, dense_ro)
+        answers = [phase_ctx["answers_rep"][u] for u in keep]
+        rewards = np.asarray(rewards).copy()
+        rewards[rows] = binary_rewards(
+            np.asarray(jax.device_get(ro.resp_tokens))[rows],
+            [a for a, r in zip(answers, rows) if r])
+        # proximal rescore of the rebuilt batch: unchanged rows rescore to
+        # bit-identical values (same params, same deterministic program),
+        # rerolled rows get their true dense log-probs
+        logp_old = self._rescore_fn(self.params, ro)
+        lo = np.asarray(jax.device_get(logp_old), np.float32)
+        ls = np.array(jax.device_get(ro.logp_sparse), np.float32)
+        ls[rows] = lo[rows]                        # xi == 1 exactly
+        ro = ro._replace(logp_sparse=jnp.asarray(ls))
+        if logp_behave is not None:
+            lb = np.array(jax.device_get(logp_behave), np.float32)
+            lb[rows] = lo[rows]                    # rho == 1 exactly
+            logp_behave = jnp.asarray(lb)
+        n_rerolled = int(gveto.sum())
+        self.resilience["storm_rerolls"] += n_rerolled
+        self.resilience["storm_phases"] += 1
+        metrics["storm_rerolls"] = float(n_rerolled)
+        print(f"[step {self.step}] rejection storm: veto_rate="
+              f"{veto_rate:.2f} > {opts.storm_threshold:.2f}; re-rolled "
+              f"{n_rerolled} group(s) through the dense fallback",
+              flush=True)
+        return ro, rewards, logp_old, logp_behave, ~rows, metrics
+
+    def _poison_rejection(self, ro: RolloutBatch) -> RolloutBatch:
+        """``rejection_storm`` injection payload: shift ``logp_sparse`` of
+        ~90% of rows (chosen from the plan's seeded RNG) far enough down
+        that Eq. 6 vetoes them — the on-batch signature of a sampler whose
+        compressed cache went pathological."""
+        rng = self.faults.payload_rng(self.step)
+        ls = np.array(jax.device_get(ro.logp_sparse), np.float32)
+        B = ls.shape[0]
+        hit = rng.permutation(B)[:max(1, int(0.9 * B))]
+        # the veto (Eq. 6) fires when logp_old - logp_sparse < log(eps):
+        # inflate logp_sparse so the hit rows look catastrophically
+        # over-confident under the sparse cache
+        ls[hit] += 40.0
+        return ro._replace(logp_sparse=jnp.asarray(ls))
+
     # -- the phase update (shared by the sync step and the async learner) ------
     def _phase_update(self, ro: RolloutBatch, rewards: np.ndarray, *,
-                      logp_behave=None, logp_old=None) -> Dict[str, float]:
+                      logp_behave=None, logp_old=None,
+                      phase_ctx: Optional[dict] = None) -> Dict[str, float]:
         """Run one phase's Sparse-RL update on an assembled rollout batch.
 
         ``rewards`` aligns with ``ro`` rows (group-major).  ``logp_behave``
@@ -379,15 +563,35 @@ class Trainer:
         graph, which the staleness-corrected loss degenerates to bitwise
         at lag 0.  ``logp_old`` lets the async learner pass the proximal
         rescore it already computed (it doubles as the current-version
-        behavior plane) instead of paying the forward twice.  Advances
-        ``step`` and ``weight_version`` and saves a checkpoint on
-        schedule.
+        behavior plane) instead of paying the forward twice.
+
+        ``phase_ctx`` (optional) carries the phase's tiled prompt arrays,
+        answers, kept-row map and rollout key — what the rejection-storm
+        degraded mode needs to re-roll vetoed groups through the dense
+        fallback (without it, detection still runs but reroll is
+        unavailable).  Non-finite losses/grads are absorbed by the anomaly
+        guard: the minibatch's update is skipped with params/opt-state
+        untouched (the update programs donate nothing, so the old arrays
+        are still live), raising after ``anomaly_max_skips`` consecutive
+        skips (DESIGN.md §Fault tolerance & degraded modes).  Advances
+        ``step`` and ``weight_version`` and saves a checkpoint on schedule.
         """
         scfg, tcfg = self.scfg, self.tcfg
         G = scfg.group_size
-        adv = group_advantages(jnp.asarray(rewards.reshape(-1, G))).reshape(-1)
         if logp_old is None:
             logp_old = self._rescore_fn(self.params, ro)
+        if self.faults is not None and self.faults.fire(
+                "rejection_storm", self.step):
+            ro = self._poison_rejection(ro)
+        sparse_rows, storm_metrics = None, {}
+        if self._storm_eligible:
+            (ro, rewards, logp_old, logp_behave, sparse_rows,
+             storm_metrics) = self._storm_guard(
+                 ro, rewards, logp_old, logp_behave, phase_ctx)
+        adv = group_advantages(jnp.asarray(rewards.reshape(-1, G))).reshape(-1)
+        if self.faults is not None and self.faults.fire(
+                "nan_grads", self.step):
+            adv = adv.at[0].set(jnp.nan)
         logp_ref = (self._rescore_fn(self.ref_params, ro)
                     if self.ref_params is not None else None)
 
@@ -399,20 +603,47 @@ class Trainer:
                                  warmup=tcfg.warmup_steps,
                                  total=tcfg.total_steps)
         agg: Dict[str, float] = {}
+        skipped = 0
         for u in range(n_updates):
             sl = slice(u * ub, (u + 1) * ub)
             ro_u = jax.tree.map(lambda x: x[sl], ro)
             lo = logp_old[sl]
             lrf = logp_ref[sl] if logp_ref is not None else None
             if logp_behave is None:
-                self.params, self.opt_state, metrics = self._update_fn(
+                new_params, new_opt, metrics = self._update_fn(
                     self.params, self.opt_state, ro_u, lo, lrf, adv[sl], lr)
             else:
-                self.params, self.opt_state, metrics = self._update_stale_fn(
+                new_params, new_opt, metrics = self._update_stale_fn(
                     self.params, self.opt_state, ro_u, lo, logp_behave[sl],
                     lrf, adv[sl], lr)
+            loss_v = float(jax.device_get(metrics["loss"]))
+            gn_v = (float(jax.device_get(metrics["grad_norm"]))
+                    if "grad_norm" in metrics else 0.0)
+            if not (np.isfinite(loss_v) and np.isfinite(gn_v)):
+                # anomaly guard: drop the poisoned step — the update
+                # programs donate nothing, so self.params/self.opt_state
+                # still hold the pre-update arrays (a bitwise no-op)
+                skipped += 1
+                self.resilience["skipped_updates"] += 1
+                self._consec_skips += 1
+                print(f"[step {self.step}] anomaly guard: non-finite "
+                      f"update skipped (loss={loss_v}, grad_norm={gn_v}; "
+                      f"{self._consec_skips} consecutive)", flush=True)
+                if self._consec_skips >= self.opts.anomaly_max_skips:
+                    raise RuntimeError(
+                        f"anomaly guard: {self._consec_skips} consecutive "
+                        f"non-finite updates at step {self.step} (loss="
+                        f"{loss_v}, grad_norm={gn_v}) — params are intact "
+                        f"but the batch stream is poisoned; refusing to "
+                        f"continue")
+                continue
+            self._consec_skips = 0
+            self.params, self.opt_state = new_params, new_opt
             for k, v in metrics.items():
-                agg[k] = agg.get(k, 0.0) + float(jax.device_get(v)) / n_updates
+                agg[k] = agg.get(k, 0.0) + float(jax.device_get(v))
+        n_applied = n_updates - skipped
+        for k in agg:
+            agg[k] /= max(n_applied, 1)
 
         self.step += 1
         self.weight_version += 1
@@ -424,6 +655,22 @@ class Trainer:
             entropy=float(jax.device_get(ro.entropy).mean()),
             lr=float(jax.device_get(lr)),
         )
+        agg.update(storm_metrics)
+        if sparse_rows is not None:
+            # degraded-mode metric hygiene: mismatch telemetry aggregates
+            # over genuinely-sparse rows only — the rerolled identity-class
+            # rows (xi == 1 exactly) would otherwise dilute it
+            lbf = logp_behave if logp_behave is not None else logp_old
+            agg.update(mismatch_metrics(
+                lbf, ro.logp_sparse, ro.resp_mask, row_mask=sparse_rows,
+                xi_clip_max=scfg.xi_clip_max))
+        agg["skipped_update_frac"] = skipped / n_updates
+        agg["resilience_skipped_updates"] = float(
+            self.resilience["skipped_updates"])
+        agg["resilience_storm_rerolls"] = float(
+            self.resilience["storm_rerolls"])
+        agg["checkpoint_rollbacks"] = float(
+            self.resilience["checkpoint_rollbacks"])
         return agg
 
     @staticmethod
@@ -440,6 +687,7 @@ class Trainer:
             rollout_weight_swaps=float(ro_stats.get("weight_swaps", 0)),
         )
         for src, dst in (("pool_peak_frac", "rollout_pool_peak_frac"),
+                         ("pool_retry_sweeps", "rollout_pool_retry_sweeps"),
                          ("blocks_in_use_peak", "rollout_pool_peak_blocks"),
                          ("kv_bytes_per_token", "rollout_kv_bytes_per_token"),
                          ("kv_capacity_ratio", "rollout_kv_capacity_ratio"),
@@ -463,7 +711,9 @@ class Trainer:
         rewards = binary_rewards(np.asarray(jax.device_get(ro.resp_tokens)),
                                  [answers_rep[u] for u in keep])
 
-        agg = self._phase_update(ro, rewards)
+        agg = self._phase_update(ro, rewards, phase_ctx=dict(
+            np_tokens=np_tokens, np_mask=np_mask, answers_rep=answers_rep,
+            keep=keep, rng=r1))
         agg.update(rollout_s=rollout_s, step_time_s=time.time() - t0)
         if ro_stats:
             agg.update(self._engine_stat_metrics(ro_stats))

@@ -474,3 +474,28 @@ def test_gate_old_baseline_without_matrix_rows_still_gates(tmp_path):
     _write(tmp_path / "fresh2", *_full())
     assert bench_gate.gate(tmp_path / "committed", tmp_path / "fresh2",
                            0.35) == []
+
+
+def test_gate_skipped_update_frac_is_hard_bound(tmp_path):
+    """A trainer row whose anomaly guard dropped more than 5% of updates
+    fails even with no committed baseline — a bench that trained on a
+    poisoned batch stream is not a valid perf or reward sample (DESIGN.md
+    §Fault tolerance & degraded modes)."""
+    bad = [_arow(max_lag=0, identical=True, skipped_update_frac=0.0),
+           _arow(max_lag=1, skipped_update_frac=0.25)]
+    _write(tmp_path / "fresh", *_full(async_rows=bad))
+    problems = bench_gate.gate(tmp_path / "missing", tmp_path / "fresh",
+                               0.35)
+    assert any("skipped_update_frac" in p for p in problems)
+
+
+def test_gate_rows_without_skipped_update_field_pass(tmp_path):
+    """Baselines (and fresh rows) committed before the resilience telemetry
+    existed carry no skipped_update_frac — the bound must skip, not fail,
+    and a healthy in-bound value must also pass."""
+    ok = [_arow(max_lag=0, identical=True),                    # no field
+          _arow(max_lag=1, skipped_update_frac=0.0)]           # in bound
+    _write(tmp_path / "committed", *_full())
+    _write(tmp_path / "fresh", *_full(async_rows=ok))
+    assert bench_gate.gate(tmp_path / "committed", tmp_path / "fresh",
+                           0.35) == []

@@ -1,0 +1,430 @@
+"""Fault-injection matrix: every injectable fault recovers end-to-end
+without operator intervention (DESIGN.md §Fault tolerance & degraded modes).
+
+Each matrix test drives a short training run with one armed
+:class:`FaultPlan`, asserts the plan actually fired, the run completed, and
+— where the recovery mechanism promises it — that the result is
+bitwise-identical to the fault-free run (deterministic retry from phase
+barriers) or within tolerance of it.  A module-level collector writes the
+outcome table to ``reports/fault_matrix.json`` (uploaded as a CI artifact),
+so the recovery matrix is a persistent, diffable report rather than just a
+green checkmark.
+
+Also here: the unarmed-runtime bitwise pin (a plan that never fires must
+change nothing), FaultPlan parsing/addressing semantics, and the
+checkpoint-integrity unit tests (hash verification, rollback-on-restore,
+pruning that never deletes the last verifiable snapshot).
+"""
+import json
+import os
+import warnings
+from pathlib import Path
+
+import jax
+import numpy as np
+import pytest
+
+from repro.checkpoint import (
+    latest_verifiable_step,
+    restore,
+    save,
+    verify_checkpoint,
+)
+from repro.checkpoint.checkpointer import _gc
+from repro.configs import SparseRLConfig, TrainConfig, get_config
+from repro.runtime import FaultPlan, Trainer, TrainerOptions
+from repro.runtime.faults import FaultSpec, corrupt_checkpoint_file
+
+REPORT = Path(__file__).resolve().parent.parent / "reports" / \
+    "fault_matrix.json"
+_CELLS: list = []
+
+
+def _cell(kind: str, recovered: bool, **detail):
+    _CELLS.append(dict(kind=kind, recovered=bool(recovered), **detail))
+
+
+@pytest.fixture(scope="module", autouse=True)
+def fault_matrix_report():
+    """Collect every matrix cell and persist the outcome table."""
+    yield
+    if not _CELLS:
+        return
+    REPORT.parent.mkdir(parents=True, exist_ok=True)
+    REPORT.write_text(json.dumps(
+        {"cells": _CELLS,
+         "distinct_kinds": sorted({c["kind"] for c in _CELLS}),
+         "all_recovered": all(c["recovered"] for c in _CELLS)},
+        indent=2, sort_keys=True))
+
+
+def _cfgs(tmp, *, dense=False, checkpoint_every=0):
+    cfg = get_config("qwen2.5-14b").smoke()
+    if dense:
+        scfg = SparseRLConfig(compression="none", group_size=4,
+                              max_new_tokens=10, learning_rate=3e-4,
+                              kl_coef=0.0)
+    else:
+        scfg = SparseRLConfig(kv_budget=12, kv_buffer=4, obs_window=2,
+                              num_sinks=1, group_size=4, max_new_tokens=10,
+                              learning_rate=3e-4, kl_coef=0.0)
+    tcfg = TrainConfig(update_batch=16, total_steps=10, warmup_steps=1,
+                       checkpoint_every=checkpoint_every,
+                       checkpoint_dir=str(tmp))
+    return cfg, scfg, tcfg
+
+
+def _mk_sync(tmp, faults=None, *, dense=False, checkpoint_every=0,
+             **opts_kw):
+    cfg, scfg, tcfg = _cfgs(tmp, dense=dense,
+                            checkpoint_every=checkpoint_every)
+    opts = TrainerOptions(num_prompts=4, prompt_len=16, max_new_tokens=10,
+                          faults=faults, **opts_kw)
+    return Trainer(cfg, scfg, tcfg, opts)
+
+
+def _mk_async(tmp, faults=None, *, max_lag=0, **opts_kw):
+    cfg, scfg, tcfg = _cfgs(tmp)
+    opts = TrainerOptions(num_prompts=4, prompt_len=16, max_new_tokens=10,
+                          rollout_backend="continuous", cache_backend="paged",
+                          decode_chunk=2, pipeline="async", max_lag=max_lag,
+                          faults=faults, **opts_kw)
+    return Trainer(cfg, scfg, tcfg, opts)
+
+
+def _leaves(tree):
+    return [np.asarray(x) for x in jax.tree.leaves(jax.device_get(tree))]
+
+
+def _assert_trees_equal(a, b):
+    for x, y in zip(_leaves(a), _leaves(b)):
+        np.testing.assert_array_equal(x, y)
+
+
+# ---------------------------------------------------------------------------
+# the unarmed contract: no plan / a never-firing plan == bitwise no-op
+# ---------------------------------------------------------------------------
+def test_unarmed_and_never_firing_plan_are_bitwise_noops(tmp_path):
+    """The whole harness must vanish when unarmed: faults=None and a plan
+    that never matches produce bit-identical rollouts and params."""
+    runs = {}
+    for name, plan in (("none", None),
+                       ("never", FaultPlan.parse("nan_grads@step=99"))):
+        tr = _mk_sync(tmp_path / name, faults=plan)
+        hist = tr.train(2, log_every=0)
+        runs[name] = (tr, hist)
+    ta, tb = runs["none"][0], runs["never"][0]
+    np.testing.assert_array_equal(
+        np.asarray(jax.device_get(ta.last_rollout.resp_tokens)),
+        np.asarray(jax.device_get(tb.last_rollout.resp_tokens)))
+    np.testing.assert_array_equal(
+        np.asarray(jax.device_get(ta.last_rollout.logp_sparse)),
+        np.asarray(jax.device_get(tb.last_rollout.logp_sparse)))
+    _assert_trees_equal(ta.params, tb.params)
+    _assert_trees_equal(ta.opt_state, tb.opt_state)
+    assert runs["never"][0].faults.fired() == 0
+
+
+# ---------------------------------------------------------------------------
+# async producer faults: crash (dead thread) and hang (stale heartbeat)
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def async_baseline(tmp_path_factory):
+    """Fault-free async lag-0 reference: per-step tokens + final params."""
+    tr = _mk_async(tmp_path_factory.mktemp("async_base"))
+    tokens = []
+
+    def cap(step, metrics):
+        tokens.append(np.asarray(jax.device_get(tr.last_rollout.resp_tokens)))
+
+    hist = tr.train(3, log_every=0, callback=cap)
+    return dict(tokens=tokens, params=_leaves(tr.params),
+                rewards=[m["reward"] for m in hist])
+
+
+def _check_async_recovery(tr, hist, baseline, kind):
+    """Shared asserts: run completed, exactly one restart, retry was
+    token-identical (phase keys fold step, nothing from the failed attempt
+    leaks), final params bitwise equal to the fault-free run."""
+    assert len(hist) == 3
+    assert tr.resilience["producer_restarts"] == 1
+    assert all(np.isfinite(m["loss"]) for m in hist)
+    for x, y in zip(baseline["params"], _leaves(tr.params)):
+        np.testing.assert_array_equal(x, y)
+    _cell(kind, True, restarts=tr.resilience["producer_restarts"],
+          reward_faulty=float(np.mean([m["reward"] for m in hist])),
+          reward_clean=float(np.mean(baseline["rewards"])),
+          bitwise_identical=True)
+
+
+def test_producer_crash_watchdog_restart(tmp_path, async_baseline):
+    """A producer that dies WITHOUT its exit marker (hard kill) is caught
+    by the liveness poll; the restarted producer replays the phase
+    token-identically."""
+    plan = FaultPlan.parse("producer_crash@phase=1")
+    tr = _mk_async(tmp_path / "crash", faults=plan)
+    hist = tr.train(3, log_every=0)
+    assert plan.spent()
+    _check_async_recovery(tr, hist, async_baseline, "producer_crash")
+
+
+def test_producer_hang_watchdog_restart(tmp_path, async_baseline):
+    """A producer that stays alive but stops heartbeating is caught by the
+    staleness branch (is_alive() can't see a wedge) within
+    watchdog_timeout."""
+    plan = FaultPlan.parse("producer_hang@phase=1")
+    tr = _mk_async(tmp_path / "hang", faults=plan, watchdog_timeout=3.0)
+    hist = tr.train(3, log_every=0)
+    assert plan.spent()
+    _check_async_recovery(tr, hist, async_baseline, "producer_hang")
+
+
+def test_restart_budget_exhaustion_raises(tmp_path):
+    """Recovery is bounded: more distinct crashes than
+    max_producer_restarts escalates instead of looping forever."""
+    plan = FaultPlan.parse("producer_crash@phase=0 producer_crash@phase=1")
+    tr = _mk_async(tmp_path / "budget", faults=plan,
+                   max_producer_restarts=1)
+    with pytest.raises(RuntimeError, match="max_producer_restarts"):
+        tr.train(3, log_every=0)
+
+
+# ---------------------------------------------------------------------------
+# pool-exhaustion storm: transient PoolExhausted retries instead of aborting
+# ---------------------------------------------------------------------------
+def test_pool_exhaustion_storm_retries_admission(tmp_path):
+    """Injected allocation failures at admission re-queue the unadmitted
+    requests for a later sweep; the phase completes with the same tokens a
+    fault-free run produces (admission order is telemetry, sampling keys
+    are uid-bound)."""
+    clean = _mk_sync(tmp_path / "clean", dense=True,
+                     rollout_backend="continuous", cache_backend="paged",
+                     decode_chunk=2, block_size=4)
+    m_clean = clean.train_step()
+    tokens_clean = np.asarray(jax.device_get(clean.last_rollout.resp_tokens))
+
+    plan = FaultPlan.parse("pool_exhausted_storm@phase=0*3")
+    tr = _mk_sync(tmp_path / "storm", faults=plan, dense=True,
+                  rollout_backend="continuous", cache_backend="paged",
+                  decode_chunk=2, block_size=4)
+    m = tr.train_step()
+    assert plan.spent()
+    assert m["rollout_pool_retry_sweeps"] >= 1
+    np.testing.assert_array_equal(
+        tokens_clean,
+        np.asarray(jax.device_get(tr.last_rollout.resp_tokens)))
+    _cell("pool_exhausted_storm", True,
+          retry_sweeps=m["rollout_pool_retry_sweeps"],
+          reward_faulty=m["reward"], reward_clean=m_clean["reward"],
+          bitwise_identical=True)
+
+
+# ---------------------------------------------------------------------------
+# anomaly-guarded update: non-finite steps skip, params stay intact
+# ---------------------------------------------------------------------------
+def test_nan_grads_skips_update_leaving_params_intact(tmp_path):
+    """A poisoned (non-finite) update is dropped — params/opt bitwise
+    untouched — and training continues on the next phase."""
+    plan = FaultPlan.parse("nan_grads@step=0")
+    tr = _mk_sync(tmp_path / "nan", faults=plan)
+    p_before = _leaves(tr.params)
+    o_before = _leaves(tr.opt_state)
+    m0 = tr.train_step()
+    assert plan.spent()
+    assert m0["skipped_update_frac"] == 1.0
+    assert tr.resilience["skipped_updates"] == 1
+    for x, y in zip(p_before, _leaves(tr.params)):
+        np.testing.assert_array_equal(x, y)      # bitwise no-op on skip
+    for x, y in zip(o_before, _leaves(tr.opt_state)):
+        np.testing.assert_array_equal(x, y)
+    m1 = tr.train_step()                          # next phase trains
+    assert m1["skipped_update_frac"] == 0.0
+    assert np.isfinite(m1["loss"])
+    # the healthy step APPLIED its update (params may be numerically
+    # unchanged at smoke scale — zero reward -> zero grads — but the
+    # optimizer state always advances on an applied minibatch)
+    changed = any(not np.array_equal(x, y)
+                  for x, y in zip(o_before, _leaves(tr.opt_state)))
+    assert changed, "healthy step after the skip must apply its update"
+    _cell("nan_grads", True, skipped=tr.resilience["skipped_updates"],
+          reward_faulty=m1["reward"], params_intact_on_skip=True)
+
+
+def test_nan_grads_consecutive_skips_escalate(tmp_path):
+    """The guard is bounded: anomaly_max_skips consecutive non-finite
+    updates raise loudly instead of silently free-running."""
+    plan = FaultPlan.parse("nan_grads@step=0 nan_grads@step=1")
+    tr = _mk_sync(tmp_path / "nan2", faults=plan, anomaly_max_skips=2)
+    tr.train_step()                               # skip 1 of 2: tolerated
+    with pytest.raises(RuntimeError, match="anomaly guard"):
+        tr.train_step()                           # skip 2 of 2: escalates
+
+
+# ---------------------------------------------------------------------------
+# rejection storm: degraded mode re-rolls vetoed groups via dense fallback
+# ---------------------------------------------------------------------------
+def test_rejection_storm_dense_fallback_reroll(tmp_path):
+    """An Eq. 6 veto rate above storm_threshold re-rolls the vetoed groups
+    through the dense fallback policy: the update batch is not starved, the
+    rerolled rows carry xi == 1 exactly, and the mismatch metrics aggregate
+    over genuinely-sparse rows only."""
+    plan = FaultPlan.parse("rejection_storm@phase=0")
+    tr = _mk_sync(tmp_path / "storm", faults=plan, storm_threshold=0.5)
+    m0 = tr.train_step()
+    assert plan.spent()
+    assert m0["storm_rerolls"] > 0
+    assert m0["veto_rate"] > 0.5
+    assert tr.resilience["storm_phases"] == 1
+    # post-reroll batch: the veto can't re-fire on identity-class rows
+    assert m0["rejection_rate"] == 0.0
+    # metric hygiene: with every group rerolled there is no sparse evidence
+    # left — min_log_xi reports +inf ("nothing to measure"), never a
+    # diluted average over xi==1 rows
+    assert m0["min_log_xi"] == np.inf
+    assert m0["mean_xi"] == 1.0
+    assert np.isfinite(m0["loss"])
+    m1 = tr.train_step()                          # storm over: normal phase
+    assert m1["storm_rerolls"] == 0.0
+    assert m1["veto_rate"] <= 0.5
+    _cell("rejection_storm", True, veto_rate=m0["veto_rate"],
+          rerolled_groups=int(m0["storm_rerolls"]),
+          reward_faulty=m0["reward"], reward_next=m1["reward"])
+
+
+def test_identity_class_policy_skips_storm_probe(tmp_path):
+    """A dense sampler has xi == 1 structurally — the storm guard must not
+    even probe (no veto_rate metric), keeping the hot path unchanged."""
+    tr = _mk_sync(tmp_path / "dense", dense=True)
+    m = tr.train_step()
+    assert "veto_rate" not in m
+
+
+# ---------------------------------------------------------------------------
+# checkpoint integrity: corruption detected at restore, auto-rollback
+# ---------------------------------------------------------------------------
+def test_corrupt_checkpoint_rolls_back_on_resume(tmp_path):
+    """A checkpoint corrupted after save fails hash verification at
+    restore; the resumed trainer rolls back to the previous snapshot with a
+    warning and keeps training."""
+    d = tmp_path / "ck"
+    plan = FaultPlan.parse("corrupt_checkpoint@step=2")
+    tr = _mk_sync(d, faults=plan, checkpoint_every=1)
+    tr.train_step()
+    tr.train_step()                               # step-2 save is corrupted
+    assert plan.spent()
+    del tr
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        tr2 = _mk_sync(d, checkpoint_every=1)
+    assert tr2.step == 1                          # rolled back, not crashed
+    assert tr2.resilience["checkpoint_rollbacks"] == 1
+    assert any("failed integrity verification" in str(x.message) for x in w)
+    m = tr2.train_step()                          # continues from step 1
+    assert tr2.step == 2 and np.isfinite(m["loss"])
+    assert m["checkpoint_rollbacks"] == 1.0       # surfaced in metrics
+    _cell("corrupt_checkpoint", True, resumed_step=2,
+          rollbacks=tr2.resilience["checkpoint_rollbacks"],
+          reward_faulty=m["reward"])
+
+
+def _save_steps(d, steps, extra=None):
+    tree = {"w": np.arange(6, dtype=np.float32)}
+    for s in steps:
+        save(str(d), s, tree, keep=10, extra=extra)
+    return tree
+
+
+def test_verify_checkpoint_catches_truncation_and_bitflips(tmp_path):
+    d = tmp_path / "v"
+    tree = _save_steps(d, [1, 2])
+    p1, p2 = d / "step_00000001", d / "step_00000002"
+    assert verify_checkpoint(str(p1)) and verify_checkpoint(str(p2))
+    # bit-flip newest
+    corrupt_checkpoint_file(str(p2))
+    assert not verify_checkpoint(str(p2))
+    # truncate the other
+    arr = p1 / "arrays.npz"
+    arr.write_bytes(arr.read_bytes()[:-16])
+    assert not verify_checkpoint(str(p1))
+    assert latest_verifiable_step(str(d)) is None
+
+
+def test_restore_skips_corrupt_newest_with_warning(tmp_path):
+    d = tmp_path / "r"
+    tree = _save_steps(d, [1, 2])
+    corrupt_checkpoint_file(str(d / "step_00000002"))
+    assert latest_verifiable_step(str(d)) == 1
+    target = {"w": np.zeros(6, dtype=np.float32)}
+    with pytest.warns(UserWarning, match="rolling back"):
+        restored, step, _ = restore(str(d), target)
+    assert step == 1
+    np.testing.assert_array_equal(np.asarray(restored["w"]), tree["w"])
+    # an explicit request for the corrupt step must NOT roll back silently
+    with pytest.raises(ValueError, match="not rolling back"):
+        restore(str(d), target, step=2)
+
+
+def test_restore_raises_when_nothing_verifiable(tmp_path):
+    d = tmp_path / "x"
+    _save_steps(d, [1])
+    corrupt_checkpoint_file(str(d / "step_00000001"))
+    with pytest.raises(FileNotFoundError, match="no verifiable checkpoint"):
+        restore(str(d), {"w": np.zeros(6, dtype=np.float32)})
+
+
+def test_gc_never_deletes_last_verifiable_snapshot(tmp_path):
+    """Pruning under keep=N spares the newest verifiable snapshot even when
+    it has aged past the keep window and every retained snapshot is
+    corrupt — a run must always have somewhere to roll back to."""
+    d = tmp_path / "gc"
+    _save_steps(d, [1, 2, 3])
+    corrupt_checkpoint_file(str(d / "step_00000002"))
+    corrupt_checkpoint_file(str(d / "step_00000003"))
+    _gc(str(d), keep=2)
+    assert (d / "step_00000001").is_dir()         # spared: last verifiable
+    assert latest_verifiable_step(str(d)) == 1
+    # healthy history prunes normally
+    d2 = tmp_path / "gc2"
+    _save_steps(d2, [1, 2, 3])
+    _gc(str(d2), keep=2)
+    assert not (d2 / "step_00000001").exists()
+    assert (d2 / "step_00000002").is_dir() and (d2 / "step_00000003").is_dir()
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan semantics
+# ---------------------------------------------------------------------------
+def test_fault_plan_parse_and_fire_semantics():
+    plan = FaultPlan.parse("producer_crash@phase=3, nan_grads@step=7*2")
+    assert str(plan) == "producer_crash@phase=3 nan_grads@step=7*2"
+    assert not plan.fire("producer_crash", 2)     # wrong address
+    assert not plan.fire("producer_hang", 3)      # wrong kind
+    assert plan.fire("producer_crash", 3)
+    assert not plan.fire("producer_crash", 3)     # count spent
+    assert plan.fire("nan_grads", 7) and plan.fire("nan_grads", 7)
+    assert not plan.fire("nan_grads", 7)
+    assert plan.spent() and plan.fired() == 3
+    assert plan.fired("nan_grads") == 2
+
+
+def test_fault_plan_rejects_malformed_specs():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultPlan.parse("disk_on_fire@phase=1")
+    with pytest.raises(ValueError, match="addressed by"):
+        FaultPlan.parse("nan_grads@phase=1")      # step-site kind
+    with pytest.raises(ValueError, match="malformed"):
+        FaultPlan.parse("nan_grads@step=x")
+    with pytest.raises(ValueError, match="empty fault plan"):
+        FaultPlan.parse("   ")
+    with pytest.raises(ValueError, match="bad fault address"):
+        FaultSpec(kind="nan_grads", at=0, count=0)
+
+
+def test_fault_payloads_are_deterministic():
+    a = FaultPlan.parse("rejection_storm@phase=4", seed=11)
+    b = FaultPlan.parse("rejection_storm@phase=4", seed=11)
+    np.testing.assert_array_equal(a.payload_rng(4).integers(0, 1000, 16),
+                                  b.payload_rng(4).integers(0, 1000, 16))
+    c = FaultPlan.parse("rejection_storm@phase=4", seed=12)
+    assert not np.array_equal(a.payload_rng(4).integers(0, 1000, 16),
+                              c.payload_rng(4).integers(0, 1000, 16))

@@ -102,6 +102,12 @@ HARD_FLOOR_SECTIONS = ("rollout_phase", "rollout_phase_smoke")
 # quantized rows (kv_quant other than "none") must report at least this
 # effective-capacity multiple over the fp pool at equal block count
 QUANT_CAPACITY_FLOOR = 1.8
+# trainer rows stamping resilience telemetry (DESIGN.md §Fault tolerance &
+# degraded modes) must keep the anomaly guard quiet: a healthy run skips no
+# updates, and anything above this fraction means the bench itself trained
+# on a poisoned stream.  Rows without the field (baselines committed before
+# the telemetry existed) skip the bound.
+SKIPPED_UPDATE_FRAC_MAX = 0.05
 
 
 def _row_key(row: dict, fields) -> tuple:
@@ -146,6 +152,12 @@ def gate_section(name: str, fresh_rows, committed_rows, key_fields,
                 f"{label}: reward degraded over the async smoke horizon "
                 f"({row.get('reward_first_half')} -> "
                 f"{row.get('reward_second_half')})")
+        skipped = row.get("skipped_update_frac")
+        if skipped is not None and skipped > SKIPPED_UPDATE_FRAC_MAX:
+            problems.append(
+                f"{label}: skipped_update_frac {skipped:.3f} > "
+                f"{SKIPPED_UPDATE_FRAC_MAX} — the anomaly guard dropped "
+                f"updates during the bench run")
         if row.get("kv_quant") not in (None, "none"):
             cap = row.get("capacity_ratio")
             if cap is None:
