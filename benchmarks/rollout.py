@@ -150,8 +150,17 @@ def _bench_phase(arch: str, policy: str, group_size: int, n_prompts: int,
     hit_rate = eng.prefix_hit_rate
     prefills = int(eng.stats["prefills"])
     eng.end_phase()      # bulk release + allocator leak check, phase-style
-    # warm best-of-N phase wall-clock (what the Trainer pays every step)
-    t_lock = t_cont = float("inf")
+    # warm best-of-N phase wall-clock (what the Trainer pays every step).
+    # Each round also re-runs the SAME warm engine with a metrics-mode
+    # Telemetry attached (interleaved, so load spikes hit both variants):
+    # telemetry_overhead_frac is the bench-gated <= 3% bound and the
+    # registry's duration histograms supply the phase-breakdown fractions
+    # (DESIGN.md §Observability & telemetry)
+    from repro.telemetry import Telemetry
+
+    tel = Telemetry("metrics", console_level=None)
+    t_lock = t_cont = t_tel = float("inf")
+    tel_wall = 0.0
     for _ in range(3):
         t0 = time.perf_counter()
         lock = srv.run(reqs)
@@ -163,6 +172,19 @@ def _bench_phase(arch: str, policy: str, group_size: int, n_prompts: int,
         t_cont = min(t_cont, t_last)
         run_stats = dict(eng.stats)        # per-run counters (clock reset)
         phase_stats = eng.end_phase()
+        eng.set_telemetry(tel)
+        eng.reset_clock()
+        t0 = time.perf_counter()
+        eng.run(reqs, group_size=group_size, schedule="longest")
+        dt = time.perf_counter() - t0
+        t_tel = min(t_tel, dt)
+        tel_wall += dt
+        eng.end_phase()
+        eng.set_telemetry(None)
+    snap = tel.metrics.snapshot()
+
+    def _frac(hist_name: str) -> float:
+        return snap.get(hist_name, {}).get("sum", 0.0) / max(tel_wall, 1e-12)
 
     # trainer-ready assembly + the masked mismatch-KL statistic
     ids = np.zeros((total, prompt_len), np.int32)
@@ -205,6 +227,13 @@ def _bench_phase(arch: str, policy: str, group_size: int, n_prompts: int,
                 prefill_tokens=int(run_stats["prefill_tokens"]),
                 wasted_row_frac=(float(run_stats["wasted_row_steps"])
                                  / max(run_stats["decode_steps"] * batch, 1)),
+                # telemetry=metrics cost + the breakdown it buys (fractions
+                # of the instrumented runs' wall-clock; gate bound <= 3%)
+                telemetry_overhead_frac=t_tel / t_cont - 1.0,
+                telemetry_s=t_tel,
+                prefill_frac=_frac("admit_sweep_s"),
+                decode_frac=_frac("decode_chunk_s"),
+                harvest_frac=_frac("harvest_s"),
                 mismatch_kl=kl)
 
 
@@ -254,6 +283,7 @@ def rollout_train_bench(fast: bool = False, *, arch: str = "qwen2.5-14b",
                    f"prefix_hit_rate={r['prefix_hit_rate']:.2f};"
                    f"prefill_s={r['prefill_s_frac']:.2f};"
                    f"wasted_row_frac={r['wasted_row_frac']:.2f};"
+                   f"tel_overhead={r['telemetry_overhead_frac']:+.3f};"
                    f"mismatch_kl={r['mismatch_kl']:.4f}")
     os.makedirs(OUT, exist_ok=True)
     with open(os.path.join(OUT, "rollout.json"), "w") as f:

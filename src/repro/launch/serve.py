@@ -29,25 +29,41 @@ def _pct(xs, q):
     return float(np.percentile(np.asarray(xs), q)) if len(xs) else float("nan")
 
 
-def _report(name, completions, wall_s, slo_ms=None):
+def _report(log, name, completions, wall_s, slo_ms=None):
+    """Serving summary as structured run-log events (DESIGN.md
+    §Observability & telemetry): the console rendering keeps the familiar
+    ``[name] ...`` lines, while --run-log captures the same numbers as
+    machine-parseable JSONL."""
     toks = sum(len(c.tokens) for c in completions)
     lat = [c.latency for c in completions]
     wait = [c.queue_wait for c in completions]
-    print(f"[{name}] {len(completions)} requests, {toks} tokens "
-          f"in {wall_s:.2f}s -> {toks / wall_s:.1f} tok/s, "
-          f"{len(completions) / wall_s:.1f} req/s")
-    print(f"[{name}] latency p50/p90/p99: {_pct(lat, 50)*1e3:.0f}/"
-          f"{_pct(lat, 90)*1e3:.0f}/{_pct(lat, 99)*1e3:.0f} ms | "
-          f"queue wait p50: {_pct(wait, 50)*1e3:.0f} ms")
+    p50, p90, p99 = (_pct(lat, q) for q in (50, 90, 99))
+    wait_p50 = _pct(wait, 50)
+    log.event("serve_throughput", engine=name, requests=len(completions),
+              tokens=toks, wall_s=wall_s, tok_per_s=toks / wall_s,
+              req_per_s=len(completions) / wall_s,
+              msg=f"[{name}] {len(completions)} requests, {toks} tokens "
+                  f"in {wall_s:.2f}s -> {toks / wall_s:.1f} tok/s, "
+                  f"{len(completions) / wall_s:.1f} req/s")
+    log.event("serve_latency", engine=name, p50_s=p50, p90_s=p90, p99_s=p99,
+              queue_wait_p50_s=wait_p50,
+              msg=f"[{name}] latency p50/p90/p99: {p50*1e3:.0f}/"
+                  f"{p90*1e3:.0f}/{p99*1e3:.0f} ms | "
+                  f"queue wait p50: {wait_p50*1e3:.0f} ms")
     if slo_ms is not None:
         ok = [c for c in completions if c.latency * 1e3 <= slo_ms]
         good = sum(len(c.tokens) for c in ok)
-        print(f"[{name}] goodput (<= {slo_ms:.0f} ms): {good / wall_s:.1f} "
-              f"tok/s ({len(ok)}/{len(completions)} requests in SLO)")
+        log.event("serve_goodput", engine=name, slo_ms=slo_ms,
+                  goodput_tok_per_s=good / wall_s, in_slo=len(ok),
+                  requests=len(completions),
+                  msg=f"[{name}] goodput (<= {slo_ms:.0f} ms): "
+                      f"{good / wall_s:.1f} tok/s "
+                      f"({len(ok)}/{len(completions)} requests in SLO)")
     reasons = {}
     for c in completions:
         reasons[c.finish_reason] = reasons.get(c.finish_reason, 0) + 1
-    print(f"[{name}] finish reasons: {reasons}")
+    log.event("serve_finish_reasons", engine=name, reasons=reasons,
+              msg=f"[{name}] finish reasons: {reasons}")
 
 
 def mix_prompt_lengths(prompts, seed, plen_dist="mixed"):
@@ -165,6 +181,18 @@ def main(argv=None):
     ap.add_argument("--warmup", action="store_true",
                     help="run the workload once first so reported numbers "
                          "exclude XLA compilation")
+    ap.add_argument("--telemetry", default="off",
+                    choices=["off", "metrics", "trace"],
+                    help="observability knob (DESIGN.md "
+                         "§Observability & telemetry): "
+                         "metrics = registry; trace = spans + "
+                         "registry exported as Chrome trace JSON")
+    ap.add_argument("--trace-out", default=None,
+                    help="Chrome trace-event JSON output path (telemetry="
+                         "trace; default reports/trace_serve.json)")
+    ap.add_argument("--run-log", default=None,
+                    help="structured JSONL run-log path (default "
+                         "reports/run_log.jsonl when telemetry is on)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
@@ -178,6 +206,13 @@ def main(argv=None):
     from repro.rewards import binary_rewards, decode_responses
     from repro.rollout import ContinuousEngine, LockstepServer, rollout_slots
     from repro.rollout.policies import resolve_cli_policy
+    from repro.telemetry import Telemetry
+
+    tel = Telemetry(args.telemetry,
+                    run_log_path=(args.run_log
+                                  or ("reports/run_log.jsonl"
+                                      if args.telemetry != "off" else None)))
+    log = tel.log
 
     cfg = get_config(args.arch)
     if args.smoke:
@@ -196,20 +231,27 @@ def main(argv=None):
     if args.ckpt_dir:
         restored, step, _ = restore(args.ckpt_dir, {"params": params})
         params = restored["params"]
-        print(f"restored checkpoint step {step}")
+        log.event("checkpoint_restored", step=int(step),
+                  ckpt_dir=args.ckpt_dir,
+                  msg=f"restored checkpoint step {step}")
 
     reqs, problems, answers = make_workload(
         args.num_requests, args.prompt_len, args.max_new, args.rate,
         args.resp_dist, args.seed, group_size=args.group_size,
         plen_dist=args.plen_dist)
     slots = rollout_slots(scfg, args.prompt_len, args.max_new)
-    print(f"arch={args.arch}{' (smoke)' if args.smoke else ''} "
-          f"policy={policy.name} cache slots/seq/layer: {slots} | "
-          f"backend={args.cache_backend} | "
-          f"{len(reqs)} requests"
-          f"{f' ({args.num_requests} prompts x G={args.group_size})' if args.group_size > 1 else ''}, "
-          f"rate={args.rate if args.rate > 0 else 'burst'} req/s, "
-          f"resp-dist={args.resp_dist}")
+    log.event(
+        "serve_config", arch=args.arch, smoke=args.smoke, policy=policy.name,
+        cache_slots=int(slots), backend=args.cache_backend,
+        requests=len(reqs), group_size=args.group_size, rate=args.rate,
+        resp_dist=args.resp_dist,
+        msg=f"arch={args.arch}{' (smoke)' if args.smoke else ''} "
+            f"policy={policy.name} cache slots/seq/layer: {slots} | "
+            f"backend={args.cache_backend} | "
+            f"{len(reqs)} requests"
+            f"{f' ({args.num_requests} prompts x G={args.group_size})' if args.group_size > 1 else ''}, "
+            f"rate={args.rate if args.rate > 0 else 'burst'} req/s, "
+            f"resp-dist={args.resp_dist}")
 
     results = {}
     if args.engine in ("continuous", "both"):
@@ -220,7 +262,8 @@ def main(argv=None):
             seed=args.seed, cache_backend=args.cache_backend,
             block_size=args.block_size, kv_quant=policy.kv_quant,
             prefill_chunk=args.prefill_chunk,
-            overlap_harvest=args.overlap_harvest)
+            overlap_harvest=args.overlap_harvest,
+            telemetry=tel)
         if args.warmup:
             eng.run(reqs)
             eng.reset_clock()
@@ -229,33 +272,51 @@ def main(argv=None):
                 # (G-1)/G hit rate) — a warm cache would show 100%
                 eng.prefix.clear()
         t0 = time.perf_counter()
-        completions = eng.run(reqs)
+        with tel.span("serve_run", engine="continuous"):
+            completions = eng.run(reqs)
         wall = time.perf_counter() - t0
-        _report("continuous", completions, wall, args.slo_ms)
+        _report(log, "continuous", completions, wall, args.slo_ms)
         st = eng.stats
         used = st["decode_steps"] * args.batch - st["wasted_row_steps"]
-        print(f"[continuous] decode steps: {st['decode_steps']:.0f} "
-              f"({st['chunks']:.0f} chunks), row-step utilization: "
-              f"{used / max(st['decode_steps'] * args.batch, 1):.0%}")
-        print(f"[continuous] prefill: {st['prefills']:.0f} prompts in "
-              f"{st['prefill_dispatches']:.0f} batched dispatches, "
-              f"{st['prefill_tokens']:.0f} padded tokens "
-              f"({st['prefill_s']*1e3:.0f} ms host-side dispatch)")
+        log.event(
+            "serve_engine_stats", engine="continuous",
+            decode_steps=st["decode_steps"], chunks=st["chunks"],
+            row_step_util=used / max(st["decode_steps"] * args.batch, 1),
+            msg=f"[continuous] decode steps: {st['decode_steps']:.0f} "
+                f"({st['chunks']:.0f} chunks), row-step utilization: "
+                f"{used / max(st['decode_steps'] * args.batch, 1):.0%}")
+        log.event(
+            "serve_prefill_stats", engine="continuous",
+            prefills=st["prefills"],
+            prefill_dispatches=st["prefill_dispatches"],
+            prefill_tokens=st["prefill_tokens"], prefill_s=st["prefill_s"],
+            msg=f"[continuous] prefill: {st['prefills']:.0f} prompts in "
+                f"{st['prefill_dispatches']:.0f} batched dispatches, "
+                f"{st['prefill_tokens']:.0f} padded tokens "
+                f"({st['prefill_s']*1e3:.0f} ms host-side dispatch)")
         if args.cache_backend == "paged":
             extra = ""
             if eng.allocator is not None:
                 extra = (f" | pool pages in use (peak): "
                          f"{st['blocks_in_use_peak']:.0f}/"
                          f"{eng.pool_blocks - 1}")
-            print(f"[continuous] prefix sharing: "
-                  f"{st['prefills']:.0f} prefills for "
-                  f"{st['admissions']:.0f} admissions, hit rate "
-                  f"{eng.prefix_hit_rate:.0%}{extra}")
+            log.event(
+                "serve_prefix_stats", engine="continuous",
+                prefills=st["prefills"], admissions=st["admissions"],
+                hit_rate=eng.prefix_hit_rate,
+                blocks_in_use_peak=st.get("blocks_in_use_peak"),
+                msg=f"[continuous] prefix sharing: "
+                    f"{st['prefills']:.0f} prefills for "
+                    f"{st['admissions']:.0f} admissions, hit rate "
+                    f"{eng.prefix_hit_rate:.0%}{extra}")
             ps = eng.kv_pool_stats()
-            print(f"[continuous] kv pool ({policy.kv_quant}): "
-                  f"{ps['kv_pool_bytes_per_layer'] / 2**20:.2f} MiB/layer, "
-                  f"{ps['kv_bytes_per_token']:.1f} B/token, "
-                  f"{ps['kv_capacity_ratio']:.2f}x fp capacity")
+            log.event(
+                "serve_kv_pool", engine="continuous",
+                kv_quant=policy.kv_quant, **ps,
+                msg=f"[continuous] kv pool ({policy.kv_quant}): "
+                    f"{ps['kv_pool_bytes_per_layer'] / 2**20:.2f} MiB/layer, "
+                    f"{ps['kv_bytes_per_token']:.1f} B/token, "
+                    f"{ps['kv_capacity_ratio']:.2f}x fp capacity")
         results["continuous"] = completions
     if args.engine in ("lockstep", "both"):
         srv = LockstepServer(
@@ -265,15 +326,17 @@ def main(argv=None):
         if args.warmup:
             srv.run(reqs)
         t0 = time.perf_counter()
-        completions = srv.run(reqs)
+        with tel.span("serve_run", engine="lockstep"):
+            completions = srv.run(reqs)
         wall = time.perf_counter() - t0
-        _report("lockstep", completions, wall, args.slo_ms)
+        _report(log, "lockstep", completions, wall, args.slo_ms)
         results["lockstep"] = completions
 
     if len(results) == 2:
         same = all(np.array_equal(a.tokens, b.tokens) for a, b in
                    zip(results["continuous"], results["lockstep"]))
-        print(f"token-identical across engines: {same}")
+        log.event("serve_engine_parity", token_identical=bool(same),
+                  msg=f"token-identical across engines: {same}")
 
     completions = next(iter(results.values()))
     resp = [c.tokens for c in completions]
@@ -282,10 +345,17 @@ def main(argv=None):
     for i, r in enumerate(resp):
         mat[i, :len(r)] = r
     acc = binary_rewards(mat, answers).mean()
-    print(f"accuracy: {acc:.3f}")
+    log.event("serve_accuracy", accuracy=float(acc),
+              msg=f"accuracy: {acc:.3f}")
     for i, r in enumerate(decode_responses(mat[:4])):
         print(f"  [{i}] {problems[i].prompt!r} -> {r!r} "
               f"(gold {answers[i]})")
+    if args.telemetry == "trace":
+        out = args.trace_out or "reports/trace_serve.json"
+        tel.export_trace(out)
+        print(f"[telemetry] chrome trace -> {out} "
+              f"(tools/trace_report.py or ui.perfetto.dev)")
+    tel.close()
     return 0
 
 

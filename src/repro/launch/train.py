@@ -112,6 +112,24 @@ def main(argv=None):
                          "(recovery drills; unarmed = bitwise no-op)")
     ap.add_argument("--fault-seed", type=int, default=0,
                     help="seed for injected-fault payloads")
+    ap.add_argument("--telemetry", default="off",
+                    choices=["off", "metrics", "trace"],
+                    help="observability knob (DESIGN.md "
+                         "§Observability & telemetry): "
+                         "off = bitwise no-op; metrics = "
+                         "registry only (<= 3%% phase overhead); trace = "
+                         "spans + registry, exported as Chrome trace JSON "
+                         "(--trace-out, viewable in Perfetto)")
+    ap.add_argument("--trace-out", default=None,
+                    help="Chrome trace-event JSON output path (telemetry="
+                         "trace; default reports/trace_train.json)")
+    ap.add_argument("--run-log", default=None,
+                    help="structured JSONL run-log path (default "
+                         "reports/run_log.jsonl when telemetry is on; "
+                         "console rendering always stays on)")
+    ap.add_argument("--jax-annotations", action="store_true",
+                    help="telemetry=trace: wrap host spans in jax.profiler."
+                         "TraceAnnotation so device profiles line up")
     ap.add_argument("--lr", type=float, default=None)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt-dir", default="/tmp/srl_train")
@@ -174,10 +192,30 @@ def main(argv=None):
                           anomaly_max_skips=args.anomaly_max_skips,
                           faults=(FaultPlan.parse(args.fault_plan,
                                                   seed=args.fault_seed)
-                                  if args.fault_plan else None))
+                                  if args.fault_plan else None),
+                          telemetry=args.telemetry,
+                          run_log=(args.run_log
+                                   or ("reports/run_log.jsonl"
+                                       if args.telemetry != "off" else None)),
+                          jax_annotations=args.jax_annotations)
     tr = Trainer(cfg, scfg, tcfg, opts)
     hist = tr.train(args.steps - tr.step, log_every=10)
     tr.save_checkpoint()
+    if hist:
+        last = {k: v for k, v in sorted(hist[-1].items())
+                if isinstance(v, float)}
+        tr.tel.log.event(
+            "train_summary", step=tr.step, steps_run=len(hist),
+            msg=(f"done: {len(hist)} step(s), "
+                 f"reward={last.get('reward', float('nan')):.4f} "
+                 f"loss={last.get('loss', float('nan')):.4f}"),
+            **last)
+    if args.telemetry == "trace":
+        out = args.trace_out or "reports/trace_train.json"
+        tr.tel.export_trace(out)
+        print(f"[telemetry] chrome trace -> {out} "
+              f"(tools/trace_report.py or ui.perfetto.dev)")
+    tr.tel.close()
     if args.metrics_out:
         with open(args.metrics_out, "w") as f:
             json.dump(hist, f, indent=1)

@@ -100,6 +100,11 @@ from repro.rollout.engine import (
     paged_rollout_geometry,
     rollout_slots,
 )
+# telemetry lives at the top of the package (not under repro.runtime) so
+# this import can't cycle: repro.runtime's __init__ imports the trainer,
+# which imports this module.  NULL is the off-mode no-op handle
+# (DESIGN.md §Observability & telemetry).
+from repro.telemetry import NULL as _NULL_TELEMETRY
 
 
 @dataclass(frozen=True)
@@ -279,7 +284,8 @@ class ContinuousEngine:
                  cache_backend: str = "contiguous", block_size: int = 16,
                  pool_blocks: Optional[int] = None, prefix_entries: int = 32,
                  prefill_chunk: Optional[int] = None,
-                 overlap_harvest: bool = False, kv_quant: str = "none"):
+                 overlap_harvest: bool = False, kv_quant: str = "none",
+                 telemetry=None):
         if decode_chunk < 1:
             raise ValueError("decode_chunk must be >= 1")
         # one registry-level validator owns every engine-config legality rule
@@ -474,7 +480,7 @@ class ContinuousEngine:
             self._sub_axes = sub_batch_axes(self.state, sub_shapes)
         # ---- host state ------------------------------------------------
         self.rows: List[Optional[_RowState]] = [None] * batch_size
-        self._staged: List[tuple] = []      # (req, row) awaiting flush
+        self._staged: List[tuple] = []   # (req, row, wait) awaiting flush
         self._dirty: set = set()            # finished rows not yet retired
         self.now = 0.0
         # ---- versioned weights (async actor-learner pipeline) ----------
@@ -502,6 +508,11 @@ class ContinuousEngine:
         # (DESIGN.md §Fault tolerance & degraded modes)
         self._fault_plan = None
         self._fault_phase = -1
+        # ---- telemetry (DESIGN.md §Observability & telemetry) -----------
+        # every instrumentation site goes through this handle; the NULL
+        # off-mode singleton makes an uninstrumented engine bitwise- and
+        # overhead-identical to the pre-telemetry build
+        self.tel = telemetry if telemetry is not None else _NULL_TELEMETRY
         # optional liveness hook, called once per run() scheduling-loop
         # iteration: the async pipeline's producer installs its watchdog
         # heartbeat here so long in-engine stretches (cold XLA compiles,
@@ -711,6 +722,12 @@ class ContinuousEngine:
             return self.max_new_tokens
         return min(req.max_new_tokens, self.max_new_tokens)
 
+    def set_telemetry(self, telemetry) -> None:
+        """Swap the telemetry handle (``None`` restores the off-mode
+        NULL).  Used by benchmarks to measure the same warm engine with
+        and without metrics; safe between phases, not mid-run."""
+        self.tel = telemetry if telemetry is not None else _NULL_TELEMETRY
+
     def reset_clock(self) -> None:
         """Zero the virtual clock and counters (e.g. between a compile-warmup
         run and a measured run) — compiled programs, device state and the
@@ -787,6 +804,8 @@ class ContinuousEngine:
         if self.prefix is not None:
             self.prefix.clear()
         self.stats["weight_swaps"] += 1
+        self.tel.instant("weight_swap", version=version)
+        self.tel.log.event("weight_swap", level="debug", version=version)
 
     def end_phase(self) -> Dict[str, float]:
         """Bulk release at RL phase end: drop every prefix-cache pin (the
@@ -819,7 +838,33 @@ class ContinuousEngine:
             lt = np.asarray(self._phase_lats)
             stats["latency_p50"] = float(np.percentile(lt, 50))
             stats["latency_p99"] = float(np.percentile(lt, 99))
+        self._publish_metrics(stats)
         return stats
+
+    def _publish_metrics(self, stats: Dict[str, float]) -> None:
+        """Fold the phase's counters and distributions into the telemetry
+        registry — the single sink the trace report and dashboards read
+        (DESIGN.md §Observability & telemetry).  Counters accumulate
+        across phases (the per-phase dict stays the per-phase view);
+        waits/latencies feed histograms so cross-phase percentiles come
+        from the pooled samples, not averaged per-phase percentiles."""
+        if not self.tel.metrics_on:
+            return
+        counted = ("decode_steps", "chunks", "admissions",
+                   "wasted_row_steps", "prefills", "prefix_hits",
+                   "cancelled", "prefill_dispatches", "prefill_tokens",
+                   "weight_swaps", "pool_retry_sweeps")
+        for k in counted:
+            self.tel.count(f"engine.{k}", self.stats[k])
+        self.tel.count("engine.prefill_s", self.stats["prefill_s"])
+        if self._phase_waits:
+            self.tel.observe("engine.admit_wait", self._phase_waits)
+        if self._phase_lats:
+            self.tel.observe("engine.latency", self._phase_lats)
+        if self.allocator is not None:
+            self.tel.gauge("engine.pool_blocks", self.pool_blocks)
+            self.tel.gauge("engine.pool_peak_frac",
+                           stats.get("pool_peak_frac", 0.0))
 
     def abort_phase(self) -> None:
         """Force the engine back to the drained state after its driving
@@ -914,9 +959,14 @@ class ContinuousEngine:
         self.rows[row] = _RowState(req=req, admit_time=self.now,
                                    weight_version=self.weight_version)
         self._logits_ver[row] = self.weight_version
-        self._phase_waits.append(self.now - req.arrival_time)
+        # the exact recorded wait rides the staged tuple so a PoolExhausted
+        # unwind retracts THIS entry — recomputing `now - arrival` at unwind
+        # time could remove a different duplicate or miss entirely once the
+        # clock has advanced
+        wait = self.now - req.arrival_time
+        self._phase_waits.append(wait)
         self._dirty.discard(row)
-        self._staged.append((req, row))
+        self._staged.append((req, row, wait))
         self.stats["staged_peak"] = max(self.stats["staged_peak"],
                                         len(self._staged))
 
@@ -969,13 +1019,13 @@ class ContinuousEngine:
                 self._flush_plain(staged, admitted)
         except PoolExhausted as e:
             unadmitted = []
-            for req, row in staged:
+            for req, row, wait in staged:
                 if req.uid not in admitted:
                     self.rows[row] = None
                     self._dirty.discard(row)
                     self.state, self.active = self._retire(
                         self.state, self.active, row)
-                    self._phase_waits.remove(self.now - req.arrival_time)
+                    self._phase_waits.remove(wait)
                     unadmitted.append(req)
             e.unadmitted = unadmitted
             raise
@@ -985,6 +1035,8 @@ class ContinuousEngine:
                 self.stats["blocks_in_use_peak"] = max(
                     self.stats["blocks_in_use_peak"],
                     self.allocator.blocks_in_use)
+                self.tel.counter_sample("engine.pool_blocks_in_use",
+                                        self.allocator.blocks_in_use)
 
     def _split_batches(self, group):
         """Split one bucket's admissions into compiled batch sizes."""
@@ -995,7 +1047,7 @@ class ContinuousEngine:
 
     def _flush_plain(self, staged, admitted) -> None:
         by_w: Dict[int, list] = {}
-        for req, row in staged:
+        for req, row, _ in staged:
             w = self._bucket(len(np.asarray(req.prompt, np.int32).ravel()))
             by_w.setdefault(w, []).append((req, row))
         for w in sorted(by_w):
@@ -1008,11 +1060,14 @@ class ContinuousEngine:
         keys = self._fold_keys(self._base_key,
                                np.asarray([r.uid for r in reqs], np.int32))
         prog = self._admit_program("admit", width, len(part))
-        (self.state, self.logits, self.counts, self.active,
-         self.row_keys) = prog(
-             self.params, self._encode_many([r.prompt for r in reqs], width),
-             self.state, self.logits, self.counts, self.active,
-             self.row_keys, rows, keys)
+        with self.tel.span("prefill_dispatch", kind="admit", width=width,
+                           a=len(part)):
+            (self.state, self.logits, self.counts, self.active,
+             self.row_keys) = prog(
+                 self.params,
+                 self._encode_many([r.prompt for r in reqs], width),
+                 self.state, self.logits, self.counts, self.active,
+                 self.row_keys, rows, keys)
         for req, _ in part:
             admitted.add(req.uid)
         self.stats["prefills"] += len(part)
@@ -1046,7 +1101,7 @@ class ContinuousEngine:
         miss entry with deferred members is pinned the moment it exists —
         always BEFORE the next allocation could LRU-evict it."""
         hit_jobs, miss_groups, order, created = [], {}, [], {}
-        for req, row in staged:
+        for req, row, _ in staged:
             key = np.asarray(req.prompt, np.int32).tobytes()
             if key in miss_groups:
                 miss_groups[key].append((req, row))
@@ -1097,11 +1152,14 @@ class ContinuousEngine:
         keys = self._fold_keys(self._base_key,
                                np.asarray([r.uid for r in reqs], np.int32))
         prog = self._admit_program("share", width, len(part))
-        (self.state, self.logits, self.counts, self.active, self.row_keys,
-         subs, sub_logits) = prog(
-             self.params, self._encode_many([r.prompt for r in reqs], width),
-             self.state, self.logits, self.counts, self.active,
-             self.row_keys, rows, keys)
+        with self.tel.span("prefill_dispatch", kind="share", width=width,
+                           a=len(part)):
+            (self.state, self.logits, self.counts, self.active,
+             self.row_keys, subs, sub_logits) = prog(
+                 self.params,
+                 self._encode_many([r.prompt for r in reqs], width),
+                 self.state, self.logits, self.counts, self.active,
+                 self.row_keys, rows, keys)
         for i, (key, req, _) in enumerate(part):
             entry = PrefixEntry(sub_state=subs[i], last_logits=sub_logits[i])
             self.prefix.insert(key, entry)
@@ -1136,13 +1194,16 @@ class ContinuousEngine:
             for b in entry_blocks[:self._npb_full]:
                 self.allocator.retain(b)   # the row's refs on shared pages
         prog = self._admit_program("store", width, len(part))
-        (self.state, self.logits, self.counts, self.active, self.row_keys,
-         e_logits, e_pos) = prog(
-             self.params, self._encode_many([r.prompt for r in reqs], width),
-             self.state, self.logits, self.counts, self.active,
-             self.row_keys, rows, keys,
-             np.asarray([eb for _, eb, _ in allocs], np.int32),
-             np.asarray([rt for _, _, rt in allocs], np.int32))
+        with self.tel.span("prefill_dispatch", kind="store", width=width,
+                           a=len(part)):
+            (self.state, self.logits, self.counts, self.active,
+             self.row_keys, e_logits, e_pos) = prog(
+                 self.params,
+                 self._encode_many([r.prompt for r in reqs], width),
+                 self.state, self.logits, self.counts, self.active,
+                 self.row_keys, rows, keys,
+                 np.asarray([eb for _, eb, _ in allocs], np.int32),
+                 np.asarray([rt for _, _, rt in allocs], np.int32))
         for i, (key, req, row) in enumerate(part):
             _, entry_blocks, row_table = allocs[i]
             entry = PrefixEntry(
@@ -1196,12 +1257,15 @@ class ContinuousEngine:
             tails = np.asarray(
                 [e.blocks[-1] if self._has_tail else 0
                  for _, _, e, _ in part], np.int32)
-            (self.state, self.logits, self.counts, self.active,
-             self.row_keys) = prog(
-                 self.state, self.logits, self.counts, self.active,
-                 self.row_keys, rows, self._base_key, uids, tables, tails,
-                 tuple(e.last_logits for _, _, e, _ in part),
-                 tuple(e.next_pos for _, _, e, _ in part))
+            with self.tel.span("prefill_dispatch", kind="hitp",
+                               a=len(part)):
+                (self.state, self.logits, self.counts, self.active,
+                 self.row_keys) = prog(
+                     self.state, self.logits, self.counts, self.active,
+                     self.row_keys, rows, self._base_key, uids, tables,
+                     tails,
+                     tuple(e.last_logits for _, _, e, _ in part),
+                     tuple(e.next_pos for _, _, e, _ in part))
             for req, row, entry, own in part:
                 if self._has_tail:
                     # the COW copy is enqueued; drop the temporary source
@@ -1391,6 +1455,10 @@ class ContinuousEngine:
                 for r in reversed(getattr(e, "unadmitted", [])):
                     pending.appendleft(r)
                 self.stats["pool_retry_sweeps"] += 1
+                tel.log.event(
+                    "pool_exhausted_retry", level="debug",
+                    unadmitted=len(getattr(e, "unadmitted", [])),
+                    in_flight=self._num_active() + len(inflight))
                 if self._num_active() or inflight:
                     fruitless_sweeps = 0      # draining rows will free pages
                 else:
@@ -1451,24 +1519,28 @@ class ContinuousEngine:
                 self._finish_row(row, finish, out)
                 on_finished(out[-1])
 
+        tel = self.tel
         while pending or self._num_active() or inflight:
             if self.heartbeat is not None:
                 self.heartbeat()
             t0 = time.perf_counter()
-            admit_sweep()
+            with tel.timed("admit_sweep"):
+                admit_sweep()
             dispatched = False
             if self._num_active():
-                ver_first = self._logits_ver.copy()
-                self._logits_ver[:] = self.weight_version
-                (self.state, self.logits, self.counts, toks, logps,
-                 ents) = self._chunk(
-                    self.params, self.state, self.logits, self.counts,
-                    self.active, self.row_keys)
-                inflight.append((toks, logps, ents, list(self.rows),
-                                 ver_first, self.weight_version))
+                with tel.timed("decode_chunk"):
+                    ver_first = self._logits_ver.copy()
+                    self._logits_ver[:] = self.weight_version
+                    (self.state, self.logits, self.counts, toks, logps,
+                     ents) = self._chunk(
+                        self.params, self.state, self.logits, self.counts,
+                        self.active, self.row_keys)
+                    inflight.append((toks, logps, ents, list(self.rows),
+                                     ver_first, self.weight_version))
                 dispatched = True
             if inflight and (len(inflight) > depth or not dispatched):
-                harvest_one()
+                with tel.timed("harvest"):
+                    harvest_one()
             self.now += time.perf_counter() - t0
             if not (self._num_active() or inflight) and pending:
                 # idle: jump the virtual clock to the next arrival

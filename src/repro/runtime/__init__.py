@@ -1,6 +1,13 @@
 from repro.runtime.async_pipeline import AsyncPipeline, WeightStore
 from repro.runtime.faults import FaultPlan, InjectedCrash, InjectedFault
+from repro.telemetry import (
+    MetricsRegistry,
+    RunLog,
+    Telemetry,
+    Tracer,
+)
 from repro.runtime.trainer import Trainer, TrainerOptions
 
 __all__ = ["Trainer", "TrainerOptions", "AsyncPipeline", "WeightStore",
-           "FaultPlan", "InjectedFault", "InjectedCrash"]
+           "FaultPlan", "InjectedFault", "InjectedCrash",
+           "Telemetry", "Tracer", "MetricsRegistry", "RunLog"]

@@ -333,9 +333,15 @@ class AsyncPipeline:
                                 self.store.release(v)
                             raise
 
-                    t.engine.run(reqs, group_size=G, group_slack=slack,
-                                 on_group=on_group)
-                    stats = t.engine.end_phase()
+                    # this span records on the PRODUCER thread — its tid
+                    # (and the engine spans nested under it) land on the
+                    # producer's trace track, so the overlap with the
+                    # learner's update spans is visible in Perfetto
+                    with t.tel.timed("rollout_phase", phase=s,
+                                     role="producer", gen=gen):
+                        t.engine.run(reqs, group_size=G, group_slack=slack,
+                                     on_group=on_group)
+                        stats = t.engine.end_phase()
                 finally:
                     self.store.release(ver)
                 self._put(_PhaseEnd(step=s, stats=stats,
@@ -390,9 +396,16 @@ class AsyncPipeline:
                 f"{self.max_restarts} exhausted")
         self.restarts += 1
         t.resilience["producer_restarts"] += 1
-        print(f"[async watchdog] {reason}; restarting producer from phase "
-              f"{self._done_step} "
-              f"(restart {self.restarts}/{self.max_restarts})", flush=True)
+        t.tel.count("resilience.watchdog_restarts")
+        t.tel.instant("watchdog_restart", reason=reason,
+                      restart=self.restarts)
+        t.tel.log.event(
+            "watchdog_restart", level="warn", step=self._done_step,
+            reason=reason, restart=self.restarts,
+            max_restarts=self.max_restarts,
+            msg=f"[async watchdog] {reason}; restarting producer from "
+                f"phase {self._done_step} (restart {self.restarts}/"
+                f"{self.max_restarts})")
         old = self._producer
         with self._cv:
             self._gen += 1          # invalidates the old generation's puts
@@ -585,11 +598,13 @@ class AsyncPipeline:
                     if callback:
                         callback(t.step, metrics)
                     if log_every and t.step % log_every == 0:
-                        msg = " ".join(
-                            f"{k}={v:.4f}"
-                            for k, v in sorted(metrics.items())
-                            if isinstance(v, float))
-                        print(f"[step {t.step} async] {msg}", flush=True)
+                        floats = {k: v for k, v in sorted(metrics.items())
+                                  if isinstance(v, float)}
+                        t.tel.log.event(
+                            "train_step", step=t.step, pipeline="async",
+                            msg="async " + " ".join(
+                                f"{k}={v:.4f}" for k, v in floats.items()),
+                            **floats)
         finally:
             with self._cv:
                 self._stop = True
@@ -606,10 +621,13 @@ class AsyncPipeline:
                     pass
                 producer.join(timeout=0.1)
                 if producer.is_alive() and time.monotonic() > deadline:
-                    print(f"[async] WARNING: rollout-producer thread "
-                          f"failed to exit within "
-                          f"{max(5.0, self.watchdog_timeout):.0f}s of "
-                          f"stop; leaking a daemon thread", flush=True)
+                    t.tel.log.event(
+                        "producer_leak", level="error",
+                        timeout_s=max(5.0, self.watchdog_timeout),
+                        msg=f"[async] rollout-producer thread failed to "
+                            f"exit within "
+                            f"{max(5.0, self.watchdog_timeout):.0f}s of "
+                            f"stop; leaking a daemon thread")
                     break
             if producer is None or not producer.is_alive():
                 # producer provably gone: detach its heartbeat hook so any

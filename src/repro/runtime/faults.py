@@ -99,6 +99,7 @@ class FaultPlan:
             self._remaining[key] = self._remaining.get(key, 0) + sp.count
         self._lock = threading.Lock()
         self.events: List[dict] = []
+        self._log = None    # optional RunLog (attach_log)
 
     @classmethod
     def parse(cls, text: str, seed: int = 0) -> "FaultPlan":
@@ -128,6 +129,12 @@ class FaultPlan:
             raise ValueError(f"empty fault plan {text!r}")
         return cls(specs, seed=seed)
 
+    def attach_log(self, log) -> None:
+        """Report firings as structured run-log events (DESIGN.md
+        §Observability & telemetry).  Optional: an unattached plan keeps
+        the pre-telemetry behavior (``events`` only)."""
+        self._log = log
+
     def fire(self, kind: str, at: int) -> bool:
         """Probe the plan at (kind, at); True consumes one count."""
         with self._lock:
@@ -138,7 +145,14 @@ class FaultPlan:
             self._remaining[key] = left - 1
             self.events.append({"kind": kind, "at": int(at),
                                 "seq": len(self.events)})
-            return True
+            log, seq = self._log, len(self.events) - 1
+        # emit outside the lock: a console/file write never serializes
+        # concurrent probes
+        if log is not None:
+            log.event("fault_injected", level="warn", step=int(at),
+                      kind=kind, seq=seq,
+                      msg=f"fault injected: {kind}@{at} (seq {seq})")
+        return True
 
     def fired(self, kind: Optional[str] = None) -> int:
         with self._lock:

@@ -63,6 +63,7 @@ from repro.data import TOKENIZER, PromptLoader
 from repro.models import get_model
 from repro.optim import adamw
 from repro.runtime.faults import FaultPlan, corrupt_checkpoint_file
+from repro.telemetry import Telemetry
 from repro.rollout import (
     ContinuousEngine,
     Request,
@@ -148,6 +149,15 @@ class TrainerOptions:
                                    # run is bitwise-identical to a build
                                    # without the harness, pinned by
                                    # tests/test_faults.py)
+    # -- telemetry (DESIGN.md §Observability & telemetry) --
+    telemetry: str = "off"         # "off" (bitwise no-op) | "metrics"
+                                   # (registry only, <= 3% phase overhead)
+                                   # | "trace" (spans + registry + run log)
+    run_log: Optional[str] = None  # JSONL run-log path (None = console-only
+                                   # rendering of the structured events)
+    jax_annotations: bool = False  # trace mode: wrap host spans in
+                                   # jax.profiler.TraceAnnotation so device
+                                   # profiles line up with them
 
 
 class Trainer:
@@ -221,11 +231,20 @@ class Trainer:
             raise ValueError(
                 f"anomaly_max_skips must be >= 1, got "
                 f"{opts.anomaly_max_skips}")
+        # -- telemetry (DESIGN.md §Observability & telemetry) --
+        # one handle for the whole run: the engine, the async pipeline and
+        # the fault runtime all report through it.  "off" is the NULL-path
+        # no-op — bitwise-identical rollouts/losses, pinned by
+        # tests/test_telemetry.py
+        self.tel = Telemetry(opts.telemetry, run_log_path=opts.run_log,
+                             jax_annotations=opts.jax_annotations)
         # -- self-healing state --
         # (DESIGN.md §Fault tolerance & degraded modes): the armed fault plan (None = every hook is a no-op),
         # cumulative recovery counters surfaced in the phase metrics, and
         # the anomaly guard's consecutive-skip tally
         self.faults = opts.faults
+        if self.faults is not None:
+            self.faults.attach_log(self.tel.log)
         self.resilience: Dict[str, int] = {
             "skipped_updates": 0, "producer_restarts": 0,
             "storm_rerolls": 0, "storm_phases": 0,
@@ -262,7 +281,7 @@ class Trainer:
                   cache_backend=opts.cache_backend,
                   prefill_chunk=opts.prefill_chunk,
                   overlap_harvest=opts.overlap_harvest,
-                  kv_quant=opts.kv_quant)
+                  kv_quant=opts.kv_quant, telemetry=self.tel)
         if opts.cache_backend == "paged":
             # pool sizing: every resident row's chain + one pinned prompt
             # chain per distinct prompt in the phase + COW/tail headroom
@@ -420,14 +439,16 @@ class Trainer:
             eng = self.engine
             if self.faults is not None:
                 eng.arm_faults(self.faults, self.step)
-            eng.begin_phase(params=self.params, base_key=rng)
-            reqs = [Request(uid=u, prompt=np_tokens[u][np_mask[u]])
-                    for u in range(np_tokens.shape[0])]
+            with self.tel.timed("phase_setup"):
+                eng.begin_phase(params=self.params, base_key=rng)
+                reqs = [Request(uid=u, prompt=np_tokens[u][np_mask[u]])
+                        for u in range(np_tokens.shape[0])]
             comps = eng.run(reqs, group_size=G, group_slack=slack)
-            tr = build_train_rollout(
-                comps, np_tokens, np_mask,
-                max_new_tokens=opts.max_new_tokens, pad_id=eng.pad_id,
-                stats=eng.end_phase())
+            with self.tel.timed("collate"):
+                tr = build_train_rollout(
+                    comps, np_tokens, np_mask,
+                    max_new_tokens=opts.max_new_tokens, pad_id=eng.pad_id,
+                    stats=eng.end_phase())
             return tr.rollout, tr.keep, tr.stats
         ro = self._rollout_fn(self.params, jnp.asarray(np_tokens),
                               jnp.asarray(np_mask), rng,
@@ -530,10 +551,13 @@ class Trainer:
         self.resilience["storm_rerolls"] += n_rerolled
         self.resilience["storm_phases"] += 1
         metrics["storm_rerolls"] = float(n_rerolled)
-        print(f"[step {self.step}] rejection storm: veto_rate="
-              f"{veto_rate:.2f} > {opts.storm_threshold:.2f}; re-rolled "
-              f"{n_rerolled} group(s) through the dense fallback",
-              flush=True)
+        self.tel.log.event(
+            "rejection_storm", level="warn", step=self.step,
+            veto_rate=veto_rate, threshold=opts.storm_threshold,
+            rerolled_groups=n_rerolled,
+            msg=f"rejection storm: veto_rate={veto_rate:.2f} > "
+                f"{opts.storm_threshold:.2f}; re-rolled {n_rerolled} "
+                f"group(s) through the dense fallback")
         return ro, rewards, logp_old, logp_behave, ~rows, metrics
 
     def _poison_rejection(self, ro: RolloutBatch) -> RolloutBatch:
@@ -579,68 +603,86 @@ class Trainer:
         scfg, tcfg = self.scfg, self.tcfg
         G = scfg.group_size
         if logp_old is None:
-            logp_old = self._rescore_fn(self.params, ro)
+            with self.tel.timed("rescore"):
+                logp_old = self._rescore_fn(self.params, ro)
         if self.faults is not None and self.faults.fire(
                 "rejection_storm", self.step):
             ro = self._poison_rejection(ro)
         sparse_rows, storm_metrics = None, {}
         if self._storm_eligible:
-            (ro, rewards, logp_old, logp_behave, sparse_rows,
-             storm_metrics) = self._storm_guard(
-                 ro, rewards, logp_old, logp_behave, phase_ctx)
-        adv = group_advantages(jnp.asarray(rewards.reshape(-1, G))).reshape(-1)
+            # timed: the guard's veto scan device_gets the full logp planes
+            # — real wall-clock that belongs in the update column
+            with self.tel.timed("storm_guard"):
+                (ro, rewards, logp_old, logp_behave, sparse_rows,
+                 storm_metrics) = self._storm_guard(
+                     ro, rewards, logp_old, logp_behave, phase_ctx)
+        with self.tel.timed("advantages"):
+            adv = group_advantages(
+                jnp.asarray(rewards.reshape(-1, G))).reshape(-1)
         if self.faults is not None and self.faults.fire(
                 "nan_grads", self.step):
             adv = adv.at[0].set(jnp.nan)
-        logp_ref = (self._rescore_fn(self.ref_params, ro)
-                    if self.ref_params is not None else None)
+        if self.ref_params is not None:
+            with self.tel.timed("rescore"):
+                logp_ref = self._rescore_fn(self.ref_params, ro)
+        else:
+            logp_ref = None
 
         B = ro.resp_tokens.shape[0]
         ub = min(tcfg.update_batch, B)
         n_updates = max(B // ub, 1)
-        lr = adamw.warmup_cosine(jnp.asarray(self.step),
-                                 base_lr=scfg.learning_rate,
-                                 warmup=tcfg.warmup_steps,
-                                 total=tcfg.total_steps)
+        with self.tel.timed("advantages"):
+            # the schedule is jitted jnp — its step-0 compile is real
+            # wall-clock that would otherwise show up as bubble
+            lr = adamw.warmup_cosine(jnp.asarray(self.step),
+                                     base_lr=scfg.learning_rate,
+                                     warmup=tcfg.warmup_steps,
+                                     total=tcfg.total_steps)
         agg: Dict[str, float] = {}
         skipped = 0
-        for u in range(n_updates):
-            sl = slice(u * ub, (u + 1) * ub)
-            ro_u = jax.tree.map(lambda x: x[sl], ro)
-            lo = logp_old[sl]
-            lrf = logp_ref[sl] if logp_ref is not None else None
-            if logp_behave is None:
-                new_params, new_opt, metrics = self._update_fn(
-                    self.params, self.opt_state, ro_u, lo, lrf, adv[sl], lr)
-            else:
-                new_params, new_opt, metrics = self._update_stale_fn(
-                    self.params, self.opt_state, ro_u, lo, logp_behave[sl],
-                    lrf, adv[sl], lr)
-            loss_v = float(jax.device_get(metrics["loss"]))
-            gn_v = (float(jax.device_get(metrics["grad_norm"]))
-                    if "grad_norm" in metrics else 0.0)
-            if not (np.isfinite(loss_v) and np.isfinite(gn_v)):
-                # anomaly guard: drop the poisoned step — the update
-                # programs donate nothing, so self.params/self.opt_state
-                # still hold the pre-update arrays (a bitwise no-op)
-                skipped += 1
-                self.resilience["skipped_updates"] += 1
-                self._consec_skips += 1
-                print(f"[step {self.step}] anomaly guard: non-finite "
-                      f"update skipped (loss={loss_v}, grad_norm={gn_v}; "
-                      f"{self._consec_skips} consecutive)", flush=True)
-                if self._consec_skips >= self.opts.anomaly_max_skips:
-                    raise RuntimeError(
-                        f"anomaly guard: {self._consec_skips} consecutive "
-                        f"non-finite updates at step {self.step} (loss="
-                        f"{loss_v}, grad_norm={gn_v}) — params are intact "
-                        f"but the batch stream is poisoned; refusing to "
-                        f"continue")
-                continue
-            self._consec_skips = 0
-            self.params, self.opt_state = new_params, new_opt
-            for k, v in metrics.items():
-                agg[k] = agg.get(k, 0.0) + float(jax.device_get(v))
+        with self.tel.timed("update", n_updates=n_updates):
+            for u in range(n_updates):
+                sl = slice(u * ub, (u + 1) * ub)
+                ro_u = jax.tree.map(lambda x: x[sl], ro)
+                lo = logp_old[sl]
+                lrf = logp_ref[sl] if logp_ref is not None else None
+                if logp_behave is None:
+                    new_params, new_opt, metrics = self._update_fn(
+                        self.params, self.opt_state, ro_u, lo, lrf, adv[sl],
+                        lr)
+                else:
+                    new_params, new_opt, metrics = self._update_stale_fn(
+                        self.params, self.opt_state, ro_u, lo,
+                        logp_behave[sl], lrf, adv[sl], lr)
+                loss_v = float(jax.device_get(metrics["loss"]))
+                gn_v = (float(jax.device_get(metrics["grad_norm"]))
+                        if "grad_norm" in metrics else 0.0)
+                if not (np.isfinite(loss_v) and np.isfinite(gn_v)):
+                    # anomaly guard: drop the poisoned step — the update
+                    # programs donate nothing, so self.params/self.opt_state
+                    # still hold the pre-update arrays (a bitwise no-op)
+                    skipped += 1
+                    self.resilience["skipped_updates"] += 1
+                    self._consec_skips += 1
+                    self.tel.log.event(
+                        "anomaly_skip", level="warn", step=self.step,
+                        loss=loss_v, grad_norm=gn_v,
+                        consecutive=self._consec_skips,
+                        msg=f"anomaly guard: non-finite update skipped "
+                            f"(loss={loss_v}, grad_norm={gn_v}; "
+                            f"{self._consec_skips} consecutive)")
+                    if self._consec_skips >= self.opts.anomaly_max_skips:
+                        raise RuntimeError(
+                            f"anomaly guard: {self._consec_skips} "
+                            f"consecutive non-finite updates at step "
+                            f"{self.step} (loss={loss_v}, grad_norm={gn_v})"
+                            f" — params are intact but the batch stream is "
+                            f"poisoned; refusing to continue")
+                    continue
+                self._consec_skips = 0
+                self.params, self.opt_state = new_params, new_opt
+                for k, v in metrics.items():
+                    agg[k] = agg.get(k, 0.0) + float(jax.device_get(v))
         n_applied = n_updates - skipped
         for k in agg:
             agg[k] /= max(n_applied, 1)
@@ -648,30 +690,69 @@ class Trainer:
         self.step += 1
         self.weight_version += 1
         if tcfg.checkpoint_every and self.step % tcfg.checkpoint_every == 0:
-            self.save_checkpoint()
-        agg.update(
-            reward=float(rewards.mean()),
-            resp_len=float(jax.device_get(ro.lengths).mean()),
-            entropy=float(jax.device_get(ro.entropy).mean()),
-            lr=float(jax.device_get(lr)),
-        )
-        agg.update(storm_metrics)
-        if sparse_rows is not None:
-            # degraded-mode metric hygiene: mismatch telemetry aggregates
-            # over genuinely-sparse rows only — the rerolled identity-class
-            # rows (xi == 1 exactly) would otherwise dilute it
-            lbf = logp_behave if logp_behave is not None else logp_old
-            agg.update(mismatch_metrics(
-                lbf, ro.logp_sparse, ro.resp_mask, row_mask=sparse_rows,
-                xi_clip_max=scfg.xi_clip_max))
-        agg["skipped_update_frac"] = skipped / n_updates
-        agg["resilience_skipped_updates"] = float(
-            self.resilience["skipped_updates"])
-        agg["resilience_storm_rerolls"] = float(
-            self.resilience["storm_rerolls"])
-        agg["checkpoint_rollbacks"] = float(
-            self.resilience["checkpoint_rollbacks"])
+            with self.tel.timed("checkpoint", step=self.step):
+                self.save_checkpoint()
+        # metric assembly device_gets full rollout planes — timed so the
+        # phase breakdown attributes it (to "other") instead of bubble
+        with self.tel.timed("metrics_publish"):
+            agg.update(
+                reward=float(rewards.mean()),
+                resp_len=float(jax.device_get(ro.lengths).mean()),
+                entropy=float(jax.device_get(ro.entropy).mean()),
+                lr=float(jax.device_get(lr)),
+            )
+            agg.update(storm_metrics)
+            if sparse_rows is not None:
+                # degraded-mode metric hygiene: mismatch telemetry
+                # aggregates over genuinely-sparse rows only — the rerolled
+                # identity-class rows (xi == 1 exactly) would otherwise
+                # dilute it
+                lbf = logp_behave if logp_behave is not None else logp_old
+                agg.update(mismatch_metrics(
+                    lbf, ro.logp_sparse, ro.resp_mask, row_mask=sparse_rows,
+                    xi_clip_max=scfg.xi_clip_max))
+            agg["skipped_update_frac"] = skipped / n_updates
+            agg["resilience_skipped_updates"] = float(
+                self.resilience["skipped_updates"])
+            agg["resilience_storm_rerolls"] = float(
+                self.resilience["storm_rerolls"])
+            agg["checkpoint_rollbacks"] = float(
+                self.resilience["checkpoint_rollbacks"])
+            if self.tel.metrics_on:
+                self._publish_mismatch(ro, logp_old, logp_behave, agg)
         return agg
+
+    def _publish_mismatch(self, ro: RolloutBatch, logp_old, logp_behave,
+                          agg: Dict[str, float]) -> None:
+        """Sparse-RL mismatch health -> the telemetry registry (DESIGN.md
+        §Observability & telemetry): the per-phase xi histogram over
+        response tokens (log xi = log pi_old - log pi_sparse — Eq. 6's
+        veto reads its left tail), per-phase rejection/veto-rate series,
+        and the staleness diagnostics when the async path reports them.
+        Device fetches happen only here, i.e. only when metrics are on —
+        the off path never adds a transfer."""
+        lo = np.asarray(jax.device_get(
+            logp_behave if logp_behave is not None else logp_old),
+            np.float32)
+        ls = np.asarray(jax.device_get(ro.logp_sparse), np.float32)
+        mask = np.asarray(jax.device_get(ro.resp_mask), bool)
+        log_xi = (lo - ls)[mask]
+        if log_xi.size:
+            self.tel.observe("mismatch.log_xi", log_xi)
+        for key, name in (("rejection_rate", "mismatch.rejection_rate"),
+                          ("veto_rate", "mismatch.veto_rate"),
+                          ("mismatch_kl", "mismatch.kl"),
+                          ("mean_xi", "mismatch.mean_xi"),
+                          ("mean_rho", "mismatch.mean_rho"),
+                          ("staleness_kl", "mismatch.staleness_kl"),
+                          ("reward", "train.reward"),
+                          ("loss", "train.loss"),
+                          ("grad_norm", "train.grad_norm")):
+            if key in agg and np.isfinite(agg[key]):
+                self.tel.observe(name, float(agg[key]))
+        for k, v in self.resilience.items():
+            self.tel.gauge(f"resilience.{k}", float(v))
+        self.tel.gauge("train.weight_version", float(self.weight_version))
 
     @staticmethod
     def _engine_stat_metrics(ro_stats: Dict[str, float]) -> Dict[str, float]:
@@ -702,18 +783,25 @@ class Trainer:
     # -- one full RL step -------------------------------------------------------
     def train_step(self) -> Dict[str, float]:
         t0 = time.time()
-        np_tokens, np_mask, answers_rep = self.tiled_phase_inputs(self.step)
-        r1 = self.phase_key(self.step)
-        t_roll = time.time()
-        ro, keep, ro_stats = self._rollout_phase(np_tokens, np_mask, r1)
-        rollout_s = time.time() - t_roll
-        self.last_rollout = ro          # equivalence-test hook
-        rewards = binary_rewards(np.asarray(jax.device_get(ro.resp_tokens)),
-                                 [answers_rep[u] for u in keep])
+        with self.tel.span("train_step", step=self.step):
+            with self.tel.span("phase_inputs", step=self.step):
+                np_tokens, np_mask, answers_rep = self.tiled_phase_inputs(
+                    self.step)
+                r1 = self.phase_key(self.step)
+            t_roll = time.time()
+            with self.tel.timed("rollout_phase", step=self.step):
+                ro, keep, ro_stats = self._rollout_phase(np_tokens, np_mask,
+                                                         r1)
+            rollout_s = time.time() - t_roll
+            self.last_rollout = ro          # equivalence-test hook
+            with self.tel.timed("verify"):
+                rewards = binary_rewards(
+                    np.asarray(jax.device_get(ro.resp_tokens)),
+                    [answers_rep[u] for u in keep])
 
-        agg = self._phase_update(ro, rewards, phase_ctx=dict(
-            np_tokens=np_tokens, np_mask=np_mask, answers_rep=answers_rep,
-            keep=keep, rng=r1))
+            agg = self._phase_update(ro, rewards, phase_ctx=dict(
+                np_tokens=np_tokens, np_mask=np_mask,
+                answers_rep=answers_rep, keep=keep, rng=r1))
         agg.update(rollout_s=rollout_s, step_time_s=time.time() - t0)
         if ro_stats:
             agg.update(self._engine_stat_metrics(ro_stats))
@@ -732,7 +820,10 @@ class Trainer:
             if callback:
                 callback(self.step, metrics)
             if log_every and self.step % log_every == 0:
-                msg = " ".join(f"{k}={v:.4f}" for k, v in sorted(metrics.items())
-                               if isinstance(v, float))
-                print(f"[step {self.step}] {msg}", flush=True)
+                floats = {k: v for k, v in sorted(metrics.items())
+                          if isinstance(v, float)}
+                self.tel.log.event(
+                    "train_step", step=self.step,
+                    msg=" ".join(f"{k}={v:.4f}" for k, v in floats.items()),
+                    **floats)
         return history

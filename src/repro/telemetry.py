@@ -1,0 +1,528 @@
+"""Unified telemetry: span tracer, metrics registry, structured run log.
+
+One zero-dependency layer (stdlib + numpy) behind a single knob —
+``telemetry=off|metrics|trace`` — that every runtime component reports
+through (contracts: DESIGN.md §Observability & telemetry):
+
+  * :class:`Tracer` — thread-aware span context managers
+    (``tel.span("prefill_flush", phase=3)``) recording Chrome-trace-event
+    JSON loadable in Perfetto / ``chrome://tracing``.  Spans carry the
+    recording thread's id, so producer-thread engine spans and
+    learner-thread update spans land on separate tracks and their overlap
+    (the async pipeline's whole point) is visible, not averaged away.
+  * :class:`MetricsRegistry` — typed counters / gauges / histograms with
+    percentiles.  The single sink unifying ``ContinuousEngine.stats`` /
+    ``_phase_waits`` / ``_phase_lats``, the trainer's per-phase metric
+    dicts, the PR-9 resilience counters and the Sparse-RL mismatch
+    diagnostics (per-phase xi histogram, veto rate, mean_rho /
+    staleness_kl, pool-occupancy timeline).
+  * :class:`RunLog` — leveled, step/phase-stamped JSONL event log
+    (``reports/run_log.jsonl``) replacing ad-hoc ``print()`` diagnostics,
+    with human-readable console rendering at the default level so CLI
+    output stays useful.
+
+The ``off`` mode is pinned bitwise-identical to an uninstrumented build:
+every instrumentation site goes through :meth:`Telemetry.timed` /
+:meth:`Telemetry.span`, which in ``off`` mode return a shared no-op
+context manager and never touch a clock, and telemetry only ever observes
+host-side values — it never feeds anything back into a compiled program.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import threading
+import time
+from typing import Any, Dict, List, Optional, Sequence
+
+import numpy as np
+
+__all__ = [
+    "Telemetry", "Tracer", "MetricsRegistry", "RunLog",
+    "Counter", "Gauge", "Histogram", "TELEMETRY_MODES",
+]
+
+TELEMETRY_MODES = ("off", "metrics", "trace")
+
+
+# ---------------------------------------------------------------------------
+# span tracer (Chrome trace-event JSON)
+# ---------------------------------------------------------------------------
+class _NullCtx:
+    """Shared no-op context manager: the entire hot-path cost of
+    ``telemetry=off`` is one attribute load and returning this singleton."""
+
+    __slots__ = ()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        return False
+
+
+_NULL_CTX = _NullCtx()
+
+
+class _Span:
+    """One open span: records a Chrome ``ph:"X"`` complete event on exit.
+
+    Exceptions close the span (``__exit__`` always records, stamping
+    ``error`` into the event args) and propagate — tracing never swallows
+    a failure."""
+
+    __slots__ = ("_tracer", "name", "args", "_t0", "_tid", "_annot")
+
+    def __init__(self, tracer: "Tracer", name: str, args: Dict[str, Any]):
+        self._tracer = tracer
+        self.name = name
+        self.args = args
+        self._annot = None
+        if tracer._jax_annotations:
+            from jax.profiler import TraceAnnotation
+            self._annot = TraceAnnotation(name)
+
+    def __enter__(self):
+        if self._annot is not None:
+            self._annot.__enter__()
+        self._tid = threading.get_ident()
+        self._t0 = time.perf_counter_ns()
+        return self
+
+    def __exit__(self, exc_type, exc, tb):
+        dur = time.perf_counter_ns() - self._t0
+        if self._annot is not None:
+            self._annot.__exit__(exc_type, exc, tb)
+        if exc_type is not None:
+            self.args = dict(self.args, error=exc_type.__name__)
+        self._tracer._record(self.name, self._t0, dur, self._tid, self.args)
+        return False
+
+
+class Tracer:
+    """Collects Chrome trace events; thread-safe; bounded.
+
+    Timestamps are ``perf_counter_ns`` relative to tracer construction,
+    emitted in microseconds (the trace-event unit).  ``max_events`` bounds
+    memory on long runs — overflow drops the newest events and counts them
+    (``dropped_events``), never silently."""
+
+    def __init__(self, *, jax_annotations: bool = False,
+                 max_events: int = 500_000):
+        self._epoch_ns = time.perf_counter_ns()
+        self._lock = threading.Lock()
+        self._events: List[Dict[str, Any]] = []
+        self._jax_annotations = jax_annotations
+        self._max_events = max_events
+        self.dropped_events = 0
+        self._pid = os.getpid()
+
+    # -- recording ------------------------------------------------------
+    def span(self, name: str, **args) -> _Span:
+        return _Span(self, name, args)
+
+    def _record(self, name, t0_ns, dur_ns, tid, args) -> None:
+        ev = {"name": name, "ph": "X", "pid": self._pid, "tid": tid,
+              "ts": (t0_ns - self._epoch_ns) / 1e3, "dur": dur_ns / 1e3}
+        if args:
+            ev["args"] = args
+        self._append(ev)
+
+    def instant(self, name: str, **args) -> None:
+        """A zero-duration marker (weight swaps, fault firings)."""
+        ev = {"name": name, "ph": "i", "s": "t", "pid": self._pid,
+              "tid": threading.get_ident(),
+              "ts": (time.perf_counter_ns() - self._epoch_ns) / 1e3}
+        if args:
+            ev["args"] = args
+        self._append(ev)
+
+    def counter(self, name: str, value: float) -> None:
+        """A Chrome counter sample — renders as a timeline track
+        (pool-occupancy over the phase)."""
+        self._append({"name": name, "ph": "C", "pid": self._pid,
+                      "ts": (time.perf_counter_ns() - self._epoch_ns) / 1e3,
+                      "args": {"value": value}})
+
+    def _append(self, ev: Dict[str, Any]) -> None:
+        with self._lock:
+            if len(self._events) >= self._max_events:
+                self.dropped_events += 1
+                return
+            self._events.append(ev)
+
+    # -- export ---------------------------------------------------------
+    def to_chrome(self, other_data: Optional[Dict[str, Any]] = None
+                  ) -> Dict[str, Any]:
+        """The Chrome trace-event container object (JSON Object Format):
+        ``traceEvents`` plus free-form ``otherData`` — Perfetto ignores the
+        extra keys, `tools/trace_report.py` reads the embedded metrics
+        snapshot from them."""
+        with self._lock:
+            events = list(self._events)
+        out: Dict[str, Any] = {
+            "traceEvents": events,
+            "displayTimeUnit": "ms",
+            "otherData": dict(other_data or {}),
+        }
+        if self.dropped_events:
+            out["otherData"]["dropped_events"] = self.dropped_events
+        return out
+
+
+# ---------------------------------------------------------------------------
+# metrics registry
+# ---------------------------------------------------------------------------
+class Counter:
+    """Monotone accumulator (admissions, restarts, skipped updates)."""
+
+    __slots__ = ("name", "value", "_lock")
+
+    def __init__(self, name: str):
+        self.name = name
+        self.value = 0.0
+        self._lock = threading.Lock()
+
+    def inc(self, n: float = 1.0) -> None:
+        with self._lock:
+            self.value += n
+
+    def snapshot(self) -> Dict[str, float]:
+        return {"value": self.value}
+
+
+class Gauge:
+    """Last-write-wins point value (pool peak fraction, weight version)."""
+
+    __slots__ = ("name", "value")
+
+    def __init__(self, name: str):
+        self.name = name
+        self.value = float("nan")
+
+    def set(self, v: float) -> None:
+        self.value = float(v)
+
+    def snapshot(self) -> Dict[str, float]:
+        return {"value": self.value}
+
+
+class Histogram:
+    """Sampled distribution with exact percentiles up to ``max_samples``.
+
+    Keeps the raw observations (so ``percentile`` agrees bit-for-bit with
+    ``np.percentile`` — the testable contract) plus running count / sum
+    over ALL observations.  Past ``max_samples`` it degrades to a
+    deterministic reservoir (seeded per-histogram RNG: two runs observing
+    the same sequence snapshot identically) — percentiles become estimates
+    but never cost unbounded memory on million-token runs."""
+
+    def __init__(self, name: str, max_samples: int = 65536):
+        self.name = name
+        self._max = max_samples
+        self._samples: List[float] = []
+        self.count = 0
+        self.sum = 0.0
+        self._lock = threading.Lock()
+        self._rng = np.random.default_rng(abs(hash(name)) % (2 ** 32))
+
+    def observe(self, v: float) -> None:
+        self.observe_many((v,))
+
+    def observe_many(self, vs: Sequence[float]) -> None:
+        arr = np.asarray(vs, np.float64).ravel()
+        if arr.size == 0:
+            return
+        with self._lock:
+            self.sum += float(arr.sum())
+            for v in arr:
+                self.count += 1
+                if len(self._samples) < self._max:
+                    self._samples.append(float(v))
+                else:                      # reservoir: keep each with k/n
+                    j = int(self._rng.integers(0, self.count))
+                    if j < self._max:
+                        self._samples[j] = float(v)
+
+    def percentile(self, q) -> Any:
+        with self._lock:
+            if not self._samples:
+                return float("nan") if np.isscalar(q) else \
+                    np.full(len(q), np.nan)
+            return np.percentile(np.asarray(self._samples), q)
+
+    def snapshot(self) -> Dict[str, float]:
+        with self._lock:
+            if not self._samples:
+                return {"count": 0, "sum": 0.0}
+            s = np.asarray(self._samples)
+        p50, p90, p99 = np.percentile(s, [50, 90, 99])
+        return {"count": self.count, "sum": self.sum,
+                "mean": self.sum / self.count,
+                "min": float(s.min()), "max": float(s.max()),
+                "p50": float(p50), "p90": float(p90), "p99": float(p99)}
+
+
+class MetricsRegistry:
+    """Get-or-create registry of typed metrics, thread-safe.
+
+    Names are dotted (``engine.admissions``, ``mismatch.log_xi``); a name
+    registered as one type and fetched as another is a loud ``TypeError``
+    — the registry is the schema."""
+
+    def __init__(self):
+        self._metrics: Dict[str, Any] = {}
+        self._lock = threading.Lock()
+
+    def _get(self, name: str, klass, **kw):
+        with self._lock:
+            m = self._metrics.get(name)
+            if m is None:
+                m = self._metrics[name] = klass(name, **kw)
+            elif not isinstance(m, klass):
+                raise TypeError(
+                    f"metric {name!r} already registered as "
+                    f"{type(m).__name__}, requested {klass.__name__}")
+            return m
+
+    def counter(self, name: str) -> Counter:
+        return self._get(name, Counter)
+
+    def gauge(self, name: str) -> Gauge:
+        return self._get(name, Gauge)
+
+    def histogram(self, name: str, **kw) -> Histogram:
+        return self._get(name, Histogram, **kw)
+
+    def snapshot(self) -> Dict[str, Dict[str, float]]:
+        """``{name: {field: value}}`` — the JSON-ready registry state that
+        trace export embeds and `tools/trace_report.py` summarizes."""
+        with self._lock:
+            items = sorted(self._metrics.items())
+        return {name: m.snapshot() for name, m in items}
+
+
+# ---------------------------------------------------------------------------
+# structured run log
+# ---------------------------------------------------------------------------
+_LEVELS = {"debug": 10, "info": 20, "warn": 30, "error": 40}
+
+
+class RunLog:
+    """Leveled, step/phase-stamped structured event log.
+
+    Each event is one JSONL record (``ts`` wall-clock, ``level``,
+    ``event``, optional ``step``/``phase``/``msg`` plus free-form fields)
+    appended to ``path`` when configured, and — at or above
+    ``console_level`` — rendered human-readably to the console, so the
+    CLIs keep their `[step N] ...` output while every diagnostic also
+    lands machine-parseable in ``reports/run_log.jsonl``."""
+
+    def __init__(self, path: Optional[str] = None,
+                 console_level: Optional[str] = "info",
+                 stream=None):
+        self.path = path
+        self._fh = None
+        if path:
+            os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+            self._fh = open(path, "a", encoding="utf-8")
+        self._console = (_LEVELS[console_level]
+                         if console_level is not None else None)
+        self._stream = stream if stream is not None else sys.stdout
+        self._lock = threading.Lock()
+
+    def event(self, event: str, *, level: str = "info",
+              step: Optional[int] = None, phase: Optional[int] = None,
+              msg: Optional[str] = None, **fields) -> None:
+        lv = _LEVELS[level]
+        rec: Dict[str, Any] = {"ts": round(time.time(), 6), "level": level,
+                               "event": event}
+        if step is not None:
+            rec["step"] = int(step)
+        if phase is not None:
+            rec["phase"] = int(phase)
+        if msg is not None:
+            rec["msg"] = msg
+        for k, v in fields.items():
+            rec[k] = _jsonable(v)
+        with self._lock:
+            if self._fh is not None:
+                self._fh.write(json.dumps(rec) + "\n")
+                self._fh.flush()
+            if self._console is not None and lv >= self._console:
+                print(self._render(rec), file=self._stream, flush=True)
+
+    @staticmethod
+    def _render(rec: Dict[str, Any]) -> str:
+        head = ""
+        if "step" in rec:
+            head = f"[step {rec['step']}] "
+        elif "phase" in rec:
+            head = f"[phase {rec['phase']}] "
+        if rec["level"] in ("warn", "error"):
+            head += f"{rec['level'].upper()} "
+        if "msg" in rec:
+            return head + rec["msg"]
+        body = " ".join(f"{k}={_fmt(v)}" for k, v in rec.items()
+                        if k not in ("ts", "level", "event", "step", "phase"))
+        return f"{head}{rec['event']}" + (f": {body}" if body else "")
+
+    def close(self) -> None:
+        with self._lock:
+            if self._fh is not None:
+                self._fh.close()
+                self._fh = None
+
+
+def _fmt(v) -> str:
+    if isinstance(v, float):
+        return f"{v:.4g}"
+    return str(v)
+
+def _jsonable(v):
+    if isinstance(v, (np.integer,)):
+        return int(v)
+    if isinstance(v, (np.floating,)):
+        return float(v)
+    if isinstance(v, np.ndarray):
+        return v.tolist()
+    if isinstance(v, dict):
+        return {k: _jsonable(x) for k, x in v.items()}
+    if isinstance(v, (list, tuple)):
+        return [_jsonable(x) for x in v]
+    return v
+
+
+# ---------------------------------------------------------------------------
+# the facade: one handle, one knob
+# ---------------------------------------------------------------------------
+class _TimedSpan:
+    """Span + duration-histogram observation in one context manager: trace
+    mode gets the Chrome event, metrics mode gets ``<name>_s`` observed in
+    the registry (the phase-breakdown source when spans are off)."""
+
+    __slots__ = ("_tel", "_name", "_args", "_span", "_t0")
+
+    def __init__(self, tel: "Telemetry", name: str, args: Dict[str, Any]):
+        self._tel = tel
+        self._name = name
+        self._args = args
+
+    def __enter__(self):
+        self._span = None
+        if self._tel.tracer is not None:
+            self._span = self._tel.tracer.span(self._name, **self._args)
+            self._span.__enter__()
+        else:
+            self._t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, exc_type, exc, tb):
+        if self._span is not None:
+            dt = (time.perf_counter_ns() - self._span._t0) / 1e9
+            self._span.__exit__(exc_type, exc, tb)
+        else:
+            dt = time.perf_counter() - self._t0
+        self._tel.metrics.histogram(self._name + "_s").observe(dt)
+        return False
+
+
+class Telemetry:
+    """The one handle components hold; behaviour keyed on ``mode``:
+
+      * ``off``     — ``span``/``timed``/``instant``/``counter_sample``
+        return/do nothing (shared no-op singleton, no clock reads); the
+        run log still works (console rendering replaces the old prints).
+      * ``metrics`` — registry on: ``timed`` observes duration histograms,
+        observe/count/gauge record; spans stay off (≤ 3 % phase wall-clock
+        — the bench-gated bound).
+      * ``trace``   — everything: spans + instants + counter timelines on
+        the tracer, plus the full registry.
+
+    ``jax_annotations=True`` additionally wraps every traced span in
+    ``jax.profiler.TraceAnnotation`` so device profiles collected with the
+    JAX profiler line up with these host spans."""
+
+    def __init__(self, mode: str = "off", *,
+                 run_log_path: Optional[str] = None,
+                 console_level: Optional[str] = "info",
+                 jax_annotations: bool = False,
+                 log_stream=None):
+        if mode not in TELEMETRY_MODES:
+            raise ValueError(f"telemetry mode {mode!r} not in "
+                             f"{TELEMETRY_MODES}")
+        self.mode = mode
+        self.metrics_on = mode in ("metrics", "trace")
+        self.trace_on = mode == "trace"
+        self.tracer = Tracer(jax_annotations=jax_annotations) \
+            if self.trace_on else None
+        self.metrics = MetricsRegistry() if self.metrics_on else None
+        self.log = RunLog(run_log_path, console_level=console_level,
+                          stream=log_stream)
+
+    # -- spans ----------------------------------------------------------
+    def span(self, name: str, **args):
+        """Trace-only span (no registry side effects)."""
+        if self.tracer is None:
+            return _NULL_CTX
+        return self.tracer.span(name, **args)
+
+    def timed(self, name: str, **args):
+        """Span + ``<name>_s`` duration histogram (the instrumentation
+        idiom for hot-path sections that feed the phase breakdown)."""
+        if not self.metrics_on:
+            return _NULL_CTX
+        return _TimedSpan(self, name, args)
+
+    def instant(self, name: str, **args) -> None:
+        if self.tracer is not None:
+            self.tracer.instant(name, **args)
+
+    def counter_sample(self, name: str, value: float) -> None:
+        """One point on a counter timeline (trace) + histogram observation
+        (metrics) — the pool-occupancy-over-time idiom."""
+        if not self.metrics_on:
+            return
+        if self.tracer is not None:
+            self.tracer.counter(name, value)
+        self.metrics.histogram(name).observe(value)
+
+    # -- registry shortcuts (no-ops when metrics are off) ---------------
+    def count(self, name: str, n: float = 1.0) -> None:
+        if self.metrics is not None:
+            self.metrics.counter(name).inc(n)
+
+    def gauge(self, name: str, v: float) -> None:
+        if self.metrics is not None:
+            self.metrics.gauge(name).set(v)
+
+    def observe(self, name: str, v) -> None:
+        if self.metrics is not None:
+            if np.ndim(v):
+                self.metrics.histogram(name).observe_many(v)
+            else:
+                self.metrics.histogram(name).observe(v)
+
+    # -- export ---------------------------------------------------------
+    def export_trace(self, path: str) -> Optional[str]:
+        """Write the Chrome trace JSON (with the metrics snapshot embedded
+        under ``otherData.metrics``).  No-op unless mode is ``trace``."""
+        if self.tracer is None:
+            return None
+        other: Dict[str, Any] = {}
+        if self.metrics is not None:
+            other["metrics"] = self.metrics.snapshot()
+        os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+        with open(path, "w", encoding="utf-8") as fh:
+            json.dump(self.tracer.to_chrome(other), fh)
+        return path
+
+    def close(self) -> None:
+        self.log.close()
+
+
+# the module-level default every component falls back to: off-mode with
+# console-only logging — holding it is free and unconditional, so call
+# sites never branch on "is telemetry configured"
+NULL = Telemetry("off")

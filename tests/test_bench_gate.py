@@ -15,9 +15,10 @@ spec.loader.exec_module(bench_gate)
 
 
 def _row(speedup=1.2, identical=True, policy="none", batch=4, group_size=4,
-         n_prompts=4):
+         n_prompts=4, **kw):
     return dict(policy=policy, batch=batch, group_size=group_size,
-                n_prompts=n_prompts, speedup=speedup, identical=identical)
+                n_prompts=n_prompts, speedup=speedup, identical=identical,
+                **kw)
 
 
 def _write(d: Path, serving, rollout):
@@ -499,3 +500,31 @@ def test_gate_rows_without_skipped_update_field_pass(tmp_path):
     _write(tmp_path / "fresh", *_full(async_rows=ok))
     assert bench_gate.gate(tmp_path / "committed", tmp_path / "fresh",
                            0.35) == []
+
+
+def test_gate_telemetry_overhead_is_hard_bound_on_phase_rows(tmp_path):
+    """telemetry=metrics may cost at most 3% of the continuous phase
+    wall-clock (DESIGN.md §Observability & telemetry) — a rollout_phase row
+    over the bound fails with no baseline needed; an in-bound or
+    field-less row passes (pre-telemetry baselines skip the check)."""
+    over = [_row(telemetry_overhead_frac=0.07)]
+    problems = bench_gate.gate_section(
+        "rollout_phase_smoke", over, None,
+        ("policy", "group_size", "n_prompts"), 0.35)
+    assert any("telemetry_overhead_frac" in p for p in problems)
+    ok = [_row(telemetry_overhead_frac=0.01), _row()]
+    assert bench_gate.gate_section(
+        "rollout_phase_smoke", ok, None,
+        ("policy", "group_size", "n_prompts"), 0.35) == []
+
+
+def test_gate_telemetry_overhead_only_gates_phase_sections(tmp_path):
+    """Matrix cells stamp the same field informationally, but only the
+    rollout_phase sections hard-gate it: slow compression-policy cells
+    jitter past 3% on shared runners without being a telemetry bug."""
+    rows = [dict(policy="per_head", arch="qwen2.5-14b", plen_dist="mixed",
+                 speedup=2.4, identical=True,
+                 telemetry_overhead_frac=0.08)]
+    assert bench_gate.gate_section(
+        "rollout_matrix_smoke", rows, None,
+        ("policy", "arch", "plen_dist"), 0.35) == []

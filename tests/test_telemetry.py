@@ -1,0 +1,331 @@
+"""Unified telemetry layer (DESIGN.md §Observability & telemetry): span
+tracer, metrics registry, structured run log, the off-mode bitwise pin, the
+PoolExhausted wait-retraction fix, and the trace_report breakdown math."""
+import importlib.util
+import io
+import json
+import sys
+import threading
+from pathlib import Path
+
+import jax
+import numpy as np
+import pytest
+
+from repro.telemetry import (
+    Histogram,
+    MetricsRegistry,
+    RunLog,
+    Telemetry,
+)
+
+ROOT = Path(__file__).resolve().parent.parent
+spec = importlib.util.spec_from_file_location(
+    "trace_report", ROOT / "tools" / "trace_report.py")
+trace_report = importlib.util.module_from_spec(spec)
+sys.modules["trace_report"] = trace_report
+spec.loader.exec_module(trace_report)
+
+
+# ---------------------------------------------------------------------------
+# span tracer
+# ---------------------------------------------------------------------------
+def test_spans_nest_and_close_on_exception():
+    tel = Telemetry("trace")
+    with pytest.raises(ValueError, match="boom"):
+        with tel.span("outer", phase=3):
+            with tel.span("inner"):
+                raise ValueError("boom")
+    events = tel.tracer.to_chrome()["traceEvents"]
+    by_name = {e["name"]: e for e in events}
+    assert set(by_name) == {"outer", "inner"}
+    # both spans closed (recorded) despite the exception, error stamped
+    assert by_name["inner"]["args"]["error"] == "ValueError"
+    assert by_name["outer"]["args"]["error"] == "ValueError"
+    assert by_name["outer"]["args"]["phase"] == 3
+    # inner nests inside outer on the time axis
+    o, i = by_name["outer"], by_name["inner"]
+    assert o["ts"] <= i["ts"]
+    assert i["ts"] + i["dur"] <= o["ts"] + o["dur"] + 1e-3
+
+
+def test_producer_thread_spans_carry_thread_ids():
+    tel = Telemetry("trace")
+    seen = {}
+
+    def producer():
+        seen["tid"] = threading.get_ident()
+        with tel.span("rollout_phase", role="producer"):
+            pass
+
+    with tel.span("train_step"):
+        t = threading.Thread(target=producer)
+        t.start()
+        t.join()
+    events = {e["name"]: e for e in tel.tracer.to_chrome()["traceEvents"]}
+    assert events["train_step"]["tid"] == threading.get_ident()
+    assert events["rollout_phase"]["tid"] == seen["tid"]
+    assert events["train_step"]["tid"] != events["rollout_phase"]["tid"]
+
+
+def test_chrome_trace_export_is_valid(tmp_path):
+    tel = Telemetry("trace")
+    with tel.timed("admit_sweep"):
+        pass
+    tel.instant("weight_swap", version=2)
+    tel.counter_sample("engine.pool_blocks_in_use", 7)
+    tel.count("engine.admissions", 3)
+    out = tel.export_trace(str(tmp_path / "t.json"))
+    doc = json.loads(Path(out).read_text())        # valid JSON, reparses
+    assert doc["displayTimeUnit"] == "ms"
+    phs = {e["ph"] for e in doc["traceEvents"]}
+    assert phs == {"X", "i", "C"}
+    for e in doc["traceEvents"]:
+        assert {"name", "ph", "ts", "pid", "tid"} <= set(e) or e["ph"] == "C"
+        assert np.isfinite(e["ts"])
+    # the registry snapshot rides in otherData for trace_report
+    m = doc["otherData"]["metrics"]
+    assert m["engine.admissions"]["value"] == 3
+    assert m["admit_sweep_s"]["count"] == 1
+
+
+def test_trace_buffer_bound_counts_drops():
+    tel = Telemetry("trace")
+    tel.tracer._max_events = 4
+    for i in range(10):
+        tel.instant("tick", i=i)
+    assert len(tel.tracer.to_chrome()["traceEvents"]) == 4
+    assert tel.tracer.dropped_events == 6
+    assert tel.tracer.to_chrome()["otherData"]["dropped_events"] == 6
+
+
+# ---------------------------------------------------------------------------
+# metrics registry
+# ---------------------------------------------------------------------------
+def test_histogram_percentiles_match_numpy():
+    rng = np.random.default_rng(7)
+    xs = rng.normal(size=1000)
+    h = Histogram("x")
+    h.observe_many(xs)
+    for q in (0, 10, 50, 90, 99, 100):
+        assert h.percentile(q) == np.percentile(xs, q)
+    np.testing.assert_array_equal(h.percentile([50, 90]),
+                                  np.percentile(xs, [50, 90]))
+    snap = h.snapshot()
+    assert snap["count"] == 1000
+    assert snap["p99"] == np.percentile(xs, 99)
+    np.testing.assert_allclose(snap["sum"], xs.sum())
+
+
+def test_histogram_reservoir_is_bounded_and_deterministic():
+    xs = np.arange(5000, dtype=np.float64)
+    a = Histogram("lat", max_samples=64)
+    b = Histogram("lat", max_samples=64)
+    a.observe_many(xs)
+    b.observe_many(xs)
+    assert len(a._samples) == 64          # bounded
+    assert a.count == 5000                # exact count/sum survive
+    assert a.sum == xs.sum()
+    assert a.snapshot() == b.snapshot()   # seeded per-name: reproducible
+
+
+def test_registry_type_mismatch_is_loud():
+    reg = MetricsRegistry()
+    reg.counter("engine.admissions").inc()
+    with pytest.raises(TypeError, match="engine.admissions"):
+        reg.gauge("engine.admissions")
+    assert reg.snapshot()["engine.admissions"]["value"] == 1
+
+
+# ---------------------------------------------------------------------------
+# run log
+# ---------------------------------------------------------------------------
+def test_run_log_jsonl_and_console_levels(tmp_path):
+    path = tmp_path / "run_log.jsonl"
+    out = io.StringIO()
+    log = RunLog(str(path), console_level="info", stream=out)
+    log.event("weight_swap", level="debug", version=3)
+    log.event("train_step", step=4, msg="reward=0.5000", reward=0.5)
+    log.event("anomaly_skip", level="warn", step=5, msg="non-finite update")
+    log.close()
+    recs = [json.loads(line) for line in path.read_text().splitlines()]
+    assert [r["event"] for r in recs] == ["weight_swap", "train_step",
+                                         "anomaly_skip"]
+    assert recs[0]["level"] == "debug" and recs[0]["version"] == 3
+    assert recs[1]["step"] == 4 and recs[1]["reward"] == 0.5
+    console = out.getvalue()
+    assert "weight_swap" not in console       # debug below console level
+    assert "[step 4] reward=0.5000" in console
+    assert "[step 5] WARN non-finite update" in console
+
+
+def test_run_log_jsonable_numpy_fields(tmp_path):
+    path = tmp_path / "log.jsonl"
+    log = RunLog(str(path), console_level=None)
+    log.event("e", x=np.float32(1.5), n=np.int64(2), a=np.arange(3))
+    log.close()
+    rec = json.loads(path.read_text())
+    assert rec["x"] == 1.5 and rec["n"] == 2 and rec["a"] == [0, 1, 2]
+
+
+# ---------------------------------------------------------------------------
+# the facade / modes
+# ---------------------------------------------------------------------------
+def test_off_mode_is_inert():
+    tel = Telemetry("off")
+    ctx = tel.span("x")
+    assert ctx is tel.timed("y")              # the shared no-op singleton
+    with ctx:
+        pass
+    tel.count("c")
+    tel.gauge("g", 1)
+    tel.observe("h", 2)
+    tel.instant("i")
+    tel.counter_sample("cs", 3)
+    assert tel.tracer is None and tel.metrics is None
+    assert tel.export_trace("/nonexistent/never_written.json") is None
+
+
+def test_metrics_mode_times_without_tracing():
+    tel = Telemetry("metrics")
+    with tel.timed("harvest"):
+        pass
+    assert tel.tracer is None
+    assert tel.metrics.snapshot()["harvest_s"]["count"] == 1
+
+
+def test_bad_mode_rejected():
+    with pytest.raises(ValueError, match="telemetry mode"):
+        Telemetry("verbose")
+
+
+# ---------------------------------------------------------------------------
+# trace_report breakdown math
+# ---------------------------------------------------------------------------
+def _x(name, ts, dur, **args):
+    ev = {"name": name, "ph": "X", "pid": 1, "tid": 1, "ts": ts, "dur": dur}
+    if args:
+        ev["args"] = args
+    return ev
+
+
+def test_trace_report_breakdown_and_check():
+    # one 10ms train_step: 4ms admit, 3ms decode, 2ms update, 1ms bubble;
+    # container + nested prefill_dispatch must not double-count
+    events = [
+        _x("train_step", 0, 10_000, step=0),
+        _x("rollout_phase", 0, 7_000),
+        _x("admit_sweep", 0, 4_000),
+        _x("prefill_dispatch", 500, 3_000, kind="admit"),
+        _x("decode_chunk", 4_000, 3_000),
+        _x("update", 7_500, 2_000),
+    ]
+    bd = trace_report.breakdown(events)
+    assert bd["container"] == "train_step" and bd["steps"] == 1
+    np.testing.assert_allclose(bd["wall"], 10e-3)
+    np.testing.assert_allclose(bd["prefill"], 4e-3)
+    np.testing.assert_allclose(bd["decode"], 3e-3)
+    np.testing.assert_allclose(bd["update"], 2e-3)
+    np.testing.assert_allclose(bd["bubble"], 1e-3)
+    covered = sum(bd[c] for c in trace_report.CATEGORIES)
+    np.testing.assert_allclose(covered + bd["bubble"], bd["wall"])
+
+
+def test_trace_report_check_mode_exit_codes(tmp_path, capsys):
+    good = {"traceEvents": [_x("train_step", 0, 10_000),
+                            _x("admit_sweep", 0, 9_800)]}
+    bad = {"traceEvents": [_x("train_step", 0, 10_000),
+                           _x("admit_sweep", 0, 5_000)]}
+    g, b = tmp_path / "good.json", tmp_path / "bad.json"
+    g.write_text(json.dumps(good))
+    b.write_text(json.dumps(bad))
+    assert trace_report.main([str(g), "--check", "--max-bubble", "0.05"]) == 0
+    assert trace_report.main([str(b), "--check", "--max-bubble", "0.05"]) == 1
+    capsys.readouterr()
+
+
+# ---------------------------------------------------------------------------
+# PoolExhausted unwind retracts the EXACT recorded waits (regression)
+# ---------------------------------------------------------------------------
+def test_pool_exhausted_unwind_retracts_exact_waits():
+    """Staged admissions record their wait once; if the flush dies with
+    PoolExhausted *after the virtual clock moved on*, the unwind must
+    retract the recorded entries — recomputing ``now - arrival`` at unwind
+    time raised ValueError (value no longer in the list) or silently
+    removed a different request's duplicate."""
+    from repro.configs import SparseRLConfig, get_config
+    from repro.data import TOKENIZER
+    from repro.kvcache.paged import PoolExhausted
+    from repro.models import get_model
+    from repro.rollout import ContinuousEngine, Request
+
+    cfg = get_config("qwen2.5-14b").smoke()
+    m = get_model(cfg)
+    params = m.init_params(cfg, jax.random.PRNGKey(0))
+    scfg = SparseRLConfig(kv_budget=8, kv_buffer=2, obs_window=2,
+                          num_sinks=1, compression="rkv")
+    eng = ContinuousEngine(params, cfg, m, scfg, batch_size=2,
+                           prompt_len=8, max_new_tokens=4,
+                           eos_id=TOKENIZER.eos_id, seed=0)
+    reqs = [Request(uid=i, prompt=np.arange(3, 6, dtype=np.int32))
+            for i in range(2)]
+    eng.now = 1.5
+    eng._stage_admit(reqs[0], 0)
+    eng._stage_admit(reqs[1], 1)
+    assert eng._phase_waits == [1.5, 1.5]
+
+    def boom(staged, admitted):
+        raise PoolExhausted("pool full")
+
+    eng._flush_shared = boom
+    eng._flush_plain = boom
+    eng.now += 7.0                      # clock advances before the flush
+    with pytest.raises(PoolExhausted) as ei:
+        eng._flush_admissions()
+    assert [r.uid for r in ei.value.unadmitted] == [0, 1]
+    assert eng._phase_waits == []       # exact retraction, no ValueError
+    assert eng.rows[0] is None and eng.rows[1] is None
+    assert not bool(np.asarray(eng.active).any())
+
+
+# ---------------------------------------------------------------------------
+# the off-mode bitwise pin: telemetry never changes the computation
+# ---------------------------------------------------------------------------
+def test_telemetry_off_metrics_trace_bitwise_identical(tmp_path):
+    """Two trainer steps on the continuous-paged backend under
+    telemetry=off / metrics / trace produce bitwise-identical tokens,
+    engine log-probs and final parameters — instrumentation only observes
+    host-side values, it never feeds the compiled programs."""
+    from repro.configs import SparseRLConfig, TrainConfig, get_config
+    from repro.runtime import Trainer, TrainerOptions
+
+    def run(mode, sub):
+        cfg = get_config("qwen2.5-14b").smoke()
+        scfg = SparseRLConfig(kv_budget=12, kv_buffer=4, obs_window=2,
+                              num_sinks=1, group_size=4, max_new_tokens=8,
+                              learning_rate=3e-4, kl_coef=0.0)
+        tcfg = TrainConfig(update_batch=16, total_steps=4, warmup_steps=1,
+                           checkpoint_every=0,
+                           checkpoint_dir=str(tmp_path / sub))
+        opts = TrainerOptions(num_prompts=4, prompt_len=16, max_new_tokens=8,
+                              rollout_backend="continuous",
+                              cache_backend="paged", decode_chunk=2,
+                              telemetry=mode,
+                              run_log=str(tmp_path / sub / "log.jsonl"))
+        tr = Trainer(cfg, scfg, tcfg, opts)
+        for _ in range(2):
+            tr.train_step()
+        ro = tr.last_rollout
+        return (np.asarray(jax.device_get(ro.resp_tokens)),
+                np.asarray(jax.device_get(ro.logp_sparse)),
+                [np.asarray(x) for x in jax.tree.leaves(
+                    jax.device_get(tr.params))])
+
+    tok_off, lp_off, p_off = run("off", "off")
+    for mode in ("metrics", "trace"):
+        tok, lp, p = run(mode, mode)
+        np.testing.assert_array_equal(tok, tok_off)
+        np.testing.assert_array_equal(lp, lp_off)
+        assert len(p) == len(p_off)
+        for a, b in zip(p, p_off):
+            np.testing.assert_array_equal(a, b)

@@ -1,0 +1,235 @@
+#!/usr/bin/env python3
+"""Offline analyzer for telemetry traces (stdlib only, no jax import).
+
+Reads a Chrome-trace-event JSON file produced by ``--telemetry trace``
+(``repro.launch.train`` / ``repro.launch.serve`` / the rollout bench) and
+prints:
+
+1. **Phase-time breakdown** — wall-clock attributed to the Sparse-RL
+   phases (prefill / decode / harvest / update / other / bubble) from the
+   leaf spans, as a fraction of the container spans' wall-clock
+   (``train_step`` for training traces, ``serve_run`` for serving).
+   Bubble is the unattributed remainder: host bookkeeping between
+   instrumented sections.  In an async-pipeline trace the producer thread
+   overlaps the learner, so rollout categories can legitimately exceed
+   100% of learner wall — the breakdown is per-trace arithmetic, not a
+   utilization claim (DESIGN.md §Observability & telemetry).
+2. **Top-N slowest spans** — the individual events worth opening in
+   Perfetto (ui.perfetto.dev) first.
+3. **Mismatch health** — the Sparse-RL stability diagnostics embedded in
+   ``otherData.metrics``: the per-token log-xi histogram, rejection / veto
+   rates, mean_rho and staleness KL (paper Eqs. 5-7), plus resilience
+   counters.
+4. **Run-log summary** — warn/error events from ``reports/run_log.jsonl``
+   when ``--run-log`` is given.
+
+``--check`` turns the breakdown into a CI assertion: the categorized
+fraction must come within ``--max-bubble`` of 100% of container
+wall-clock (exit 1 otherwise) — the pin that the instrumentation actually
+covers the hot paths instead of decorating a few of them.
+
+  PYTHONPATH=src python -m repro.launch.train --smoke --steps 2 \
+      --telemetry trace --trace-out reports/trace_train.json
+  python tools/trace_report.py reports/trace_train.json \
+      --run-log reports/run_log.jsonl --check --max-bubble 0.10
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from collections import Counter
+from pathlib import Path
+
+#: leaf span -> breakdown category.  Container spans (train_step,
+#: serve_run, rollout_phase) and nested-inside-a-leaf spans
+#: (prefill_dispatch lives inside admit_sweep) are deliberately absent —
+#: counting them would double-book the same wall-clock.
+CATEGORY_OF = {
+    "admit_sweep": "prefill",     # admission + batched prefill dispatch
+    "phase_setup": "prefill",     # begin_phase cache alloc + request build
+    "decode_chunk": "decode",     # chunked decode dispatch
+    "harvest": "harvest",         # device->host fetch + completion plumbing
+    "collate": "harvest",         # completions -> trainer rollout batch
+    "rescore": "update",          # dense pi_old / pi_ref rescores
+    "storm_guard": "update",      # veto-rate scan (full logp device_get)
+    "advantages": "update",       # group-relative advantage reduction
+    "update": "update",           # minibatched Sparse-RL updates
+    "verify": "update",           # reward verification
+    "checkpoint": "update",       # checkpoint save
+    "phase_inputs": "other",      # prompt encoding / phase RNG
+    "metrics_publish": "other",   # metric assembly (full-plane device_get)
+}
+CATEGORIES = ("prefill", "decode", "harvest", "update", "other")
+#: spans whose duration IS the denominator (first name found wins)
+CONTAINER_SPANS = ("train_step", "serve_run")
+
+
+def load_trace(path: Path) -> dict:
+    doc = json.loads(path.read_text())
+    if "traceEvents" not in doc:
+        raise SystemExit(f"{path}: not a Chrome trace (no 'traceEvents')")
+    return doc
+
+
+def complete_events(doc: dict):
+    return [e for e in doc["traceEvents"] if e.get("ph") == "X"]
+
+
+def breakdown(events) -> dict:
+    """Category -> seconds, plus ``wall`` (container span sum) and
+    ``bubble`` (wall minus categorized time; negative = overlap)."""
+    container = next((n for n in CONTAINER_SPANS
+                      if any(e["name"] == n for e in events)), None)
+    if container is not None:
+        wall = sum(e["dur"] for e in events if e["name"] == container)
+        steps = sum(1 for e in events if e["name"] == container)
+    else:  # no container span: fall back to the trace's own extent
+        wall = (max(e["ts"] + e["dur"] for e in events)
+                - min(e["ts"] for e in events)) if events else 0.0
+        steps = 0
+    cat = dict.fromkeys(CATEGORIES, 0.0)
+    for e in events:
+        c = CATEGORY_OF.get(e["name"])
+        if c is not None:
+            cat[c] += e["dur"]
+    out = {k: v / 1e6 for k, v in cat.items()}          # us -> s
+    out["wall"] = wall / 1e6
+    out["bubble"] = (wall - sum(cat.values())) / 1e6
+    out["container"] = container or "(trace extent)"
+    out["steps"] = steps
+    return out
+
+
+def print_breakdown(bd: dict) -> None:
+    wall = bd["wall"]
+    print(f"== phase breakdown over {bd['container']} "
+          f"({bd['steps'] or '?'} spans, wall {wall:.3f}s) ==")
+    if wall <= 0:
+        print("  (no container wall-clock recorded)")
+        return
+    for c in (*CATEGORIES, "bubble"):
+        print(f"  {c:<8} {bd[c]:>9.3f}s  {bd[c] / wall:>6.1%}")
+    covered = sum(bd[c] for c in CATEGORIES)
+    print(f"  {'total':<8} {covered:>9.3f}s  {covered / wall:>6.1%} "
+          f"categorized")
+
+
+def print_slowest(events, n: int) -> None:
+    print(f"== top {n} slowest spans ==")
+    for e in sorted(events, key=lambda e: -e["dur"])[:n]:
+        args = e.get("args") or {}
+        brief = " ".join(f"{k}={v}" for k, v in list(args.items())[:4])
+        print(f"  {e['dur'] / 1e3:>10.2f} ms  {e['name']:<18} "
+              f"tid={e['tid']}" + (f"  {brief}" if brief else ""))
+
+
+def _hist_line(name: str, snap: dict) -> str:
+    if "p50" in snap:
+        return (f"  {name:<26} n={snap['count']:<7} mean={snap['mean']:.4g} "
+                f"p50={snap['p50']:.4g} p90={snap['p90']:.4g} "
+                f"p99={snap['p99']:.4g}")
+    return f"  {name:<26} {snap}"
+
+
+def print_mismatch_health(metrics: dict) -> None:
+    """The Sparse-RL stability panel: is the sparse behaviour policy still
+    close enough to the dense learner for the correction to hold?"""
+    groups = (("mismatch.", "== mismatch health (paper Eqs. 5-7) =="),
+              ("train.", "== training signal =="),
+              ("resilience.", "== resilience counters =="),
+              ("engine.", "== engine =="))
+    for prefix, header in groups:
+        rows = {k: v for k, v in metrics.items() if k.startswith(prefix)}
+        if not rows:
+            continue
+        print(header)
+        for name, snap in sorted(rows.items()):
+            if set(snap) == {"value"}:
+                print(f"  {name:<26} {snap['value']:.6g}")
+            else:
+                print(_hist_line(name, snap))
+
+
+def print_run_log(path: Path) -> None:
+    levels: Counter = Counter()
+    events: Counter = Counter()
+    noisy = []
+    with path.open() as fh:
+        for line in fh:
+            line = line.strip()
+            if not line:
+                continue
+            rec = json.loads(line)
+            levels[rec.get("level", "info")] += 1
+            events[rec.get("event", "?")] += 1
+            if rec.get("level") in ("warn", "error"):
+                noisy.append(rec)
+    print(f"== run log {path} ==")
+    print("  levels: " + " ".join(f"{k}={v}" for k, v in sorted(levels.items())))
+    top = ", ".join(f"{k}x{v}" for k, v in events.most_common(6))
+    print(f"  events: {top}")
+    for rec in noisy[:10]:
+        print(f"  {rec['level'].upper()} {rec['event']}: "
+              f"{rec.get('msg', '')}")
+    if len(noisy) > 10:
+        print(f"  ... {len(noisy) - 10} more warn/error events")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("trace", type=Path,
+                    help="Chrome trace JSON from --telemetry trace")
+    ap.add_argument("--run-log", type=Path, default=None,
+                    help="reports/run_log.jsonl to summarize alongside")
+    ap.add_argument("--top", type=int, default=10,
+                    help="slowest spans to list")
+    ap.add_argument("--check", action="store_true",
+                    help="CI mode: fail unless the categorized breakdown "
+                         "covers wall-clock to within --max-bubble")
+    ap.add_argument("--max-bubble", type=float, default=0.10,
+                    help="check mode: max |1 - categorized/wall| fraction")
+    args = ap.parse_args(argv)
+
+    doc = load_trace(args.trace)
+    events = complete_events(doc)
+    if not events:
+        print(f"{args.trace}: no complete ('X') span events")
+        return 1 if args.check else 0
+
+    bd = breakdown(events)
+    print_breakdown(bd)
+    print()
+    print_slowest(events, args.top)
+    metrics = (doc.get("otherData") or {}).get("metrics") or {}
+    if metrics:
+        print()
+        print_mismatch_health(metrics)
+    dropped = (doc.get("otherData") or {}).get("dropped_events")
+    if dropped:
+        print(f"\nWARNING: tracer dropped {dropped} events (buffer full) — "
+              f"the breakdown undercounts")
+    if args.run_log and args.run_log.exists():
+        print()
+        print_run_log(args.run_log)
+
+    if args.check:
+        if bd["wall"] <= 0:
+            print("\nTRACECHECK: no container wall-clock — nothing to check")
+            return 1
+        covered = sum(bd[c] for c in CATEGORIES)
+        gap = 1.0 - covered / bd["wall"]
+        ok = abs(gap) <= args.max_bubble
+        print(f"\nTRACECHECK: categorized {covered / bd['wall']:.1%} of "
+              f"wall (gap {gap:+.1%}, bound ±{args.max_bubble:.0%}): "
+              f"{'OK' if ok else 'FAIL'}")
+        if dropped:
+            print("TRACECHECK: FAIL — dropped events invalidate the "
+                  "breakdown")
+            return 1
+        return 0 if ok else 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
